@@ -1,0 +1,63 @@
+//! Synthetic KV workload CLI — paper §5.2's benchmarks on demand.
+//!
+//! Sweeps one DHT variant over rank counts in the DES cluster and prints
+//! throughput + latency; use `--dist zipfian --mode mixed` for the paper's
+//! skewed mixed benchmark (Fig. 6 / Tab. 2).
+//!
+//! Run: `cargo run --release --example kv_benchmark -- \
+//!         --variant lockfree --dist zipfian --ranks 128,384,640`
+
+use mpi_dht::bench::table::{mops, us, Table};
+use mpi_dht::bench::{run_kv, Dist, KvCfg, Mode};
+use mpi_dht::cli::Args;
+use mpi_dht::coordinator::net_profile;
+use mpi_dht::dht::Variant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let variant = Variant::parse(args.str_or("--variant", "lockfree"))
+        .ok_or_else(|| anyhow::anyhow!("--variant coarse|fine|lockfree"))?;
+    let dist = Dist::parse(args.str_or("--dist", "uniform"))
+        .ok_or_else(|| anyhow::anyhow!("--dist uniform|zipfian"))?;
+    let mode = match args.str_or("--mode", "wtr") {
+        "wtr" => Mode::WriteThenRead,
+        "mixed" => Mode::Mixed {
+            read_percent: args.u64_or("--read-percent", 95)? as u32,
+        },
+        other => anyhow::bail!("--mode wtr|mixed, got {other:?}"),
+    };
+    let ranks = args.u32_list_or("--ranks", &[128, 384, 640])?;
+    let ops = args.u64_or("--ops", 5_000)?;
+    let net = net_profile(args.str_or("--profile", "pik"), None)?;
+
+    println!(
+        "# {} | {:?} keys | {:?} | {} ops/rank | {} profile",
+        variant.name(),
+        dist,
+        mode,
+        ops,
+        args.str_or("--profile", "pik"),
+    );
+    let mut table = Table::new(vec![
+        "ranks", "read Mops", "write Mops", "mixed Mops", "hit %",
+        "rlat p50/p95 µs", "wlat p50/p95 µs", "mismatch", "evict",
+    ]);
+    for n in ranks {
+        let mut cfg = KvCfg::new(n, ops, dist, mode);
+        cfg.seed = args.u64_or("--seed", cfg.seed)?;
+        let r = run_kv(variant, net.clone(), cfg);
+        table.row(vec![
+            n.to_string(),
+            mops(r.read_mops),
+            mops(r.write_mops),
+            mops(r.mixed_mops),
+            format!("{:.1}", 100.0 * r.stats.hit_rate()),
+            format!("{}/{}", us(r.read_lat_p50), us(r.read_lat_p95)),
+            format!("{}/{}", us(r.write_lat_p50), us(r.write_lat_p95)),
+            r.mismatches.to_string(),
+            r.stats.evictions.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""L1 Pallas kernel: batched calcite/dolomite kinetic geochemistry.
+
+This is the compute hot-spot of the POET reproduction — the stand-in for
+PHREEQC [Parkhurst & Appelo 2013] in the paper's coupled reactive transport
+simulation.  One call integrates the kinetic reaction network for a *batch*
+of grid cells over one transport time step ``dt`` using ``N_SUB`` explicit
+sub-steps.
+
+State vector per cell (9 species, all f64, matching the paper's 80-byte key
+= 9 species + dt):
+
+    0 Ca       total dissolved calcium        [mol/kgw]
+    1 Mg       total dissolved magnesium      [mol/kgw]
+    2 C        total dissolved inorganic C    [mol/kgw]
+    3 Cl       chloride (conservative)        [mol/kgw]
+    4 pH       -log10 a(H+)
+    5 pe       redox potential (conservative here)
+    6 O0       dissolved oxygen (conservative here)
+    7 Calcite  mineral amount                 [mol/L medium]
+    8 Dolomite mineral amount                 [mol/L medium]
+
+Output per cell (13 doubles, matching the paper's 104-byte value):
+
+    0..8   updated state vector
+    9      r_cal   net calcite dissolution rate  [mol/kgw/s]  (+ = dissolving)
+    10     r_dol   net dolomite dissolution rate
+    11     omega_cal  calcite saturation ratio at the end of the step
+    12     omega_dol  dolomite saturation ratio
+
+Chemistry model (simplified PHREEQC kinetic block, TST rate laws):
+
+    carbonate speciation from pH:  a_CO3 = C * K1*K2 / (h^2 + K1*h + K1*K2)
+    omega_cal = a_Ca * a_CO3 / Ksp_cal
+    omega_dol = a_Ca * a_Mg * a_CO3^2 / Ksp_dol
+    r = k * (1 - omega)            (+ dissolution, - precipitation)
+    dissolution is gated on remaining mineral with a smooth surface-area
+    factor m/(m + m_half), so minerals never go (much) below zero and the
+    reaction front sharpens exactly like the paper describes: injected MgCl2
+    supersaturates dolomite -> precipitation consumes Ca/CO3 -> calcite
+    dissolves -> once calcite is exhausted dolomite redissolves.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): PHREEQC is CPU code;
+here the kinetic integrator becomes a batched, VMEM-resident sub-step loop.
+BlockSpec tiles the batch dimension in chunks of ``TILE_B`` cells; one tile
+(``TILE_B x 10`` in + ``TILE_B x 13`` out, f64) is ~23 KB — with double
+buffering far inside a 16 MB VMEM budget, so the whole sub-step loop runs
+without HBM round-trips.  The work is element-wise transcendental (exp/log)
+-> VPU-bound, not MXU-bound.
+
+The kernel MUST be run with interpret=True on this CPU-only box (real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# --- thermodynamic / kinetic constants (25 C, I=0 simplification) ---------
+LOG_K1 = -6.35       # H2CO3* = H+ + HCO3-
+LOG_K2 = -10.33      # HCO3-  = H+ + CO3--
+LOG_KSP_CAL = -8.48  # calcite  CaCO3 = Ca++ + CO3--
+LOG_KSP_DOL = -17.09 # dolomite CaMg(CO3)2 = Ca++ + Mg++ + 2 CO3--
+
+K1 = 10.0 ** LOG_K1
+K2 = 10.0 ** LOG_K2
+KSP_CAL = 10.0 ** LOG_KSP_CAL
+KSP_DOL = 10.0 ** LOG_KSP_DOL
+
+K_CAL = 1.5e-6       # calcite rate constant  [mol/kgw/s]
+K_DOL = 3.0e-7       # dolomite rate constant [mol/kgw/s]
+M_HALF = 1.0e-5      # half-saturation mineral amount for the surface factor
+PH_BETA = 150.0      # pH response to net carbonate dissolution
+OMEGA_CAP = 1.0e3    # cap on saturation ratio (keeps explicit steps stable)
+#: per-substep relative extent cap — bounds the pH/omega feedback loop gain
+#: so the explicit integrator is stable for transport steps dt <= ~2500 s
+EXT_CAP = 0.25
+EXT_CAP_FLOOR = 1.0e-4
+
+N_SUB = 8            # kinetic sub-steps per transport step
+NSPECIES = 9
+NIN = 10             # 9 species + dt
+NOUT = 13            # 9 species + 2 rates + 2 omegas
+TILE_B = 128         # batch tile (VMEM-resident)
+
+STATE_MIN = 1.0e-12  # concentration floor (solutes)
+
+
+def _rates(ca, mg, c, ph, calcite, dolomite):
+    """TST net dissolution rates and saturation ratios. Shared by kernel/ref."""
+    h = jnp.power(10.0, -ph)
+    denom = h * h + K1 * h + K1 * K2
+    a_co3 = c * (K1 * K2) / denom
+    omega_cal = jnp.minimum(ca * a_co3 / KSP_CAL, OMEGA_CAP)
+    omega_dol = jnp.minimum(ca * mg * a_co3 * a_co3 / KSP_DOL, OMEGA_CAP)
+    # surface-area factor: dissolution slows smoothly as the mineral runs out
+    f_cal = calcite / (calcite + M_HALF)
+    f_dol = dolomite / (dolomite + M_HALF)
+    r_cal = K_CAL * (1.0 - omega_cal)
+    r_dol = K_DOL * (1.0 - omega_dol)
+    r_cal = jnp.where(r_cal > 0.0, r_cal * f_cal, r_cal)
+    r_dol = jnp.where(r_dol > 0.0, r_dol * f_dol, r_dol)
+    return r_cal, r_dol, omega_cal, omega_dol
+
+
+def _integrate(state, dt):
+    """Integrate one batch tile: state (B, 10) incl. dt column -> (B, 13)."""
+    ca, mg, c = state[:, 0], state[:, 1], state[:, 2]
+    cl, ph, pe, o0 = state[:, 3], state[:, 4], state[:, 5], state[:, 6]
+    calcite, dolomite = state[:, 7], state[:, 8]
+    dts = dt / N_SUB
+
+    def sub(_, carry):
+        ca, mg, c, ph, calcite, dolomite = carry
+        r_cal, r_dol, _, _ = _rates(ca, mg, c, ph, calcite, dolomite)
+        # Budget-limited reaction extents keep stoichiometry exact:
+        # dissolution (+) cannot exceed the mineral present; precipitation
+        # (-) cannot drive any solute below STATE_MIN.  Limiting the extents
+        # (rather than clamping solutes afterwards) preserves mass balance.
+        # The relative caps bound the per-substep state change, which keeps
+        # the explicit pH/omega feedback loop stable (gain < 1).
+        cap_dol = EXT_CAP * (jnp.minimum(ca, mg) + EXT_CAP_FLOOR)
+        cap_cal = EXT_CAP * (ca + EXT_CAP_FLOOR)
+        d_dol = jnp.clip(r_dol * dts, -cap_dol, cap_dol)
+        d_dol = jnp.minimum(d_dol, dolomite)
+        d_dol = jnp.maximum(d_dol, -(mg - STATE_MIN))
+        d_dol = jnp.maximum(d_dol, -(ca - STATE_MIN))
+        d_dol = jnp.maximum(d_dol, -0.5 * (c - STATE_MIN))
+        d_cal = jnp.clip(r_cal * dts, -cap_cal, cap_cal)
+        d_cal = jnp.minimum(d_cal, calcite)
+        d_cal = jnp.maximum(d_cal, -(ca - STATE_MIN) - d_dol)
+        d_cal = jnp.maximum(d_cal, -(c - STATE_MIN) - 2.0 * d_dol)
+        ca = ca + d_cal + d_dol
+        mg = mg + d_dol
+        c = c + d_cal + 2.0 * d_dol
+        ph = jnp.clip(ph + PH_BETA * (d_cal + 2.0 * d_dol), 4.0, 11.0)
+        calcite = jnp.maximum(calcite - d_cal, 0.0)
+        dolomite = jnp.maximum(dolomite - d_dol, 0.0)
+        return ca, mg, c, ph, calcite, dolomite
+
+    ca, mg, c, ph, calcite, dolomite = jax.lax.fori_loop(
+        0, N_SUB, sub, (ca, mg, c, ph, calcite, dolomite)
+    )
+    r_cal, r_dol, omega_cal, omega_dol = _rates(ca, mg, c, ph, calcite, dolomite)
+    return jnp.stack(
+        [ca, mg, c, cl, ph, pe, o0, calcite, dolomite,
+         r_cal, r_dol, omega_cal, omega_dol],
+        axis=1,
+    )
+
+
+def _chem_kernel(in_ref, out_ref):
+    """Pallas kernel body: one VMEM-resident batch tile through N_SUB steps."""
+    state = in_ref[...]
+    out_ref[...] = _integrate(state, state[:, 9])
+
+
+def chemistry_step(batch):
+    """Batched kinetic chemistry step.
+
+    batch: f64[B, 10] — 9 species + dt per cell; B must be a multiple of the
+    tile size (or small enough to be a single tile). Returns f64[B, 13].
+    """
+    b = batch.shape[0]
+    tile = TILE_B if b % TILE_B == 0 else b
+    grid = b // tile
+    return pl.pallas_call(
+        _chem_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile, NIN), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, NOUT), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, NOUT), jnp.float64),
+        interpret=True,
+    )(batch)

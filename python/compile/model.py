@@ -1,0 +1,82 @@
+"""L2: the POET compute graph in JAX, calling the L1 Pallas kernels.
+
+Two jittable entry points are AOT-lowered by ``aot.py`` and executed from the
+Rust coordinator via PJRT (Python is never on the request path):
+
+* ``chemistry_step``  — batched kinetic calcite/dolomite geochemistry (the
+  PHREEQC stand-in; the expensive call the DHT surrogate caches).
+* ``transport_step``  — upwind advection of the solute planes.
+
+The species layout and the 80-byte-key / 104-byte-value record structure are
+documented in ``kernels/chemistry.py`` and DESIGN.md.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import advection, chemistry
+
+jax.config.update("jax_enable_x64", True)
+
+#: number of solute species that advect (Ca, Mg, C, Cl, pH, pe, O0)
+N_SOLUTES = 7
+#: full state vector width (solutes + Calcite + Dolomite)
+N_SPECIES = chemistry.NSPECIES
+#: chemistry input / output record widths (match the paper's 80 B / 104 B)
+N_IN = chemistry.NIN
+N_OUT = chemistry.NOUT
+
+# Default waters for the paper's scenario: background water equilibrated
+# with calcite; injection water = MgCl2 solution (high Mg, high Cl, no Ca).
+# The background Ca is computed to sit *exactly* on calcite saturation
+# (omega_cal == 1), so cells not yet reached by the injection front are
+# chemically stationary — the property the paper's surrogate cache exploits
+# ("cells not yet reached by the reactive solution remain unchanged").
+
+
+def _calcite_equilibrium_ca(ph: float, c: float) -> float:
+    h = 10.0 ** (-ph)
+    denom = h * h + chemistry.K1 * h + chemistry.K1 * chemistry.K2
+    a_co3 = c * (chemistry.K1 * chemistry.K2) / denom
+    return chemistry.KSP_CAL / a_co3
+
+
+_BG_PH, _BG_C = 8.0, 1.0e-3
+#               Ca                                Mg      C      Cl      pH      pe   O0
+BACKGROUND = [_calcite_equilibrium_ca(_BG_PH, _BG_C),
+              1.0e-6, _BG_C, 1.0e-5, _BG_PH, 4.0, 2.5e-4]
+# Injected MgCl2 brine: Mg-rich, Ca-free, same carbonate/pH background so
+# the front dynamics are Mg-driven exactly as in the paper: rising Mg
+# supersaturates dolomite, its precipitation consumes Ca/CO3, which
+# undersaturates calcite and dissolves it; once calcite is exhausted the
+# Ca supply stops and dolomite redissolves.
+INJECTION = [1.0e-6, 2.0e-3, _BG_C, 4.0e-3, _BG_PH, 4.0, 2.5e-4]
+#: initial mineral amounts [mol/L medium]: calcite present, no dolomite
+MINERALS0 = [2.0e-4, 0.0]
+
+
+def chemistry_step(batch):
+    """Kinetic chemistry over a batch of cells: f64[B, 10] -> f64[B, 13]."""
+    return chemistry.chemistry_step(batch)
+
+
+def transport_step(c, inflow, cf, inj_rows):
+    """Upwind-advect the solute planes one step.
+
+    c: f64[N_SOLUTES, ny, nx]; inflow: f64[N_SOLUTES, 2] ([injection,
+    background] per species); cf: f64[2]; inj_rows: i32[1].
+    """
+    return advection.advect_step(c, inflow, cf, inj_rows)
+
+
+def default_inflow():
+    """Per-species [injection, background] inflow table, f64[N_SOLUTES, 2]."""
+    return jnp.stack(
+        [jnp.asarray(INJECTION, dtype=jnp.float64),
+         jnp.asarray(BACKGROUND, dtype=jnp.float64)], axis=1)
+
+
+def initial_grid(ny, nx):
+    """Initial solute planes (background water everywhere)."""
+    bg = jnp.asarray(BACKGROUND, dtype=jnp.float64)
+    return jnp.broadcast_to(bg[:, None, None], (N_SOLUTES, ny, nx)).copy()

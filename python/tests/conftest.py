@@ -1,0 +1,29 @@
+"""Shared fixtures and strategies for the python test suite."""
+
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_chem_batch(rng: np.random.Generator, rows: int) -> np.ndarray:
+    """Random but physically-plausible chemistry input batch f64[rows, 10]."""
+    b = np.empty((rows, 10))
+    b[:, 0] = rng.uniform(1e-6, 1e-3, rows)   # Ca
+    b[:, 1] = rng.uniform(1e-6, 1e-3, rows)   # Mg
+    b[:, 2] = rng.uniform(1e-5, 2e-3, rows)   # C
+    b[:, 3] = rng.uniform(1e-6, 2e-3, rows)   # Cl
+    b[:, 4] = rng.uniform(5.0, 10.0, rows)    # pH
+    b[:, 5] = rng.uniform(-4.0, 12.0, rows)   # pe (inert)
+    b[:, 6] = rng.uniform(0.0, 5e-4, rows)    # O0 (inert)
+    b[:, 7] = rng.uniform(0.0, 4e-4, rows)    # Calcite
+    b[:, 8] = rng.uniform(0.0, 2e-4, rows)    # Dolomite
+    b[:, 9] = rng.uniform(0.0, 500.0, rows)   # dt
+    return b
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,120 @@
+"""Build-path tests: aot.py lowering, manifest and golden vectors.
+
+The golden files written here are exactly what the Rust runtime integration
+tests replay through PJRT, so this test pins the contract between layers.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(out),
+                "--chem-batches", "32,128", "--grids", "16x32"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    return out
+
+
+def read_manifest(out):
+    entries = []
+    with open(os.path.join(out, "manifest.txt")) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            kind, rest = line.split(" ", 1)
+            kv = {}
+            for tok in rest.split(" "):
+                if "=" in tok:
+                    k, v = tok.split("=", 1)
+                    kv[k] = v
+            entries.append((kind, kv, rest))
+    return entries
+
+
+def test_manifest_lists_all_artifacts(artifacts):
+    entries = read_manifest(artifacts)
+    kinds = [k for k, _, _ in entries]
+    assert kinds.count("chemistry") == 2
+    assert kinds.count("transport") == 1
+    assert kinds.count("golden") == 2
+    assert "constants" in kinds
+    assert kinds.count("water") == 3
+    for kind, kv, _ in entries:
+        if "file" in kv:
+            assert os.path.exists(os.path.join(artifacts, kv["file"])), kv
+
+
+def test_hlo_text_is_loadable_format(artifacts):
+    """HLO text header sanity + no Mosaic custom-calls (CPU-executable)."""
+    for name in os.listdir(artifacts):
+        if not name.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(artifacts, name)).read()
+        assert text.startswith("HloModule"), name
+        assert "custom-call" not in text, name
+        assert "ENTRY" in text, name
+
+
+def test_constants_match_model(artifacts):
+    entries = read_manifest(artifacts)
+    consts = next(kv for k, kv, _ in entries if k == "constants")
+    assert int(consts["n_solutes"]) == model.N_SOLUTES
+    assert int(consts["n_species"]) == model.N_SPECIES
+    assert int(consts["n_in"]) == model.N_IN
+    assert int(consts["n_out"]) == model.N_OUT
+
+
+def test_golden_chemistry_reproduces(artifacts):
+    path = os.path.join(artifacts, "golden_chemistry.txt")
+    with open(path) as f:
+        rows, nin, nout = (int(v) for v in f.readline().split())
+        data = [np.fromstring(f.readline(), sep=" ") for _ in range(2 * rows)]
+    inp = np.stack(data[:rows])
+    expect = np.stack(data[rows:])
+    assert inp.shape == (rows, nin) and expect.shape == (rows, nout)
+    got = np.asarray(model.chemistry_step(jnp.asarray(inp)))
+    np.testing.assert_allclose(got, expect, atol=1e-15, rtol=1e-12)
+
+
+def test_golden_transport_reproduces(artifacts):
+    path = os.path.join(artifacts, "golden_transport.txt")
+    with open(path) as f:
+        ns, ny, nx, inj_rows = (int(v) for v in f.readline().split())
+        fields = {}
+        for line in f:
+            name, rest = line.split(" ", 1)
+            fields[name] = np.fromstring(rest, sep=" ")
+    c = fields["c"].reshape(ns, ny, nx)
+    inflow = fields["inflow"].reshape(ns, 2)
+    cf = fields["cf"]
+    expect = fields["out"].reshape(ns, ny, nx)
+    got = np.asarray(model.transport_step(
+        jnp.asarray(c), jnp.asarray(inflow), jnp.asarray(cf),
+        jnp.asarray([inj_rows], dtype=jnp.int32)))
+    np.testing.assert_allclose(got, expect, atol=1e-15, rtol=1e-12)
+
+
+def test_repo_artifacts_fresh_if_present():
+    """If the repo-level artifacts/ dir exists, its manifest must parse."""
+    repo_artifacts = os.path.join(os.path.dirname(__file__), "..", "..",
+                                  "artifacts")
+    if not os.path.exists(os.path.join(repo_artifacts, "manifest.txt")):
+        pytest.skip("repo artifacts not built")
+    entries = read_manifest(repo_artifacts)
+    assert any(k == "chemistry" for k, _, _ in entries)
+    assert any(k == "transport" for k, _, _ in entries)

@@ -1,0 +1,174 @@
+"""L1 correctness: the Pallas chemistry kernel vs the pure-jnp oracle.
+
+This is the build-time correctness gate for the compute hot-spot: the kernel
+must agree with ``ref.chemistry_step_ref`` across batch shapes and state
+regimes (hypothesis-driven), and must satisfy the physical invariants the
+POET coupling relies on (mineral non-negativity, conservative species
+untouched, stoichiometric mass balance).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import chemistry as chem
+from compile.kernels import ref
+
+from .conftest import make_chem_batch
+
+ATOL, RTOL = 1e-12, 1e-9
+
+
+def run_both(batch):
+    out_k = np.asarray(model.chemistry_step(jnp.asarray(batch)))
+    out_r = np.asarray(ref.chemistry_step_ref(batch))
+    return out_k, out_r
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.one_of(
+        st.integers(1, 64),                      # single-tile path
+        st.sampled_from([128, 256, 384, 512]),   # tiled path (multiples of 128)
+    ),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_shapes(rows, seed):
+    rng = np.random.default_rng(seed)
+    out_k, out_r = run_both(make_chem_batch(rng, rows))
+    np.testing.assert_allclose(out_k, out_r, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ca=st.floats(1e-9, 1e-2), mg=st.floats(1e-9, 1e-2),
+    c=st.floats(1e-9, 1e-2), ph=st.floats(4.0, 11.0),
+    calcite=st.floats(0.0, 1e-3), dolomite=st.floats(0.0, 1e-3),
+    dt=st.floats(0.0, 1e4),
+)
+def test_kernel_matches_ref_pointwise(ca, mg, c, ph, calcite, dolomite, dt):
+    row = np.array([[ca, mg, c, 1e-5, ph, 4.0, 2.5e-4, calcite, dolomite, dt]])
+    out_k, out_r = run_both(row)
+    np.testing.assert_allclose(out_k, out_r, atol=ATOL, rtol=RTOL)
+
+
+def test_tile_boundary_exact_multiple(rng):
+    """Batch == k * TILE_B exercises the multi-program grid path."""
+    batch = make_chem_batch(rng, 2 * chem.TILE_B)
+    out_k, out_r = run_both(batch)
+    np.testing.assert_allclose(out_k, out_r, atol=ATOL, rtol=RTOL)
+    # tile independence: same rows in a different tile give same results
+    out2 = np.asarray(model.chemistry_step(jnp.asarray(batch[::-1].copy())))
+    np.testing.assert_allclose(out2[::-1], out_k, atol=ATOL, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# physical invariants
+# ---------------------------------------------------------------------------
+
+def test_conservative_species_untouched(rng):
+    batch = make_chem_batch(rng, 64)
+    out, _ = run_both(batch)
+    np.testing.assert_array_equal(out[:, 3], batch[:, 3])  # Cl
+    np.testing.assert_array_equal(out[:, 5], batch[:, 5])  # pe
+    np.testing.assert_array_equal(out[:, 6], batch[:, 6])  # O0
+
+
+def test_minerals_never_negative(rng):
+    batch = make_chem_batch(rng, 256)
+    batch[:, 9] = 1e4  # aggressive dt
+    out, _ = run_both(batch)
+    assert (out[:, 7] >= 0.0).all()
+    assert (out[:, 8] >= 0.0).all()
+    assert (out[:, :3] > 0.0).all()  # solutes stay positive
+
+
+def test_dt_zero_is_identity(rng):
+    batch = make_chem_batch(rng, 32)
+    batch[:, 9] = 0.0
+    out, _ = run_both(batch)
+    np.testing.assert_allclose(out[:, :9], batch[:, :9], atol=1e-15)
+
+
+def test_calcium_mass_balance(rng):
+    """dCa = -dCalcite - dDolomite; dMg = -dDolomite (stoichiometry)."""
+    batch = make_chem_batch(rng, 128)
+    batch[:, 9] = 100.0
+    out, _ = run_both(batch)
+    d_cal = batch[:, 7] - out[:, 7]
+    d_dol = batch[:, 8] - out[:, 8]
+    d_ca = out[:, 0] - batch[:, 0]
+    d_mg = out[:, 1] - batch[:, 1]
+    d_c = out[:, 2] - batch[:, 2]
+    # floors (STATE_MIN clamps) only bind for pathological inputs; these
+    # batches stay in the smooth regime.
+    np.testing.assert_allclose(d_ca, d_cal + d_dol, atol=1e-12)
+    np.testing.assert_allclose(d_mg, d_dol, atol=1e-12)
+    np.testing.assert_allclose(d_c, d_cal + 2.0 * d_dol, atol=1e-12)
+
+
+def test_undersaturated_water_dissolves_calcite():
+    """Dilute acidic water + calcite -> dissolution (Ca rises, calcite falls)."""
+    row = np.array([[1e-6, 1e-6, 1e-4, 1e-5, 6.0, 4.0, 2.5e-4, 2e-4, 0.0, 500.0]])
+    out, _ = run_both(row)
+    assert out[0, 0] > row[0, 0]          # Ca released
+    assert out[0, 7] < row[0, 7]          # calcite consumed
+    # either still dissolving, or the mineral was fully consumed this step
+    assert out[0, 9] > 0.0 or out[0, 7] == 0.0
+    assert out[0, 11] < 1.0 + 1e-9        # still at/below saturation
+
+
+def test_mg_rich_water_precipitates_dolomite():
+    """The paper's scenario: MgCl2 water over calcite -> dolomite grows."""
+    row = np.array([[5e-4, 1e-3, 1e-3, 2e-3, 8.5, 4.0, 2.5e-4, 2e-4, 0.0, 500.0]])
+    out, _ = run_both(row)
+    assert out[0, 8] > 0.0                # dolomite precipitated
+    assert out[0, 10] < 0.0 or out[0, 8] > row[0, 8]
+
+
+def test_exhausted_minerals_stop_dissolving():
+    row = np.array([[1e-6, 1e-6, 1e-4, 1e-5, 6.0, 4.0, 2.5e-4, 0.0, 0.0, 1e4]])
+    out, _ = run_both(row)
+    np.testing.assert_allclose(out[0, 7], 0.0, atol=1e-18)
+    np.testing.assert_allclose(out[0, 8], 0.0, atol=1e-18)
+    # with no mineral there is no source: Ca unchanged
+    np.testing.assert_allclose(out[0, 0], row[0, 0], rtol=1e-9)
+
+
+def test_equilibrium_water_is_stationary():
+    """Water exactly at calcite saturation with no dolomite driving force."""
+    # construct: pick pH/C, solve Ca so omega_cal == 1, Mg tiny
+    ph, c = 8.0, 1e-3
+    h = 10.0 ** -ph
+    a_co3 = c * (chem.K1 * chem.K2) / (h * h + chem.K1 * h + chem.K1 * chem.K2)
+    ca = chem.KSP_CAL / a_co3
+    row = np.array([[ca, 1e-12, c, 1e-5, ph, 4.0, 2.5e-4, 2e-4, 0.0, 100.0]])
+    out, _ = run_both(row)
+    np.testing.assert_allclose(out[0, 0], ca, rtol=1e-6)
+    np.testing.assert_allclose(out[0, 7], 2e-4, rtol=1e-6)
+
+
+def test_omega_capped(rng):
+    batch = make_chem_batch(rng, 16)
+    batch[:, 0] = 1.0   # absurdly supersaturated
+    batch[:, 1] = 1.0
+    batch[:, 2] = 1.0
+    batch[:, 4] = 11.0
+    out, _ = run_both(batch)
+    assert (out[:, 11] <= chem.OMEGA_CAP).all()
+    assert (out[:, 12] <= chem.OMEGA_CAP).all()
+    assert np.isfinite(out).all()
+
+
+def test_determinism(rng):
+    batch = make_chem_batch(rng, 128)
+    a = np.asarray(model.chemistry_step(jnp.asarray(batch)))
+    b = np.asarray(model.chemistry_step(jnp.asarray(batch)))
+    np.testing.assert_array_equal(a, b)

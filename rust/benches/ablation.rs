@@ -1,0 +1,135 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. index-window width / candidate count (paper Fig. 2's sliding-byte
+//!    scheme) — probe-chain length and eviction rate vs load factor;
+//! 2. checksum re-read budget (lock-free `crc_retries`);
+//! 3. Open MPI's multi-atomic window-lock sequence (§3.5) — what happens
+//!    to the coarse variant if locks were single-atomic;
+//! 4. PJRT chemistry batch size — the L2 batching choice.
+
+mod common;
+
+use common::banner;
+use mpi_dht::bench::keys::{key_for, value_for};
+use mpi_dht::bench::table::{mops, Table};
+use mpi_dht::bench::{run_kv, Dist, KvCfg, Mode};
+use mpi_dht::dht::{Dht, DhtConfig, Variant};
+use mpi_dht::net::NetConfig;
+
+fn main() {
+    banner("Ablations — design-choice sensitivity", "DESIGN.md §5");
+
+    // ------------------------------------------------ 1. load factor
+    println!("\n[1] load factor vs probes/evictions (lock-free, shm)");
+    let mut t = Table::new(vec![
+        "load factor %", "probes/op", "evictions", "hit rate %",
+    ]);
+    for load in [5u64, 25, 50, 80, 120] {
+        let n_keys = 4_000u64;
+        let bucket = mpi_dht::dht::BucketLayout::new(Variant::LockFree, 80, 104)
+            .size() as u64;
+        let buckets = n_keys * 100 / load;
+        let mut h =
+            Dht::create(Variant::LockFree, 1, (buckets * bucket) as usize, 80, 104)
+                .remove(0);
+        for i in 0..n_keys {
+            h.write(&key_for(i, 80), &value_for(i, 104));
+        }
+        for i in 0..n_keys {
+            let _ = h.read(&key_for(i, 80));
+        }
+        let s = h.stats();
+        t.row(vec![
+            load.to_string(),
+            format!("{:.2}", s.probes as f64 / (s.reads + s.writes) as f64),
+            s.evictions.to_string(),
+            format!("{:.1}", 100.0 * s.hit_rate()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ------------------------------------------------ 2. crc retries
+    println!("\n[2] checksum re-read budget (mixed zipfian, 256 ranks, DES)");
+    let mut t = Table::new(vec!["crc_retries", "mismatches", "crc re-reads", "Mops"]);
+    for retries in [0u32, 1, 3, 8] {
+        let cfg = KvCfg::new(256, 4_000, Dist::Zipfian,
+                             Mode::Mixed { read_percent: 95 });
+        // thread the retry budget through DhtConfig by rebuilding inside
+        // run_kv is not exposed; emulate via env-free direct construction:
+        let res = run_kv_with_retries(retries, cfg);
+        t.row(vec![
+            retries.to_string(),
+            res.0.to_string(),
+            res.1.to_string(),
+            mops(res.2),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ------------------------------------------------ 3. lock atomics
+    println!("\n[3] window-lock atomic count (coarse, uniform writes, 384 ranks)");
+    let mut t = Table::new(vec![
+        "lock atomics", "write Mops", "read Mops", "lock retries",
+    ]);
+    for atomics in [1u32, 2, 3, 5] {
+        let mut net = NetConfig::pik_ndr();
+        net.win_lock_atomics = atomics;
+        let cfg = KvCfg::new(384, 3_000, Dist::Uniform, Mode::WriteThenRead);
+        let res = run_kv(Variant::Coarse, net, cfg);
+        t.row(vec![
+            atomics.to_string(),
+            mops(res.write_mops),
+            mops(res.read_mops),
+            res.lock_retries.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(the paper's §3.5 names three atomics per Open MPI lock attempt)");
+
+    // ------------------------------------------------ 4. PJRT batch size
+    let dir = mpi_dht::runtime::Engine::default_dir();
+    if dir.join("manifest.txt").exists() {
+        println!("\n[4] PJRT chemistry batch size (cells/s)");
+        let engine = mpi_dht::runtime::Engine::load(dir).expect("engine");
+        let g = engine.manifest().golden_chemistry().expect("golden");
+        let mut t = Table::new(vec!["batch", "cells/s", "µs/cell"]);
+        for target in [32usize, 128, 512, 2048] {
+            let reps = target / g.rows;
+            let mut rows = Vec::new();
+            for _ in 0..reps.max(1) {
+                rows.extend_from_slice(&g.inputs);
+            }
+            let n = g.rows * reps.max(1);
+            let t0 = std::time::Instant::now();
+            let mut cells = 0u64;
+            while t0.elapsed().as_secs_f64() < 0.4 {
+                engine.chemistry(&rows, n).expect("chem");
+                cells += n as u64;
+            }
+            let per_s = cells as f64 / t0.elapsed().as_secs_f64();
+            t.row(vec![
+                target.to_string(),
+                format!("{per_s:.0}"),
+                format!("{:.2}", 1e6 / per_s),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+}
+
+/// Run the mixed workload with a custom checksum-retry budget.
+fn run_kv_with_retries(retries: u32, cfg: KvCfg) -> (u64, u64, f64) {
+    let variant = Variant::LockFree;
+    let mut dht = DhtConfig::new(
+        variant,
+        cfg.nranks,
+        cfg.win_bytes_effective(
+            mpi_dht::dht::BucketLayout::new(variant, 80, 104).size(),
+        ),
+        80,
+        104,
+    );
+    dht.crc_retries = retries;
+    let res = mpi_dht::bench::kv::run_kv_custom(dht, NetConfig::pik_ndr(), cfg);
+    (res.mismatches, res.stats.crc_retries, res.mixed_mops)
+}

@@ -1,0 +1,84 @@
+//! Shared plumbing for the figure/table benches.
+//!
+//! Scaling: `MPI_DHT_BENCH_SCALE=full` restores the paper's op counts
+//! (500 k pairs/rank etc.) — expect long runtimes and high memory;
+//! the default is a scaled configuration with load factor and zipf-range
+//! ratio preserved (DESIGN.md §2).  `MPI_DHT_BENCH_REPEATS=5` reproduces
+//! the paper's median-of-five; default is 1 for turnaround.
+
+#![allow(dead_code)]
+
+use mpi_dht::bench::{run_kv, Dist, KvCfg, KvResult, Mode};
+use mpi_dht::dht::Variant;
+use mpi_dht::net::NetConfig;
+use mpi_dht::util::stats;
+
+pub fn full_scale() -> bool {
+    std::env::var("MPI_DHT_BENCH_SCALE").as_deref() == Ok("full")
+}
+
+pub fn repeats() -> usize {
+    std::env::var("MPI_DHT_BENCH_REPEATS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Paper rank counts for the PIK figures.
+pub const PIK_RANKS: [u32; 5] = [128, 256, 384, 512, 640];
+/// Paper client counts for the Turing figure.
+pub const TURING_CLIENTS: [u32; 6] = [12, 24, 36, 48, 60, 72];
+
+/// ops/rank for experiment 1 (paper: 500 k).
+pub fn exp1_ops() -> u64 {
+    if full_scale() { 500_000 } else { 5_000 }
+}
+
+/// ops/rank for experiment 2 (paper: 1 M).
+pub fn exp2_ops() -> u64 {
+    if full_scale() { 1_000_000 } else { 10_000 }
+}
+
+/// ops/client for the Fig. 3 testbed (paper: 100 k).
+pub fn fig3_ops() -> u64 {
+    if full_scale() { 100_000 } else { 20_000 }
+}
+
+/// Median over `repeats()` runs with distinct seeds (paper: median of 5).
+pub fn median_kv(
+    variant: Variant,
+    net: &NetConfig,
+    base: &KvCfg,
+    pick: impl Fn(&KvResult) -> f64,
+) -> (f64, f64, KvResult) {
+    let mut vals = Vec::new();
+    let mut last = None;
+    for rep in 0..repeats() {
+        let mut cfg = base.clone();
+        cfg.seed = base.seed.wrapping_add(rep as u64 * 0x9E37);
+        let res = run_kv(variant, net.clone(), cfg);
+        vals.push(pick(&res));
+        last = Some(res);
+    }
+    (stats::median(&vals), stats::stddev(&vals), last.unwrap())
+}
+
+pub fn kv_cfg(nranks: u32, dist: Dist, mode: Mode) -> KvCfg {
+    let ops = match mode {
+        Mode::WriteThenRead => exp1_ops(),
+        Mode::Mixed { .. } => exp2_ops(),
+    };
+    KvCfg::new(nranks, ops, dist, mode)
+}
+
+pub fn banner(name: &str, paper: &str) {
+    println!("==============================================================");
+    println!("{name}");
+    println!("paper reference: {paper}");
+    println!(
+        "scale: {} (MPI_DHT_BENCH_SCALE=full for paper-scale), repeats: {}",
+        if full_scale() { "FULL" } else { "scaled" },
+        repeats()
+    );
+    println!("==============================================================");
+}

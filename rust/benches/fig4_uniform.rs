@@ -1,0 +1,59 @@
+//! Figures 4a/4b: read and write throughput with uniformly distributed
+//! keys, 128–640 ranks on the PIK/NDR testbed, all three DHT variants.
+//!
+//! Reproduction targets (640 ranks): lock-free ~16.4 Mops reads (≈3x
+//! fine-grained, ≈2x coarse-grained); writes lock-free 13.9, fine 4.75,
+//! coarse 0.67 Mops; write < read for every variant.
+
+mod common;
+
+use common::{banner, kv_cfg, median_kv, PIK_RANKS};
+use mpi_dht::bench::table::{mops, Table};
+use mpi_dht::bench::{Dist, KvResult, Mode};
+use mpi_dht::dht::Variant;
+use mpi_dht::net::NetConfig;
+
+fn main() {
+    banner(
+        "Fig. 4a/4b — read/write throughput, uniform keys",
+        "§5.3, PIK NDR testbed, 500k pairs/rank (scaled)",
+    );
+    let net = NetConfig::pik_ndr();
+    // one sweep measures both phases (write-then-read)
+    let mut rows: Vec<[KvResult; 3]> = Vec::new();
+    for n in PIK_RANKS {
+        let cfg = kv_cfg(n, Dist::Uniform, Mode::WriteThenRead);
+        let (_, _, c) = median_kv(Variant::Coarse, &net, &cfg, |r| r.read_mops);
+        let (_, _, f) = median_kv(Variant::Fine, &net, &cfg, |r| r.read_mops);
+        let (_, _, l) = median_kv(Variant::LockFree, &net, &cfg, |r| r.read_mops);
+        rows.push([c, f, l]);
+    }
+    for (label, pick) in [
+        ("Fig. 4a — READ-only throughput [Mops]",
+         (|r: &KvResult| r.read_mops) as fn(&KvResult) -> f64),
+        ("Fig. 4b — WRITE-only throughput [Mops]", |r| r.write_mops),
+    ] {
+        println!("\n{label}");
+        let mut t = Table::new(vec![
+            "ranks", "coarse-grained", "fine-grained", "lock-free",
+            "LF/fine", "LF/coarse",
+        ]);
+        for (i, n) in PIK_RANKS.iter().enumerate() {
+            let [c, f, l] = &rows[i];
+            let (c, f, l) = (pick(c), pick(f), pick(l));
+            t.row(vec![
+                n.to_string(),
+                mops(c),
+                mops(f),
+                mops(l),
+                format!("{:.1}x", l / f.max(1e-12)),
+                format!("{:.1}x", l / c.max(1e-12)),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    println!(
+        "\npaper @640: reads LF 16.4 / fine ~5.5 / coarse ~8.2; \
+         writes LF 13.9 / fine 4.75 / coarse 0.67"
+    );
+}

@@ -1,0 +1,59 @@
+//! Figures 5a/5b: read and write throughput with zipfian keys (skew 0.99,
+//! range 1..712,500 scaled), 128–640 ranks, all three variants.
+//!
+//! Reproduction targets: reads like Fig. 4 (lock-free 16.2 Mops @640);
+//! writes collapse for both locking variants (fine 0.03, coarse 0.01
+//! Mops @640 — factors 477x / 1430x below lock-free's 14.3).
+
+mod common;
+
+use common::{banner, kv_cfg, median_kv, PIK_RANKS};
+use mpi_dht::bench::table::{mops, Table};
+use mpi_dht::bench::{Dist, KvResult, Mode};
+use mpi_dht::dht::Variant;
+use mpi_dht::net::NetConfig;
+
+fn main() {
+    banner(
+        "Fig. 5a/5b — read/write throughput, zipfian keys (skew .99)",
+        "§5.3, PIK NDR testbed",
+    );
+    let net = NetConfig::pik_ndr();
+    // one sweep measures both phases (write-then-read)
+    let mut rows: Vec<[KvResult; 3]> = Vec::new();
+    for n in PIK_RANKS {
+        let cfg = kv_cfg(n, Dist::Zipfian, Mode::WriteThenRead);
+        let (_, _, c) = median_kv(Variant::Coarse, &net, &cfg, |r| r.read_mops);
+        let (_, _, f) = median_kv(Variant::Fine, &net, &cfg, |r| r.read_mops);
+        let (_, _, l) = median_kv(Variant::LockFree, &net, &cfg, |r| r.read_mops);
+        rows.push([c, f, l]);
+    }
+    for (label, pick) in [
+        ("Fig. 5a — READ-only throughput [Mops]",
+         (|r: &KvResult| r.read_mops) as fn(&KvResult) -> f64),
+        ("Fig. 5b — WRITE-only throughput [Mops]", |r| r.write_mops),
+    ] {
+        println!("\n{label}");
+        let mut t = Table::new(vec![
+            "ranks", "coarse-grained", "fine-grained", "lock-free",
+            "LF/fine", "LF/coarse",
+        ]);
+        for (i, n) in PIK_RANKS.iter().enumerate() {
+            let [c, f, l] = &rows[i];
+            let (c, f, l) = (pick(c), pick(f), pick(l));
+            t.row(vec![
+                n.to_string(),
+                mops(c),
+                mops(f),
+                mops(l),
+                format!("{:.1}x", l / f.max(1e-12)),
+                format!("{:.1}x", l / c.max(1e-12)),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    println!(
+        "\npaper @640: reads LF 16.2; writes LF 14.3 / fine 0.03 / \
+         coarse 0.01 (477x / 1430x)"
+    );
+}

@@ -1,0 +1,65 @@
+//! Figure 7: runtime of POET's chemistry (+ coupling) with and without the
+//! DHT, 128–640 ranks (DES mode; 500x1500 grid scaled to 60x180 with
+//! per-cell PHREEQC costs preserved — see DESIGN.md §2).
+//!
+//! Reproduction targets: the reference barely scales past one node
+//! (603 s @128 -> 491 s @640 in the paper); only the lock-free DHT
+//! improves the runtime at every rank count; coarse-grained is *slower*
+//! than the reference; fine-grained helps slightly at 128 and degrades
+//! beyond.
+
+mod common;
+
+use common::{banner, PIK_RANKS};
+use mpi_dht::bench::table::Table;
+use mpi_dht::dht::Variant;
+use mpi_dht::net::NetConfig;
+use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
+
+fn main() {
+    banner(
+        "Fig. 7 — POET chemistry runtime w/ and w/o DHT",
+        "§5.4, PIK NDR testbed, 500 steps (grid scaled 500x1500 -> 60x180)",
+    );
+    let net = NetConfig::pik_ndr();
+    let variants: [(&str, Option<Variant>); 4] = [
+        ("reference", None),
+        ("coarse-grained", Some(Variant::Coarse)),
+        ("fine-grained", Some(Variant::Fine)),
+        ("lock-free", Some(Variant::LockFree)),
+    ];
+    let mut t = Table::new(vec![
+        "ranks", "reference s", "coarse s", "fine s", "lock-free s",
+        "LF hit rate", "LF gain %",
+    ]);
+    for n in PIK_RANKS {
+        let mut row = vec![n.to_string()];
+        let mut reference = 0.0f64;
+        let mut lf_gain = String::new();
+        let mut lf_hit = String::new();
+        for (_, v) in variants {
+            let cfg = PoetDesCfg::scaled(n, v);
+            let res = run_poet_des(cfg, net.clone());
+            row.push(format!("{:.1}", res.runtime_s));
+            match v {
+                None => reference = res.runtime_s,
+                Some(Variant::LockFree) => {
+                    lf_hit = format!("{:.3}", res.hit_rate());
+                    lf_gain = format!(
+                        "{:.1}",
+                        100.0 * (1.0 - res.runtime_s / reference)
+                    );
+                }
+                _ => {}
+            }
+        }
+        row.push(lf_hit);
+        row.push(lf_gain);
+        t.row(row);
+    }
+    print!("{}", t.render());
+    println!(
+        "\npaper: ref 603 s @128 -> 491 s @640; lock-free 350 s @128; \
+         only lock-free beats the reference; hit rate 91.8 %"
+    );
+}

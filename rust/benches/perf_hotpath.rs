@@ -1,0 +1,137 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf): the building blocks
+//! whose throughput bounds every figure above.
+//!
+//! * DES engine event rate (events/s) — bounds all DES sweeps
+//! * xxHash64 + CRC32 + bucket codec — the per-op CPU cost of the DHT
+//! * zipfian sampling — workload generation
+//! * shm-backend DHT ops — the threaded application path
+//! * PJRT chemistry cells/s + per-call overhead — the L1/L2 runtime path
+
+use std::time::Instant;
+
+use mpi_dht::bench::keys::{key_for, value_for};
+use mpi_dht::bench::{run_kv, Dist, KvCfg, Mode};
+use mpi_dht::dht::{BucketLayout, Dht, Variant};
+use mpi_dht::net::NetConfig;
+use mpi_dht::util::hash::xxhash64;
+use mpi_dht::util::rng::Rng;
+use mpi_dht::util::zipf::Zipf;
+
+fn bench<F: FnMut() -> u64>(name: &str, unit: &str, mut f: F) -> f64 {
+    // warm-up
+    f();
+    let t0 = Instant::now();
+    let mut units = 0u64;
+    let mut iters = 0u64;
+    while t0.elapsed().as_secs_f64() < 0.5 {
+        units += f();
+        iters += 1;
+    }
+    let per_s = units as f64 / t0.elapsed().as_secs_f64();
+    println!("{name:<38} {per_s:>14.0} {unit}/s  ({iters} iters)");
+    per_s
+}
+
+fn main() {
+    println!("perf_hotpath — microbenchmarks of the request-path pieces\n");
+
+    // hashing (the 80-byte key hash of every DHT op)
+    let key = key_for(7, 80);
+    bench("xxhash64(80B key)", "hash", || {
+        let mut acc = 0u64;
+        for i in 0..10_000u64 {
+            acc ^= xxhash64(&key, i);
+        }
+        std::hint::black_box(acc);
+        10_000
+    });
+
+    // CRC32 of a full record (lock-free bucket verification)
+    let val = value_for(7, 104);
+    bench("crc32(80B+104B record)", "crc", || {
+        for _ in 0..10_000 {
+            std::hint::black_box(mpi_dht::dht::bucket::record_crc(&key, &val));
+        }
+        10_000
+    });
+
+    // bucket codec
+    let layout = BucketLayout::new(Variant::LockFree, 80, 104);
+    bench("bucket encode+verify", "rec", || {
+        for _ in 0..10_000 {
+            let rec = layout.encode_record(&key, &val);
+            std::hint::black_box(layout.crc_ok(&rec));
+        }
+        10_000
+    });
+
+    // zipfian sampling
+    let zipf = Zipf::new(712_500, 0.99);
+    let mut rng = Rng::new(5);
+    bench("zipfian sample (n=712500)", "sample", || {
+        let mut acc = 0u64;
+        for _ in 0..100_000 {
+            acc ^= zipf.sample(&mut rng);
+        }
+        std::hint::black_box(acc);
+        100_000
+    });
+
+    // shm DHT ops (single thread)
+    let mut h = Dht::create_poet(Variant::LockFree, 4, 8 << 20).remove(0);
+    for i in 0..10_000u64 {
+        h.write(&key_for(i, 80), &value_for(i, 104));
+    }
+    bench("shm lock-free DHT read (hit)", "op", || {
+        for i in 0..10_000u64 {
+            std::hint::black_box(h.read(&key_for(i, 80)));
+        }
+        10_000
+    });
+    bench("shm lock-free DHT write", "op", || {
+        for i in 0..10_000u64 {
+            h.write(&key_for(i, 80), &value_for(i, 104));
+        }
+        10_000
+    });
+
+    // DES engine event rate (the denominator of every sweep's wall time)
+    bench("DES engine (lock-free uniform wtr)", "event", || {
+        let cfg = KvCfg::new(64, 400, Dist::Uniform, Mode::WriteThenRead);
+        let res = run_kv(Variant::LockFree, NetConfig::pik_ndr(), cfg);
+        res.sim.events
+    });
+
+    // PJRT chemistry throughput + per-call overhead
+    let dir = mpi_dht::runtime::Engine::default_dir();
+    if dir.join("manifest.txt").exists() {
+        let engine = mpi_dht::runtime::Engine::load(dir).expect("engine");
+        let g = engine.manifest().golden_chemistry().expect("golden");
+        // big batches -> cells/s
+        let reps = 2048 / g.rows;
+        let mut rows = Vec::new();
+        for _ in 0..reps {
+            rows.extend_from_slice(&g.inputs);
+        }
+        let n = g.rows * reps;
+        bench("PJRT chemistry (batch 2048)", "cell", || {
+            engine.chemistry(&rows, n).expect("chem");
+            n as u64
+        });
+        // small batches -> calls/s (per-call overhead)
+        bench("PJRT chemistry (batch 8)", "call", || {
+            for _ in 0..10 {
+                engine.chemistry(&g.inputs, g.rows).expect("chem");
+            }
+            10
+        });
+        // native mirror for comparison
+        use mpi_dht::poet::chemistry::{Chemistry, NativeChemistry};
+        bench("native chemistry", "cell", || {
+            NativeChemistry.run(&rows, n).expect("chem");
+            n as u64
+        });
+    } else {
+        println!("PJRT chemistry: skipped (artifacts not built)");
+    }
+}

@@ -1,0 +1,45 @@
+//! Table 1: write-only performance for 640 processes [Mops].
+//!
+//! ```text
+//! paper:   | Benchmark | Coarse | Fine | Lock-Free |
+//!          | uniform   |  0.67  | 4.75 |   13.9    |
+//!          | zipfian   |  0.01  | 0.03 |   14.3    |
+//! ```
+
+mod common;
+
+use common::{banner, kv_cfg, median_kv};
+use mpi_dht::bench::table::{mops, Table};
+use mpi_dht::bench::{Dist, Mode};
+use mpi_dht::dht::Variant;
+use mpi_dht::net::NetConfig;
+
+fn main() {
+    banner(
+        "Table 1 — write-only performance for 640 processes [Mops]",
+        "§5.3 Table 1",
+    );
+    let net = NetConfig::pik_ndr();
+    let mut t = Table::new(vec![
+        "benchmark", "coarse-grained", "fine-grained", "lock-free",
+        "paper (C/F/LF)",
+    ]);
+    for (dist, paper) in [
+        (Dist::Uniform, "0.67 / 4.75 / 13.9"),
+        (Dist::Zipfian, "0.01 / 0.03 / 14.3"),
+    ] {
+        let cfg = kv_cfg(640, dist, Mode::WriteThenRead);
+        let pick = |r: &mpi_dht::bench::KvResult| r.write_mops;
+        let (c, _, _) = median_kv(Variant::Coarse, &net, &cfg, pick);
+        let (f, _, _) = median_kv(Variant::Fine, &net, &cfg, pick);
+        let (l, _, _) = median_kv(Variant::LockFree, &net, &cfg, pick);
+        t.row(vec![
+            format!("{dist:?}").to_lowercase(),
+            mops(c),
+            mops(f),
+            mops(l),
+            paper.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}

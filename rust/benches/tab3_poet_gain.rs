@@ -1,0 +1,42 @@
+//! Table 3: performance gain of POET with the lock-free MPI-DHT vs the
+//! reference run without DHT.
+//!
+//! ```text
+//! paper:  128: 41.9%   256: 29.5%   384: 23.3%   512: 10.1%   640: 14.1%
+//! ```
+
+mod common;
+
+use common::{banner, PIK_RANKS};
+use mpi_dht::bench::table::Table;
+use mpi_dht::dht::Variant;
+use mpi_dht::net::NetConfig;
+use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
+
+fn main() {
+    banner(
+        "Table 3 — POET gain with lock-free MPI-DHT vs reference",
+        "§5.4 Table 3",
+    );
+    let net = NetConfig::pik_ndr();
+    let paper = [41.9, 29.5, 23.3, 10.1, 14.1];
+    let mut t = Table::new(vec![
+        "# of tasks", "reference s", "lock-free s", "gain %", "paper %",
+    ]);
+    for (i, n) in PIK_RANKS.iter().enumerate() {
+        let refr = run_poet_des(PoetDesCfg::scaled(*n, None), net.clone());
+        let lf = run_poet_des(
+            PoetDesCfg::scaled(*n, Some(Variant::LockFree)),
+            net.clone(),
+        );
+        let gain = 100.0 * (1.0 - lf.runtime_s / refr.runtime_s);
+        t.row(vec![
+            n.to_string(),
+            format!("{:.1}", refr.runtime_s),
+            format!("{:.1}", lf.runtime_s),
+            format!("{gain:.1}"),
+            format!("{:.1}", paper[i]),
+        ]);
+    }
+    print!("{}", t.render());
+}

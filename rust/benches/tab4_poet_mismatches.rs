@@ -1,0 +1,50 @@
+//! Table 4: checksum mismatches during the POET simulation with the
+//! lock-free MPI-DHT.
+//!
+//! ```text
+//! paper: 128: 1507  256: 3049  384: 4315  512: 2884  640: 4421
+//!        (4.4e-4 % .. 1.3e-3 % of all reads)
+//! ```
+//!
+//! Mismatches require concurrent writers on the same bucket observed by a
+//! reader mid-DMA; in POET that happens when several ranks compute the
+//! same front cell state in the same step and store it simultaneously.
+
+mod common;
+
+use common::{banner, PIK_RANKS};
+use mpi_dht::bench::table::Table;
+use mpi_dht::dht::Variant;
+use mpi_dht::net::NetConfig;
+use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
+
+fn main() {
+    banner(
+        "Table 4 — checksum mismatches in POET (lock-free MPI-DHT)",
+        "§5.4 Table 4",
+    );
+    let net = NetConfig::pik_ndr();
+    let mut t = Table::new(vec![
+        "# of tasks", "# of mismatches", "percentage [%]", "reads",
+        "crc re-reads",
+    ]);
+    for n in PIK_RANKS {
+        let res = run_poet_des(
+            PoetDesCfg::scaled(n, Some(Variant::LockFree)),
+            net.clone(),
+        );
+        t.row(vec![
+            n.to_string(),
+            res.dht.mismatches.to_string(),
+            format!("{:.1e}", res.dht.mismatch_percent()),
+            res.dht.reads.to_string(),
+            res.dht.crc_retries.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\npaper: 1507..4421 mismatches (0.00044..0.0013 % of reads) — \
+         nonzero but negligible; scaled grids have proportionally fewer \
+         concurrent same-bucket writes"
+    );
+}

@@ -1,0 +1,552 @@
+//! The paper's synthetic benchmarks as DES workloads (§5.2).
+//!
+//! **Experiment 1 (write-then-read)**: every rank writes `ops_per_rank`
+//! key-value pairs, all ranks barrier, then every rank reads back exactly
+//! the keys it wrote.  Read and write throughput are reported separately
+//! (Figs. 3, 4a/4b, 5a/5b; Tab. 1).
+//!
+//! **Experiment 2 (mixed)**: each rank performs `ops_per_rank` operations,
+//! 95 % reads / 5 % writes, keys drawn fresh from the distribution each op
+//! (Fig. 6; Tab. 2 counts the lock-free checksum mismatches).
+//!
+//! Scaling note (DESIGN.md §2): the paper uses 500 k pairs/rank over 1 GB
+//! windows; we default to scaled-down counts with the *load factor* and
+//! the zipf-range : ops ratio (712 500 / 500 000 = 1.425) held fixed, so
+//! collision and contention statistics are preserved.
+
+use crate::daos::{DaosConfig, DaosOut, DaosServer, DaosSm};
+use crate::dht::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
+use crate::metrics::Histogram;
+use crate::net::{NetConfig, Network};
+use crate::rma::sim::{SimCluster, SimReport};
+use crate::rma::{RpcPayload, RpcReply, WorkItem, Workload};
+use crate::sim::Time;
+use crate::util::rng::Rng;
+use crate::util::zipf::Zipf;
+
+use super::keys::{key_for, value_for};
+
+/// Key-id distribution (§5.2: uniform or zipfian with skew 0.99).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dist {
+    Uniform,
+    Zipfian,
+}
+
+impl Dist {
+    pub fn parse(s: &str) -> Option<Dist> {
+        match s {
+            "uniform" => Some(Dist::Uniform),
+            "zipfian" | "zipf" => Some(Dist::Zipfian),
+            _ => None,
+        }
+    }
+}
+
+/// Benchmark phase structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Experiment 1: write everything, barrier, read everything back.
+    WriteThenRead,
+    /// Experiment 2: one phase of `read_frac` reads / rest writes.
+    Mixed { read_percent: u32 },
+}
+
+/// Workload configuration.
+#[derive(Clone, Debug)]
+pub struct KvCfg {
+    pub nranks: u32,
+    pub ops_per_rank: u64,
+    pub dist: Dist,
+    pub mode: Mode,
+    pub key_len: usize,
+    pub val_len: usize,
+    /// Zipf skew (paper: 0.99).
+    pub theta: f64,
+    /// Zipf range; if 0, derived as 1.425 * ops_per_rank (paper ratio).
+    pub zipf_range: u64,
+    /// Per-rank window bytes; if 0, sized for ~8.6 % load factor (paper).
+    pub win_bytes: usize,
+    pub seed: u64,
+}
+
+impl KvCfg {
+    pub fn new(nranks: u32, ops_per_rank: u64, dist: Dist, mode: Mode) -> Self {
+        Self {
+            nranks,
+            ops_per_rank,
+            dist,
+            mode,
+            key_len: 80,
+            val_len: 104,
+            theta: 0.99,
+            zipf_range: 0,
+            win_bytes: 0,
+            seed: 0xBEAC_0BE,
+        }
+    }
+
+    pub fn zipf_range_effective(&self) -> u64 {
+        if self.zipf_range > 0 {
+            self.zipf_range
+        } else {
+            ((self.ops_per_rank as f64) * 1.425).ceil() as u64
+        }
+    }
+
+    /// Window sized so the write phase fills ~8.6 % of buckets (paper:
+    /// 500 k pairs into 1 GiB/186 B ≈ 5.8 M buckets per rank).
+    pub fn win_bytes_effective(&self, bucket_size: usize) -> usize {
+        if self.win_bytes > 0 {
+            return self.win_bytes;
+        }
+        let buckets = (self.ops_per_rank as f64 / 0.086).ceil() as usize;
+        (buckets * bucket_size + 7) / 8 * 8
+    }
+}
+
+/// Per-phase measurements of one run.
+#[derive(Clone, Debug, Default)]
+pub struct KvResult {
+    pub nranks: u32,
+    /// Write-only throughput in Mops (experiment 1 phase 1).
+    pub write_mops: f64,
+    /// Read-only throughput in Mops (experiment 1 phase 2).
+    pub read_mops: f64,
+    /// Mixed throughput in Mops (experiment 2).
+    pub mixed_mops: f64,
+    /// Median + p95 latencies (ns) per op class.
+    pub read_lat_p50: u64,
+    pub read_lat_p95: u64,
+    pub write_lat_p50: u64,
+    pub write_lat_p95: u64,
+    /// Lock-free checksum mismatches (Tab. 2) and their share of reads.
+    pub mismatches: u64,
+    pub mismatch_percent: f64,
+    /// Busy-wait lock retries (coarse window locks, backend-level).
+    pub lock_retries: u64,
+    pub stats: DhtStats,
+    pub sim: SimReport,
+}
+
+// ---------------------------------------------------------------- workload
+
+struct RankCtx {
+    rng: Rng,
+    /// independent value stream: rewrites of a hot key carry *different*
+    /// bytes (as the paper's random generation does) — otherwise torn
+    /// reads of identical old/new records would be undetectable and
+    /// Tab. 2's mismatches could never occur.
+    vrng: Rng,
+    /// ids written by this rank (regenerated for the read phase).
+    replay: Rng,
+    ops_done: u64,
+    phase: u8, // 0 = write, 1 = read (experiment 1); 0 = mixed (exp 2)
+    at_barrier: bool,
+    issued_read: bool,
+}
+
+struct KvWorkload {
+    cfg: KvCfg,
+    dht: DhtConfig,
+    zipf: Option<Zipf>,
+    ranks: Vec<RankCtx>,
+    stats: DhtStats,
+    read_lat: Histogram,
+    write_lat: Histogram,
+    phase_ops: [u64; 2],
+}
+
+impl KvWorkload {
+    fn new(cfg: KvCfg, dht: DhtConfig) -> Self {
+        let zipf = match cfg.dist {
+            Dist::Uniform => None,
+            Dist::Zipfian => Some(Zipf::new(cfg.zipf_range_effective(), cfg.theta)),
+        };
+        let ranks = (0..cfg.nranks)
+            .map(|r| RankCtx {
+                // "every client starts with a different seed" (§3.3)
+                rng: Rng::new(cfg.seed ^ (r as u64) << 20),
+                vrng: Rng::new(cfg.seed ^ (r as u64) << 20 ^ 0x56414C),
+                replay: Rng::new(cfg.seed ^ (r as u64) << 20),
+                ops_done: 0,
+                phase: 0,
+                at_barrier: false,
+                issued_read: false,
+            })
+            .collect();
+        Self {
+            cfg,
+            dht,
+            zipf,
+            ranks,
+            stats: DhtStats::default(),
+            read_lat: Histogram::new(),
+            write_lat: Histogram::new(),
+            phase_ops: [0, 0],
+        }
+    }
+
+    fn draw_id(zipf: &Option<Zipf>, rng: &mut Rng) -> u64 {
+        match zipf {
+            None => rng.next_u64(),
+            Some(z) => z.sample(rng),
+        }
+    }
+}
+
+impl Workload for KvWorkload {
+    type Sm = DhtSm;
+
+    fn next(&mut self, rank: u32, _now: Time) -> WorkItem<DhtSm> {
+        let cfg_ops = self.cfg.ops_per_rank;
+        let variant = self.dht.variant;
+        let (key_len, val_len) = (self.cfg.key_len, self.cfg.val_len);
+        let r = &mut self.ranks[rank as usize];
+        match self.cfg.mode {
+            Mode::WriteThenRead => {
+                if r.phase == 0 {
+                    if r.ops_done < cfg_ops {
+                        r.ops_done += 1;
+                        let id = Self::draw_id(&self.zipf, &mut r.rng);
+                        let key = key_for(id, key_len);
+                        let val = value_for(r.vrng.next_u64(), val_len);
+                        r.issued_read = false;
+                        return WorkItem::Op(DhtSm::write(
+                            variant, &self.dht, &key, &val,
+                        ));
+                    }
+                    if !r.at_barrier {
+                        r.at_barrier = true;
+                        return WorkItem::Barrier;
+                    }
+                    // barrier released: start the read phase
+                    r.phase = 1;
+                    r.ops_done = 0;
+                }
+                if r.ops_done < cfg_ops {
+                    r.ops_done += 1;
+                    // read back exactly the ids written in phase 0 (§5.2)
+                    let id = Self::draw_id(&self.zipf, &mut r.replay);
+                    let key = key_for(id, key_len);
+                    r.issued_read = true;
+                    return WorkItem::Op(DhtSm::read(variant, &self.dht, &key));
+                }
+                WorkItem::Finished
+            }
+            Mode::Mixed { read_percent } => {
+                if r.ops_done >= cfg_ops {
+                    return WorkItem::Finished;
+                }
+                r.ops_done += 1;
+                let id = Self::draw_id(&self.zipf, &mut r.rng);
+                let key = key_for(id, key_len);
+                if r.rng.below(100) < read_percent as u64 {
+                    r.issued_read = true;
+                    WorkItem::Op(DhtSm::read(variant, &self.dht, &key))
+                } else {
+                    let val = value_for(r.vrng.next_u64(), val_len);
+                    r.issued_read = false;
+                    WorkItem::Op(DhtSm::write(variant, &self.dht, &key, &val))
+                }
+            }
+        }
+    }
+
+    fn on_complete(
+        &mut self,
+        rank: u32,
+        _now: Time,
+        latency: Time,
+        out: crate::dht::OpOut,
+    ) {
+        self.stats.record(&out);
+        let is_read = matches!(
+            out.outcome,
+            DhtOutcome::ReadHit(_) | DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt
+        );
+        if is_read {
+            self.read_lat.record(latency.max(1));
+        } else {
+            self.write_lat.record(latency.max(1));
+        }
+        let phase = self.ranks[rank as usize].phase as usize;
+        self.phase_ops[phase] += 1;
+    }
+}
+
+/// Run one DHT benchmark configuration in the DES cluster.
+pub fn run_kv(variant: Variant, net_cfg: NetConfig, cfg: KvCfg) -> KvResult {
+    let dht = DhtConfig::new(
+        variant,
+        cfg.nranks,
+        cfg.win_bytes_effective(
+            crate::dht::BucketLayout::new(variant, cfg.key_len, cfg.val_len)
+                .size(),
+        ),
+        cfg.key_len,
+        cfg.val_len,
+    );
+    run_kv_custom(dht, net_cfg, cfg)
+}
+
+/// Like [`run_kv`] but with a caller-supplied [`DhtConfig`] (ablations:
+/// custom checksum-retry budgets, layouts, ...).
+pub fn run_kv_custom(dht: DhtConfig, net_cfg: NetConfig, cfg: KvCfg) -> KvResult {
+    let win_bytes = cfg.win_bytes_effective(dht.layout.size());
+    let variant = dht.variant;
+    let _ = variant;
+    let net = Network::new(net_cfg, cfg.nranks);
+    let workload = KvWorkload::new(cfg.clone(), dht);
+    let mut cluster = SimCluster::new(workload, net, cfg.nranks, win_bytes);
+    let sim = cluster.run();
+    let w = &cluster.workload;
+
+    let mut res = KvResult {
+        nranks: cfg.nranks,
+        stats: w.stats.clone(),
+        mismatches: w.stats.mismatches,
+        mismatch_percent: w.stats.mismatch_percent(),
+        lock_retries: sim.lock_retries,
+        read_lat_p50: w.read_lat.percentile(50.0),
+        read_lat_p95: w.read_lat.percentile(95.0),
+        write_lat_p50: w.write_lat.percentile(50.0),
+        write_lat_p95: w.write_lat.percentile(95.0),
+        ..Default::default()
+    };
+    match cfg.mode {
+        Mode::WriteThenRead => {
+            let t_write = sim.barrier_times.first().copied().unwrap_or(sim.duration);
+            let t_read = sim.duration.saturating_sub(t_write).max(1);
+            res.write_mops = w.phase_ops[0] as f64 / (t_write as f64 / 1e9) / 1e6;
+            res.read_mops = w.phase_ops[1] as f64 / (t_read as f64 / 1e9) / 1e6;
+        }
+        Mode::Mixed { .. } => {
+            res.mixed_mops =
+                sim.ops as f64 / (sim.duration as f64 / 1e9) / 1e6;
+        }
+    }
+    res.sim = sim;
+    res
+}
+
+// ----------------------------------------------------------------- DAOS run
+
+struct DaosWorkload {
+    cfg: KvCfg,
+    daos: DaosConfig,
+    server: DaosServer,
+    ranks: Vec<RankCtx>,
+    zipf: Option<Zipf>,
+    read_lat: Histogram,
+    write_lat: Histogram,
+    phase_ops: [u64; 2],
+    hits: u64,
+}
+
+impl Workload for DaosWorkload {
+    type Sm = DaosSm;
+
+    fn next(&mut self, rank: u32, _now: Time) -> WorkItem<DaosSm> {
+        let cfg_ops = self.cfg.ops_per_rank;
+        let (key_len, val_len) = (self.cfg.key_len, self.cfg.val_len);
+        let r = &mut self.ranks[rank as usize];
+        if r.phase == 0 {
+            if r.ops_done < cfg_ops {
+                r.ops_done += 1;
+                let id = KvWorkload::draw_id(&self.zipf, &mut r.rng);
+                return WorkItem::Op(DaosSm::put(
+                    &self.daos,
+                    key_for(id, key_len),
+                    value_for(id, val_len),
+                ));
+            }
+            if !r.at_barrier {
+                r.at_barrier = true;
+                return WorkItem::Barrier;
+            }
+            r.phase = 1;
+            r.ops_done = 0;
+        }
+        if r.ops_done < cfg_ops {
+            r.ops_done += 1;
+            let id = KvWorkload::draw_id(&self.zipf, &mut r.replay);
+            return WorkItem::Op(DaosSm::get(&self.daos, key_for(id, key_len)));
+        }
+        WorkItem::Finished
+    }
+
+    fn on_complete(&mut self, rank: u32, _now: Time, latency: Time, out: DaosOut) {
+        match out {
+            DaosOut::ReadHit(_) => {
+                self.hits += 1;
+                self.read_lat.record(latency.max(1));
+            }
+            DaosOut::ReadMiss => self.read_lat.record(latency.max(1)),
+            DaosOut::Written => self.write_lat.record(latency.max(1)),
+        }
+        let phase = self.ranks[rank as usize].phase as usize;
+        self.phase_ops[phase] += 1;
+    }
+
+    fn serve_rpc(&mut self, _now: Time, payload: &RpcPayload) -> RpcReply {
+        self.server.serve(payload)
+    }
+}
+
+/// Run the write-then-read benchmark against the DAOS baseline.
+pub fn run_daos(net_cfg: NetConfig, daos: DaosConfig, cfg: KvCfg) -> KvResult {
+    assert_eq!(cfg.mode, Mode::WriteThenRead, "Fig. 3 uses experiment 1");
+    let zipf = match cfg.dist {
+        Dist::Uniform => None,
+        Dist::Zipfian => Some(Zipf::new(cfg.zipf_range_effective(), cfg.theta)),
+    };
+    let ranks = (0..cfg.nranks)
+        .map(|r| RankCtx {
+            rng: Rng::new(cfg.seed ^ (r as u64) << 20),
+            vrng: Rng::new(cfg.seed ^ (r as u64) << 20 ^ 0x56414C),
+            replay: Rng::new(cfg.seed ^ (r as u64) << 20),
+            ops_done: 0,
+            phase: 0,
+            at_barrier: false,
+            issued_read: false,
+        })
+        .collect();
+    let workload = DaosWorkload {
+        cfg: cfg.clone(),
+        daos,
+        server: DaosServer::new(),
+        ranks,
+        zipf,
+        read_lat: Histogram::new(),
+        write_lat: Histogram::new(),
+        phase_ops: [0, 0],
+        hits: 0,
+    };
+    let net = Network::new(net_cfg, cfg.nranks);
+    // clients contribute no windows; a minimal window keeps the engine happy
+    let mut cluster = SimCluster::new(workload, net, cfg.nranks, 64);
+    let sim = cluster.run();
+    let w = &cluster.workload;
+
+    let t_write = sim.barrier_times.first().copied().unwrap_or(sim.duration);
+    let t_read = sim.duration.saturating_sub(t_write).max(1);
+    KvResult {
+        nranks: cfg.nranks,
+        write_mops: w.phase_ops[0] as f64 / (t_write as f64 / 1e9) / 1e6,
+        read_mops: w.phase_ops[1] as f64 / (t_read as f64 / 1e9) / 1e6,
+        read_lat_p50: w.read_lat.percentile(50.0),
+        read_lat_p95: w.read_lat.percentile(95.0),
+        write_lat_p50: w.write_lat.percentile(50.0),
+        write_lat_p95: w.write_lat.percentile(95.0),
+        sim,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(nranks: u32, dist: Dist, mode: Mode) -> KvCfg {
+        let mut c = KvCfg::new(nranks, 200, dist, mode);
+        c.seed = 42;
+        c
+    }
+
+    #[test]
+    fn write_then_read_reads_all_back() {
+        for variant in Variant::ALL {
+            let res = run_kv(
+                variant,
+                NetConfig::pik_ndr(),
+                small_cfg(8, Dist::Uniform, Mode::WriteThenRead),
+            );
+            // uniform 64-bit ids never collide: every read must hit
+            assert_eq!(res.stats.reads, 8 * 200, "{variant:?}");
+            assert_eq!(res.stats.writes, 8 * 200, "{variant:?}");
+            assert!(
+                res.stats.hit_rate() > 0.99,
+                "{variant:?} hit rate {}",
+                res.stats.hit_rate()
+            );
+            assert!(res.read_mops > 0.0 && res.write_mops > 0.0);
+            assert_eq!(res.mismatches, 0, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn lockfree_faster_than_coarse_on_writes() {
+        let cfg = small_cfg(32, Dist::Uniform, Mode::WriteThenRead);
+        let lf = run_kv(Variant::LockFree, NetConfig::pik_ndr(), cfg.clone());
+        let cg = run_kv(Variant::Coarse, NetConfig::pik_ndr(), cfg);
+        assert!(
+            lf.write_mops > cg.write_mops,
+            "lock-free {} <= coarse {}",
+            lf.write_mops,
+            cg.write_mops
+        );
+    }
+
+    #[test]
+    fn zipfian_mixed_runs_and_counts() {
+        let res = run_kv(
+            Variant::LockFree,
+            NetConfig::pik_ndr(),
+            small_cfg(16, Dist::Zipfian, Mode::Mixed { read_percent: 95 }),
+        );
+        assert!(res.mixed_mops > 0.0);
+        let total = res.stats.reads + res.stats.writes;
+        assert_eq!(total, 16 * 200);
+        // ~95/5 split
+        let read_frac = res.stats.reads as f64 / total as f64;
+        assert!((0.9..0.99).contains(&read_frac), "read frac {read_frac}");
+    }
+
+    /// Calibration probe: run with
+    /// `cargo test --release calibration_probe -- --ignored --nocapture`
+    #[test]
+    #[ignore]
+    fn calibration_probe() {
+        for (variant, dist) in [
+            (Variant::LockFree, Dist::Uniform),
+            (Variant::LockFree, Dist::Zipfian),
+            (Variant::Fine, Dist::Uniform),
+            (Variant::Fine, Dist::Zipfian),
+            (Variant::Coarse, Dist::Uniform),
+            (Variant::Coarse, Dist::Zipfian),
+        ] {
+            let t0 = std::time::Instant::now();
+            let cfg = KvCfg::new(640, 2_000, dist, Mode::WriteThenRead);
+            let res = run_kv(variant, NetConfig::pik_ndr(), cfg);
+            println!(
+                "{:14} {:8?} read {:>7} Mops  write {:>7} Mops  rlat p50 {:>7} µs  wlat p50 {:>7} µs  retries {:>9}  events {:>9}  wall {:.1}s",
+                variant.name(), dist,
+                crate::bench::table::mops(res.read_mops),
+                crate::bench::table::mops(res.write_mops),
+                crate::bench::table::us(res.read_lat_p50),
+                crate::bench::table::us(res.write_lat_p50),
+                res.lock_retries,
+                res.sim.events,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+    }
+
+
+    #[test]
+    fn daos_flat_and_slower_than_dht() {
+        let cfg = small_cfg(24, Dist::Uniform, Mode::WriteThenRead);
+        let daos = run_daos(NetConfig::turing_roce(), DaosConfig::default(), cfg.clone());
+        let dht = run_kv(Variant::Coarse, NetConfig::turing_roce(), cfg);
+        assert!(
+            dht.read_mops > 2.0 * daos.read_mops,
+            "dht {} vs daos {}",
+            dht.read_mops,
+            daos.read_mops
+        );
+        assert!(daos.read_mops > 0.0);
+        // paper latency bands: DAOS reads 56–198 µs
+        assert!(daos.read_lat_p50 > 40_000, "p50={}ns", daos.read_lat_p50);
+    }
+}

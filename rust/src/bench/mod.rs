@@ -1,0 +1,14 @@
+//! Benchmark harness: the synthetic workloads of paper §5.2 and the
+//! measurement plumbing every figure/table bench is built on.
+//!
+//! * [`keys`]  — deterministic key/value material (80 B / 104 B records)
+//! * [`kv`]    — the DHT workloads: write-then-read (Figs. 3–5, Tab. 1),
+//!   mixed 95/5 (Fig. 6, Tab. 2), over uniform or zipfian ids; plus the
+//!   same workload against the server-based DAOS baseline (Fig. 3)
+//! * [`table`] — plain-text table formatting for bench outputs
+
+pub mod keys;
+pub mod kv;
+pub mod table;
+
+pub use kv::{run_daos, run_kv, Dist, KvCfg, KvResult, Mode};

@@ -1,0 +1,179 @@
+//! Hand-rolled CLI argument parsing (no `clap` offline).
+//!
+//! Conventions: `--key value` or `--key=value` options, bare `--switch`
+//! flags, positional arguments in order.  Subcommands are the first
+//! positional argument (see `main.rs`).
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+/// Option names that take a value (everything else starting with `--` is
+/// treated as a boolean switch).
+const VALUED: &[&str] = &[
+    "--ranks", "--ops", "--dist", "--variant", "--mode", "--profile",
+    "--ny", "--nx", "--steps", "--workers", "--digits", "--dt",
+    "--engine", "--artifacts", "--win-bytes", "--seed", "--config",
+    "--set", "--clients", "--out", "--repeats", "--read-percent",
+    "--zipf-range", "--theta", "--grid",
+];
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Result<Self> {
+        let mut a = Args::default();
+        let mut it = argv.peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.options.insert(format!("--{k}"), v.to_string());
+                } else if VALUED.contains(&tok.as_str()) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("{tok} expects a value"))?;
+                    if tok == "--set" {
+                        // --set may repeat; accumulate with ';'
+                        a.options
+                            .entry(tok.clone())
+                            .and_modify(|old| {
+                                old.push(';');
+                                old.push_str(&v);
+                            })
+                            .or_insert(v);
+                    } else {
+                        a.options.insert(tok, v);
+                    }
+                } else {
+                    a.switches.insert(tok);
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.contains(switch)
+    }
+
+    pub fn get(&self, opt: &str) -> Option<&str> {
+        self.options.get(opt).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, opt: &str, default: &'a str) -> &'a str {
+        self.get(opt).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, opt: &str, default: u64) -> Result<u64> {
+        match self.get(opt) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| anyhow!("{opt}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, opt: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(opt, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, opt: &str, default: f64) -> Result<f64> {
+        match self.get(opt) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("{opt}: expected float, got {v:?}")),
+        }
+    }
+
+    /// Comma/range list: "128,256" or "12..72:12" (start..end:step).
+    pub fn u32_list_or(&self, opt: &str, default: &[u32]) -> Result<Vec<u32>> {
+        let Some(spec) = self.get(opt) else {
+            return Ok(default.to_vec());
+        };
+        if let Some((range, step)) = spec.split_once(':') {
+            let (a, b) = range
+                .split_once("..")
+                .ok_or_else(|| anyhow!("{opt}: expected a..b:step"))?;
+            let (a, b, s): (u32, u32, u32) =
+                (a.parse()?, b.parse()?, step.parse()?);
+            if s == 0 {
+                return Err(anyhow!("{opt}: step must be > 0"));
+            }
+            return Ok((a..=b).step_by(s as usize).collect());
+        }
+        spec.split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse().map_err(|_| anyhow!("{opt}: bad entry {t:?}")))
+            .collect()
+    }
+
+    /// All `--set key=value` overrides.
+    pub fn overrides(&self) -> Vec<&str> {
+        self.get("--set").map(|s| s.split(';').collect()).unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_options_switches() {
+        let a = parse(&[
+            "bench-kv", "--ranks", "128,256", "--variant=lockfree",
+            "--paper-scale",
+        ]);
+        assert_eq!(a.positional, vec!["bench-kv"]);
+        assert_eq!(a.get("--ranks"), Some("128,256"));
+        assert_eq!(a.get("--variant"), Some("lockfree"));
+        assert!(a.has("--paper-scale"));
+        assert!(!a.has("--other"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["x", "--ops", "5_000", "--dt", "2000.0"]);
+        assert_eq!(a.u64_or("--ops", 0).unwrap(), 5000);
+        assert_eq!(a.f64_or("--dt", 0.0).unwrap(), 2000.0);
+        assert_eq!(a.u64_or("--missing", 9).unwrap(), 9);
+        assert!(a.u64_or("--dt", 0).is_err());
+    }
+
+    #[test]
+    fn rank_lists() {
+        let a = parse(&["x", "--ranks", "128,256,384"]);
+        assert_eq!(a.u32_list_or("--ranks", &[]).unwrap(), vec![128, 256, 384]);
+        let a = parse(&["x", "--ranks", "12..72:12"]);
+        assert_eq!(
+            a.u32_list_or("--ranks", &[]).unwrap(),
+            vec![12, 24, 36, 48, 60, 72]
+        );
+        let a = parse(&["x"]);
+        assert_eq!(a.u32_list_or("--ranks", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn repeated_set_accumulates() {
+        let a = parse(&["x", "--set", "a=1", "--set", "b=2"]);
+        assert_eq!(a.overrides(), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(Args::parse(["x", "--ranks"].iter().map(|s| s.to_string()))
+            .is_err());
+    }
+}

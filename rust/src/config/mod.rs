@@ -1,0 +1,249 @@
+//! Minimal TOML-subset configuration parser (the offline crate set has no
+//! `serde`/`toml`).
+//!
+//! Supports: `[section.subsection]` headers, `key = value` with integers,
+//! floats, booleans, quoted strings and flat arrays, comments with `#`.
+//! Typed getters with dotted paths (`net.atomic_ns`).  Used by the CLI's
+//! `--config` option and the profile files under `configs/`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+fn parse_scalar(tok: &str) -> Result<Value> {
+    let tok = tok.trim();
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(s) = tok.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(Value::Str(s.to_string()));
+    }
+    // integers may carry underscores like TOML
+    let clean: String = tok.chars().filter(|c| *c != '_').collect();
+    if let Ok(v) = clean.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = clean.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    bail!("cannot parse value: {tok:?}")
+}
+
+/// Parsed configuration: flat map of dotted keys.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    items: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut items = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // ignore comments (naive: assumes no '#' inside strings)
+                Some(i) if !raw[..i].contains('"') => &raw[..i],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(s) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = s.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let val = val.trim();
+            let value = if let Some(inner) =
+                val.strip_prefix('[').and_then(|v| v.strip_suffix(']'))
+            {
+                let elems: Result<Vec<Value>> = inner
+                    .split(',')
+                    .filter(|t| !t.trim().is_empty())
+                    .map(parse_scalar)
+                    .collect();
+                Value::Array(elems?)
+            } else {
+                parse_scalar(val)
+                    .with_context(|| format!("line {}", lineno + 1))?
+            };
+            items.insert(full, value);
+        }
+        Ok(Self { items })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.items.get(key)
+    }
+
+    pub fn i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.i64(key, default as i64) as u64
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.i64(key, default as i64) as usize
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// Required typed access (error when missing).
+    pub fn require_i64(&self, key: &str) -> Result<i64> {
+        self.get(key)
+            .and_then(Value::as_i64)
+            .ok_or_else(|| anyhow!("missing config key {key}"))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.items.keys().map(String::as_str)
+    }
+
+    /// Apply `key=value` override strings (CLI `--set`).
+    pub fn set_override(&mut self, spec: &str) -> Result<()> {
+        let (k, v) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--set expects key=value, got {spec:?}"))?;
+        self.items.insert(k.trim().to_string(), parse_scalar(v)?);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# profile for the PIK testbed
+title = "pik"
+
+[net]
+atomic_ns = 300
+ranks_per_node = 128
+bw = 50.0
+single_intrinsic = true
+
+[bench]
+rank_counts = [128, 256, 384]
+dist = "zipfian"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("title", ""), "pik");
+        assert_eq!(c.i64("net.atomic_ns", 0), 300);
+        assert_eq!(c.f64("net.bw", 0.0), 50.0);
+        assert!(c.bool("net.single_intrinsic", false));
+        assert_eq!(c.str("bench.dist", ""), "zipfian");
+        match c.get("bench.rank_counts").unwrap() {
+            Value::Array(v) => {
+                assert_eq!(v.len(), 3);
+                assert_eq!(v[0].as_i64(), Some(128));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let c = Config::parse("a = 1").unwrap();
+        assert_eq!(c.i64("a", 0), 1);
+        assert_eq!(c.i64("b", 7), 7);
+        assert!(c.require_i64("b").is_err());
+    }
+
+    #[test]
+    fn underscored_ints_and_floats() {
+        let c = Config::parse("x = 1_000_000\ny = 2.5e-3").unwrap();
+        assert_eq!(c.i64("x", 0), 1_000_000);
+        assert!((c.f64("y", 0.0) - 2.5e-3).abs() < 1e-18);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse("a = 1").unwrap();
+        c.set_override("a=2").unwrap();
+        c.set_override("net.wire_ns = 900").unwrap();
+        assert_eq!(c.i64("a", 0), 2);
+        assert_eq!(c.i64("net.wire_ns", 0), 900);
+        assert!(c.set_override("bogus").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("key value-without-equals").is_err());
+        assert!(Config::parse("k = @nope").is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Application coordinator: wires artifacts, engines, DHT variants and the
+//! POET drivers together for the CLI and the examples.
+//!
+//! This is the layer a downstream user scripts against: pick a chemistry
+//! engine (PJRT artifacts or the native mirror), pick a DHT variant (or
+//! none), run, get a structured report.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::dht::Variant;
+use crate::net::NetConfig;
+use crate::poet::{
+    Chemistry, NativeChemistry, PjrtChemistry, PoetConfig, PoetDriver,
+    PoetRunStats,
+};
+use crate::runtime::Engine;
+
+/// Which chemistry engine to use for threaded POET runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT Pallas/JAX artifacts via PJRT (requires `make artifacts`).
+    Pjrt,
+    /// The validated native mirror (no artifacts needed).
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pjrt" => Some(EngineKind::Pjrt),
+            "native" => Some(EngineKind::Native),
+            _ => None,
+        }
+    }
+}
+
+/// Build the chemistry engine (and waters, when PJRT artifacts carry them).
+pub fn build_chemistry(
+    kind: EngineKind,
+) -> Result<(Arc<dyn Chemistry>, Vec<f64>, Vec<f64>, Vec<f64>)> {
+    match kind {
+        EngineKind::Native => {
+            let (bg, inj, min0) = crate::poet::chemistry::default_waters();
+            Ok((Arc::new(NativeChemistry), bg, inj, min0))
+        }
+        EngineKind::Pjrt => {
+            let dir = Engine::default_dir();
+            if !dir.join("manifest.txt").exists() {
+                return Err(anyhow!(
+                    "artifacts not built (run `make artifacts`), or set \
+                     MPI_DHT_ARTIFACTS"
+                ));
+            }
+            let (chem, manifest) = PjrtChemistry::spawn(dir)?;
+            Ok((
+                Arc::new(chem),
+                manifest.background.clone(),
+                manifest.injection.clone(),
+                manifest.minerals0.clone(),
+            ))
+        }
+    }
+}
+
+/// Build a POET driver with the chosen engine.
+pub fn build_poet(cfg: PoetConfig, kind: EngineKind) -> Result<PoetDriver> {
+    let (chem, bg, inj, min0) = build_chemistry(kind)?;
+    Ok(PoetDriver::new(cfg, chem, &bg, &inj, &min0))
+}
+
+/// One labelled POET result for report tables.
+#[derive(Clone, Debug)]
+pub struct LabelledRun {
+    pub label: String,
+    pub stats: PoetRunStats,
+}
+
+/// Run reference + the requested DHT variants on identical configurations
+/// (each from a fresh grid) and return the labelled results.
+pub fn compare_poet(
+    cfg: &PoetConfig,
+    kind: EngineKind,
+    variants: &[Option<Variant>],
+) -> Result<Vec<LabelledRun>> {
+    let mut out = Vec::new();
+    for v in variants {
+        let mut driver = build_poet(cfg.clone(), kind)?;
+        let (label, stats) = match v {
+            None => ("reference".to_string(), driver.run_reference()),
+            Some(var) => (var.name().to_string(), driver.run_with_dht(*var)),
+        };
+        out.push(LabelledRun { label, stats });
+    }
+    Ok(out)
+}
+
+/// Resolve a network profile by name, with optional config overrides
+/// (`net.*` keys).
+pub fn net_profile(name: &str, cfg: Option<&Config>) -> Result<NetConfig> {
+    let mut net = match name {
+        "pik" | "pik_ndr" => NetConfig::pik_ndr(),
+        "turing" | "turing_roce" => NetConfig::turing_roce(),
+        other => return Err(anyhow!("unknown net profile {other:?}")),
+    };
+    if let Some(c) = cfg {
+        net.ranks_per_node =
+            c.i64("net.ranks_per_node", net.ranks_per_node as i64) as u32;
+        net.sw_ns = c.u64("net.sw_ns", net.sw_ns);
+        net.wire_ns = c.u64("net.wire_ns", net.wire_ns);
+        net.nic_fix_ns = c.u64("net.nic_fix_ns", net.nic_fix_ns);
+        net.bw_bytes_per_ns = c.f64("net.bw_bytes_per_ns", net.bw_bytes_per_ns);
+        net.resp_fix_ns = c.u64("net.resp_fix_ns", net.resp_fix_ns);
+        net.dma_bytes_per_ns =
+            c.f64("net.dma_bytes_per_ns", net.dma_bytes_per_ns);
+        net.atomic_ns = c.u64("net.atomic_ns", net.atomic_ns);
+        net.intra_ns = c.u64("net.intra_ns", net.intra_ns);
+        net.intra_atomic_ns = c.u64("net.intra_atomic_ns", net.intra_atomic_ns);
+        net.win_lock_atomics =
+            c.i64("net.win_lock_atomics", net.win_lock_atomics as i64) as u32;
+        net.win_unlock_atomics =
+            c.i64("net.win_unlock_atomics", net.win_unlock_atomics as i64) as u32;
+        net.win_shared_atomics =
+            c.i64("net.win_shared_atomics", net.win_shared_atomics as i64) as u32;
+    }
+    Ok(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_poet_end_to_end() {
+        let mut cfg = PoetConfig::small();
+        cfg.ny = 8;
+        cfg.nx = 24;
+        cfg.steps = 10;
+        cfg.inj_rows = 2;
+        let runs = compare_poet(
+            &cfg,
+            EngineKind::Native,
+            &[None, Some(Variant::LockFree)],
+        )
+        .unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].label, "reference");
+        assert!(runs[1].stats.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn net_profile_lookup_and_override() {
+        let base = net_profile("pik", None).unwrap();
+        let cfg = Config::parse("[net]\natomic_ns = 777\n").unwrap();
+        let tuned = net_profile("pik_ndr", Some(&cfg)).unwrap();
+        assert_eq!(tuned.atomic_ns, 777);
+        assert_eq!(tuned.wire_ns, base.wire_ns);
+        assert!(net_profile("nope", None).is_err());
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("pjrt"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("x"), None);
+    }
+}

@@ -1,0 +1,143 @@
+//! Addressing and collision handling (paper §3.1, Fig. 2).
+//!
+//! A 64-bit xxHash of the key determines the target rank (`hash % nranks`).
+//! Candidate bucket indices are derived by sliding an n-byte window over
+//! the hash one byte at a time, where n is the smallest integer with
+//! `log2(B) <= 8n` for B buckets per window; a 3-byte index over an 8-byte
+//! hash yields 6 candidates exactly as in the paper's Figure 2.  No bucket
+//! movement ever happens (unlike cuckoo/hopscotch) — the last candidate is
+//! overwritten when all are taken (cache semantics).
+
+use crate::util::hash::key_hash;
+
+/// Derives (target rank, candidate bucket indices) from a key.
+#[derive(Clone, Debug)]
+pub struct Addressing {
+    nranks: u32,
+    buckets: u64,
+    index_bytes: u32,
+}
+
+impl Addressing {
+    pub fn new(nranks: u32, buckets_per_window: u64) -> Self {
+        assert!(nranks > 0);
+        assert!(buckets_per_window > 0);
+        // smallest n with log2(B) <= 8n  <=>  B <= 2^(8n)
+        let mut n = 1u32;
+        while n < 8 && (buckets_per_window as u128) > (1u128 << (8 * n)) {
+            n += 1;
+        }
+        Self { nranks, buckets: buckets_per_window, index_bytes: n }
+    }
+
+    pub fn nranks(&self) -> u32 {
+        self.nranks
+    }
+
+    pub fn buckets(&self) -> u64 {
+        self.buckets
+    }
+
+    pub fn index_bytes(&self) -> u32 {
+        self.index_bytes
+    }
+
+    /// Number of candidate bucket indices (8 - n + 1; Fig. 2 gives 6 for
+    /// a 3-byte index).
+    pub fn num_indices(&self) -> u32 {
+        8 - self.index_bytes + 1
+    }
+
+    pub fn hash(&self, key: &[u8]) -> u64 {
+        key_hash(key)
+    }
+
+    /// Target rank for a key hash.
+    pub fn target(&self, hash: u64) -> u32 {
+        (hash % self.nranks as u64) as u32
+    }
+
+    /// The i-th candidate bucket index for a key hash (i < num_indices()).
+    pub fn index(&self, hash: u64, i: u32) -> u64 {
+        debug_assert!(i < self.num_indices());
+        let bytes = hash.to_le_bytes();
+        let mut v = 0u64;
+        // n-byte little-endian window starting at byte i
+        for b in 0..self.index_bytes {
+            v |= (bytes[(i + b) as usize] as u64) << (8 * b);
+        }
+        v % self.buckets
+    }
+
+    /// All candidate indices in probe order.
+    pub fn indices(&self, hash: u64) -> Vec<u64> {
+        (0..self.num_indices()).map(|i| self.index(hash, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_bytes_minimal() {
+        assert_eq!(Addressing::new(4, 200).index_bytes(), 1);
+        assert_eq!(Addressing::new(4, 256).index_bytes(), 1);
+        assert_eq!(Addressing::new(4, 257).index_bytes(), 2);
+        assert_eq!(Addressing::new(4, 1 << 16).index_bytes(), 2);
+        assert_eq!(Addressing::new(4, (1 << 16) + 1).index_bytes(), 3);
+        assert_eq!(Addressing::new(4, 1 << 24).index_bytes(), 3);
+    }
+
+    #[test]
+    fn paper_fig2_six_indices_for_3byte_window() {
+        let a = Addressing::new(640, 1 << 24); // 2^24 buckets -> 3-byte index
+        assert_eq!(a.index_bytes(), 3);
+        assert_eq!(a.num_indices(), 6);
+    }
+
+    #[test]
+    fn indices_are_byte_windows_of_the_hash() {
+        let a = Addressing::new(1, 1 << 16); // 2-byte index, 7 candidates
+        let hash = 0x0807_0605_0403_0201u64;
+        assert_eq!(a.num_indices(), 7);
+        let idx = a.indices(hash);
+        assert_eq!(idx[0], 0x0201 % (1 << 16));
+        assert_eq!(idx[1], 0x0302);
+        assert_eq!(idx[6], 0x0807);
+    }
+
+    #[test]
+    fn target_rank_in_range_and_uniform() {
+        let a = Addressing::new(640, 1 << 20);
+        let mut counts = vec![0u32; 640];
+        for i in 0..64_000u64 {
+            let mut key = [0u8; 80];
+            key[..8].copy_from_slice(&i.to_le_bytes());
+            let t = a.target(a.hash(&key));
+            assert!(t < 640);
+            counts[t as usize] += 1;
+        }
+        let avg = 100.0;
+        assert!(counts.iter().all(|&c| (c as f64) > 0.4 * avg));
+    }
+
+    #[test]
+    fn indices_within_bucket_count() {
+        for buckets in [1u64, 7, 100, 87_381, 1 << 20] {
+            let a = Addressing::new(8, buckets);
+            for h in [0u64, u64::MAX, 0xdead_beef_cafe_f00d] {
+                for idx in a.indices(h) {
+                    assert!(idx < buckets);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_key_same_candidates() {
+        let a = Addressing::new(64, 10_000);
+        let key = [7u8; 80];
+        assert_eq!(a.indices(a.hash(&key)), a.indices(a.hash(&key)));
+    }
+}

@@ -1,0 +1,317 @@
+//! Coarse-grained locking MPI-DHT (paper §3.1) — the original design of
+//! [De Lucia et al. 2021].
+//!
+//! Data consistency is Readers&Writers over the *entire* target window:
+//! every `DHT_read` takes the window lock shared, every `DHT_write` takes
+//! it exclusive (`MPI_Win_lock` / `MPI_Win_unlock`).  The backends model
+//! the lock acquisition as Open MPI does — a busy-wait CAS/FAO loop — which
+//! is precisely the synchronization overhead the paper measures at 48–80 %
+//! of call time (§3.5).
+//!
+//! State machines follow an "awaiting" idiom: each state names the response
+//! the machine is waiting for; `step` interprets it and issues the next
+//! request.
+
+use crate::rma::{Req, Resp, SmStep};
+
+use super::bucket::BucketLayout;
+use super::{DhtConfig, DhtOutcome, OpOut};
+
+/// Probe plan shared by the protocol SMs of all variants: target rank,
+/// candidate indices, layout, and request builders.
+#[derive(Clone, Debug)]
+pub(crate) struct Plan {
+    pub target: u32,
+    pub indices: Vec<u64>,
+    pub layout: BucketLayout,
+}
+
+impl Plan {
+    pub fn new(cfg: &DhtConfig, key: &[u8]) -> Self {
+        let hash = cfg.addressing.hash(key);
+        Self {
+            target: cfg.addressing.target(hash),
+            indices: cfg.addressing.indices(hash),
+            layout: cfg.layout,
+        }
+    }
+
+    fn rec_off(&self, i: usize) -> u64 {
+        self.layout.bucket_off(self.indices[i]) + self.layout.meta_off() as u64
+    }
+
+    /// Get the full bucket record (meta..end) at probe `i`.
+    pub fn get_record(&self, i: usize) -> Req {
+        Req::Get {
+            target: self.target,
+            offset: self.rec_off(i),
+            len: (self.layout.size() - self.layout.meta_off()) as u32,
+        }
+    }
+
+    /// Get the meta+key probe prefix at probe `i` (§3.1: a write "checks"
+    /// the bucket with `MPI_Get` before putting).
+    pub fn get_probe(&self, i: usize) -> Req {
+        Req::Get {
+            target: self.target,
+            offset: self.rec_off(i),
+            len: self.layout.probe_len() as u32,
+        }
+    }
+
+    /// Put `record` into the bucket at probe `i`.
+    pub fn put_record(&self, i: usize, record: Vec<u8>) -> Req {
+        Req::Put { target: self.target, offset: self.rec_off(i), data: record }
+    }
+
+    /// Absolute window offset of the per-bucket lock word (fine-grained).
+    pub fn lock_off(&self, i: usize) -> u64 {
+        self.layout.bucket_off(self.indices[i]) + self.layout.lock_off() as u64
+    }
+
+    /// Put just the meta word at probe `i` (lock-free invalidation).
+    pub fn put_meta(&self, i: usize, meta: u64) -> Req {
+        Req::Put {
+            target: self.target,
+            offset: self.rec_off(i),
+            data: meta.to_le_bytes().to_vec(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+fn data_of(resp: Resp) -> Vec<u8> {
+    match resp {
+        Resp::Data(d) => d,
+        other => panic!("protocol error: expected Data, got {other:?}"),
+    }
+}
+
+// --------------------------------------------------------------------- read
+
+enum RState {
+    Init,
+    AwaitLock,
+    AwaitBucket(usize),
+    AwaitUnlock,
+}
+
+/// `DHT_read` under coarse-grained locking.
+pub struct ReadSm {
+    plan: Plan,
+    key: Vec<u8>,
+    state: RState,
+    probes: u32,
+    pending: Option<DhtOutcome>,
+}
+
+impl ReadSm {
+    pub fn new(cfg: &DhtConfig, key: &[u8]) -> Self {
+        Self {
+            plan: Plan::new(cfg, key),
+            key: key.to_vec(),
+            state: RState::Init,
+            probes: 0,
+            pending: None,
+        }
+    }
+
+    fn finish(&mut self, out: DhtOutcome) -> SmStep<OpOut> {
+        self.pending = Some(out);
+        self.state = RState::AwaitUnlock;
+        SmStep::Issue(Req::UnlockWin { target: self.plan.target, exclusive: false })
+    }
+
+
+}
+
+impl crate::rma::OpSm for ReadSm {
+    type Out = OpOut;
+    fn step(&mut self, resp: Resp) -> SmStep<OpOut> {
+        match self.state {
+            RState::Init => {
+                self.state = RState::AwaitLock;
+                SmStep::Issue(Req::LockWin {
+                    target: self.plan.target,
+                    exclusive: false,
+                })
+            }
+            RState::AwaitLock => {
+                self.state = RState::AwaitBucket(0);
+                self.probes = 1;
+                SmStep::Issue(self.plan.get_record(0))
+            }
+            RState::AwaitBucket(i) => {
+                let data = data_of(resp);
+                let l = &self.plan.layout;
+                let meta = l.meta_of(&data);
+                if !meta.occupied() {
+                    return self.finish(DhtOutcome::ReadMiss);
+                }
+                if l.key_of(&data) == &self.key[..] {
+                    let v = l.val_of(&data).to_vec();
+                    return self.finish(DhtOutcome::ReadHit(v));
+                }
+                if i + 1 == self.plan.n() {
+                    return self.finish(DhtOutcome::ReadMiss);
+                }
+                self.state = RState::AwaitBucket(i + 1);
+                self.probes += 1;
+                SmStep::Issue(self.plan.get_record(i + 1))
+            }
+            RState::AwaitUnlock => SmStep::Done(OpOut {
+                outcome: self.pending.take().expect("outcome set"),
+                probes: self.probes,
+                crc_retries: 0,
+                lock_retries: 0,
+            }),
+        }
+    }}
+
+// --------------------------------------------------------------------- write
+
+enum WState {
+    Init,
+    AwaitLock,
+    AwaitProbe(usize),
+    AwaitPut,
+    AwaitUnlock,
+}
+
+/// `DHT_write` under coarse-grained locking.
+pub struct WriteSm {
+    plan: Plan,
+    key: Vec<u8>,
+    record: Vec<u8>,
+    state: WState,
+    probes: u32,
+    pending: Option<DhtOutcome>,
+}
+
+impl WriteSm {
+    pub fn new(cfg: &DhtConfig, key: &[u8], value: &[u8]) -> Self {
+        let plan = Plan::new(cfg, key);
+        let record = plan.layout.encode_record(key, value);
+        Self {
+            plan,
+            key: key.to_vec(),
+            record,
+            state: WState::Init,
+            probes: 0,
+            pending: None,
+        }
+    }
+
+
+}
+
+impl crate::rma::OpSm for WriteSm {
+    type Out = OpOut;
+    fn step(&mut self, resp: Resp) -> SmStep<OpOut> {
+        match self.state {
+            WState::Init => {
+                self.state = WState::AwaitLock;
+                SmStep::Issue(Req::LockWin {
+                    target: self.plan.target,
+                    exclusive: true,
+                })
+            }
+            WState::AwaitLock => {
+                self.state = WState::AwaitProbe(0);
+                self.probes = 1;
+                SmStep::Issue(self.plan.get_probe(0))
+            }
+            WState::AwaitProbe(i) => {
+                let data = data_of(resp);
+                let l = &self.plan.layout;
+                let meta = l.meta_of(&data);
+                let outcome = if !meta.occupied() {
+                    Some(DhtOutcome::WriteFresh)
+                } else if l.key_of(&data) == &self.key[..] {
+                    Some(DhtOutcome::WriteUpdate)
+                } else if i + 1 == self.plan.n() {
+                    // all candidates taken by other keys: overwrite the
+                    // last index (cache semantics, §3.1)
+                    Some(DhtOutcome::WriteEvict)
+                } else {
+                    None
+                };
+                match outcome {
+                    Some(out) => {
+                        self.pending = Some(out);
+                        self.state = WState::AwaitPut;
+                        SmStep::Issue(self.plan.put_record(i, self.record.clone()))
+                    }
+                    None => {
+                        self.state = WState::AwaitProbe(i + 1);
+                        self.probes += 1;
+                        SmStep::Issue(self.plan.get_probe(i + 1))
+                    }
+                }
+            }
+            WState::AwaitPut => {
+                debug_assert!(matches!(resp, Resp::Ack));
+                self.state = WState::AwaitUnlock;
+                SmStep::Issue(Req::UnlockWin {
+                    target: self.plan.target,
+                    exclusive: true,
+                })
+            }
+            WState::AwaitUnlock => SmStep::Done(OpOut {
+                outcome: self.pending.take().expect("outcome set"),
+                probes: self.probes,
+                crc_retries: 0,
+                lock_retries: 0,
+            }),
+        }
+    }}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::Variant;
+    use crate::rma::shm::ShmCluster;
+
+    fn cfg(nranks: u32) -> DhtConfig {
+        DhtConfig::poet(Variant::Coarse, nranks, 64 * 1024)
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let cfg = cfg(4);
+        let cluster = ShmCluster::new(4, 64 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![1u8; 80];
+        let val = vec![2u8; 104];
+        let out = rma.exec(&mut WriteSm::new(&cfg, &key, &val));
+        assert_eq!(out.outcome, DhtOutcome::WriteFresh);
+        let out = rma.exec(&mut ReadSm::new(&cfg, &key));
+        assert_eq!(out.outcome, DhtOutcome::ReadHit(val));
+    }
+
+    #[test]
+    fn missing_key_misses_after_probe() {
+        let cfg = cfg(2);
+        let cluster = ShmCluster::new(2, 64 * 1024);
+        let rma = cluster.rma(1);
+        let out = rma.exec(&mut ReadSm::new(&cfg, &[9u8; 80]));
+        assert_eq!(out.outcome, DhtOutcome::ReadMiss);
+        assert_eq!(out.probes, 1); // empty first bucket stops the probe
+    }
+
+    #[test]
+    fn update_same_key_overwrites_value() {
+        let cfg = cfg(2);
+        let cluster = ShmCluster::new(2, 64 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![3u8; 80];
+        rma.exec(&mut WriteSm::new(&cfg, &key, &[1u8; 104]));
+        let out = rma.exec(&mut WriteSm::new(&cfg, &key, &[9u8; 104]));
+        assert_eq!(out.outcome, DhtOutcome::WriteUpdate);
+        let out = rma.exec(&mut ReadSm::new(&cfg, &key));
+        assert_eq!(out.outcome, DhtOutcome::ReadHit(vec![9u8; 104]));
+    }
+}

@@ -1,0 +1,300 @@
+//! Blocking DHT front-end — the paper's four-call API (§3.1):
+//! `DHT_create`, `DHT_read`, `DHT_write`, `DHT_free`.
+//!
+//! This is what applications (the POET coordinator, the examples) use on
+//! the threaded shm backend; each worker thread holds its own [`Dht`]
+//! handle ("rank") onto the shared cluster, mirroring how each MPI rank
+//! holds its own window handle in the paper.
+
+use crate::rma::shm::{ShmCluster, ShmRma};
+
+use super::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
+
+/// A per-rank handle to a shared DHT (`DHT_create` returns one per rank).
+pub struct Dht {
+    cfg: DhtConfig,
+    rma: ShmRma,
+    stats: DhtStats,
+}
+
+impl Dht {
+    /// `DHT_create`: build a cluster of `nranks` windows of `win_bytes`
+    /// each and return the per-rank handles.
+    pub fn create(
+        variant: Variant,
+        nranks: u32,
+        win_bytes: usize,
+        key_len: usize,
+        val_len: usize,
+    ) -> Vec<Dht> {
+        let cfg = DhtConfig::new(variant, nranks, win_bytes, key_len, val_len);
+        let cluster = ShmCluster::new(nranks, win_bytes);
+        (0..nranks)
+            .map(|r| Dht { cfg: cfg.clone(), rma: cluster.rma(r), stats: DhtStats::default() })
+            .collect()
+    }
+
+    /// `DHT_create` with the paper's POET geometry (80 B / 104 B).
+    pub fn create_poet(variant: Variant, nranks: u32, win_bytes: usize) -> Vec<Dht> {
+        Self::create(variant, nranks, win_bytes, 80, 104)
+    }
+
+    /// Clone a handle for another thread of the same rank (stats are
+    /// per-handle; merge at the end).
+    pub fn fork(&self) -> Dht {
+        Dht {
+            cfg: self.cfg.clone(),
+            rma: self.rma.clone(),
+            stats: DhtStats::default(),
+        }
+    }
+
+    pub fn cfg(&self) -> &DhtConfig {
+        &self.cfg
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rma.rank
+    }
+
+    /// `DHT_read`: returns the cached value, or `None` on miss/corruption.
+    pub fn read(&mut self, key: &[u8]) -> Option<Vec<u8>> {
+        assert_eq!(key.len(), self.cfg.layout.key_len());
+        let mut sm = DhtSm::read(self.cfg.variant, &self.cfg, key);
+        let out = self.rma.exec(&mut sm);
+        self.stats.record(&out);
+        match out.outcome {
+            DhtOutcome::ReadHit(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// `DHT_write`: stores/updates the pair (evicting if necessary).
+    pub fn write(&mut self, key: &[u8], value: &[u8]) -> DhtOutcome {
+        assert_eq!(key.len(), self.cfg.layout.key_len());
+        assert_eq!(value.len(), self.cfg.layout.val_len());
+        let mut sm = DhtSm::write(self.cfg.variant, &self.cfg, key, value);
+        let out = self.rma.exec(&mut sm);
+        self.stats.record(&out);
+        out.outcome
+    }
+
+    pub fn stats(&self) -> &DhtStats {
+        &self.stats
+    }
+
+    pub fn take_stats(&mut self) -> DhtStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
+/// `DHT_free` is Drop.
+impl Drop for Dht {
+    fn drop(&mut self) {}
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint / restore — the paper's future-work feature (§6): "The MPI-DHT
+// does not support runtime table resizing.  However, resizing could be
+// managed during HPC application check pointing, adjusting the table size
+// on restart."  A checkpoint walks every window, collects the occupied
+// (valid) buckets, and can be restored into a cluster of a *different*
+// rank count and window size — entries are re-hashed and re-routed.
+// ---------------------------------------------------------------------------
+
+/// A portable snapshot of a DHT's contents.
+#[derive(Clone, Debug)]
+pub struct DhtCheckpoint {
+    pub variant: Variant,
+    pub key_len: usize,
+    pub val_len: usize,
+    /// All live key-value pairs (corrupt/invalid buckets are skipped).
+    pub entries: Vec<(Vec<u8>, Vec<u8>)>,
+}
+
+impl DhtCheckpoint {
+    /// Capture a checkpoint by scanning every rank's window.  Call at a
+    /// quiescent point (application checkpointing barrier), like the
+    /// paper prescribes.
+    pub fn capture(handles: &[Dht]) -> DhtCheckpoint {
+        let h0 = &handles[0];
+        let cfg = h0.cfg();
+        let l = cfg.layout;
+        let buckets = cfg.addressing.buckets();
+        let mut entries = Vec::new();
+        let rec_len = (l.size() - l.meta_off()) as u32;
+        for rank in 0..cfg.addressing.nranks() {
+            for b in 0..buckets {
+                let off = l.bucket_off(b) + l.meta_off() as u64;
+                let rec = h0.rma.get(rank, off, rec_len);
+                let meta = l.meta_of(&rec);
+                if !meta.occupied() || meta.invalid() {
+                    continue;
+                }
+                if cfg.variant == Variant::LockFree && !l.crc_ok(&rec) {
+                    continue; // torn write caught mid-checkpoint: skip
+                }
+                entries.push((l.key_of(&rec).to_vec(), l.val_of(&rec).to_vec()));
+            }
+        }
+        DhtCheckpoint {
+            variant: cfg.variant,
+            key_len: l.key_len(),
+            val_len: l.val_len(),
+            entries,
+        }
+    }
+
+    /// Serialize to a simple length-prefixed binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"DHTCKPT1");
+        out.push(match self.variant {
+            Variant::Coarse => 0,
+            Variant::Fine => 1,
+            Variant::LockFree => 2,
+        });
+        out.extend_from_slice(&(self.key_len as u32).to_le_bytes());
+        out.extend_from_slice(&(self.val_len as u32).to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        for (k, v) in &self.entries {
+            out.extend_from_slice(k);
+            out.extend_from_slice(v);
+        }
+        out
+    }
+
+    /// Parse the binary format produced by [`Self::to_bytes`].
+    pub fn from_bytes(data: &[u8]) -> Option<DhtCheckpoint> {
+        if data.len() < 8 + 1 + 4 + 4 + 8 || &data[..8] != b"DHTCKPT1" {
+            return None;
+        }
+        let variant = match data[8] {
+            0 => Variant::Coarse,
+            1 => Variant::Fine,
+            2 => Variant::LockFree,
+            _ => return None,
+        };
+        let key_len =
+            u32::from_le_bytes(data[9..13].try_into().ok()?) as usize;
+        let val_len =
+            u32::from_le_bytes(data[13..17].try_into().ok()?) as usize;
+        let n = u64::from_le_bytes(data[17..25].try_into().ok()?) as usize;
+        let rec = key_len + val_len;
+        if data.len() != 25 + n * rec {
+            return None;
+        }
+        let mut entries = Vec::with_capacity(n);
+        for i in 0..n {
+            let base = 25 + i * rec;
+            entries.push((
+                data[base..base + key_len].to_vec(),
+                data[base + key_len..base + rec].to_vec(),
+            ));
+        }
+        Some(DhtCheckpoint { variant, key_len, val_len, entries })
+    }
+
+    /// Restore into a fresh cluster of possibly different geometry — the
+    /// paper's "adjusting the table size on restart".  Entries re-hash and
+    /// re-route to their new target ranks/buckets.
+    pub fn restore(
+        &self,
+        variant: Variant,
+        nranks: u32,
+        win_bytes: usize,
+    ) -> Vec<Dht> {
+        let mut handles =
+            Dht::create(variant, nranks, win_bytes, self.key_len, self.val_len);
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            // spread the restore work round-robin over ranks, as a
+            // restart's ranks would replay their checkpoint shards
+            let r = i % handles.len();
+            handles[r].write(k, v);
+        }
+        for h in &mut handles {
+            h.take_stats(); // restore traffic is not application traffic
+        }
+        handles
+    }
+}
+
+/// Convenience: a single shared handle usable from one thread when the
+/// application is not rank-structured (quickstart example).
+pub fn create_single(
+    variant: Variant,
+    nranks: u32,
+    win_bytes: usize,
+) -> Dht {
+    Dht::create_poet(variant, nranks, win_bytes).remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn api_roundtrip_all_variants() {
+        for variant in Variant::ALL {
+            let mut handles = Dht::create_poet(variant, 4, 256 * 1024);
+            let key = vec![5u8; 80];
+            let val = vec![6u8; 104];
+            assert_eq!(handles[0].write(&key, &val), DhtOutcome::WriteFresh);
+            // any rank sees the value (shared table)
+            assert_eq!(handles[3].read(&key), Some(val.clone()));
+            assert_eq!(handles[1].read(&[9u8; 80]), None);
+            let s = handles[3].stats();
+            assert_eq!(s.reads, 1);
+            assert_eq!(s.read_hits, 1);
+        }
+    }
+
+    #[test]
+    fn concurrent_mixed_workload_no_corruption() {
+        // all variants must survive concurrent writers/readers; the
+        // lock-free variant may miss (torn write) but never return a
+        // wrong value for a key (checksum + key equality)
+        for variant in Variant::ALL {
+            let handles = Dht::create_poet(variant, 2, 256 * 1024);
+            let mut threads = vec![];
+            for (t, mut h) in handles.into_iter().enumerate() {
+                threads.push(std::thread::spawn(move || {
+                    let mut bad = 0u32;
+                    for round in 0..200u64 {
+                        let id = (round % 16) as u8;
+                        let mut key = vec![0u8; 80];
+                        key[0] = id;
+                        let mut val = vec![0u8; 104];
+                        val[0] = id; // value determined by key
+                        h.write(&key, &val);
+                        if let Some(v) = h.read(&key) {
+                            if v[0] != id {
+                                bad += 1;
+                            }
+                        }
+                        let _ = t;
+                    }
+                    bad
+                }));
+            }
+            let bad: u32 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+            assert_eq!(bad, 0, "{variant:?} returned a wrong value");
+        }
+    }
+
+    #[test]
+    fn stats_accumulate_and_reset() {
+        let mut h = create_single(Variant::LockFree, 1, 64 * 1024);
+        for i in 0..10u8 {
+            h.write(&[i; 80], &[i; 104]);
+        }
+        for i in 0..20u8 {
+            h.read(&[i; 80]);
+        }
+        let s = h.take_stats();
+        assert_eq!(s.writes, 10);
+        assert_eq!(s.reads, 20);
+        assert!(s.read_hits >= 9); // all 10 present barring eviction
+        assert_eq!(h.stats().reads, 0);
+    }
+}

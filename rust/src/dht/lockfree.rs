@@ -1,0 +1,317 @@
+//! Lock-free MPI-DHT with optimistic concurrency control (paper §4.2) —
+//! the variant that wins every benchmark in the paper.
+//!
+//! No locks, no atomics: plain `MPI_Put`/`MPI_Get` under a single
+//! `MPI_Win_lock_all` epoch.  Writers append a CRC32 of the key-value pair
+//! to the bucket (Pilaf-style self-verifying data structure); readers
+//! recompute it and retry on mismatch.  If the mismatch persists after
+//! `crc_retries` re-reads, the reader flags the bucket *invalid* in its
+//! meta word; a later write may reuse the invalid bucket.
+
+use crate::rma::{Resp, SmStep};
+
+use super::bucket::Meta;
+use super::coarse::Plan;
+use super::{DhtConfig, DhtOutcome, OpOut};
+
+fn data_of(resp: Resp) -> Vec<u8> {
+    match resp {
+        Resp::Data(d) => d,
+        other => panic!("protocol error: expected Data, got {other:?}"),
+    }
+}
+
+// --------------------------------------------------------------------- read
+
+enum RState {
+    Init,
+    /// Full-record Get of probe `i` outstanding; `attempt` counts the
+    /// checksum re-reads of this bucket.
+    AwaitBucket { i: usize, attempt: u32 },
+    /// Invalidation Put outstanding.
+    AwaitInvalidate,
+}
+
+/// `DHT_read`, lock-free: get → verify checksum → retry → invalidate.
+pub struct ReadSm {
+    plan: Plan,
+    key: Vec<u8>,
+    max_retries: u32,
+    state: RState,
+    probes: u32,
+    crc_retries: u32,
+}
+
+impl ReadSm {
+    pub fn new(cfg: &DhtConfig, key: &[u8]) -> Self {
+        Self {
+            plan: Plan::new(cfg, key),
+            key: key.to_vec(),
+            max_retries: cfg.crc_retries,
+            state: RState::Init,
+            probes: 0,
+            crc_retries: 0,
+        }
+    }
+
+    fn done(&self, outcome: DhtOutcome) -> SmStep<OpOut> {
+        SmStep::Done(OpOut {
+            outcome,
+            probes: self.probes,
+            crc_retries: self.crc_retries,
+            lock_retries: 0,
+        })
+    }
+
+
+}
+
+impl crate::rma::OpSm for ReadSm {
+    type Out = OpOut;
+    fn step(&mut self, resp: Resp) -> SmStep<OpOut> {
+        match self.state {
+            RState::Init => {
+                self.probes = 1;
+                self.state = RState::AwaitBucket { i: 0, attempt: 0 };
+                SmStep::Issue(self.plan.get_record(0))
+            }
+            RState::AwaitBucket { i, attempt } => {
+                let data = data_of(resp);
+                let l = &self.plan.layout;
+                let meta = l.meta_of(&data);
+                if !meta.occupied() {
+                    return self.done(DhtOutcome::ReadMiss);
+                }
+                let next = |sm: &mut Self| {
+                    if i + 1 == sm.plan.n() {
+                        sm.done(DhtOutcome::ReadMiss)
+                    } else {
+                        sm.probes += 1;
+                        sm.state = RState::AwaitBucket { i: i + 1, attempt: 0 };
+                        SmStep::Issue(sm.plan.get_record(i + 1))
+                    }
+                };
+                if meta.invalid() {
+                    // corrupt bucket: its key bytes are untrustworthy, so
+                    // keep probing the remaining candidates
+                    return next(self);
+                }
+                if l.key_of(&data) != &self.key[..] {
+                    return next(self);
+                }
+                if l.crc_ok(&data) {
+                    return self.done(DhtOutcome::ReadHit(l.val_of(&data).to_vec()));
+                }
+                // checksum mismatch: retry the Get; after max_retries,
+                // flag the bucket invalid (§4.2)
+                self.crc_retries += 1;
+                if attempt + 1 <= self.max_retries {
+                    self.state = RState::AwaitBucket { i, attempt: attempt + 1 };
+                    return SmStep::Issue(self.plan.get_record(i));
+                }
+                self.state = RState::AwaitInvalidate;
+                SmStep::Issue(
+                    self.plan.put_meta(i, Meta::OCCUPIED | Meta::INVALID),
+                )
+            }
+            RState::AwaitInvalidate => {
+                debug_assert!(matches!(resp, Resp::Ack));
+                self.done(DhtOutcome::ReadCorrupt)
+            }
+        }
+    }}
+
+// --------------------------------------------------------------------- write
+
+enum WState {
+    Init,
+    AwaitProbe(usize),
+    AwaitPut,
+}
+
+/// `DHT_write`, lock-free: probe candidates, put record with checksum.
+pub struct WriteSm {
+    plan: Plan,
+    key: Vec<u8>,
+    record: Vec<u8>,
+    state: WState,
+    probes: u32,
+    pending: Option<DhtOutcome>,
+}
+
+impl WriteSm {
+    pub fn new(cfg: &DhtConfig, key: &[u8], value: &[u8]) -> Self {
+        let plan = Plan::new(cfg, key);
+        let record = plan.layout.encode_record(key, value);
+        Self {
+            plan,
+            key: key.to_vec(),
+            record,
+            state: WState::Init,
+            probes: 0,
+            pending: None,
+        }
+    }
+
+
+}
+
+impl crate::rma::OpSm for WriteSm {
+    type Out = OpOut;
+    fn step(&mut self, resp: Resp) -> SmStep<OpOut> {
+        match self.state {
+            WState::Init => {
+                self.probes = 1;
+                self.state = WState::AwaitProbe(0);
+                SmStep::Issue(self.plan.get_probe(0))
+            }
+            WState::AwaitProbe(i) => {
+                let data = data_of(resp);
+                let l = &self.plan.layout;
+                let meta = l.meta_of(&data);
+                let outcome = if !meta.occupied() {
+                    Some(DhtOutcome::WriteFresh)
+                } else if meta.invalid() {
+                    // invalid buckets may be overwritten (§4.2)
+                    Some(DhtOutcome::WriteFresh)
+                } else if l.key_of(&data) == &self.key[..] {
+                    Some(DhtOutcome::WriteUpdate)
+                } else if i + 1 == self.plan.n() {
+                    Some(DhtOutcome::WriteEvict)
+                } else {
+                    None
+                };
+                match outcome {
+                    Some(out) => {
+                        self.pending = Some(out);
+                        self.state = WState::AwaitPut;
+                        SmStep::Issue(self.plan.put_record(i, self.record.clone()))
+                    }
+                    None => {
+                        self.probes += 1;
+                        self.state = WState::AwaitProbe(i + 1);
+                        SmStep::Issue(self.plan.get_probe(i + 1))
+                    }
+                }
+            }
+            WState::AwaitPut => {
+                debug_assert!(matches!(resp, Resp::Ack));
+                SmStep::Done(OpOut {
+                    outcome: self.pending.take().expect("outcome set"),
+                    probes: self.probes,
+                    crc_retries: 0,
+                    lock_retries: 0,
+                })
+            }
+        }
+    }}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::bucket::record_crc;
+    use crate::dht::Variant;
+    use crate::rma::shm::ShmCluster;
+    use crate::rma::Req;
+    use crate::rma::OpSm;
+
+    fn cfg(nranks: u32) -> DhtConfig {
+        DhtConfig::poet(Variant::LockFree, nranks, 64 * 1024)
+    }
+
+    fn run_read(rma: &crate::rma::shm::ShmRma, cfg: &DhtConfig, key: &[u8]) -> OpOut {
+        rma.exec(&mut ReadSm::new(cfg, key))
+    }
+
+    fn run_write(
+        rma: &crate::rma::shm::ShmRma,
+        cfg: &DhtConfig,
+        key: &[u8],
+        val: &[u8],
+    ) -> OpOut {
+        rma.exec(&mut WriteSm::new(cfg, key, val))
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let cfg = cfg(4);
+        let cluster = ShmCluster::new(4, 64 * 1024);
+        let rma = cluster.rma(3);
+        let key = vec![0x11; 80];
+        let val = vec![0x22; 104];
+        assert_eq!(run_write(&rma, &cfg, &key, &val).outcome, DhtOutcome::WriteFresh);
+        assert_eq!(
+            run_read(&rma, &cfg, &key).outcome,
+            DhtOutcome::ReadHit(val)
+        );
+    }
+
+    #[test]
+    fn corrupted_bucket_is_detected_and_invalidated() {
+        let cfg = cfg(1);
+        let cluster = ShmCluster::new(1, 64 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![0x33; 80];
+        let val = vec![0x44; 104];
+        run_write(&rma, &cfg, &key, &val);
+        // corrupt one value byte behind the DHT's back
+        let plan = Plan::new(&cfg, &key);
+        let l = &cfg.layout;
+        let off = l.bucket_off(plan.indices[0]) + l.val_off() as u64;
+        let mut word = rma.get(plan.target, off, 8);
+        word[0] ^= 0xFF;
+        rma.exec(&mut OneShot(Some(Req::Put {
+            target: plan.target,
+            offset: off,
+            data: word,
+        })));
+        // read must detect the mismatch, retry, then invalidate
+        let out = run_read(&rma, &cfg, &key);
+        assert_eq!(out.outcome, DhtOutcome::ReadCorrupt);
+        assert!(out.crc_retries >= cfg.crc_retries);
+        // a subsequent write may reuse the invalid bucket as fresh
+        let out = run_write(&rma, &cfg, &key, &val);
+        assert_eq!(out.outcome, DhtOutcome::WriteFresh);
+        assert_eq!(
+            run_read(&rma, &cfg, &key).outcome,
+            DhtOutcome::ReadHit(val)
+        );
+    }
+
+    struct OneShot(Option<Req>);
+    impl OpSm for OneShot {
+        type Out = ();
+        fn step(&mut self, _resp: Resp) -> SmStep<()> {
+            match self.0.take() {
+                Some(r) => SmStep::Issue(r),
+                None => SmStep::Done(()),
+            }
+        }
+    }
+
+    #[test]
+    fn crc_matches_record_codec() {
+        let l = cfg(1).layout;
+        let key = vec![9u8; 80];
+        let val = vec![7u8; 104];
+        let rec = l.encode_record(&key, &val);
+        assert_eq!(l.crc_of(&rec), record_crc(&key, &val));
+    }
+
+    #[test]
+    fn eviction_at_last_candidate() {
+        // tiny window: 2 buckets per rank forces candidate collisions
+        let cfg = DhtConfig::new(Variant::LockFree, 1, 2 * 200, 80, 104);
+        let cluster = ShmCluster::new(1, 2 * 200);
+        let rma = cluster.rma(0);
+        let mut evicted = 0;
+        for i in 0..20u8 {
+            let key = vec![i; 80];
+            let out = run_write(&rma, &cfg, &key, &[i; 104]);
+            if out.outcome == DhtOutcome::WriteEvict {
+                evicted += 1;
+            }
+        }
+        assert!(evicted > 0, "tiny table must evict");
+    }
+}

@@ -1,0 +1,191 @@
+//! The paper's contribution: three MPI-RMA distributed hash tables.
+//!
+//! All three share the addressing and collision-handling design of §3.1:
+//! a 64-bit key hash selects the target rank (`hash % nranks`) and a set
+//! of candidate bucket indices (an n-byte window slid over the hash, §3.1
+//! Fig. 2); writes probe those indices in order and overwrite the last one
+//! if all are occupied by other keys (cache semantics); reads stop at the
+//! first empty bucket.
+//!
+//! They differ only in the data-consistency design:
+//!
+//! | variant    | §    | mechanism                                       |
+//! |------------|------|-------------------------------------------------|
+//! | [`coarse`] | 3.1  | `MPI_Win_lock/unlock` on the whole target window |
+//! | [`fine`]   | 4.1  | per-bucket 8-byte reader/writer lock (CAS/FAO)  |
+//! | [`lockfree`]| 4.2 | no locks; per-bucket CRC32 + retry + invalidate |
+//!
+//! Protocols are written as [`crate::rma::OpSm`] state machines and run
+//! unchanged on both the threaded shm backend and the DES cluster.
+
+pub mod addressing;
+pub mod bucket;
+pub mod coarse;
+pub mod fine;
+pub mod front;
+pub mod lockfree;
+pub mod stats;
+
+use crate::rma::{OpSm, Resp, SmStep};
+
+pub use addressing::Addressing;
+pub use bucket::{BucketLayout, Meta};
+pub use front::{Dht, DhtCheckpoint};
+pub use stats::DhtStats;
+
+/// Which consistency design a DHT instance uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Coarse-grained window locking (the original MPI-DHT of [2]).
+    Coarse,
+    /// Fine-grained per-bucket locking (§4.1).
+    Fine,
+    /// Lock-free with checksum validation (§4.2).
+    LockFree,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 3] =
+        [Variant::Coarse, Variant::Fine, Variant::LockFree];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Coarse => "coarse-grained",
+            Variant::Fine => "fine-grained",
+            Variant::LockFree => "lock-free",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "coarse" | "coarse-grained" => Some(Variant::Coarse),
+            "fine" | "fine-grained" => Some(Variant::Fine),
+            "lockfree" | "lock-free" => Some(Variant::LockFree),
+            _ => None,
+        }
+    }
+}
+
+/// Result of one DHT operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DhtOutcome {
+    /// Read found the key; value bytes attached.
+    ReadHit(Vec<u8>),
+    /// Read traversed the candidate buckets without finding the key.
+    ReadMiss,
+    /// Lock-free only: checksum mismatch persisted; bucket invalidated.
+    ReadCorrupt,
+    /// Write stored the key (fresh bucket or invalid-bucket reuse).
+    WriteFresh,
+    /// Write updated an existing bucket holding the same key.
+    WriteUpdate,
+    /// Write overwrote the last candidate bucket (cache eviction, §3.1).
+    WriteEvict,
+}
+
+/// Outcome plus per-op protocol counters.
+#[derive(Clone, Debug)]
+pub struct OpOut {
+    pub outcome: DhtOutcome,
+    /// Buckets probed.
+    pub probes: u32,
+    /// Checksum-mismatch re-reads (lock-free only).
+    pub crc_retries: u32,
+    /// Protocol-level lock retries (fine-grained only; coarse retries
+    /// happen inside the backend's `MPI_Win_lock` busy loop).
+    pub lock_retries: u32,
+}
+
+/// A DHT operation state machine — one of the six protocol SMs.
+pub enum DhtSm {
+    CoarseRead(coarse::ReadSm),
+    CoarseWrite(coarse::WriteSm),
+    FineRead(fine::ReadSm),
+    FineWrite(fine::WriteSm),
+    LockFreeRead(lockfree::ReadSm),
+    LockFreeWrite(lockfree::WriteSm),
+}
+
+impl DhtSm {
+    /// Build the read SM for `variant`.
+    pub fn read(variant: Variant, cfg: &DhtConfig, key: &[u8]) -> DhtSm {
+        match variant {
+            Variant::Coarse => DhtSm::CoarseRead(coarse::ReadSm::new(cfg, key)),
+            Variant::Fine => DhtSm::FineRead(fine::ReadSm::new(cfg, key)),
+            Variant::LockFree => {
+                DhtSm::LockFreeRead(lockfree::ReadSm::new(cfg, key))
+            }
+        }
+    }
+
+    /// Build the write SM for `variant`.
+    pub fn write(
+        variant: Variant,
+        cfg: &DhtConfig,
+        key: &[u8],
+        value: &[u8],
+    ) -> DhtSm {
+        match variant {
+            Variant::Coarse => {
+                DhtSm::CoarseWrite(coarse::WriteSm::new(cfg, key, value))
+            }
+            Variant::Fine => {
+                DhtSm::FineWrite(fine::WriteSm::new(cfg, key, value))
+            }
+            Variant::LockFree => {
+                DhtSm::LockFreeWrite(lockfree::WriteSm::new(cfg, key, value))
+            }
+        }
+    }
+}
+
+impl OpSm for DhtSm {
+    type Out = OpOut;
+    fn step(&mut self, resp: Resp) -> SmStep<OpOut> {
+        match self {
+            DhtSm::CoarseRead(sm) => sm.step(resp),
+            DhtSm::CoarseWrite(sm) => sm.step(resp),
+            DhtSm::FineRead(sm) => sm.step(resp),
+            DhtSm::FineWrite(sm) => sm.step(resp),
+            DhtSm::LockFreeRead(sm) => sm.step(resp),
+            DhtSm::LockFreeWrite(sm) => sm.step(resp),
+        }
+    }
+}
+
+/// Static configuration shared by every DHT op (cheap to clone).
+#[derive(Clone, Debug)]
+pub struct DhtConfig {
+    pub variant: Variant,
+    pub addressing: Addressing,
+    pub layout: BucketLayout,
+    /// Lock-free: checksum re-read attempts before invalidating (§4.2).
+    pub crc_retries: u32,
+}
+
+impl DhtConfig {
+    /// Standard configuration for `nranks` ranks contributing windows of
+    /// `win_bytes` each, with the paper's key/value sizes by default.
+    pub fn new(
+        variant: Variant,
+        nranks: u32,
+        win_bytes: usize,
+        key_len: usize,
+        val_len: usize,
+    ) -> Self {
+        let layout = BucketLayout::new(variant, key_len, val_len);
+        let buckets = (win_bytes / layout.size()) as u64;
+        assert!(buckets > 0, "window smaller than one bucket");
+        Self {
+            variant,
+            addressing: Addressing::new(nranks, buckets),
+            layout,
+            crc_retries: 3,
+        }
+    }
+
+    /// The paper's POET record geometry: 80-byte key, 104-byte value.
+    pub fn poet(variant: Variant, nranks: u32, win_bytes: usize) -> Self {
+        Self::new(variant, nranks, win_bytes, 80, 104)
+    }
+}

@@ -1,0 +1,152 @@
+//! Per-instance DHT statistics (hit rates, evictions, mismatches —
+//! everything Tables 2 and 4 of the paper report).
+
+use super::{DhtOutcome, OpOut};
+
+#[derive(Clone, Debug, Default)]
+pub struct DhtStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub read_hits: u64,
+    pub read_misses: u64,
+    /// Reads that observed at least one checksum mismatch (Tab. 2/4's
+    /// counted events; almost all succeed on the re-read).
+    pub mismatches: u64,
+    /// Reads whose mismatch persisted through every re-read and ended in
+    /// an invalidated bucket (§4.2's terminal case).
+    pub invalidations: u64,
+    /// Checksum re-read attempts (each mismatch costs >= 1).
+    pub crc_retries: u64,
+    pub writes_fresh: u64,
+    pub writes_update: u64,
+    /// Last-candidate overwrites (cache evictions, §3.1).
+    pub evictions: u64,
+    /// Total buckets probed.
+    pub probes: u64,
+    /// Fine-grained lock acquisition retries observed at protocol level.
+    pub lock_retries: u64,
+}
+
+impl DhtStats {
+    pub fn record(&mut self, out: &OpOut) {
+        self.probes += out.probes as u64;
+        self.crc_retries += out.crc_retries as u64;
+        self.lock_retries += out.lock_retries as u64;
+        let is_read = matches!(
+            out.outcome,
+            DhtOutcome::ReadHit(_) | DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt
+        );
+        if is_read && out.crc_retries > 0 {
+            self.mismatches += 1;
+        }
+        match &out.outcome {
+            DhtOutcome::ReadHit(_) => {
+                self.reads += 1;
+                self.read_hits += 1;
+            }
+            DhtOutcome::ReadMiss => {
+                self.reads += 1;
+                self.read_misses += 1;
+            }
+            DhtOutcome::ReadCorrupt => {
+                self.reads += 1;
+                self.read_misses += 1;
+                self.invalidations += 1;
+            }
+            DhtOutcome::WriteFresh => {
+                self.writes += 1;
+                self.writes_fresh += 1;
+            }
+            DhtOutcome::WriteUpdate => {
+                self.writes += 1;
+                self.writes_update += 1;
+            }
+            DhtOutcome::WriteEvict => {
+                self.writes += 1;
+                self.evictions += 1;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, o: &DhtStats) {
+        self.invalidations += o.invalidations;
+        self.reads += o.reads;
+        self.writes += o.writes;
+        self.read_hits += o.read_hits;
+        self.read_misses += o.read_misses;
+        self.mismatches += o.mismatches;
+        self.crc_retries += o.crc_retries;
+        self.writes_fresh += o.writes_fresh;
+        self.writes_update += o.writes_update;
+        self.evictions += o.evictions;
+        self.probes += o.probes;
+        self.lock_retries += o.lock_retries;
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.reads == 0 {
+            0.0
+        } else {
+            self.read_hits as f64 / self.reads as f64
+        }
+    }
+
+    /// Mismatch percentage of all reads (the paper's Tab. 2/4 column).
+    pub fn mismatch_percent(&self) -> f64 {
+        if self.reads == 0 {
+            0.0
+        } else {
+            100.0 * self.mismatches as f64 / self.reads as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(outcome: DhtOutcome) -> OpOut {
+        let crc_retries =
+            if outcome == DhtOutcome::ReadCorrupt { 3 } else { 0 };
+        OpOut { outcome, probes: 2, crc_retries, lock_retries: 1 }
+    }
+
+    #[test]
+    fn record_classifies_outcomes() {
+        let mut s = DhtStats::default();
+        s.record(&out(DhtOutcome::ReadHit(vec![])));
+        s.record(&out(DhtOutcome::ReadMiss));
+        s.record(&out(DhtOutcome::ReadCorrupt));
+        s.record(&out(DhtOutcome::WriteFresh));
+        s.record(&out(DhtOutcome::WriteUpdate));
+        s.record(&out(DhtOutcome::WriteEvict));
+        assert_eq!(s.reads, 3);
+        assert_eq!(s.writes, 3);
+        assert_eq!(s.read_hits, 1);
+        assert_eq!(s.read_misses, 2);
+        assert_eq!(s.mismatches, 1);
+        assert_eq!(s.invalidations, 1);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.probes, 12);
+        assert_eq!(s.lock_retries, 6);
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((s.mismatch_percent() - 100.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = DhtStats::default();
+        a.record(&out(DhtOutcome::ReadHit(vec![])));
+        let mut b = DhtStats::default();
+        b.record(&out(DhtOutcome::ReadMiss));
+        a.merge(&b);
+        assert_eq!(a.reads, 2);
+    }
+
+    #[test]
+    fn empty_rates_are_zero() {
+        let s = DhtStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.mismatch_percent(), 0.0);
+    }
+}

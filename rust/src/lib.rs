@@ -1,0 +1,32 @@
+//! # mpi-dht
+//!
+//! A fast distributed hash-table as surrogate model for HPC applications —
+//! a full reproduction of Lübke, De Lucia, Petri & Schnor (ICCS/CS.DC
+//! 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * **L3 (this crate)** — the paper's contribution: three MPI-RMA DHT
+//!   designs ([`dht`]), the DAOS-like server baseline ([`daos`]), the POET
+//!   reactive-transport coordinator ([`poet`], [`coordinator`]), a
+//!   protocol-accurate discrete-event cluster ([`rma::sim`], [`net`]) and
+//!   a threaded shared-memory backend ([`rma::shm`]).
+//! * **L2/L1 (python/, build time only)** — the geochemistry model and its
+//!   Pallas kernels, AOT-lowered to HLO text artifacts.
+//! * **runtime** — [`runtime`] loads the artifacts via PJRT and executes
+//!   them from the Rust request path (Python is never on it).
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
+//! results vs. the paper.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod daos;
+pub mod dht;
+pub mod metrics;
+pub mod net;
+pub mod poet;
+pub mod rma;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,285 @@
+//! mpi-dht CLI — the leader entrypoint.
+//!
+//! ```text
+//! mpi-dht info
+//! mpi-dht bench-kv   --variant lockfree --dist zipfian --ranks 128..640:128
+//! mpi-dht bench-daos --clients 12..72:12 --ops 20000
+//! mpi-dht poet-des   --ranks 128,640 --variant lockfree
+//! mpi-dht poet       --ny 24 --nx 72 --steps 100 --workers 2 --engine pjrt
+//! ```
+//!
+//! All benchmarks print paper-style tables; `cargo bench` targets under
+//! `rust/benches/` regenerate the paper's figures/tables directly.
+
+use anyhow::{anyhow, Result};
+
+use mpi_dht::bench::table::{mops, us, Table};
+use mpi_dht::bench::{run_daos, run_kv, Dist, KvCfg, Mode};
+use mpi_dht::cli::Args;
+use mpi_dht::config::Config;
+use mpi_dht::coordinator::{self, EngineKind};
+use mpi_dht::daos::DaosConfig;
+use mpi_dht::dht::Variant;
+use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
+use mpi_dht::poet::PoetConfig;
+use mpi_dht::runtime::{Engine, Manifest};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(),
+        "bench-kv" => cmd_bench_kv(&args),
+        "bench-daos" => cmd_bench_daos(&args),
+        "poet-des" => cmd_poet_des(&args),
+        "poet" => cmd_poet(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}; see `mpi-dht help`")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = r#"mpi-dht — distributed hash-table surrogate model (paper reproduction)
+
+USAGE: mpi-dht <command> [options]
+
+COMMANDS:
+  info         show artifact manifest + build information
+  bench-kv     synthetic DHT benchmark in the DES cluster (paper §5.2)
+                 --variant coarse|fine|lockfree   --dist uniform|zipfian
+                 --mode wtr|mixed   --ranks 128..640:128   --ops N
+                 --profile pik|turing  --read-percent 95  --seed N
+  bench-daos   server-based baseline vs coarse DHT (paper Fig. 3)
+                 --clients 12..72:12  --ops N
+  poet-des     POET in the DES cluster (paper Fig. 7)
+                 --ranks list  --variant none|coarse|fine|lockfree
+                 --ny N --nx N --steps N --digits D
+  poet         threaded POET on this machine (real PJRT chemistry)
+                 --ny N --nx N --steps N --workers W --engine pjrt|native
+                 --variant none|coarse|fine|lockfree|all
+
+Common: --config file.toml  --set key=value (repeatable)
+"#;
+
+fn load_config(args: &Args) -> Result<Option<Config>> {
+    let mut cfg = match args.get("--config") {
+        Some(p) => Some(Config::load(p)?),
+        None => None,
+    };
+    let overrides = args.overrides();
+    if !overrides.is_empty() {
+        let c = cfg.get_or_insert_with(Config::default);
+        for o in overrides {
+            c.set_override(o)?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn cmd_info() -> Result<()> {
+    println!("mpi-dht {}", env!("CARGO_PKG_VERSION"));
+    let dir = Engine::default_dir();
+    match Manifest::load(dir.join("manifest.txt")) {
+        Ok(m) => {
+            println!("artifacts: {}", dir.display());
+            for c in &m.chemistry {
+                println!("  chemistry batch={:<5} {}", c.batch, c.file);
+            }
+            for t in &m.transport {
+                println!("  transport {}x{} {}", t.ny, t.nx, t.file);
+            }
+            println!(
+                "  constants: n_in={} n_out={} n_solutes={} n_species={}",
+                m.n_in, m.n_out, m.n_solutes, m.n_species
+            );
+        }
+        Err(e) => println!("artifacts: not built ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn parse_variant(s: &str) -> Result<Variant> {
+    Variant::parse(s).ok_or_else(|| anyhow!("unknown variant {s:?}"))
+}
+
+fn cmd_bench_kv(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let variant = parse_variant(args.str_or("--variant", "lockfree"))?;
+    let dist = Dist::parse(args.str_or("--dist", "uniform"))
+        .ok_or_else(|| anyhow!("--dist uniform|zipfian"))?;
+    let mode = match args.str_or("--mode", "wtr") {
+        "wtr" => Mode::WriteThenRead,
+        "mixed" => Mode::Mixed {
+            read_percent: args.u64_or("--read-percent", 95)? as u32,
+        },
+        other => return Err(anyhow!("--mode wtr|mixed, got {other:?}")),
+    };
+    let ranks = args.u32_list_or("--ranks", &[128, 256, 384, 512, 640])?;
+    let ops = args.u64_or("--ops", 5_000)?;
+    let net = coordinator::net_profile(
+        args.str_or("--profile", "pik"),
+        cfg.as_ref(),
+    )?;
+    let mut t = Table::new(vec![
+        "ranks", "read Mops", "write Mops", "mixed Mops", "rlat p50 µs",
+        "wlat p50 µs", "mismatches", "lock retries",
+    ]);
+    for n in ranks {
+        let mut kv = KvCfg::new(n, ops, dist, mode);
+        kv.seed = args.u64_or("--seed", kv.seed)?;
+        if let Some(z) = args.get("--zipf-range") {
+            kv.zipf_range = z.parse()?;
+        }
+        let res = run_kv(variant, net.clone(), kv);
+        t.row(vec![
+            n.to_string(),
+            mops(res.read_mops),
+            mops(res.write_mops),
+            mops(res.mixed_mops),
+            us(res.read_lat_p50),
+            us(res.write_lat_p50),
+            res.mismatches.to_string(),
+            res.lock_retries.to_string(),
+        ]);
+    }
+    println!(
+        "# bench-kv variant={} dist={dist:?} mode={mode:?} ops/rank={ops}",
+        variant.name()
+    );
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_bench_daos(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let clients = args.u32_list_or("--clients", &[12, 24, 36, 48, 60, 72])?;
+    let ops = args.u64_or("--ops", 20_000)?;
+    let net = coordinator::net_profile(
+        args.str_or("--profile", "turing"),
+        cfg.as_ref(),
+    )?;
+    let mut t = Table::new(vec![
+        "clients", "daos read Mops", "daos write Mops", "dht read Mops",
+        "dht write Mops", "daos rlat µs", "dht rlat µs",
+    ]);
+    for n in clients {
+        let kv = KvCfg::new(n, ops, Dist::Uniform, Mode::WriteThenRead);
+        let daos = run_daos(net.clone(), DaosConfig::default(), kv.clone());
+        let dht = run_kv(Variant::Coarse, net.clone(), kv);
+        t.row(vec![
+            n.to_string(),
+            mops(daos.read_mops),
+            mops(daos.write_mops),
+            mops(dht.read_mops),
+            mops(dht.write_mops),
+            us(daos.read_lat_p50),
+            us(dht.read_lat_p50),
+        ]);
+    }
+    println!("# bench-daos (Fig. 3 testbed) ops/client={ops}");
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_poet_des(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ranks = args.u32_list_or("--ranks", &[128, 256, 384, 512, 640])?;
+    let variant = match args.str_or("--variant", "lockfree") {
+        "none" | "reference" => None,
+        v => Some(parse_variant(v)?),
+    };
+    let net = coordinator::net_profile(
+        args.str_or("--profile", "pik"),
+        cfg.as_ref(),
+    )?;
+    let mut t = Table::new(vec![
+        "ranks", "runtime s", "hit rate", "mismatches", "chem cells",
+    ]);
+    for n in ranks {
+        let mut c = PoetDesCfg::scaled(n, variant);
+        c.ny = args.usize_or("--ny", c.ny)?;
+        c.nx = args.usize_or("--nx", c.nx)?;
+        c.steps = args.usize_or("--steps", c.steps)?;
+        c.digits = args.u64_or("--digits", c.digits as u64)? as u32;
+        let res = run_poet_des(c, net.clone());
+        t.row(vec![
+            n.to_string(),
+            format!("{:.1}", res.runtime_s),
+            format!("{:.3}", res.hit_rate()),
+            res.dht.mismatches.to_string(),
+            res.chem_cells.to_string(),
+        ]);
+    }
+    println!(
+        "# poet-des variant={}",
+        variant.map(|v| v.name()).unwrap_or("reference")
+    );
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_poet(args: &Args) -> Result<()> {
+    let engine = EngineKind::parse(args.str_or("--engine", "pjrt"))
+        .ok_or_else(|| anyhow!("--engine pjrt|native"))?;
+    let mut cfg = PoetConfig::small();
+    cfg.ny = args.usize_or("--ny", cfg.ny)?;
+    cfg.nx = args.usize_or("--nx", cfg.nx)?;
+    cfg.steps = args.usize_or("--steps", cfg.steps)?;
+    cfg.workers = args.usize_or("--workers", cfg.workers)?;
+    cfg.digits = args.u64_or("--digits", cfg.digits as u64)? as u32;
+    cfg.dt = args.f64_or("--dt", cfg.dt)?;
+    let variants: Vec<Option<Variant>> =
+        match args.str_or("--variant", "lockfree") {
+            "none" | "reference" => vec![None],
+            "all" => vec![
+                None,
+                Some(Variant::Coarse),
+                Some(Variant::Fine),
+                Some(Variant::LockFree),
+            ],
+            v => vec![None, Some(parse_variant(v)?)],
+        };
+    let runs = coordinator::compare_poet(&cfg, engine, &variants)?;
+    let mut t = Table::new(vec![
+        "configuration", "wall s", "hit rate", "chem cells", "mismatches",
+        "speedup",
+    ]);
+    let ref_wall = runs
+        .iter()
+        .find(|r| r.label == "reference")
+        .map(|r| r.stats.wall_s);
+    for r in &runs {
+        let speedup = match ref_wall {
+            Some(rw) if r.stats.wall_s > 0.0 => {
+                format!("{:.2}x", rw / r.stats.wall_s)
+            }
+            _ => "-".to_string(),
+        };
+        t.row(vec![
+            r.label.clone(),
+            format!("{:.2}", r.stats.wall_s),
+            format!("{:.3}", r.stats.hit_rate()),
+            r.stats.chem_cells.to_string(),
+            r.stats.dht.mismatches.to_string(),
+            speedup,
+        ]);
+    }
+    println!(
+        "# poet {}x{} steps={} workers={} engine={engine:?}",
+        cfg.ny, cfg.nx, cfg.steps, cfg.workers
+    );
+    print!("{}", t.render());
+    Ok(())
+}

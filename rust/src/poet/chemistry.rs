@@ -1,0 +1,344 @@
+//! Geochemistry engines: the PJRT-backed engine (the real L1/L2 path) and
+//! a bit-compatible native Rust reimplementation.
+//!
+//! [`NativeChemistry`] mirrors `python/compile/kernels/chemistry.py`
+//! *constant for constant and clamp for clamp*; the integration tests
+//! replay the AOT golden vectors through it and require agreement to
+//! ~1e-12 relative.  It exists so that (a) the DES POET model can compute
+//! real reaction results without paying a PJRT round trip per event, and
+//! (b) POET tests run even without built artifacts.
+//!
+//! [`ChemCost`] converts a cell's reaction activity into *simulated*
+//! PHREEQC time for the DES mode: equilibrated cells are cheap, cells on
+//! the reaction front (large saturation disequilibrium) are expensive —
+//! this is what makes the reference runs stop scaling in Fig. 7 and the
+//! DHT pay off.
+
+use crate::runtime::Engine;
+
+/// Record widths (match the paper's 80 B key / 104 B value).
+pub const N_IN: usize = 10;
+pub const N_OUT: usize = 13;
+pub const N_SPECIES: usize = 9;
+pub const N_SOLUTES: usize = 7;
+
+// --- constants mirrored from python/compile/kernels/chemistry.py ---------
+const K1: f64 = 4.466835921509632e-7; // 10^-6.35
+const K2: f64 = 4.677351412871983e-11; // 10^-10.33
+const KSP_CAL: f64 = 3.311311214825911e-9; // 10^-8.48
+const KSP_DOL: f64 = 8.128305161640995e-18; // 10^-17.09
+const K_CAL: f64 = 1.5e-6;
+const K_DOL: f64 = 3.0e-7;
+const M_HALF: f64 = 1.0e-5;
+const PH_BETA: f64 = 150.0;
+const OMEGA_CAP: f64 = 1.0e3;
+const EXT_CAP: f64 = 0.25;
+const EXT_CAP_FLOOR: f64 = 1.0e-4;
+const N_SUB: usize = 8;
+const STATE_MIN: f64 = 1.0e-12;
+
+/// TST rates + saturation ratios (mirrors `_rates` in the kernel).
+#[inline]
+fn rates(ca: f64, mg: f64, c: f64, ph: f64, calcite: f64, dolomite: f64)
+         -> (f64, f64, f64, f64) {
+    let h = 10f64.powf(-ph);
+    let denom = h * h + K1 * h + K1 * K2;
+    let a_co3 = c * (K1 * K2) / denom;
+    let omega_cal = (ca * a_co3 / KSP_CAL).min(OMEGA_CAP);
+    let omega_dol = (ca * mg * a_co3 * a_co3 / KSP_DOL).min(OMEGA_CAP);
+    let f_cal = calcite / (calcite + M_HALF);
+    let f_dol = dolomite / (dolomite + M_HALF);
+    let mut r_cal = K_CAL * (1.0 - omega_cal);
+    let mut r_dol = K_DOL * (1.0 - omega_dol);
+    if r_cal > 0.0 {
+        r_cal *= f_cal;
+    }
+    if r_dol > 0.0 {
+        r_dol *= f_dol;
+    }
+    (r_cal, r_dol, omega_cal, omega_dol)
+}
+
+/// Integrate one cell over `dt` (mirrors `_integrate`): `row` = 10 inputs,
+/// returns the 13-double output record.
+pub fn integrate_cell(row: &[f64]) -> [f64; N_OUT] {
+    let (mut ca, mut mg, mut c) = (row[0], row[1], row[2]);
+    let (cl, mut ph, pe, o0) = (row[3], row[4], row[5], row[6]);
+    let (mut calcite, mut dolomite) = (row[7], row[8]);
+    let dts = row[9] / N_SUB as f64;
+
+    for _ in 0..N_SUB {
+        let (r_cal, r_dol, _, _) = rates(ca, mg, c, ph, calcite, dolomite);
+        let cap_dol = EXT_CAP * (ca.min(mg) + EXT_CAP_FLOOR);
+        let cap_cal = EXT_CAP * (ca + EXT_CAP_FLOOR);
+        let mut d_dol = (r_dol * dts).clamp(-cap_dol, cap_dol);
+        d_dol = d_dol.min(dolomite);
+        d_dol = d_dol.max(-(mg - STATE_MIN));
+        d_dol = d_dol.max(-(ca - STATE_MIN));
+        d_dol = d_dol.max(-0.5 * (c - STATE_MIN));
+        let mut d_cal = (r_cal * dts).clamp(-cap_cal, cap_cal);
+        d_cal = d_cal.min(calcite);
+        d_cal = d_cal.max(-(ca - STATE_MIN) - d_dol);
+        d_cal = d_cal.max(-(c - STATE_MIN) - 2.0 * d_dol);
+        ca += d_cal + d_dol;
+        mg += d_dol;
+        c += d_cal + 2.0 * d_dol;
+        ph = (ph + PH_BETA * (d_cal + 2.0 * d_dol)).clamp(4.0, 11.0);
+        calcite = (calcite - d_cal).max(0.0);
+        dolomite = (dolomite - d_dol).max(0.0);
+    }
+    let (r_cal, r_dol, omega_cal, omega_dol) =
+        rates(ca, mg, c, ph, calcite, dolomite);
+    [ca, mg, c, cl, ph, pe, o0, calcite, dolomite,
+     r_cal, r_dol, omega_cal, omega_dol]
+}
+
+/// The default waters, mirroring `python/compile/model.py` (background Ca
+/// computed at exact calcite equilibrium so unreached cells are
+/// stationary — the property the surrogate cache exploits).
+pub fn default_waters() -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let (bg_ph, bg_c) = (8.0f64, 1.0e-3f64);
+    let h = 10f64.powf(-bg_ph);
+    let denom = h * h + K1 * h + K1 * K2;
+    let a_co3 = bg_c * (K1 * K2) / denom;
+    let ca_eq = KSP_CAL / a_co3;
+    let background = vec![ca_eq, 1.0e-6, bg_c, 1.0e-5, bg_ph, 4.0, 2.5e-4];
+    let injection = vec![1.0e-6, 2.0e-3, bg_c, 4.0e-3, bg_ph, 4.0, 2.5e-4];
+    let minerals0 = vec![2.0e-4, 0.0];
+    (background, injection, minerals0)
+}
+
+/// A geochemistry engine: `rows` is `n` cells x 10 doubles, returns
+/// `n` x 13 doubles.
+pub trait Chemistry: Send + Sync {
+    fn run(&self, rows: &[f64], n: usize) -> anyhow::Result<Vec<f64>>;
+    fn name(&self) -> &'static str;
+}
+
+/// The native mirror of the Pallas kernel (validated against goldens).
+#[derive(Default)]
+pub struct NativeChemistry;
+
+impl Chemistry for NativeChemistry {
+    fn run(&self, rows: &[f64], n: usize) -> anyhow::Result<Vec<f64>> {
+        assert_eq!(rows.len(), n * N_IN);
+        let mut out = Vec::with_capacity(n * N_OUT);
+        for r in 0..n {
+            out.extend_from_slice(&integrate_cell(&rows[r * N_IN..(r + 1) * N_IN]));
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The real L1/L2 path: AOT-compiled Pallas/JAX chemistry via PJRT.
+///
+/// The xla crate's PJRT client is not `Send` (Rc internals), so the engine
+/// lives on a dedicated server thread and workers talk to it over
+/// channels.  On this box PJRT execution is single-threaded anyway, so the
+/// serialization costs nothing; on a larger machine one server per NUMA
+/// domain would be the natural extension.
+pub struct PjrtChemistry {
+    tx: std::sync::Mutex<
+        std::sync::mpsc::Sender<(
+            Vec<f64>,
+            usize,
+            std::sync::mpsc::Sender<anyhow::Result<Vec<f64>>>,
+        )>,
+    >,
+}
+
+impl PjrtChemistry {
+    /// Spawn the engine thread on `dir`'s artifacts; returns the handle
+    /// and the parsed manifest (waters/constants for the driver).
+    pub fn spawn(
+        dir: std::path::PathBuf,
+    ) -> anyhow::Result<(Self, crate::runtime::Manifest)> {
+        let (tx, rx) = std::sync::mpsc::channel::<(
+            Vec<f64>,
+            usize,
+            std::sync::mpsc::Sender<anyhow::Result<Vec<f64>>>,
+        )>();
+        let (ready_tx, ready_rx) =
+            std::sync::mpsc::channel::<anyhow::Result<crate::runtime::Manifest>>();
+        std::thread::Builder::new()
+            .name("pjrt-chemistry".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(e.manifest().clone()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok((rows, n, reply)) = rx.recv() {
+                    let _ = reply.send(engine.chemistry(&rows, n));
+                }
+            })
+            .expect("spawn pjrt thread");
+        let manifest = ready_rx.recv().expect("pjrt thread handshake")?;
+        Ok((Self { tx: std::sync::Mutex::new(tx) }, manifest))
+    }
+}
+
+impl Chemistry for PjrtChemistry {
+    fn run(&self, rows: &[f64], n: usize) -> anyhow::Result<Vec<f64>> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send((rows.to_vec(), n, reply_tx))
+            .map_err(|_| anyhow::anyhow!("pjrt thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("pjrt thread gone"))?
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Simulated PHREEQC cost of one cell (DES mode, Fig. 7).
+///
+/// PHREEQC converges quickly on equilibrated cells and grinds on cells far
+/// from equilibrium; we model per-cell cost as base + activity-scaled
+/// component, where activity is the relative saturation disequilibrium.
+#[derive(Clone, Copy, Debug)]
+pub struct ChemCost {
+    /// Cost of an equilibrated cell, ns.
+    pub base_ns: u64,
+    /// Extra cost of a fully active (front) cell, ns.
+    pub active_ns: u64,
+}
+
+impl Default for ChemCost {
+    fn default() -> Self {
+        // calibrated against Fig. 7's reference run (603 s at 128 ranks on
+        // the paper's 500x1500 grid => ~206 µs/cell average with the front
+        // covering a few percent of the domain)
+        Self { base_ns: 120_000, active_ns: 4_000_000 }
+    }
+}
+
+impl ChemCost {
+    /// Mineral turnover relative to this scale counts as "fully active".
+    pub const ACTIVITY_SCALE: f64 = 2.0e-5;
+
+    /// Activity in [0,1]: how much mineral mass actually reacted this
+    /// step (equilibrated cells react ~0; front cells convert a sizeable
+    /// fraction of their calcite/dolomite).
+    pub fn activity(in_row: &[f64], out_row: &[f64]) -> f64 {
+        let d_cal = (out_row[7] - in_row[7]).abs();
+        let d_dol = (out_row[8] - in_row[8]).abs();
+        ((d_cal + d_dol) / Self::ACTIVITY_SCALE).min(1.0)
+    }
+
+    pub fn cost_ns(&self, in_row: &[f64], out_row: &[f64]) -> u64 {
+        self.base_ns
+            + (self.active_ns as f64 * Self::activity(in_row, out_row)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_row() -> [f64; N_IN] {
+        [5e-4, 1e-3, 1e-3, 2e-3, 8.5, 4.0, 2.5e-4, 2e-4, 0.0, 500.0]
+    }
+
+    #[test]
+    fn native_matches_python_constants() {
+        // 10^-6.35 etc. — guard against typos in the mirrored constants
+        assert!((K1 - 10f64.powf(-6.35)).abs() / K1 < 1e-12);
+        assert!((K2 - 10f64.powf(-10.33)).abs() / K2 < 1e-12);
+        assert!((KSP_CAL - 10f64.powf(-8.48)).abs() / KSP_CAL < 1e-12);
+        assert!((KSP_DOL - 10f64.powf(-17.09)).abs() / KSP_DOL < 1e-12);
+    }
+
+    #[test]
+    fn mg_rich_water_precipitates_dolomite() {
+        let out = integrate_cell(&sample_row());
+        assert!(out[8] > 0.0, "dolomite formed: {}", out[8]);
+        assert!(out[7] <= 2e-4 + 1e-18); // calcite consumed or equal
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn conservative_species_untouched() {
+        let row = sample_row();
+        let out = integrate_cell(&row);
+        assert_eq!(out[3], row[3]);
+        assert_eq!(out[5], row[5]);
+        assert_eq!(out[6], row[6]);
+    }
+
+    #[test]
+    fn dt_zero_identity() {
+        let mut row = sample_row();
+        row[9] = 0.0;
+        let out = integrate_cell(&row);
+        for i in 0..N_SPECIES {
+            assert!((out[i] - row[i]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn background_water_is_stationary() {
+        let (bg, _, min0) = default_waters();
+        let mut row = [0.0; N_IN];
+        row[..7].copy_from_slice(&bg);
+        row[7] = min0[0];
+        row[8] = min0[1];
+        row[9] = 2000.0;
+        let out = integrate_cell(&row);
+        for i in 0..N_SPECIES {
+            let tol = 1e-9 * row[i].abs().max(1e-12);
+            assert!((out[i] - row[i]).abs() < tol.max(1e-12),
+                    "species {i}: {} -> {}", row[i], out[i]);
+        }
+        // at equilibrium: omega_cal == 1
+        assert!((out[11] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_engine_matches_per_cell() {
+        let row = sample_row();
+        let mut rows = Vec::new();
+        for i in 0..5 {
+            let mut r = row;
+            r[1] += i as f64 * 1e-5;
+            rows.extend_from_slice(&r);
+        }
+        let out = NativeChemistry.run(&rows, 5).unwrap();
+        for i in 0..5 {
+            let mut r = row;
+            r[1] += i as f64 * 1e-5;
+            let single = integrate_cell(&r);
+            assert_eq!(&out[i * N_OUT..(i + 1) * N_OUT], &single[..]);
+        }
+    }
+
+    #[test]
+    fn cost_model_orders_front_vs_equilibrium() {
+        let cost = ChemCost::default();
+        let (bg, _, min0) = default_waters();
+        let mut eq_row = [0.0; N_IN];
+        eq_row[..7].copy_from_slice(&bg);
+        eq_row[7] = min0[0];
+        eq_row[9] = 2000.0;
+        let eq_out = integrate_cell(&eq_row);
+        let front_row = sample_row();
+        let front_out = integrate_cell(&front_row);
+        assert!(cost.cost_ns(&eq_row, &eq_out) < cost.cost_ns(&front_row, &front_out));
+        assert!(cost.cost_ns(&eq_row, &eq_out) >= cost.base_ns);
+        // equilibrated cell is near base cost; front cell near full cost
+        assert!(cost.cost_ns(&eq_row, &eq_out) < cost.base_ns + cost.active_ns / 10);
+        assert!(cost.cost_ns(&front_row, &front_out) > cost.base_ns + cost.active_ns / 2);
+    }
+}

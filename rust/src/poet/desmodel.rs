@@ -1,0 +1,447 @@
+//! POET inside the discrete-event cluster — the Fig. 7 / Tab. 3–4 engine.
+//!
+//! This runs the *same coupled simulation* as [`super::driver`] (real grid,
+//! real native chemistry, real rounding/keys, real DHT protocol over real
+//! window memory), but each rank's time is simulated: chemistry charges
+//! the calibrated [`ChemCost`] (PHREEQC time), DHT operations run through
+//! the calibrated network model, and every step ends in a barrier — so
+//! load imbalance from the moving reaction front emerges naturally, which
+//! is exactly what limits the reference run's scaling in the paper
+//! ("the simulation has already reached the maximum degree of
+//! parallelization when using only one node").
+//!
+//! Grid scaling: the paper's 500x1500 grid is scaled down (default 60x180)
+//! with per-cell chemistry cost kept at the paper's magnitude; simulated
+//! runtimes therefore scale with the cell ratio, and the *relative* gains
+//! (Tab. 3) are the reproduction target.
+
+use crate::dht::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
+use crate::net::{NetConfig, Network};
+use crate::rma::sim::{SimCluster, SimReport};
+use crate::rma::{OpSm, WorkItem, Workload};
+use crate::sim::Time;
+
+use super::chemistry::{integrate_cell, ChemCost, N_OUT};
+use super::grid::GridState;
+use super::key::{cell_key, pack_row, unpack_value};
+use super::transport;
+
+/// Configuration of a DES POET run.
+#[derive(Clone, Debug)]
+pub struct PoetDesCfg {
+    pub nranks: u32,
+    pub ny: usize,
+    pub nx: usize,
+    pub steps: usize,
+    pub dt: f64,
+    pub cf: [f64; 2],
+    pub inj_rows: usize,
+    pub digits: u32,
+    /// None = reference run (no DHT).
+    pub variant: Option<Variant>,
+    pub win_bytes: usize,
+    pub cost: ChemCost,
+    /// Per-rank, per-step fixed overhead (transport + halo exchange),
+    /// ns.
+    pub step_overhead_ns: u64,
+    /// Per-step collective-synchronization cost factor: charged as
+    /// `step_sync_ns * log2(nranks)` — the serial component that caps the
+    /// reference run's scaling in Fig. 7.
+    pub step_sync_ns: u64,
+    /// Per-owned-cell transport compute, ns.
+    pub transport_ns_per_cell: u64,
+}
+
+impl PoetDesCfg {
+    pub fn scaled(nranks: u32, variant: Option<Variant>) -> Self {
+        Self {
+            nranks,
+            ny: 60,
+            nx: 180,
+            steps: 500,
+            dt: 2000.0,
+            cf: [0.5, 0.0],
+            inj_rows: 12,
+            digits: 4,
+            variant,
+            win_bytes: 2 << 20,
+            cost: ChemCost::default(),
+            step_overhead_ns: 250_000,
+            step_sync_ns: 300_000,
+            transport_ns_per_cell: 500,
+        }
+    }
+}
+
+/// Results of a DES POET run.
+#[derive(Clone, Debug)]
+pub struct PoetDesResult {
+    /// Simulated runtime of the chemistry+transport loop [s].
+    pub runtime_s: f64,
+    pub chem_cells: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub dht: DhtStats,
+    pub sim: SimReport,
+    pub max_dolomite: f64,
+}
+
+impl PoetDesResult {
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Phase {
+    /// Charge step overhead + transport share at step start.
+    StepStart,
+    /// Iterate owned cells.
+    Cells,
+    /// Miss: charge the simulated PHREEQC time of this cell.
+    MissCompute,
+    /// Miss: chemistry cost charged; write the result to the DHT.
+    MissWrite,
+    /// Waiting at the end-of-step barrier.
+    EndOfStep,
+}
+
+struct RankCur {
+    step: usize,
+    /// Index into this rank's owned-cell range.
+    idx: usize,
+    phase: Phase,
+    /// Pending miss: (cell, key bytes, output record).
+    pending: Option<(usize, Vec<u8>, [f64; N_OUT])>,
+    /// Simulated PHREEQC cost of the pending miss.
+    pending_cost: u64,
+}
+
+struct PoetWorkload {
+    cfg: PoetDesCfg,
+    dht: Option<DhtConfig>,
+    grid: GridState,
+    scratch: Vec<f64>,
+    inflow: Vec<f64>,
+    ranges: Vec<(usize, usize)>,
+    cur: Vec<RankCur>,
+    /// Last step whose transport has been applied to the grid.
+    transport_applied: i64,
+    stats: DhtStats,
+    hits: u64,
+    misses: u64,
+    chem_cells: u64,
+}
+
+impl PoetWorkload {
+    fn new(cfg: PoetDesCfg) -> Self {
+        let (bg, inj, min0) = super::chemistry::default_waters();
+        let grid = GridState::new(cfg.ny, cfg.nx, &bg, &min0);
+        let mut inflow = Vec::with_capacity(bg.len() * 2);
+        for s in 0..bg.len() {
+            inflow.push(inj[s]);
+            inflow.push(bg[s]);
+        }
+        let cells = grid.cells();
+        let n = cfg.nranks as usize;
+        let ranges = (0..n)
+            .map(|r| (r * cells / n, (r + 1) * cells / n))
+            .collect();
+        let dht = cfg.variant.map(|v| {
+            DhtConfig::poet(v, cfg.nranks, cfg.win_bytes)
+        });
+        let cur = (0..n)
+            .map(|_| RankCur {
+                step: 0,
+                idx: 0,
+                phase: Phase::StepStart,
+                pending: None,
+                pending_cost: 0,
+            })
+            .collect();
+        Self {
+            cfg,
+            dht,
+            grid,
+            scratch: Vec::new(),
+            inflow,
+            ranges,
+            cur,
+            transport_applied: -1,
+            stats: DhtStats::default(),
+            hits: 0,
+            misses: 0,
+            chem_cells: 0,
+        }
+    }
+
+    fn apply_transport(&mut self, step: usize) {
+        if self.transport_applied >= step as i64 {
+            return;
+        }
+        transport::advect_step(
+            &mut self.grid.solutes,
+            &mut self.scratch,
+            self.cfg.ny,
+            self.cfg.nx,
+            &self.inflow,
+            self.cfg.cf,
+            self.cfg.inj_rows,
+        );
+        self.transport_applied = step as i64;
+    }
+}
+
+impl Workload for PoetWorkload {
+    type Sm = DhtSm;
+
+    fn next(&mut self, rank: u32, _now: Time) -> WorkItem<DhtSm> {
+        let r = rank as usize;
+        if self.cur[r].step >= self.cfg.steps {
+            return WorkItem::Finished;
+        }
+        match self.cur[r].phase {
+            Phase::StepStart => {
+                let step = self.cur[r].step;
+                self.apply_transport(step);
+                self.cur[r].phase = Phase::Cells;
+                let (lo, hi) = self.ranges[r];
+                let cells = (hi - lo) as u64;
+                let sync = (self.cfg.step_sync_ns as f64
+                    * (self.cfg.nranks.max(2) as f64).log2()) as u64;
+                WorkItem::Think(
+                    self.cfg.step_overhead_ns
+                        + sync
+                        + cells * self.cfg.transport_ns_per_cell,
+                )
+            }
+            Phase::Cells => {
+                let (lo, hi) = self.ranges[r];
+                let idx = self.cur[r].idx;
+                if lo + idx >= hi {
+                    self.cur[r].phase = Phase::EndOfStep;
+                    return WorkItem::Barrier;
+                }
+                let cell = lo + idx;
+                let row = self.grid.row(cell, self.cfg.dt);
+                match &self.dht {
+                    None => {
+                        // reference: simulate every cell, charge its cost
+                        let out = integrate_cell(&row);
+                        let cost = self.cfg.cost.cost_ns(&row, &out);
+                        self.grid.apply(cell, &out);
+                        self.chem_cells += 1;
+                        self.cur[r].idx += 1;
+                        WorkItem::Think(cost)
+                    }
+                    Some(dcfg) => {
+                        let key = cell_key(&row, self.cfg.digits);
+                        let sm = DhtSm::read(dcfg.variant, dcfg, &key);
+                        // stash for on_complete
+                        self.cur[r].pending = Some((cell, key, [0.0; N_OUT]));
+                        WorkItem::Op(sm)
+                    }
+                }
+            }
+            Phase::MissCompute => {
+                // charge the simulated PHREEQC time for the miss
+                let cost = self.cur[r].pending_cost;
+                self.cur[r].phase = Phase::MissWrite;
+                WorkItem::Think(cost)
+            }
+            Phase::MissWrite => {
+                // chemistry cost has been charged; now store the result
+                let dcfg = self.dht.as_ref().expect("dht in MissWrite");
+                let (_, key, out) =
+                    self.cur[r].pending.as_ref().expect("pending miss");
+                let sm = DhtSm::write(
+                    dcfg.variant,
+                    dcfg,
+                    key,
+                    &pack_row(out),
+                );
+                WorkItem::Op(sm)
+            }
+            Phase::EndOfStep => {
+                // barrier released: next step
+                self.cur[r].step += 1;
+                self.cur[r].idx = 0;
+                self.cur[r].phase = Phase::StepStart;
+                self.next(rank, _now)
+            }
+        }
+    }
+
+    fn on_complete(
+        &mut self,
+        rank: u32,
+        _now: Time,
+        _latency: Time,
+        out: <DhtSm as OpSm>::Out,
+    ) {
+        let r = rank as usize;
+        self.stats.record(&out);
+        match out.outcome {
+            DhtOutcome::ReadHit(v) => {
+                let (cell, _, _) = self.cur[r].pending.take().expect("pending");
+                self.hits += 1;
+                self.grid.apply(cell, &unpack_value(&v));
+                self.cur[r].idx += 1;
+                self.cur[r].phase = Phase::Cells;
+            }
+            DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt => {
+                // simulate the cell now (real chemistry), charge its cost
+                // via a Think from the MissWrite transition
+                let (cell, key, _) =
+                    self.cur[r].pending.take().expect("pending");
+                let row = self.grid.row(cell, self.cfg.dt);
+                let rec = integrate_cell(&row);
+                self.cur[r].pending_cost = self.cfg.cost.cost_ns(&row, &rec);
+                self.grid.apply(cell, &rec);
+                self.chem_cells += 1;
+                self.misses += 1;
+                self.cur[r].pending = Some((cell, key, rec));
+                self.cur[r].phase = Phase::MissCompute;
+            }
+            DhtOutcome::WriteFresh
+            | DhtOutcome::WriteUpdate
+            | DhtOutcome::WriteEvict => {
+                self.cur[r].pending = None;
+                self.cur[r].idx += 1;
+                self.cur[r].phase = Phase::Cells;
+            }
+        }
+    }
+}
+
+/// Run one DES POET configuration.
+pub fn run_poet_des(cfg: PoetDesCfg, net_cfg: NetConfig) -> PoetDesResult {
+    let nranks = cfg.nranks;
+    let win_bytes = cfg.win_bytes;
+    let net = Network::new(net_cfg, nranks);
+    let mut cluster =
+        SimCluster::new(PoetWorkload::new(cfg), net, nranks, win_bytes);
+    let sim = cluster.run();
+    let w = &mut cluster.workload;
+    PoetDesResult {
+        runtime_s: sim.duration as f64 / 1e9,
+        chem_cells: w.chem_cells,
+        hits: w.hits,
+        misses: w.misses,
+        dht: std::mem::take(&mut w.stats),
+        max_dolomite: w.grid.max_dolomite(),
+        sim,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(nranks: u32, variant: Option<Variant>) -> PoetDesCfg {
+        let mut c = PoetDesCfg::scaled(nranks, variant);
+        c.ny = 12;
+        c.nx = 24;
+        c.steps = 12;
+        c.inj_rows = 3;
+        c
+    }
+
+
+    /// Calibration probe:
+    /// `cargo test --release poet_fig7_probe -- --ignored --nocapture`
+    #[test]
+    #[ignore]
+    fn poet_fig7_probe() {
+        for nranks in [128u32, 640] {
+            let t0 = std::time::Instant::now();
+            let refr = run_poet_des(PoetDesCfg::scaled(nranks, None),
+                                    NetConfig::pik_ndr());
+            let t1 = std::time::Instant::now();
+            let lf = run_poet_des(
+                PoetDesCfg::scaled(nranks, Some(Variant::LockFree)),
+                NetConfig::pik_ndr());
+            println!(
+                "n={nranks}: ref {:.1}s (wall {:.1}s) | lock-free {:.1}s \
+                 (wall {:.1}s) hit {:.3} mism {} gain {:.1}%",
+                refr.runtime_s, (t1 - t0).as_secs_f64(),
+                lf.runtime_s, t1.elapsed().as_secs_f64(),
+                lf.hit_rate(), lf.dht.mismatches,
+                100.0 * (1.0 - lf.runtime_s / refr.runtime_s));
+        }
+    }
+
+    #[test]
+    fn reference_simulates_every_cell() {
+        let cfg = tiny(8, None);
+        let cells = cfg.ny * cfg.nx;
+        let steps = cfg.steps;
+        let res = run_poet_des(cfg, NetConfig::pik_ndr());
+        assert_eq!(res.chem_cells, (cells * steps) as u64);
+        assert_eq!(res.hits, 0);
+        assert!(res.runtime_s > 0.0);
+    }
+
+    #[test]
+    fn dht_run_hits_and_is_faster() {
+        let refr = run_poet_des(tiny(8, None), NetConfig::pik_ndr());
+        let lf = run_poet_des(
+            tiny(8, Some(Variant::LockFree)),
+            NetConfig::pik_ndr(),
+        );
+        assert!(lf.hit_rate() > 0.5, "hit rate {}", lf.hit_rate());
+        assert!(lf.chem_cells < refr.chem_cells / 2);
+        assert!(
+            lf.runtime_s < refr.runtime_s,
+            "lock-free {} vs ref {}",
+            lf.runtime_s,
+            refr.runtime_s
+        );
+        // same physics emerges
+        assert!(lf.max_dolomite > 0.0);
+    }
+
+    #[test]
+    fn des_grid_matches_threaded_reference() {
+        // the DES reference and the threaded reference run identical
+        // physics (same native chemistry + transport)
+        let cfg = tiny(4, None);
+        let (ny, nx, steps, inj) = (cfg.ny, cfg.nx, cfg.steps, cfg.inj_rows);
+        let net = Network::new(NetConfig::pik_ndr(), cfg.nranks);
+        let mut cluster = SimCluster::new(
+            PoetWorkload::new(cfg.clone()),
+            net,
+            cfg.nranks,
+            cfg.win_bytes,
+        );
+        cluster.run();
+
+        let mut pcfg = crate::poet::PoetConfig::small();
+        pcfg.ny = ny;
+        pcfg.nx = nx;
+        pcfg.steps = steps;
+        pcfg.inj_rows = inj;
+        pcfg.dt = cfg.dt;
+        pcfg.cf = cfg.cf;
+        pcfg.workers = 1;
+        let mut drv = crate::poet::PoetDriver::with_default_waters(
+            pcfg,
+            std::sync::Arc::new(crate::poet::NativeChemistry),
+        );
+        drv.run_reference();
+        for (a, b) in cluster
+            .workload
+            .grid
+            .solutes
+            .iter()
+            .zip(drv.grid.solutes.iter())
+        {
+            assert!((a - b).abs() < 1e-14, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! POET grid state: solute planes + mineral planes.
+
+use super::chemistry::{N_IN, N_OUT, N_SOLUTES};
+
+/// The coupled simulation state.
+#[derive(Clone, Debug)]
+pub struct GridState {
+    pub ny: usize,
+    pub nx: usize,
+    /// `[N_SOLUTES][ny][nx]` row-major.
+    pub solutes: Vec<f64>,
+    /// `[2][ny][nx]`: calcite, dolomite.
+    pub minerals: Vec<f64>,
+}
+
+impl GridState {
+    /// Initialize from waters: background everywhere, `minerals0` minerals.
+    pub fn new(ny: usize, nx: usize, background: &[f64], minerals0: &[f64]) -> Self {
+        assert_eq!(background.len(), N_SOLUTES);
+        assert_eq!(minerals0.len(), 2);
+        let mut solutes = Vec::with_capacity(N_SOLUTES * ny * nx);
+        for s in 0..N_SOLUTES {
+            solutes.extend(std::iter::repeat(background[s]).take(ny * nx));
+        }
+        let mut minerals = Vec::with_capacity(2 * ny * nx);
+        for m in 0..2 {
+            minerals.extend(std::iter::repeat(minerals0[m]).take(ny * nx));
+        }
+        Self { ny, nx, solutes, minerals }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.ny * self.nx
+    }
+
+    /// Assemble the 10-double chemistry input row for `cell`.
+    #[inline]
+    pub fn row(&self, cell: usize, dt: f64) -> [f64; N_IN] {
+        let n = self.cells();
+        let mut r = [0.0; N_IN];
+        for s in 0..N_SOLUTES {
+            r[s] = self.solutes[s * n + cell];
+        }
+        r[7] = self.minerals[cell];
+        r[8] = self.minerals[n + cell];
+        r[9] = dt;
+        r
+    }
+
+    /// Apply a 13-double chemistry output record to `cell`.
+    #[inline]
+    pub fn apply(&mut self, cell: usize, out: &[f64]) {
+        debug_assert_eq!(out.len(), N_OUT);
+        let n = self.cells();
+        for s in 0..N_SOLUTES {
+            self.solutes[s * n + cell] = out[s];
+        }
+        self.minerals[cell] = out[7];
+        self.minerals[n + cell] = out[8];
+    }
+
+    /// Total dissolved + mineral-bound calcium (diagnostic).
+    pub fn total_ca(&self) -> f64 {
+        let n = self.cells();
+        let dissolved: f64 = self.solutes[..n].iter().sum();
+        let calcite: f64 = self.minerals[..n].iter().sum();
+        let dolomite: f64 = self.minerals[n..].iter().sum();
+        dissolved + calcite + dolomite
+    }
+
+    /// Mean calcite in a rectangular region (diagnostics/tests).
+    pub fn mean_calcite(&self, y0: usize, y1: usize, x0: usize, x1: usize) -> f64 {
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for y in y0..y1 {
+            for x in x0..x1 {
+                sum += self.minerals[y * self.nx + x];
+                cnt += 1;
+            }
+        }
+        sum / cnt as f64
+    }
+
+    pub fn max_dolomite(&self) -> f64 {
+        let n = self.cells();
+        self.minerals[n..].iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::poet::chemistry::default_waters;
+
+    #[test]
+    fn init_row_apply_roundtrip() {
+        let (bg, _, min0) = default_waters();
+        let mut g = GridState::new(4, 6, &bg, &min0);
+        assert_eq!(g.cells(), 24);
+        let row = g.row(13, 500.0);
+        assert_eq!(row[0], bg[0]);
+        assert_eq!(row[7], min0[0]);
+        assert_eq!(row[9], 500.0);
+        let mut out = [0.0; N_OUT];
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = i as f64;
+        }
+        g.apply(13, &out);
+        let row2 = g.row(13, 1.0);
+        assert_eq!(row2[0], 0.0);
+        assert_eq!(row2[6], 6.0);
+        assert_eq!(row2[7], 7.0);
+        assert_eq!(row2[8], 8.0);
+        // other cells untouched
+        assert_eq!(g.row(12, 1.0)[0], bg[0]);
+    }
+
+    #[test]
+    fn diagnostics() {
+        let (bg, _, min0) = default_waters();
+        let g = GridState::new(3, 3, &bg, &min0);
+        assert!(g.total_ca() > 0.0);
+        assert!((g.mean_calcite(0, 3, 0, 3) - min0[0]).abs() < 1e-18);
+        assert_eq!(g.max_dolomite(), 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Surrogate keying (paper §5.4): "the input parameters for the
+//! geochemical simulation are rounded to a user-defined number of
+//! significant digits to serve as key for the DHT.  These are 9 species
+//! and the simulation time step, represented as double values" — an
+//! 80-byte key; the value is the exact 13-double result (104 bytes).
+//!
+//! The rounding is the accuracy/performance trade-off the paper mentions:
+//! more digits -> fewer hits; fewer digits -> coarser approximation.
+
+use super::chemistry::{N_IN, N_OUT};
+
+/// Round `v` to `digits` significant decimal digits.
+///
+/// Implemented through decimal (scientific) formatting, which is exact
+/// and idempotent — pure power-of-ten scaling suffers fp-boundary bugs
+/// (e.g. -1e9 at 10 digits rounding to -999999999.9999999).
+#[inline]
+pub fn round_sig(v: f64, digits: u32) -> f64 {
+    if v == 0.0 || !v.is_finite() {
+        return 0.0;
+    }
+    let d = digits.max(1) as usize - 1;
+    format!("{v:.d$e}").parse().expect("round_sig parse")
+}
+
+/// The DHT key for a chemistry input row: species rounded to `digits`
+/// significant digits, dt appended verbatim; packed little-endian.
+pub fn cell_key(row: &[f64; N_IN], digits: u32) -> Vec<u8> {
+    let mut key = Vec::with_capacity(N_IN * 8);
+    for v in row.iter().take(N_IN - 1) {
+        key.extend_from_slice(&round_sig(*v, digits).to_le_bytes());
+    }
+    key.extend_from_slice(&row[N_IN - 1].to_le_bytes());
+    key
+}
+
+/// Pack a 13-double output record as the 104-byte DHT value.
+pub fn pack_row(out: &[f64]) -> Vec<u8> {
+    debug_assert_eq!(out.len(), N_OUT);
+    let mut v = Vec::with_capacity(N_OUT * 8);
+    for x in out {
+        v.extend_from_slice(&x.to_le_bytes());
+    }
+    v
+}
+
+/// Decode a 104-byte DHT value back into the 13-double record.
+pub fn unpack_value(bytes: &[u8]) -> [f64; N_OUT] {
+    debug_assert_eq!(bytes.len(), N_OUT * 8);
+    let mut out = [0.0; N_OUT];
+    for (i, chunk) in bytes.chunks_exact(8).enumerate() {
+        out[i] = f64::from_le_bytes(chunk.try_into().unwrap());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_sig_basics() {
+        assert_eq!(round_sig(0.0, 5), 0.0);
+        assert_eq!(round_sig(123.456, 3), 123.0);
+        assert_eq!(round_sig(123.456, 5), 123.46);
+        assert_eq!(round_sig(0.00123456, 3), 0.00123);
+        assert_eq!(round_sig(-123.456, 3), -123.0);
+        assert_eq!(round_sig(9.99e-7, 2), 1.0e-6);
+    }
+
+    #[test]
+    fn rounding_is_idempotent() {
+        for v in [1.2345e-4, 7.77e-3, 5.0e-1, 1.0, 123.456] {
+            let r = round_sig(v, 4);
+            assert_eq!(round_sig(r, 4), r);
+        }
+    }
+
+    #[test]
+    fn nearby_states_share_keys_distant_do_not() {
+        let base = [5.1234e-4, 1e-6, 1e-3, 1e-5, 8.0, 4.0, 2.5e-4, 2e-4, 0.0,
+                    500.0];
+        let mut near = base;
+        near[0] += 1e-10; // below rounding resolution at 4 digits
+        let mut far = base;
+        far[0] += 1e-5;
+        assert_eq!(cell_key(&base, 4), cell_key(&near, 4));
+        assert_ne!(cell_key(&base, 4), cell_key(&far, 4));
+    }
+
+    #[test]
+    fn key_is_80_bytes_value_104() {
+        let row = [1.0; N_IN];
+        assert_eq!(cell_key(&row, 5).len(), 80);
+        let out = [2.0; N_OUT];
+        assert_eq!(pack_row(&out).len(), 104);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut out = [0.0; N_OUT];
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = (i as f64) * 1.7e-5 - 3.0;
+        }
+        let bytes = pack_row(&out);
+        assert_eq!(unpack_value(&bytes), out);
+    }
+
+    #[test]
+    fn dt_is_part_of_the_key_unrounded() {
+        let mut a = [1.0; N_IN];
+        let mut b = [1.0; N_IN];
+        a[9] = 500.0;
+        b[9] = 500.0001; // tiny dt change must change the key
+        assert_ne!(cell_key(&a, 3), cell_key(&b, 3));
+    }
+
+    #[test]
+    fn more_digits_fewer_collisions() {
+        // count distinct keys over a smooth ramp of states
+        let mut k3 = std::collections::HashSet::new();
+        let mut k6 = std::collections::HashSet::new();
+        for i in 0..1000 {
+            let mut row = [5e-4, 1e-6, 1e-3, 1e-5, 8.0, 4.0, 2.5e-4, 2e-4,
+                           0.0, 500.0];
+            row[0] *= 1.0 + i as f64 * 1e-6;
+            k3.insert(cell_key(&row, 3));
+            k6.insert(cell_key(&row, 6));
+        }
+        assert!(k3.len() < k6.len());
+    }
+}

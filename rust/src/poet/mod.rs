@@ -1,0 +1,31 @@
+//! POET — the coupled reactive transport simulator (paper §5.4).
+//!
+//! POET couples solute advection with kinetic calcite/dolomite
+//! geochemistry on a 2-D grid and caches chemistry results in the DHT:
+//! per cell and time step, the rounded chemical state is the 80-byte key
+//! and the full simulation result the 104-byte value; a hit replaces the
+//! expensive geochemistry call (PHREEQC in the paper, the L1/L2 JAX +
+//! Pallas engine here).
+//!
+//! Two execution modes (DESIGN.md §2):
+//!
+//! * **real/threaded** ([`driver`]) — actual wall-clock runs on this
+//!   machine: PJRT chemistry via the AOT artifacts (or the bit-identical
+//!   [`chemistry::NativeChemistry`]), shm-backend DHT, worker threads.
+//!   Used by the end-to-end example and the integration tests.
+//! * **DES** ([`desmodel`]) — the *same coupled simulation* (real grid,
+//!   real keys, real DHT protocol over real window memory) driven inside
+//!   the discrete-event cluster with a calibrated chemistry *time* model,
+//!   which is how Fig. 7 / Tables 3–4 are reproduced at 128–640 ranks.
+
+pub mod chemistry;
+pub mod desmodel;
+pub mod driver;
+pub mod grid;
+pub mod key;
+pub mod transport;
+
+pub use chemistry::{ChemCost, Chemistry, NativeChemistry, PjrtChemistry};
+pub use driver::{PoetConfig, PoetDriver, PoetRunStats};
+pub use grid::GridState;
+pub use key::{cell_key, pack_row, round_sig, unpack_value};

@@ -1,0 +1,147 @@
+//! MPI-RMA façade: the one-sided communication API the DHT protocols are
+//! written against, with two interchangeable backends.
+//!
+//! The paper's DHTs use MPI's one-sided API (`MPI_Put`, `MPI_Get`,
+//! `MPI_Compare_and_swap`, `MPI_Fetch_and_op`, `MPI_Win_lock/unlock`,
+//! `MPI_Win_lock_all`).  Here the same operations are expressed as
+//! [`Req`] values issued by protocol *state machines* ([`OpSm`]); a backend
+//! executes them:
+//!
+//! * [`shm`] — real threads + atomics over shared window memory: true
+//!   concurrency for correctness tests and the threaded POET application.
+//! * [`sim`] — the discrete-event cluster: 640-rank protocol-accurate
+//!   simulation over real window memory with the calibrated network model
+//!   (used by every paper figure/table bench).
+//!
+//! Writing each DHT protocol ONCE as a state machine and running it on both
+//! backends is the key design decision (DESIGN.md §2): the sim results are
+//! produced by exactly the code that the correctness tests exercise under
+//! real concurrency.
+
+pub mod shm;
+pub mod sim;
+
+use crate::sim::Time;
+
+/// Value a writer CASes into a lock word to take it exclusively; readers
+/// increment by one below this (paper §4.1, Open MPI's scheme).
+pub const EXCLUSIVE_LOCK: u64 = 0x1000_0000;
+
+/// One-sided operation requests (offsets/lengths in bytes, 8-aligned).
+#[derive(Clone, Debug)]
+pub enum Req {
+    /// `MPI_Get`: read `len` bytes at `offset` in `target`'s window.
+    Get { target: u32, offset: u64, len: u32 },
+    /// `MPI_Put`: write `data` at `offset` in `target`'s window.
+    Put { target: u32, offset: u64, data: Vec<u8> },
+    /// `MPI_Compare_and_swap` on a u64 (LE) in the target window.
+    Cas { target: u32, offset: u64, expected: u64, desired: u64 },
+    /// `MPI_Fetch_and_op(SUM)` on a u64 (LE); returns the previous value.
+    Fao { target: u32, offset: u64, add: i64 },
+    /// `MPI_Win_lock` (shared/exclusive) on the target's whole window —
+    /// the coarse-grained DHT's synchronization.  Backends implement the
+    /// busy-wait CAS/FAO loop internally (modelled per-attempt in `sim`).
+    LockWin { target: u32, exclusive: bool },
+    /// `MPI_Win_unlock`.
+    UnlockWin { target: u32, exclusive: bool },
+    /// Local computation for `ns` nanoseconds (DES cost; no-op in shm).
+    Compute { ns: u64 },
+    /// Client-server RPC (the DAOS baseline; not an MPI-RMA op).  The
+    /// server serializes `proc_ns` of processing per request; payload
+    /// semantics are interpreted by the workload's `serve_rpc`.
+    Rpc {
+        server: u32,
+        proc_ns: u64,
+        req_bytes: u32,
+        resp_bytes: u32,
+        payload: RpcPayload,
+    },
+}
+
+/// RPC payloads for the server-based (DAOS-like) baseline.
+#[derive(Clone, Debug)]
+pub enum RpcPayload {
+    KvGet { key: Vec<u8> },
+    KvPut { key: Vec<u8>, value: Vec<u8> },
+}
+
+/// Responses delivered back into a state machine.
+#[derive(Clone, Debug)]
+pub enum Resp {
+    /// First `step` call of an op (no response yet).
+    Start,
+    /// Completion of Put / LockWin / UnlockWin / Compute.
+    Ack,
+    /// Data from a Get.
+    Data(Vec<u8>),
+    /// Previous value from a Cas / Fao.
+    Word(u64),
+    /// Reply to an Rpc.
+    Rpc(RpcReply),
+}
+
+/// Replies produced by the RPC server hook.
+#[derive(Clone, Debug)]
+pub enum RpcReply {
+    Value(Option<Vec<u8>>),
+    Ok,
+}
+
+/// What a state machine wants next.
+#[derive(Debug)]
+pub enum SmStep<O> {
+    Issue(Req),
+    Done(O),
+}
+
+/// A protocol state machine for one DHT/KV operation.
+///
+/// The backend calls `step(Resp::Start)` first; each `Issue(req)` is
+/// executed and its response passed to the next `step` call, until `Done`.
+pub trait OpSm {
+    type Out;
+    fn step(&mut self, resp: Resp) -> SmStep<Self::Out>;
+}
+
+/// Work item a workload hands to the DES engine for a rank.
+pub enum WorkItem<S> {
+    /// Run this operation state machine.
+    Op(S),
+    /// Local think time before asking again.
+    Think(u64),
+    /// Wait until all ranks reach the barrier (phase separation: the
+    /// paper's benchmark writes everything, barriers, then reads).
+    Barrier,
+    /// This rank is done.
+    Finished,
+}
+
+/// A benchmark/application workload driving the DES engine.
+pub trait Workload {
+    type Sm: OpSm;
+
+    /// Next work item for `rank` at simulated time `now`.
+    fn next(&mut self, rank: u32, now: Time) -> WorkItem<Self::Sm>;
+
+    /// Called when an op completes (latency = now - issue time is tracked
+    /// by the engine and passed here).
+    fn on_complete(
+        &mut self,
+        rank: u32,
+        now: Time,
+        latency: Time,
+        out: <Self::Sm as OpSm>::Out,
+    );
+
+    /// Server-side execution hook for [`Req::Rpc`] (DAOS baseline).
+    fn serve_rpc(&mut self, _now: Time, _payload: &RpcPayload) -> RpcReply {
+        RpcReply::Ok
+    }
+}
+
+/// Check an 8-aligned byte range (debug builds only).
+#[inline]
+pub(crate) fn debug_check_aligned(offset: u64, len: u32) {
+    debug_assert_eq!(offset % 8, 0, "RMA offset must be 8-aligned");
+    debug_assert_eq!(len % 8, 0, "RMA length must be 8-aligned");
+}

@@ -1,0 +1,313 @@
+//! Shared-memory backend: real threads, real atomics.
+//!
+//! Window memory is an array of `AtomicU64` words accessed with relaxed
+//! loads/stores — deliberately so: RDMA Put/Get transfers are not atomic
+//! with respect to concurrent accesses, and modelling them as word-granular
+//! relaxed atomics reproduces exactly the torn-read behaviour the lock-free
+//! DHT's checksums exist to detect (paper §4.2), without undefined
+//! behaviour on the Rust side.
+//!
+//! The window lock (`MPI_Win_lock/unlock`) uses the same readers/writer
+//! algorithm the paper describes for the fine-grained DHT (§4.1), which is
+//! itself adopted from Open MPI's passive-target implementation: writers
+//! CAS `0 -> EXCLUSIVE_LOCK`, readers fetch-add 1 and revoke if a writer
+//! holds the word.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::{
+    debug_check_aligned, OpSm, Req, Resp, RpcReply, SmStep, EXCLUSIVE_LOCK,
+};
+
+/// One rank's shared window: a lock word plus word-granular memory.
+pub struct ShmWindow {
+    lock: AtomicU64,
+    mem: Box<[AtomicU64]>,
+}
+
+impl ShmWindow {
+    fn new(bytes: usize) -> Self {
+        assert_eq!(bytes % 8, 0);
+        let words = bytes / 8;
+        let mut v = Vec::with_capacity(words);
+        v.resize_with(words, || AtomicU64::new(0));
+        Self { lock: AtomicU64::new(0), mem: v.into_boxed_slice() }
+    }
+
+    #[inline]
+    fn read_into(&self, offset: u64, out: &mut [u8]) {
+        let w0 = (offset / 8) as usize;
+        for (i, chunk) in out.chunks_exact_mut(8).enumerate() {
+            chunk.copy_from_slice(
+                &self.mem[w0 + i].load(Ordering::Relaxed).to_le_bytes(),
+            );
+        }
+    }
+
+    #[inline]
+    fn write_from(&self, offset: u64, data: &[u8]) {
+        let w0 = (offset / 8) as usize;
+        for (i, chunk) in data.chunks_exact(8).enumerate() {
+            self.mem[w0 + i].store(
+                u64::from_le_bytes(chunk.try_into().unwrap()),
+                Ordering::Relaxed,
+            );
+        }
+    }
+
+    #[inline]
+    fn word(&self, offset: u64) -> &AtomicU64 {
+        &self.mem[(offset / 8) as usize]
+    }
+}
+
+/// The cluster: all ranks' windows (create once, share via `Arc`).
+pub struct ShmCluster {
+    windows: Vec<ShmWindow>,
+    win_bytes: usize,
+}
+
+impl ShmCluster {
+    /// `DHT_create`: every rank contributes a window of `win_bytes`.
+    pub fn new(nranks: u32, win_bytes: usize) -> Arc<Self> {
+        assert!(nranks > 0);
+        Arc::new(Self {
+            windows: (0..nranks).map(|_| ShmWindow::new(win_bytes)).collect(),
+            win_bytes,
+        })
+    }
+
+    pub fn nranks(&self) -> u32 {
+        self.windows.len() as u32
+    }
+
+    pub fn win_bytes(&self) -> usize {
+        self.win_bytes
+    }
+
+    /// Handle for one rank (cheap to clone per worker thread).
+    pub fn rma(self: &Arc<Self>, rank: u32) -> ShmRma {
+        assert!(rank < self.nranks());
+        ShmRma { cluster: Arc::clone(self), rank }
+    }
+}
+
+/// Per-rank executor: runs op state machines to completion, blocking.
+#[derive(Clone)]
+pub struct ShmRma {
+    cluster: Arc<ShmCluster>,
+    pub rank: u32,
+}
+
+impl ShmRma {
+    /// Drive `sm` to completion and return its output.
+    pub fn exec<S: OpSm>(&self, sm: &mut S) -> S::Out {
+        let mut resp = Resp::Start;
+        loop {
+            match sm.step(resp) {
+                SmStep::Issue(req) => resp = self.do_req(req),
+                SmStep::Done(out) => return out,
+            }
+        }
+    }
+
+    /// Direct Get (tests / diagnostics).
+    pub fn get(&self, target: u32, offset: u64, len: u32) -> Vec<u8> {
+        match self.do_req(Req::Get { target, offset, len }) {
+            Resp::Data(d) => d,
+            other => unreachable!("Get returned {other:?}"),
+        }
+    }
+
+    /// Direct word read (tests / diagnostics).
+    pub fn peek_word(&self, target: u32, offset: u64) -> u64 {
+        u64::from_le_bytes(self.get(target, offset, 8).try_into().unwrap())
+    }
+
+    fn do_req(&self, req: Req) -> Resp {
+        match req {
+            Req::Get { target, offset, len } => {
+                debug_check_aligned(offset, len);
+                let w = &self.cluster.windows[target as usize];
+                let mut buf = vec![0u8; len as usize];
+                w.read_into(offset, &mut buf);
+                Resp::Data(buf)
+            }
+            Req::Put { target, offset, data } => {
+                debug_check_aligned(offset, data.len() as u32);
+                self.cluster.windows[target as usize].write_from(offset, &data);
+                Resp::Ack
+            }
+            Req::Cas { target, offset, expected, desired } => {
+                let prev = self.cluster.windows[target as usize]
+                    .word(offset)
+                    .compare_exchange(
+                        expected,
+                        desired,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .unwrap_or_else(|v| v);
+                Resp::Word(prev)
+            }
+            Req::Fao { target, offset, add } => {
+                let prev = self.cluster.windows[target as usize]
+                    .word(offset)
+                    .fetch_add(add as u64, Ordering::AcqRel);
+                Resp::Word(prev)
+            }
+            Req::LockWin { target, exclusive } => {
+                let lock = &self.cluster.windows[target as usize].lock;
+                if exclusive {
+                    // writer: CAS 0 -> EXCLUSIVE_LOCK, busy-wait
+                    while lock
+                        .compare_exchange(
+                            0,
+                            EXCLUSIVE_LOCK,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_err()
+                    {
+                        std::hint::spin_loop();
+                        std::thread::yield_now();
+                    }
+                } else {
+                    // reader: register interest, revoke if a writer is in
+                    loop {
+                        let prev = lock.fetch_add(1, Ordering::AcqRel);
+                        if prev < EXCLUSIVE_LOCK {
+                            break;
+                        }
+                        lock.fetch_sub(1, Ordering::AcqRel);
+                        std::thread::yield_now();
+                    }
+                }
+                Resp::Ack
+            }
+            Req::UnlockWin { target, exclusive } => {
+                let lock = &self.cluster.windows[target as usize].lock;
+                if exclusive {
+                    lock.fetch_sub(EXCLUSIVE_LOCK, Ordering::AcqRel);
+                } else {
+                    lock.fetch_sub(1, Ordering::AcqRel);
+                }
+                Resp::Ack
+            }
+            Req::Compute { .. } => Resp::Ack,
+            Req::Rpc { .. } => {
+                // The server-based baseline is DES-only (DESIGN.md §2):
+                // the paper's DAOS testbed has no shared-memory analogue.
+                Resp::Rpc(RpcReply::Ok)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trivial SM: one Put then done.
+    struct PutSm {
+        req: Option<Req>,
+    }
+    impl OpSm for PutSm {
+        type Out = ();
+        fn step(&mut self, _resp: Resp) -> SmStep<()> {
+            match self.req.take() {
+                Some(r) => SmStep::Issue(r),
+                None => SmStep::Done(()),
+            }
+        }
+    }
+
+    #[test]
+    fn put_then_get_roundtrip() {
+        let cluster = ShmCluster::new(4, 1024);
+        let rma = cluster.rma(0);
+        let data: Vec<u8> = (0..64u8).collect();
+        let mut sm = PutSm {
+            req: Some(Req::Put { target: 2, offset: 128, data: data.clone() }),
+        };
+        rma.exec(&mut sm);
+        match rma.do_req(Req::Get { target: 2, offset: 128, len: 64 }) {
+            Resp::Data(d) => assert_eq!(d, data),
+            other => panic!("unexpected {other:?}"),
+        }
+        // untouched region stays zero
+        match rma.do_req(Req::Get { target: 2, offset: 0, len: 8 }) {
+            Resp::Data(d) => assert_eq!(d, vec![0u8; 8]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cas_and_fao_semantics() {
+        let cluster = ShmCluster::new(2, 256);
+        let rma = cluster.rma(1);
+        match rma.do_req(Req::Cas { target: 0, offset: 8, expected: 0, desired: 7 }) {
+            Resp::Word(prev) => assert_eq!(prev, 0),
+            other => panic!("unexpected {other:?}"),
+        }
+        // failed CAS returns current value, does not store
+        match rma.do_req(Req::Cas { target: 0, offset: 8, expected: 0, desired: 9 }) {
+            Resp::Word(prev) => assert_eq!(prev, 7),
+            other => panic!("unexpected {other:?}"),
+        }
+        match rma.do_req(Req::Fao { target: 0, offset: 8, add: 5 }) {
+            Resp::Word(prev) => assert_eq!(prev, 7),
+            other => panic!("unexpected {other:?}"),
+        }
+        match rma.do_req(Req::Fao { target: 0, offset: 8, add: -2 }) {
+            Resp::Word(prev) => assert_eq!(prev, 12),
+            other => panic!("unexpected {other:?}"),
+        }
+        match rma.do_req(Req::Get { target: 0, offset: 8, len: 8 }) {
+            Resp::Data(d) => assert_eq!(u64::from_le_bytes(d.try_into().unwrap()), 10),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn window_lock_mutual_exclusion() {
+        use std::sync::atomic::{AtomicU32, Ordering as O};
+        let cluster = ShmCluster::new(2, 256);
+        let in_cs = Arc::new(AtomicU32::new(0));
+        let max_seen = Arc::new(AtomicU32::new(0));
+        let mut handles = vec![];
+        for r in 0..4 {
+            let rma = cluster.rma(r % 2);
+            let in_cs = Arc::clone(&in_cs);
+            let max_seen = Arc::clone(&max_seen);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    rma.do_req(Req::LockWin { target: 0, exclusive: true });
+                    let n = in_cs.fetch_add(1, O::SeqCst) + 1;
+                    max_seen.fetch_max(n, O::SeqCst);
+                    in_cs.fetch_sub(1, O::SeqCst);
+                    rma.do_req(Req::UnlockWin { target: 0, exclusive: true });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(max_seen.load(O::SeqCst), 1, "exclusive lock violated");
+    }
+
+    #[test]
+    fn readers_coexist_writers_exclude() {
+        let cluster = ShmCluster::new(1, 256);
+        let rma = cluster.rma(0);
+        // two shared locks at once are fine
+        rma.do_req(Req::LockWin { target: 0, exclusive: false });
+        rma.do_req(Req::LockWin { target: 0, exclusive: false });
+        rma.do_req(Req::UnlockWin { target: 0, exclusive: false });
+        rma.do_req(Req::UnlockWin { target: 0, exclusive: false });
+        // then an exclusive lock can be taken
+        rma.do_req(Req::LockWin { target: 0, exclusive: true });
+        rma.do_req(Req::UnlockWin { target: 0, exclusive: true });
+    }
+}

@@ -1,0 +1,936 @@
+//! Discrete-event backend: protocol-accurate cluster simulation.
+//!
+//! Each simulated rank executes its operation state machines over *real*
+//! window memory (real bytes, hashes, CRCs and collisions), while all
+//! timing flows through the calibrated [`crate::net`] model.  Two-phase
+//! event handling keeps memory semantics exact:
+//!
+//! * `Exec`   — the instant an op logically executes at the target
+//!   (requests are applied to window memory in global simulated-time
+//!   order, which makes remote atomics trivially atomic);
+//! * `Resume` — the instant the origin rank receives the response and its
+//!   state machine steps again.
+//!
+//! Torn reads (the races the lock-free DHT's checksums must catch) are
+//! modelled faithfully: a `Put`'s payload lands over a DMA window
+//! `[exec - write_dur, exec)`; a `Get` executing inside that window
+//! observes the new prefix and the old suffix proportional to progress.
+//!
+//! `MPI_Win_lock` is expanded *inside* the backend into the busy-wait
+//! CAS/FAO loop that Open MPI's passive-target code performs (paper §3.5):
+//! every failed attempt is a full network atomic with target-HCA occupancy
+//! — this is precisely the traffic that makes coarse-grained locking
+//! collapse in the paper's Table 1.
+
+use crate::metrics::Histogram;
+use crate::net::{Network, OpKind, OpTiming};
+use crate::sim::{EventQueue, Resource, Time};
+
+use super::{
+    debug_check_aligned, OpSm, Req, Resp, SmStep, WorkItem, Workload,
+    EXCLUSIVE_LOCK,
+};
+
+/// Engine events (two-phase per op; see module docs).
+#[derive(Debug)]
+enum Ev {
+    Exec { rank: u32 },
+    Resume { rank: u32 },
+}
+
+/// An in-flight Put's DMA window for torn-read composition.
+#[derive(Debug)]
+struct InflightPut {
+    offset: u64,
+    t_start: Time,
+    t_end: Time,
+    data: Vec<u8>,
+}
+
+/// Internal lock-acquisition state (busy-wait loop).
+#[derive(Clone, Copy, Debug)]
+enum LockPhase {
+    /// Writer CAS attempt outstanding.
+    WriterCas,
+    /// Reader FAO(+1) attempt outstanding.
+    ReaderIncr,
+    /// Reader revoking (FAO(-1)) after seeing a writer.
+    ReaderRevoke,
+}
+
+#[derive(Debug)]
+struct LockWait {
+    target: u32,
+    phase: LockPhase,
+    retries: u64,
+    /// Remaining atomics in the current multi-atomic attempt (§3.5).
+    /// Each step is issued as its own event when the previous completes —
+    /// pre-reserving a whole chain would falsely serialize the atomic
+    /// engine's `next_free` across unrelated ranks.
+    chain_left: u32,
+}
+
+struct RankState<S> {
+    sm: Option<S>,
+    /// Request whose Exec event is outstanding.
+    pending_req: Option<Req>,
+    /// Timing of the outstanding request.
+    pending_timing: Option<OpTiming>,
+    /// Response to deliver at the Resume event.
+    pending_resp: Option<Resp>,
+    /// Active LockWin busy-wait loop, if any.
+    lock_wait: Option<LockWait>,
+    /// Remaining atomics of a multi-atomic UnlockWin.
+    chain_left: u32,
+    /// Whether the in-flight UnlockWin's release has been applied.
+    unlock_applied: bool,
+    at_barrier: bool,
+    finished: bool,
+    op_start: Time,
+    ops: u64,
+}
+
+impl<S> RankState<S> {
+    fn new() -> Self {
+        Self {
+            sm: None,
+            pending_req: None,
+            pending_timing: None,
+            pending_resp: None,
+            lock_wait: None,
+            chain_left: 0,
+            unlock_applied: false,
+            at_barrier: false,
+            finished: false,
+            op_start: 0,
+            ops: 0,
+        }
+    }
+}
+
+/// Aggregated simulation results.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    /// Simulated end time (ns).
+    pub duration: Time,
+    /// Completed operations (state machines driven to `Done`).
+    pub ops: u64,
+    /// Total lock busy-wait retries across all ranks.
+    pub lock_retries: u64,
+    /// Network messages / payload bytes.
+    pub net_messages: u64,
+    pub net_bytes: u128,
+    /// Operation latency histogram (ns).
+    pub latency: Histogram,
+    /// Simulated times of barrier releases (phase boundaries).
+    pub barrier_times: Vec<Time>,
+    /// Wall-clock events processed (engine perf metric).
+    pub events: u64,
+    /// Per-node resource utilization over the whole run (diagnostics).
+    pub atomic_util: Vec<f64>,
+    pub responder_util: Vec<f64>,
+    pub nic_util: Vec<f64>,
+}
+
+/// The DES cluster executing a [`Workload`].
+pub struct SimCluster<W: Workload> {
+    pub workload: W,
+    nranks: u32,
+    win_bytes: usize,
+    windows: Vec<Vec<u8>>,
+    inflight: Vec<Vec<InflightPut>>,
+    /// `MPI_Win_lock` words, one per window (not part of window memory).
+    win_locks: Vec<u64>,
+    net: Network,
+    /// Serialized server processing (RPC baseline), one per rank id.
+    servers: std::collections::HashMap<u32, Resource>,
+    queue: EventQueue<Ev>,
+    ranks: Vec<RankState<W::Sm>>,
+    now: Time,
+    report: SimReport,
+    barrier_count: u32,
+}
+
+impl<W: Workload> SimCluster<W> {
+    pub fn new(
+        workload: W,
+        net: Network,
+        nranks: u32,
+        win_bytes: usize,
+    ) -> Self {
+        assert!(nranks > 0 && win_bytes % 8 == 0);
+        Self {
+            workload,
+            nranks,
+            win_bytes,
+            windows: (0..nranks).map(|_| vec![0u8; win_bytes]).collect(),
+            inflight: (0..nranks).map(|_| Vec::new()).collect(),
+            win_locks: vec![0; nranks as usize],
+            net,
+            servers: std::collections::HashMap::new(),
+            queue: EventQueue::new(),
+            ranks: (0..nranks).map(|_| RankState::new()).collect(),
+            now: 0,
+            report: SimReport::default(),
+            barrier_count: 0,
+        }
+    }
+
+    pub fn nranks(&self) -> u32 {
+        self.nranks
+    }
+
+    pub fn win_bytes(&self) -> usize {
+        self.win_bytes
+    }
+
+    /// Run to completion (all ranks `Finished`) and return the report.
+    /// The workload stays accessible through `self.workload` afterwards.
+    pub fn run(&mut self) -> SimReport {
+        // kick every rank off with a tiny deterministic stagger so the
+        // first wave of requests is not artificially lock-stepped
+        for r in 0..self.nranks {
+            let t = (r as u64) * 7;
+            self.queue.push(t, Ev::Resume { rank: r });
+        }
+        while let Some((t, ev)) = self.queue.pop() {
+            debug_assert!(t >= self.now, "time went backwards");
+            self.now = t;
+            self.report.events += 1;
+            match ev {
+                Ev::Exec { rank } => self.exec_phase(rank),
+                Ev::Resume { rank } => self.resume_phase(rank),
+            }
+        }
+        self.report.duration = self.now;
+        self.report.net_messages = self.net.messages;
+        self.report.net_bytes = self.net.bytes;
+        let h = self.now.max(1);
+        self.report.atomic_util = (0..self.net.nnodes())
+            .map(|n| self.net.atomic_utilization(n, h))
+            .collect();
+        self.report.responder_util = (0..self.net.nnodes())
+            .map(|n| self.net.responder_utilization(n, h))
+            .collect();
+        self.report.nic_util = (0..self.net.nnodes())
+            .map(|n| self.net.nic_tx_utilization(n, h))
+            .collect();
+        self.report.clone()
+    }
+
+    /// Read a u64 from a window (post-run inspection / tests).
+    pub fn peek_word(&self, target: u32, offset: u64) -> u64 {
+        self.win_word(target, offset)
+    }
+
+    /// Read raw bytes from a window (post-run inspection / tests).
+    pub fn peek(&self, target: u32, offset: u64, len: u32) -> Vec<u8> {
+        self.windows[target as usize]
+            [offset as usize..(offset + len as u64) as usize]
+            .to_vec()
+    }
+
+    /// Current window-lock word (post-run inspection / tests).
+    pub fn peek_lock(&self, target: u32) -> u64 {
+        self.win_locks[target as usize]
+    }
+
+    /// Nonzero window-lock words (diagnostics).
+    pub fn nonzero_locks(&self) -> Vec<(u32, u64)> {
+        self.win_locks
+            .iter()
+            .enumerate()
+            .filter(|(_, &w)| w != 0)
+            .map(|(i, &w)| (i as u32, w))
+            .collect()
+    }
+
+    // ---------------------------------------------------------------- exec
+
+    /// Apply the rank's outstanding request to target memory and stage the
+    /// response for its Resume event.
+    fn exec_phase(&mut self, rank: u32) {
+        // Lock busy-wait attempts are handled separately.
+        if self.ranks[rank as usize].lock_wait.is_some() {
+            self.exec_lock_attempt(rank);
+            return;
+        }
+        let timing = self.ranks[rank as usize].pending_timing.unwrap();
+        // multi-atomic unlock: issue remaining steps one event at a time
+        if let Some(Req::UnlockWin { target, exclusive }) =
+            self.ranks[rank as usize].pending_req
+        {
+            if !self.ranks[rank as usize].unlock_applied {
+                self.ranks[rank as usize].unlock_applied = true;
+                let word = &mut self.win_locks[target as usize];
+                if exclusive {
+                    *word -= EXCLUSIVE_LOCK;
+                } else {
+                    *word -= 1;
+                }
+            }
+            let rs = &mut self.ranks[rank as usize];
+            if rs.chain_left > 0 {
+                rs.chain_left -= 1;
+                let t = self.net.rma(timing.resume, rank, target, OpKind::Atomic, 8);
+                self.ranks[rank as usize].pending_timing = Some(t);
+                self.queue.push(t.exec, Ev::Exec { rank });
+            } else {
+                rs.pending_req = None;
+                rs.pending_resp = Some(Resp::Ack);
+                let at = timing.resume;
+                self.queue.push(at, Ev::Resume { rank });
+            }
+            return;
+        }
+        let req = self.ranks[rank as usize]
+            .pending_req
+            .take()
+            .expect("Exec without pending request");
+        let resp = match req {
+            Req::Get { target, offset, len } => {
+                let data = self.read_torn(target, offset, len);
+                Resp::Data(data)
+            }
+            Req::Put { target, offset, data } => {
+                self.apply_put(target, offset, data, timing);
+                Resp::Ack
+            }
+            Req::Cas { target, offset, expected, desired } => {
+                let w = self.win_word(target, offset);
+                if w == expected {
+                    self.set_win_word(target, offset, desired);
+                }
+                Resp::Word(w)
+            }
+            Req::Fao { target, offset, add } => {
+                let w = self.win_word(target, offset);
+                self.set_win_word(target, offset, w.wrapping_add(add as u64));
+                Resp::Word(w)
+            }
+            Req::Rpc { proc_ns: _, payload, .. } => {
+                let reply = self.workload.serve_rpc(self.now, &payload);
+                Resp::Rpc(reply)
+            }
+            Req::LockWin { .. } | Req::UnlockWin { .. } | Req::Compute { .. } => {
+                unreachable!("handled before this match")
+            }
+        };
+        self.ranks[rank as usize].pending_resp = Some(resp);
+        self.queue.push(timing.resume, Ev::Resume { rank });
+    }
+
+    /// One busy-wait attempt on a window lock executes at the target.
+    fn exec_lock_attempt(&mut self, rank: u32) {
+        let timing = self.ranks[rank as usize].pending_timing.unwrap();
+        let lw = self.ranks[rank as usize].lock_wait.as_mut().unwrap();
+        // mid-attempt: more atomics of this attempt to go (issued one by
+        // one so each loads the engine at its own event time)
+        if lw.chain_left > 0 {
+            lw.chain_left -= 1;
+            let target = lw.target;
+            let t = self.net.rma(timing.resume, rank, target, OpKind::Atomic, 8);
+            self.ranks[rank as usize].pending_timing = Some(t);
+            self.queue.push(t.exec, Ev::Exec { rank });
+            return;
+        }
+        let word = &mut self.win_locks[lw.target as usize];
+        let (done, next_phase) = match lw.phase {
+            LockPhase::WriterCas => {
+                if *word == 0 {
+                    *word = EXCLUSIVE_LOCK;
+                    (true, LockPhase::WriterCas)
+                } else {
+                    (false, LockPhase::WriterCas)
+                }
+            }
+            LockPhase::ReaderIncr => {
+                let prev = *word;
+                *word += 1;
+                if prev < EXCLUSIVE_LOCK {
+                    (true, LockPhase::ReaderIncr)
+                } else {
+                    // writer active: revoke our increment, then retry
+                    (false, LockPhase::ReaderRevoke)
+                }
+            }
+            LockPhase::ReaderRevoke => {
+                *word -= 1;
+                (false, LockPhase::ReaderIncr)
+            }
+        };
+        if done {
+            self.ranks[rank as usize].lock_wait = None;
+            self.ranks[rank as usize].pending_resp = Some(Resp::Ack);
+            self.queue.push(timing.resume, Ev::Resume { rank });
+        } else {
+            lw.phase = next_phase;
+            if !matches!(next_phase, LockPhase::ReaderRevoke) {
+                lw.retries += 1;
+                self.report.lock_retries += 1;
+            }
+            // origin learns of the failure at `resume`, then immediately
+            // re-issues the next attempt (busy-wait without backoff, as in
+            // Open MPI's passive-target loop — paper §3.5; each attempt is
+            // a multi-atomic sequence per the profile).  A revoke is a
+            // single FAO, not a full multi-atomic attempt.
+            let target = lw.target;
+            lw.chain_left = match next_phase {
+                LockPhase::WriterCas => {
+                    self.net.cfg.win_lock_atomics.saturating_sub(1)
+                }
+                LockPhase::ReaderIncr => {
+                    self.net.cfg.win_shared_atomics.saturating_sub(1)
+                }
+                // a revoke is a single FAO
+                LockPhase::ReaderRevoke => 0,
+            };
+            let t = self.net.rma(timing.resume, rank, target, OpKind::Atomic, 8);
+            self.ranks[rank as usize].pending_timing = Some(t);
+            self.queue.push(t.exec, Ev::Exec { rank });
+        }
+    }
+
+    // -------------------------------------------------------------- resume
+
+    /// Deliver the staged response (or start the rank) and step its SM.
+    fn resume_phase(&mut self, rank: u32) {
+        // still busy-waiting on a lock: Exec handles re-issue; nothing here
+        if self.ranks[rank as usize].lock_wait.is_some() {
+            return;
+        }
+        let resp = self.ranks[rank as usize]
+            .pending_resp
+            .take()
+            .unwrap_or(Resp::Start);
+        self.step_rank(rank, resp);
+    }
+
+    fn step_rank(&mut self, rank: u32, mut resp: Resp) {
+        loop {
+            let r = rank as usize;
+            if self.ranks[r].sm.is_none() {
+                // between ops: fetch next work item
+                match self.workload.next(rank, self.now) {
+                    WorkItem::Op(sm) => {
+                        self.ranks[r].sm = Some(sm);
+                        self.ranks[r].op_start = self.now;
+                        resp = Resp::Start;
+                    }
+                    WorkItem::Think(ns) => {
+                        self.queue.push(self.now + ns, Ev::Resume { rank });
+                        return;
+                    }
+                    WorkItem::Barrier => {
+                        self.ranks[r].at_barrier = true;
+                        self.barrier_count += 1;
+                        self.maybe_release_barrier();
+                        return;
+                    }
+                    WorkItem::Finished => {
+                        self.ranks[r].finished = true;
+                        // a finished rank also no longer blocks barriers
+                        self.maybe_release_barrier();
+                        return;
+                    }
+                }
+            }
+            let step = self.ranks[r].sm.as_mut().unwrap().step(resp);
+            match step {
+                SmStep::Done(out) => {
+                    let started = self.ranks[r].op_start;
+                    let latency = self.now - started;
+                    self.ranks[r].sm = None;
+                    self.ranks[r].ops += 1;
+                    self.report.ops += 1;
+                    self.report.latency.record(latency.max(1));
+                    self.workload.on_complete(rank, self.now, latency, out);
+                    resp = Resp::Start; // loop: fetch next work item
+                }
+                SmStep::Issue(req) => {
+                    if self.issue(rank, req) {
+                        return; // waiting on an event
+                    }
+                    unreachable!("issue always schedules an event");
+                }
+            }
+        }
+    }
+
+    /// Translate a request into events; returns true (always waits).
+    fn issue(&mut self, rank: u32, req: Req) -> bool {
+        match req {
+            Req::Compute { ns } => {
+                self.ranks[rank as usize].pending_resp = Some(Resp::Ack);
+                self.queue.push(self.now + ns, Ev::Resume { rank });
+            }
+            Req::LockWin { target, exclusive } => {
+                let phase = if exclusive {
+                    LockPhase::WriterCas
+                } else {
+                    LockPhase::ReaderIncr
+                };
+                // shared (reader) acquisition is cheaper than the
+                // exclusive multi-atomic sequence (§3.5)
+                let n = if exclusive {
+                    self.net.cfg.win_lock_atomics
+                } else {
+                    self.net.cfg.win_shared_atomics
+                };
+                self.ranks[rank as usize].lock_wait = Some(LockWait {
+                    target,
+                    phase,
+                    retries: 0,
+                    chain_left: n.saturating_sub(1),
+                });
+                let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
+                self.ranks[rank as usize].pending_timing = Some(t);
+                self.queue.push(t.exec, Ev::Exec { rank });
+            }
+            Req::UnlockWin { target, exclusive } => {
+                let n = if exclusive {
+                    self.net.cfg.win_unlock_atomics
+                } else {
+                    1
+                };
+                let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
+                self.ranks[rank as usize].pending_req =
+                    Some(Req::UnlockWin { target, exclusive });
+                // the release applies at the first atomic's exec — it must
+                // queue behind any busy-wait storm on the target's atomic
+                // engine, which extends the effective lock hold time (the
+                // collapse feedback of §3.5)
+                self.ranks[rank as usize].unlock_applied = false;
+                self.ranks[rank as usize].chain_left = n.saturating_sub(1);
+                self.ranks[rank as usize].pending_timing = Some(t);
+                self.queue.push(t.exec, Ev::Exec { rank });
+            }
+            Req::Rpc { server, proc_ns, req_bytes, resp_bytes, payload } => {
+                // request travels to the server node, then serializes on
+                // the server process itself
+                let t_net =
+                    self.net.rma(self.now, rank, server, OpKind::Put, req_bytes);
+                let srv = self.servers.entry(server).or_default();
+                let t_done = srv.acquire(t_net.exec, proc_ns);
+                let resume = t_done
+                    + self.net.cfg.wire_ns
+                    + (resp_bytes as f64 / self.net.cfg.bw_bytes_per_ns) as u64;
+                let timing =
+                    OpTiming { exec: t_done, resume, write_dur: 0 };
+                self.ranks[rank as usize].pending_req = Some(Req::Rpc {
+                    server,
+                    proc_ns,
+                    req_bytes,
+                    resp_bytes,
+                    payload,
+                });
+                self.ranks[rank as usize].pending_timing = Some(timing);
+                self.queue.push(timing.exec, Ev::Exec { rank });
+            }
+            Req::Get { target, offset, len } => {
+                debug_check_aligned(offset, len);
+                let t = self.net.rma(self.now, rank, target, OpKind::Get, len);
+                self.ranks[rank as usize].pending_req =
+                    Some(Req::Get { target, offset, len });
+                self.ranks[rank as usize].pending_timing = Some(t);
+                self.queue.push(t.exec, Ev::Exec { rank });
+            }
+            Req::Put { target, offset, data } => {
+                debug_check_aligned(offset, data.len() as u32);
+                let t = self.net.rma(
+                    self.now,
+                    rank,
+                    target,
+                    OpKind::Put,
+                    data.len() as u32,
+                );
+                // register the DMA window NOW (a concurrent Get whose exec
+                // lands inside it is processed before this put's Exec
+                // event and must already see the new prefix)
+                if t.write_dur > 0 {
+                    let fl = &mut self.inflight[target as usize];
+                    fl.retain(|p| p.t_end > self.now);
+                    fl.push(InflightPut {
+                        offset,
+                        t_start: t.exec.saturating_sub(t.write_dur),
+                        t_end: t.exec,
+                        data: data.clone(),
+                    });
+                }
+                self.ranks[rank as usize].pending_req =
+                    Some(Req::Put { target, offset, data });
+                self.ranks[rank as usize].pending_timing = Some(t);
+                self.queue.push(t.exec, Ev::Exec { rank });
+            }
+            Req::Cas { target, offset, expected, desired } => {
+                let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
+                self.ranks[rank as usize].pending_req =
+                    Some(Req::Cas { target, offset, expected, desired });
+                self.ranks[rank as usize].pending_timing = Some(t);
+                self.queue.push(t.exec, Ev::Exec { rank });
+            }
+            Req::Fao { target, offset, add } => {
+                let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
+                self.ranks[rank as usize].pending_req =
+                    Some(Req::Fao { target, offset, add });
+                self.ranks[rank as usize].pending_timing = Some(t);
+                self.queue.push(t.exec, Ev::Exec { rank });
+            }
+        }
+        true
+    }
+
+    fn maybe_release_barrier(&mut self) {
+        let waiting = self.ranks.iter().filter(|r| r.at_barrier).count() as u32;
+        let finished = self.ranks.iter().filter(|r| r.finished).count() as u32;
+        if waiting > 0 && waiting + finished == self.nranks {
+            self.report.barrier_times.push(self.now);
+            for r in 0..self.nranks {
+                if self.ranks[r as usize].at_barrier {
+                    self.ranks[r as usize].at_barrier = false;
+                    self.queue.push(self.now, Ev::Resume { rank: r });
+                }
+            }
+            self.barrier_count = 0;
+        }
+    }
+
+    // ------------------------------------------------------------- memory
+
+    fn win_word(&self, target: u32, offset: u64) -> u64 {
+        let m = &self.windows[target as usize];
+        u64::from_le_bytes(
+            m[offset as usize..offset as usize + 8].try_into().unwrap(),
+        )
+    }
+
+    fn set_win_word(&mut self, target: u32, offset: u64, v: u64) {
+        self.windows[target as usize][offset as usize..offset as usize + 8]
+            .copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Apply a Put's payload to window memory at its exec instant (the
+    /// torn window was registered at issue time).
+    fn apply_put(&mut self, target: u32, offset: u64, data: Vec<u8>,
+                 _timing: OpTiming) {
+        let mem = &mut self.windows[target as usize];
+        mem[offset as usize..offset as usize + data.len()]
+            .copy_from_slice(&data);
+    }
+
+    /// Read with torn-write composition (see module docs).
+    fn read_torn(&mut self, target: u32, offset: u64, len: u32) -> Vec<u8> {
+        let mem = &self.windows[target as usize];
+        let mut out =
+            mem[offset as usize..offset as usize + len as usize].to_vec();
+        // compose with in-flight DMA windows: a write that completes
+        // *after* now has not yet landed its suffix; our memory already
+        // holds the new data (applied at its exec), so for overlapping
+        // writes still in flight at `now` we must *restore the old suffix*.
+        // Instead we model the opposite (and equivalent) way: writes apply
+        // at exec, and a get executing strictly before a write's exec sees
+        // the pre-write memory — except when it lands inside the DMA
+        // window, where it sees the new prefix.  Records below are writes
+        // whose exec is in the past but whose window covered `now` when
+        // the get was scheduled; since the event queue is time-ordered,
+        // any record with t_end <= now is fully applied and any with
+        // t_start >= now has not started: only genuine overlaps remain.
+        for p in &self.inflight[target as usize] {
+            if p.t_end <= self.now || p.t_start >= self.now {
+                continue;
+            }
+            // overlap in space?
+            let a0 = offset;
+            let a1 = offset + len as u64;
+            let b0 = p.offset;
+            let b1 = p.offset + p.data.len() as u64;
+            if a1 <= b0 || b1 <= a0 {
+                continue;
+            }
+            // fraction of the write landed at `now`
+            let frac =
+                (self.now - p.t_start) as f64 / (p.t_end - p.t_start) as f64;
+            let cut = b0 + (frac * p.data.len() as f64) as u64;
+            // bytes in [cut, b1) have NOT landed yet -> restore old bytes?
+            // We applied the put eagerly at exec (in the future); but this
+            // get runs *before* that exec event, so memory still holds the
+            // old bytes and we must inject the new prefix [b0, cut).
+            let lo = a0.max(b0);
+            let hi = a1.min(cut);
+            for pos in lo..hi {
+                out[(pos - a0) as usize] =
+                    p.data[(pos - b0) as usize];
+            }
+        }
+        out
+    }
+
+    pub fn net(&self) -> &Network {
+        &self.net
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetConfig;
+
+    /// SM that puts 8 bytes, then gets them back, then finishes.
+    enum EchoSm {
+        Put,
+        Get,
+        Done(#[allow(dead_code)] Vec<u8>),
+    }
+    impl OpSm for EchoSm {
+        type Out = Vec<u8>;
+        fn step(&mut self, resp: Resp) -> SmStep<Vec<u8>> {
+            match self {
+                EchoSm::Put => {
+                    *self = EchoSm::Get;
+                    SmStep::Issue(Req::Put {
+                        target: 200, // node 1: exercises the cross-node path
+                        offset: 16,
+                        data: vec![9u8; 8],
+                    })
+                }
+                EchoSm::Get => {
+                    *self = EchoSm::Done(vec![]);
+                    SmStep::Issue(Req::Get { target: 200, offset: 16, len: 8 })
+                }
+                EchoSm::Done(_) => match resp {
+                    Resp::Data(d) => SmStep::Done(d),
+                    other => panic!("unexpected {other:?}"),
+                },
+            }
+        }
+    }
+
+    struct EchoWorkload {
+        launched: bool,
+        pub result: Option<Vec<u8>>,
+    }
+    impl Workload for EchoWorkload {
+        type Sm = EchoSm;
+        fn next(&mut self, rank: u32, _now: Time) -> WorkItem<EchoSm> {
+            if rank == 0 && !self.launched {
+                self.launched = true;
+                WorkItem::Op(EchoSm::Put)
+            } else {
+                WorkItem::Finished
+            }
+        }
+        fn on_complete(&mut self, _r: u32, _n: Time, _l: Time, out: Vec<u8>) {
+            self.result = Some(out);
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrip_through_des() {
+        let net = Network::new(NetConfig::pik_ndr(), 256);
+        let mut cluster = SimCluster::new(
+            EchoWorkload { launched: false, result: None },
+            net,
+            256,
+            1024,
+        );
+        let report = cluster.run();
+        assert_eq!(cluster.workload.result, Some(vec![9u8; 8]));
+        assert_eq!(report.ops, 1);
+        assert!(report.duration > 0);
+        // one put + one get; latency spans both round trips
+        assert!(report.latency.max() > 4_000);
+    }
+
+    /// Two ranks CAS the same word; exactly one must win.
+    enum CasSm {
+        Start,
+        Waiting,
+    }
+    impl OpSm for CasSm {
+        type Out = bool;
+        fn step(&mut self, resp: Resp) -> SmStep<bool> {
+            match self {
+                CasSm::Start => {
+                    *self = CasSm::Waiting;
+                    SmStep::Issue(Req::Cas {
+                        target: 0,
+                        offset: 0,
+                        expected: 0,
+                        desired: 1,
+                    })
+                }
+                CasSm::Waiting => match resp {
+                    Resp::Word(prev) => SmStep::Done(prev == 0),
+                    other => panic!("unexpected {other:?}"),
+                },
+            }
+        }
+    }
+
+    struct CasWorkload {
+        launched: [bool; 2],
+        pub wins: u32,
+    }
+    impl Workload for CasWorkload {
+        type Sm = CasSm;
+        fn next(&mut self, rank: u32, _now: Time) -> WorkItem<CasSm> {
+            if rank < 2 && !self.launched[rank as usize] {
+                self.launched[rank as usize] = true;
+                WorkItem::Op(CasSm::Start)
+            } else {
+                WorkItem::Finished
+            }
+        }
+        fn on_complete(&mut self, _r: u32, _n: Time, _l: Time, won: bool) {
+            if won {
+                self.wins += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_cas_exactly_one_winner() {
+        let net = Network::new(NetConfig::pik_ndr(), 4);
+        let mut cluster =
+            SimCluster::new(CasWorkload { launched: [false; 2], wins: 0 }, net, 4, 64);
+        let report = cluster.run();
+        assert_eq!(cluster.workload.wins, 1);
+        assert_eq!(report.ops, 2);
+    }
+
+    /// Lock-protected increments: counter must equal total ops.
+    enum LockIncrSm {
+        Lock,
+        Read,
+        Write(#[allow(dead_code)] u64),
+        Unlock,
+        Finish,
+    }
+    impl OpSm for LockIncrSm {
+        type Out = ();
+        fn step(&mut self, resp: Resp) -> SmStep<()> {
+            match std::mem::replace(self, LockIncrSm::Finish) {
+                LockIncrSm::Lock => {
+                    *self = LockIncrSm::Read;
+                    SmStep::Issue(Req::LockWin { target: 0, exclusive: true })
+                }
+                LockIncrSm::Read => {
+                    *self = LockIncrSm::Write(0);
+                    SmStep::Issue(Req::Get { target: 0, offset: 0, len: 8 })
+                }
+                LockIncrSm::Write(_) => {
+                    let v = match resp {
+                        Resp::Data(d) => {
+                            u64::from_le_bytes(d.try_into().unwrap())
+                        }
+                        other => panic!("unexpected {other:?}"),
+                    };
+                    *self = LockIncrSm::Unlock;
+                    SmStep::Issue(Req::Put {
+                        target: 0,
+                        offset: 0,
+                        data: (v + 1).to_le_bytes().to_vec(),
+                    })
+                }
+                LockIncrSm::Unlock => {
+                    *self = LockIncrSm::Finish;
+                    SmStep::Issue(Req::UnlockWin { target: 0, exclusive: true })
+                }
+                LockIncrSm::Finish => SmStep::Done(()),
+            }
+        }
+    }
+
+    struct LockWorkload {
+        remaining: Vec<u32>,
+    }
+    impl Workload for LockWorkload {
+        type Sm = LockIncrSm;
+        fn next(&mut self, rank: u32, _now: Time) -> WorkItem<LockIncrSm> {
+            if self.remaining[rank as usize] > 0 {
+                self.remaining[rank as usize] -= 1;
+                WorkItem::Op(LockIncrSm::Lock)
+            } else {
+                WorkItem::Finished
+            }
+        }
+        fn on_complete(&mut self, _r: u32, _n: Time, _l: Time, _o: ()) {}
+    }
+
+    #[test]
+    fn window_lock_serializes_read_modify_write() {
+        let nranks = 16;
+        let per_rank = 10u32;
+        let net = Network::new(NetConfig::pik_ndr(), nranks);
+        let mut cluster = SimCluster::new(
+            LockWorkload { remaining: vec![per_rank; nranks as usize] },
+            net,
+            nranks,
+            64,
+        );
+        let report = cluster.run();
+        // lock-protected read-modify-write must not lose a single update
+        assert_eq!(cluster.peek_word(0, 0), (nranks * per_rank) as u64);
+        assert_eq!(cluster.peek_lock(0), 0, "lock must be released");
+        assert_eq!(report.ops, (nranks * per_rank) as u64);
+        // contention must have produced busy-wait retries
+        assert!(report.lock_retries > 0);
+    }
+
+    /// Barrier separates phases for all ranks.
+    struct BarrierWorkload {
+        phase_ops: Vec<u8>, // per rank: 0 = before barrier, 1 = after
+        after_barrier_at: Vec<Time>,
+        barrier_seen: Vec<bool>,
+    }
+    #[allow(dead_code)]
+    enum NopSm {
+        Go,
+    }
+    impl OpSm for NopSm {
+        type Out = ();
+        fn step(&mut self, _resp: Resp) -> SmStep<()> {
+            match self {
+                NopSm::Go => SmStep::Done(()),
+            }
+        }
+    }
+    impl Workload for BarrierWorkload {
+        type Sm = NopSm;
+        fn next(&mut self, rank: u32, now: Time) -> WorkItem<NopSm> {
+            let r = rank as usize;
+            if self.phase_ops[r] == 0 {
+                self.phase_ops[r] = 1;
+                // rank-dependent pre-barrier delay
+                WorkItem::Think((rank as u64 + 1) * 1000)
+            } else if !self.barrier_seen[r] {
+                self.barrier_seen[r] = true;
+                WorkItem::Barrier
+            } else {
+                self.after_barrier_at[r] = now;
+                WorkItem::Finished
+            }
+        }
+        fn on_complete(&mut self, _r: u32, _n: Time, _l: Time, _o: ()) {}
+    }
+
+    #[test]
+    fn barrier_releases_all_at_same_time() {
+        let n = 8u32;
+        let net = Network::new(NetConfig::pik_ndr(), n);
+        let w = BarrierWorkload {
+            phase_ops: vec![0; n as usize],
+            after_barrier_at: vec![0; n as usize],
+            barrier_seen: vec![false; n as usize],
+        };
+        let mut cluster = SimCluster::new(w, net, n, 64);
+        let report = cluster.run();
+        assert_eq!(report.barrier_times.len(), 1);
+        let release = report.barrier_times[0];
+        // the slowest rank arrives at ~8µs; everyone resumes at that time
+        for t in &cluster.workload.after_barrier_at {
+            assert_eq!(*t, release);
+        }
+        assert!(release >= 8_000);
+    }
+}

@@ -1,0 +1,314 @@
+//! Parser for `artifacts/manifest.txt` — the machine-readable contract
+//! between the Python compile path and the Rust runtime.
+//!
+//! Format: one entry per line, `<kind> key=value ...`; `water` lines carry
+//! whitespace-separated floats.  Written by `python -m compile.aot`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct ChemistryArtifact {
+    pub batch: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct TransportArtifact {
+    pub ny: usize,
+    pub nx: usize,
+    pub file: String,
+}
+
+/// Golden chemistry vectors (inputs + expected outputs).
+#[derive(Clone, Debug)]
+pub struct GoldenChemistry {
+    pub rows: usize,
+    pub inputs: Vec<f64>,  // rows * n_in
+    pub expect: Vec<f64>,  // rows * n_out
+}
+
+/// Golden transport vectors.
+#[derive(Clone, Debug)]
+pub struct GoldenTransport {
+    pub ny: usize,
+    pub nx: usize,
+    pub inj_rows: i32,
+    pub c: Vec<f64>,
+    pub inflow: Vec<f64>,
+    pub cf: [f64; 2],
+    pub expect: Vec<f64>,
+}
+
+/// Parsed manifest: artifacts, model constants, initial waters.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub chemistry: Vec<ChemistryArtifact>,
+    pub transport: Vec<TransportArtifact>,
+    pub n_solutes: usize,
+    pub n_species: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub n_sub: usize,
+    /// Background water (n_solutes values).
+    pub background: Vec<f64>,
+    /// Injection water (n_solutes values).
+    pub injection: Vec<f64>,
+    /// Initial mineral amounts [calcite, dolomite].
+    pub minerals0: Vec<f64>,
+    golden_chem_file: Option<String>,
+    golden_trans_file: Option<String>,
+    dir: std::path::PathBuf,
+}
+
+fn kv(parts: &[&str]) -> HashMap<String, String> {
+    parts
+        .iter()
+        .filter_map(|t| t.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+fn floats(s: &str) -> Vec<f64> {
+    s.split_whitespace().filter_map(|t| t.parse().ok()).collect()
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let dir = path
+            .parent()
+            .context("manifest path has no parent")?
+            .to_path_buf();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let mut m = Manifest {
+            chemistry: vec![],
+            transport: vec![],
+            n_solutes: 0,
+            n_species: 0,
+            n_in: 0,
+            n_out: 0,
+            n_sub: 0,
+            background: vec![],
+            injection: vec![],
+            minerals0: vec![],
+            golden_chem_file: None,
+            golden_trans_file: None,
+            dir,
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (kind, rest) = line.split_once(' ').unwrap_or((line, ""));
+            let parts: Vec<&str> = rest.split(' ').collect();
+            let map = kv(&parts);
+            match kind {
+                "chemistry" => m.chemistry.push(ChemistryArtifact {
+                    batch: map["batch"].parse()?,
+                    file: map["file"].clone(),
+                }),
+                "transport" => m.transport.push(TransportArtifact {
+                    ny: map["ny"].parse()?,
+                    nx: map["nx"].parse()?,
+                    file: map["file"].clone(),
+                }),
+                "golden" => match map["kind"].as_str() {
+                    "chemistry" => {
+                        m.golden_chem_file = Some(map["file"].clone())
+                    }
+                    "transport" => {
+                        m.golden_trans_file = Some(map["file"].clone())
+                    }
+                    other => return Err(anyhow!("unknown golden kind {other}")),
+                },
+                "constants" => {
+                    m.n_solutes = map["n_solutes"].parse()?;
+                    m.n_species = map["n_species"].parse()?;
+                    m.n_in = map["n_in"].parse()?;
+                    m.n_out = map["n_out"].parse()?;
+                    m.n_sub = map["n_sub"].parse()?;
+                }
+                "water" => {
+                    // "water kind=background <floats...>"
+                    let vals: Vec<f64> = parts
+                        .iter()
+                        .filter(|t| !t.contains('='))
+                        .filter_map(|t| t.parse().ok())
+                        .collect();
+                    match map["kind"].as_str() {
+                        "background" => m.background = vals,
+                        "injection" => m.injection = vals,
+                        "minerals0" => m.minerals0 = vals,
+                        other => return Err(anyhow!("unknown water kind {other}")),
+                    }
+                }
+                other => return Err(anyhow!("unknown manifest entry {other}")),
+            }
+        }
+        if m.chemistry.is_empty() || m.n_in == 0 {
+            return Err(anyhow!("manifest incomplete"));
+        }
+        if m.background.len() != m.n_solutes
+            || m.injection.len() != m.n_solutes
+            || m.minerals0.len() != 2
+        {
+            return Err(anyhow!("manifest water vectors inconsistent"));
+        }
+        Ok(m)
+    }
+
+    /// Load the golden chemistry vectors referenced by the manifest.
+    pub fn golden_chemistry(&self) -> Result<GoldenChemistry> {
+        let file = self
+            .golden_chem_file
+            .as_ref()
+            .context("no golden chemistry in manifest")?;
+        let text = std::fs::read_to_string(self.dir.join(file))?;
+        let mut lines = text.lines();
+        let head: Vec<usize> = lines
+            .next()
+            .context("golden header")?
+            .split_whitespace()
+            .map(|t| t.parse().unwrap())
+            .collect();
+        let (rows, n_in, n_out) = (head[0], head[1], head[2]);
+        anyhow::ensure!(n_in == self.n_in && n_out == self.n_out);
+        let mut inputs = Vec::with_capacity(rows * n_in);
+        for _ in 0..rows {
+            inputs.extend(floats(lines.next().context("golden input row")?));
+        }
+        let mut expect = Vec::with_capacity(rows * n_out);
+        for _ in 0..rows {
+            expect.extend(floats(lines.next().context("golden output row")?));
+        }
+        anyhow::ensure!(inputs.len() == rows * n_in);
+        anyhow::ensure!(expect.len() == rows * n_out);
+        Ok(GoldenChemistry { rows, inputs, expect })
+    }
+
+    /// Load the golden transport vectors referenced by the manifest.
+    pub fn golden_transport(&self) -> Result<GoldenTransport> {
+        let file = self
+            .golden_trans_file
+            .as_ref()
+            .context("no golden transport in manifest")?;
+        let text = std::fs::read_to_string(self.dir.join(file))?;
+        let mut lines = text.lines();
+        let head: Vec<i64> = lines
+            .next()
+            .context("golden header")?
+            .split_whitespace()
+            .map(|t| t.parse().unwrap())
+            .collect();
+        let (ns, ny, nx, inj_rows) =
+            (head[0] as usize, head[1] as usize, head[2] as usize, head[3] as i32);
+        anyhow::ensure!(ns == self.n_solutes);
+        let mut fields: HashMap<String, Vec<f64>> = HashMap::new();
+        for line in lines {
+            if let Some((name, rest)) = line.split_once(' ') {
+                fields.insert(name.to_string(), floats(rest));
+            }
+        }
+        let cf = &fields["cf"];
+        Ok(GoldenTransport {
+            ny,
+            nx,
+            inj_rows,
+            c: fields["c"].clone(),
+            inflow: fields["inflow"].clone(),
+            cf: [cf[0], cf[1]],
+            expect: fields["out"].clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, extra: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        writeln!(f, "# test manifest").unwrap();
+        writeln!(f, "chemistry batch=32 file=chem32.hlo.txt").unwrap();
+        writeln!(f, "chemistry batch=128 file=chem128.hlo.txt").unwrap();
+        writeln!(f, "transport ns=7 ny=16 nx=32 file=t.hlo.txt").unwrap();
+        writeln!(
+            f,
+            "constants n_solutes=7 n_species=9 n_in=10 n_out=13 n_sub=8 \
+             row_block=16"
+        )
+        .unwrap();
+        writeln!(f, "water kind=background 1 2 3 4 5 6 7").unwrap();
+        writeln!(f, "water kind=injection 7 6 5 4 3 2 1").unwrap();
+        writeln!(f, "water kind=minerals0 0.1 0").unwrap();
+        write!(f, "{extra}").unwrap();
+    }
+
+    #[test]
+    fn parses_complete_manifest() {
+        let dir = std::env::temp_dir().join("mpi_dht_manifest_test1");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, "");
+        let m = Manifest::load(dir.join("manifest.txt")).unwrap();
+        assert_eq!(m.chemistry.len(), 2);
+        assert_eq!(m.transport[0].ny, 16);
+        assert_eq!(m.n_in, 10);
+        assert_eq!(m.background, vec![1., 2., 3., 4., 5., 6., 7.]);
+        assert_eq!(m.minerals0, vec![0.1, 0.]);
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        let dir = std::env::temp_dir().join("mpi_dht_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "# empty\n").unwrap();
+        assert!(Manifest::load(dir.join("manifest.txt")).is_err());
+    }
+
+    #[test]
+    fn golden_chemistry_roundtrip() {
+        let dir = std::env::temp_dir().join("mpi_dht_manifest_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            "golden kind=chemistry file=golden_chem.txt rows=2\n",
+        );
+        let mut g = String::from("2 10 13\n");
+        for r in 0..2 {
+            let row: Vec<String> =
+                (0..10).map(|i| format!("{}", (r * 10 + i) as f64)).collect();
+            g.push_str(&row.join(" "));
+            g.push('\n');
+        }
+        for r in 0..2 {
+            let row: Vec<String> =
+                (0..13).map(|i| format!("{}", (r * 13 + i) as f64 * 0.5)).collect();
+            g.push_str(&row.join(" "));
+            g.push('\n');
+        }
+        std::fs::write(dir.join("golden_chem.txt"), g).unwrap();
+        let m = Manifest::load(dir.join("manifest.txt")).unwrap();
+        let gc = m.golden_chemistry().unwrap();
+        assert_eq!(gc.rows, 2);
+        assert_eq!(gc.inputs[10], 10.0);
+        assert_eq!(gc.expect[13], 6.5);
+    }
+
+    #[test]
+    fn repo_manifest_parses_if_built() {
+        let p = Path::new("artifacts/manifest.txt");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.chemistry.iter().any(|c| c.batch == 128));
+            assert!(!m.background.is_empty());
+            let g = m.golden_chemistry().unwrap();
+            assert_eq!(g.inputs.len(), g.rows * m.n_in);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Discrete-event simulation primitives.
+//!
+//! The paper's evaluation runs on clusters we do not have (640 MPI ranks on
+//! NDR InfiniBand).  Per DESIGN.md §2 we reproduce it with a discrete-event
+//! simulator: protocol state machines execute over *real* window memory
+//! while time advances through a calibrated network model.  This module
+//! holds the engine-agnostic pieces: the clock, the event queue, and the
+//! serialized-resource primitive used to model NICs/HCAs/servers.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulated time in nanoseconds.
+pub type Time = u64;
+
+/// A deterministic time-ordered event queue.
+///
+/// Ties are broken by insertion sequence, which makes every simulation run
+/// bit-for-bit reproducible for a given workload seed.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Reverse<(Time, u64, EventEntry<T>)>>,
+    seq: u64,
+}
+
+/// Wrapper so `T` does not need `Ord`; ordering uses only (time, seq).
+#[derive(Debug)]
+struct EventEntry<T>(T);
+
+impl<T> PartialEq for EventEntry<T> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<T> Eq for EventEntry<T> {}
+impl<T> PartialOrd for EventEntry<T> {
+    fn partial_cmp(&self, _: &Self) -> Option<std::cmp::Ordering> {
+        Some(std::cmp::Ordering::Equal)
+    }
+}
+impl<T> Ord for EventEntry<T> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, at: Time, ev: T) {
+        self.seq += 1;
+        self.heap.push(Reverse((at, self.seq, EventEntry(ev))));
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<(Time, T)> {
+        self.heap.pop().map(|Reverse((t, _, e))| (t, e.0))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// A serialized resource (NIC, HCA atomic engine, DAOS server thread):
+/// requests occupy it back-to-back; `acquire` returns the *completion* time
+/// of the occupancy that starts no earlier than `now`.
+#[derive(Clone, Debug, Default)]
+pub struct Resource {
+    next_free: Time,
+    pub busy_ns: u128,
+    pub ops: u64,
+}
+
+impl Resource {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Occupy the resource for `occupancy` ns starting at or after `now`;
+    /// returns the completion time.
+    #[inline]
+    pub fn acquire(&mut self, now: Time, occupancy: Time) -> Time {
+        let start = now.max(self.next_free);
+        self.next_free = start + occupancy;
+        self.busy_ns += occupancy as u128;
+        self.ops += 1;
+        self.next_free
+    }
+
+    /// Utilization of the resource over `[0, horizon]`.
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / horizon as f64
+        }
+    }
+
+    pub fn next_free(&self) -> Time {
+        self.next_free
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a1");
+        q.push(10, "a2");
+        q.push(20, "b");
+        assert_eq!(q.pop(), Some((10, "a1")));
+        assert_eq!(q.pop(), Some((10, "a2"))); // FIFO on ties
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(5, 5u32);
+        q.push(1, 1u32);
+        assert_eq!(q.pop(), Some((1, 1)));
+        q.push(3, 3u32);
+        assert_eq!(q.pop(), Some((3, 3)));
+        assert_eq!(q.pop(), Some((5, 5)));
+    }
+
+    #[test]
+    fn resource_serializes() {
+        let mut r = Resource::new();
+        // two requests at t=0, each taking 100ns: complete at 100, 200
+        assert_eq!(r.acquire(0, 100), 100);
+        assert_eq!(r.acquire(0, 100), 200);
+        // a later request after the backlog clears starts immediately
+        assert_eq!(r.acquire(500, 50), 550);
+        assert_eq!(r.ops, 3);
+        assert_eq!(r.busy_ns, 250);
+    }
+
+    #[test]
+    fn resource_utilization() {
+        let mut r = Resource::new();
+        r.acquire(0, 250);
+        assert!((r.utilization(1000) - 0.25).abs() < 1e-12);
+        assert_eq!(r.utilization(0), 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities shared by every layer.
+//!
+//! The offline crate set has no `rand`, `proptest` or stats crates, so the
+//! pieces we need are implemented here (and unit-tested in place):
+//!
+//! * [`hash`]  — xxHash64 (the DHT's 64-bit key hash, DESIGN.md §Addressing)
+//! * [`rng`]   — SplitMix64 / Xoshiro256** PRNGs
+//! * [`zipf`]  — YCSB-style zipfian generator (skew 0.99 in the paper)
+//! * [`stats`] — median / stddev / percentiles for benchmark reporting
+//! * [`prop`]  — a miniature property-testing harness (`proptest` stand-in)
+
+pub mod hash;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod zipf;

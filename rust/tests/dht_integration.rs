@@ -1,0 +1,217 @@
+//! Cross-module DHT integration: the three variants must implement the
+//! same key-value semantics on the threaded shm backend AND inside the
+//! DES cluster, under both serialized and concurrent schedules.
+
+use std::collections::HashMap;
+
+use mpi_dht::bench::keys::{key_for, value_for};
+use mpi_dht::dht::{Dht, DhtOutcome, Variant};
+
+/// All variants agree with a model HashMap under a serialized schedule of
+/// interleaved writes/updates/reads.
+#[test]
+fn serialized_model_equivalence() {
+    for variant in Variant::ALL {
+        let mut h = Dht::create_poet(variant, 8, 1 << 20);
+        let mut model: HashMap<Vec<u8>, Vec<u8>> = HashMap::new();
+        let mut evicted = 0u64;
+        for i in 0..2_000u64 {
+            let id = i % 700; // updates guaranteed
+            let key = key_for(id, 80);
+            let val = value_for(id * 31 + i, 104);
+            let rank = (i % 8) as usize;
+            match h[rank].write(&key, &val) {
+                DhtOutcome::WriteEvict => evicted += 1,
+                _ => {}
+            }
+            model.insert(key, val);
+        }
+        let mut misses = 0u64;
+        for (key, val) in &model {
+            match h[3].read(key) {
+                Some(v) => assert_eq!(&v, val, "{variant:?} stale value"),
+                None => misses += 1,
+            }
+        }
+        // misses can only come from cache evictions
+        assert!(
+            misses <= evicted,
+            "{variant:?}: {misses} misses but only {evicted} evictions"
+        );
+        // at 700 keys in 8 x 5242-bucket windows evictions are rare
+        assert!(misses < 20, "{variant:?}: excessive misses {misses}");
+    }
+}
+
+/// Heavy concurrent mixed workload: no variant may ever return a value
+/// that does not belong to the requested key (values are derived from
+/// keys, so mismatches are detectable).
+#[test]
+fn concurrent_consistency_stress() {
+    for variant in Variant::ALL {
+        let handles = Dht::create_poet(variant, 4, 1 << 20);
+        let mut threads = Vec::new();
+        for (t, mut h) in handles.into_iter().enumerate() {
+            threads.push(std::thread::spawn(move || {
+                let mut wrong = 0u64;
+                let mut ops = 0u64;
+                for round in 0..400u64 {
+                    let id = (round * 7 + t as u64) % 64;
+                    let key = key_for(id, 80);
+                    if round % 3 == 0 {
+                        h.write(&key, &value_for(id, 104));
+                    } else if let Some(v) = h.read(&key) {
+                        if v != value_for(id, 104) {
+                            wrong += 1;
+                        }
+                    }
+                    ops += 1;
+                }
+                (wrong, ops)
+            }));
+        }
+        let mut wrong = 0;
+        for th in threads {
+            let (w, _) = th.join().unwrap();
+            wrong += w;
+        }
+        assert_eq!(wrong, 0, "{variant:?} returned foreign values");
+    }
+}
+
+/// The same benchmark workload replayed on the DES backend returns the
+/// same logical results (hits, misses) as the shm backend: protocol state
+/// machines are backend-independent.
+#[test]
+fn backend_equivalence_write_then_read() {
+    use mpi_dht::bench::{run_kv, Dist, KvCfg, Mode};
+    use mpi_dht::net::NetConfig;
+
+    for variant in Variant::ALL {
+        // DES run
+        let mut cfg = KvCfg::new(4, 300, Dist::Uniform, Mode::WriteThenRead);
+        cfg.seed = 99;
+        let des = run_kv(variant, NetConfig::pik_ndr(), cfg.clone());
+
+        // shm replay of the same deterministic id stream
+        let mut h = Dht::create_poet(
+            variant,
+            4,
+            cfg.win_bytes_effective(
+                mpi_dht::dht::BucketLayout::new(variant, 80, 104).size(),
+            ),
+        );
+        let mut hits = 0u64;
+        for rank in 0..4u64 {
+            let mut rng =
+                mpi_dht::util::rng::Rng::new(cfg.seed ^ (rank << 20));
+            for _ in 0..cfg.ops_per_rank {
+                let id = rng.next_u64();
+                h[rank as usize].write(&key_for(id, 80), &value_for(id, 104));
+            }
+        }
+        for rank in 0..4u64 {
+            let mut rng =
+                mpi_dht::util::rng::Rng::new(cfg.seed ^ (rank << 20));
+            for _ in 0..cfg.ops_per_rank {
+                let id = rng.next_u64();
+                if h[rank as usize].read(&key_for(id, 80)).is_some() {
+                    hits += 1;
+                }
+            }
+        }
+        assert_eq!(
+            des.stats.read_hits, hits,
+            "{variant:?}: DES {} vs shm {hits} hits",
+            des.stats.read_hits
+        );
+    }
+}
+
+/// Key/value sizes other than the POET defaults work end to end
+/// (the paper's future work mentions different value sizes).
+#[test]
+fn alternative_record_geometries() {
+    for (klen, vlen) in [(16, 32), (8, 8), (80, 1024), (33, 7)] {
+        let mut h = Dht::create(Variant::LockFree, 2, 1 << 20, klen, vlen);
+        let key: Vec<u8> = (0..klen as u32).map(|i| i as u8).collect();
+        let val: Vec<u8> = (0..vlen as u32).map(|i| (i * 3) as u8).collect();
+        h[0].write(&key, &val);
+        assert_eq!(h[1].read(&key), Some(val), "geometry {klen}/{vlen}");
+    }
+}
+
+/// Window too small for even one bucket must panic loudly, not corrupt.
+#[test]
+#[should_panic(expected = "window smaller than one bucket")]
+fn tiny_window_rejected() {
+    let _ = Dht::create_poet(Variant::LockFree, 1, 64);
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint/restore with resizing — the paper's §6 future-work feature.
+// ---------------------------------------------------------------------------
+
+use mpi_dht::dht::DhtCheckpoint;
+
+#[test]
+fn checkpoint_restore_roundtrip_resized() {
+    // write into a 4-rank table, checkpoint, restore into 7 ranks with a
+    // different window size AND a different variant; every entry survives
+    let mut src_handles = Dht::create_poet(Variant::LockFree, 4, 1 << 20);
+    for i in 0..500u64 {
+        src_handles[(i % 4) as usize]
+            .write(&key_for(i, 80), &value_for(i * 13, 104));
+    }
+    let ckpt = DhtCheckpoint::capture(&src_handles);
+    assert!(ckpt.entries.len() >= 495, "{} captured", ckpt.entries.len());
+
+    // serialize + parse round trip
+    let bytes = ckpt.to_bytes();
+    let parsed = DhtCheckpoint::from_bytes(&bytes).expect("parse");
+    assert_eq!(parsed.entries.len(), ckpt.entries.len());
+    assert_eq!(parsed.key_len, 80);
+
+    // restore resized (more ranks, smaller windows) and cross-variant
+    let mut restored = parsed.restore(Variant::Fine, 7, 512 * 1024);
+    let mut hits = 0;
+    for i in 0..500u64 {
+        if restored[(i % 7) as usize].read(&key_for(i, 80))
+            == Some(value_for(i * 13, 104))
+        {
+            hits += 1;
+        }
+    }
+    assert!(hits >= 495, "{hits}/500 after restore");
+}
+
+#[test]
+fn checkpoint_skips_invalid_buckets() {
+    let mut handles = Dht::create_poet(Variant::LockFree, 2, 1 << 20);
+    for i in 0..50u64 {
+        handles[0].write(&key_for(i, 80), &value_for(i, 104));
+    }
+    let before = DhtCheckpoint::capture(&handles).entries.len();
+    assert!(before >= 49);
+    // shrink to a tiny table: evictions happen, entries never duplicate
+    let restored = DhtCheckpoint::capture(&handles).restore(
+        Variant::LockFree,
+        1,
+        40 * 200, // 40 buckets
+    );
+    let total_writes: u64 = restored.iter().map(|h| h.stats().writes).sum();
+    assert_eq!(total_writes, 0, "restore stats must be cleared");
+}
+
+#[test]
+fn checkpoint_from_bytes_rejects_garbage() {
+    assert!(DhtCheckpoint::from_bytes(b"").is_none());
+    assert!(DhtCheckpoint::from_bytes(b"DHTCKPT1").is_none());
+    let mut good = {
+        let mut h = Dht::create_poet(Variant::LockFree, 1, 1 << 20);
+        h[0].write(&key_for(1, 80), &value_for(1, 104));
+        DhtCheckpoint::capture(&h).to_bytes()
+    };
+    good.pop(); // truncate
+    assert!(DhtCheckpoint::from_bytes(&good).is_none());
+}

@@ -1,0 +1,151 @@
+//! POET integration: physics equivalence across engines and execution
+//! modes, cache-accuracy trade-off, conservation.
+
+use std::sync::Arc;
+
+use mpi_dht::coordinator::{build_poet, EngineKind};
+use mpi_dht::dht::Variant;
+use mpi_dht::poet::{NativeChemistry, PoetConfig, PoetDriver};
+
+fn tiny_cfg() -> PoetConfig {
+    let mut cfg = PoetConfig::small();
+    cfg.ny = 10;
+    cfg.nx = 30;
+    cfg.steps = 25;
+    cfg.inj_rows = 2;
+    cfg.cf = [0.5, 0.0];
+    cfg.workers = 1;
+    cfg
+}
+
+/// PJRT chemistry and the native mirror produce the same trajectory
+/// (requires built artifacts; skipped otherwise).
+#[test]
+fn pjrt_and_native_drivers_agree() {
+    if !mpi_dht::runtime::Engine::default_dir().join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = tiny_cfg();
+    let mut native = PoetDriver::with_default_waters(
+        cfg.clone(),
+        Arc::new(NativeChemistry),
+    );
+    native.run_reference();
+    let mut pjrt = build_poet(cfg, EngineKind::Pjrt).expect("pjrt driver");
+    pjrt.run_reference();
+    let mut max_d: f64 = 0.0;
+    for (a, b) in native.grid.solutes.iter().zip(pjrt.grid.solutes.iter()) {
+        max_d = max_d.max((a - b).abs() / a.abs().max(1e-12));
+    }
+    for (a, b) in native.grid.minerals.iter().zip(pjrt.grid.minerals.iter()) {
+        max_d = max_d.max((a - b).abs() / a.abs().max(1e-12));
+    }
+    assert!(max_d < 1e-9, "engines diverged: rel {max_d}");
+}
+
+/// The surrogate-cached run converges to the reference as rounding digits
+/// increase (the paper's accuracy/performance trade-off, §5.4).
+#[test]
+fn accuracy_improves_with_digits() {
+    let mut reference =
+        PoetDriver::with_default_waters(tiny_cfg(), Arc::new(NativeChemistry));
+    reference.run_reference();
+
+    let mut errs = Vec::new();
+    for digits in [2u32, 4, 7] {
+        let mut cfg = tiny_cfg();
+        cfg.digits = digits;
+        let mut d =
+            PoetDriver::with_default_waters(cfg, Arc::new(NativeChemistry));
+        d.run_with_dht(Variant::LockFree);
+        let err: f64 = d
+            .grid
+            .minerals
+            .iter()
+            .zip(reference.grid.minerals.iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        errs.push(err);
+    }
+    assert!(
+        errs[2] <= errs[0] + 1e-12,
+        "7-digit error {} should not exceed 2-digit error {}",
+        errs[2],
+        errs[0]
+    );
+}
+
+/// Mass balance: total (dissolved + mineral) calcium only changes through
+/// the boundaries; with zero inflow/outflow difference it is conserved by
+/// chemistry alone.
+#[test]
+fn chemistry_conserves_calcium_without_transport() {
+    let cfg = tiny_cfg();
+    let mut d =
+        PoetDriver::with_default_waters(cfg, Arc::new(NativeChemistry));
+    // disable transport by zero CFL: chemistry-only evolution
+    d.cfg.cf = [0.0, 0.0];
+    let before = d.grid.total_ca();
+    d.run_reference();
+    let after = d.grid.total_ca();
+    assert!(
+        ((after - before) / before).abs() < 1e-9,
+        "calcium not conserved: {before} -> {after}"
+    );
+}
+
+/// All three variants used as cache produce the same physics as the
+/// reference at matching rounding (no torn data may leak into the grid).
+#[test]
+fn all_variants_preserve_physics() {
+    let mut reference =
+        PoetDriver::with_default_waters(tiny_cfg(), Arc::new(NativeChemistry));
+    let ref_stats = reference.run_reference();
+    for variant in Variant::ALL {
+        let mut cfg = tiny_cfg();
+        cfg.workers = 2;
+        let mut d =
+            PoetDriver::with_default_waters(cfg, Arc::new(NativeChemistry));
+        let stats = d.run_with_dht(variant);
+        assert!(stats.hit_rate() > 0.3, "{variant:?} hit {}", stats.hit_rate());
+        let d_dol = (stats.max_dolomite - ref_stats.max_dolomite).abs();
+        assert!(
+            d_dol <= 0.35 * ref_stats.max_dolomite.max(1e-12),
+            "{variant:?}: dolomite {} vs ref {}",
+            stats.max_dolomite,
+            ref_stats.max_dolomite
+        );
+    }
+}
+
+/// DES POET at several rank counts: reference runtime must not *improve*
+/// super-linearly and the lock-free gain must shrink with rank count
+/// (Fig. 7's shape).
+#[test]
+fn des_poet_gain_shrinks_with_ranks() {
+    use mpi_dht::net::NetConfig;
+    use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
+
+    let mut gains = Vec::new();
+    for nranks in [16u32, 64] {
+        let mut c = PoetDesCfg::scaled(nranks, None);
+        c.ny = 16;
+        c.nx = 48;
+        c.steps = 50;
+        c.inj_rows = 4;
+        let refr = run_poet_des(c.clone(), NetConfig::pik_ndr());
+        let mut c = PoetDesCfg::scaled(nranks, Some(Variant::LockFree));
+        c.ny = 16;
+        c.nx = 48;
+        c.steps = 50;
+        c.inj_rows = 4;
+        let lf = run_poet_des(c, NetConfig::pik_ndr());
+        gains.push(1.0 - lf.runtime_s / refr.runtime_s);
+    }
+    assert!(
+        gains[0] > gains[1] - 0.05,
+        "gain should shrink with ranks: {gains:?}"
+    );
+    assert!(gains[0] > 0.0, "lock-free must help at small scale: {gains:?}");
+}
