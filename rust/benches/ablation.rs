@@ -88,7 +88,7 @@ fn main() {
 
     // ------------------------------------------------ 4. PJRT batch size
     let dir = mpi_dht::runtime::Engine::default_dir();
-    if dir.join("manifest.txt").exists() {
+    if mpi_dht::runtime::Engine::available() && dir.join("manifest.txt").exists() {
         println!("\n[4] PJRT chemistry batch size (cells/s)");
         let engine = mpi_dht::runtime::Engine::load(dir).expect("engine");
         let g = engine.manifest().golden_chemistry().expect("golden");

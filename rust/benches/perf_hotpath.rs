@@ -104,7 +104,7 @@ fn main() {
 
     // PJRT chemistry throughput + per-call overhead
     let dir = mpi_dht::runtime::Engine::default_dir();
-    if dir.join("manifest.txt").exists() {
+    if mpi_dht::runtime::Engine::available() && dir.join("manifest.txt").exists() {
         let engine = mpi_dht::runtime::Engine::load(dir).expect("engine");
         let g = engine.manifest().golden_chemistry().expect("golden");
         // big batches -> cells/s

@@ -1,0 +1,65 @@
+//! Pipeline-depth ablation (DESIGN.md §3): how much simulated throughput
+//! the pipelined batch-operation layer buys over the paper's blocking
+//! one-op-per-rank clients, at depths 1 / 4 / 16 / 64, under uniform and
+//! zipfian key distributions, for all three DHT variants.
+//!
+//! Expectations (PIK NDR profile): the lock-free variant scales with
+//! depth until the target responders saturate; the fine-grained variant
+//! scales on reads but loses some of the gain to per-bucket lock traffic;
+//! the coarse variant barely moves — extra in-flight ops just queue on
+//! the window lock (§3.5), which is the whole point of the redesign.
+//!
+//! Run: `cargo bench --bench pipeline_depth` (scaled; set
+//! `MPI_DHT_BENCH_SCALE=full` for paper-scale op counts).
+
+mod common;
+
+use common::{banner, exp1_ops};
+use mpi_dht::bench::table::{mops, Table};
+use mpi_dht::bench::{run_kv, Dist, KvCfg, Mode};
+use mpi_dht::dht::Variant;
+use mpi_dht::net::NetConfig;
+
+const DEPTHS: [u32; 4] = [1, 4, 16, 64];
+
+fn main() {
+    banner(
+        "Pipeline-depth ablation — in-flight DHT ops per rank",
+        "DESIGN.md §3 (pipelined batch operation layer)",
+    );
+    let nranks = 128;
+    let ops = exp1_ops().min(5_000);
+    for dist in [Dist::Uniform, Dist::Zipfian] {
+        println!(
+            "\n[{dist:?}] write-then-read, {nranks} ranks, {ops} ops/rank, \
+             PIK NDR"
+        );
+        let mut t = Table::new(vec![
+            "variant", "depth", "read Mops", "write Mops", "speedup vs d1",
+        ]);
+        for variant in Variant::ALL {
+            let mut base_read = 0.0f64;
+            for depth in DEPTHS {
+                let mut cfg =
+                    KvCfg::new(nranks, ops, dist, Mode::WriteThenRead);
+                cfg.pipeline = depth;
+                let res = run_kv(variant, NetConfig::pik_ndr(), cfg);
+                if depth == 1 {
+                    base_read = res.read_mops;
+                }
+                t.row(vec![
+                    variant.name().to_string(),
+                    depth.to_string(),
+                    mops(res.read_mops),
+                    mops(res.write_mops),
+                    format!("{:.2}x", res.read_mops / base_read.max(1e-9)),
+                ]);
+            }
+        }
+        print!("{}", t.render());
+    }
+    println!(
+        "\n(depth 1 = the paper's blocking clients; the lock-free read \
+         speedup at depth >= 16 is the pipelined layer's headline gain)"
+    );
+}

@@ -68,6 +68,9 @@ pub struct KvCfg {
     /// Per-rank window bytes; if 0, sized for ~8.6 % load factor (paper).
     pub win_bytes: usize,
     pub seed: u64,
+    /// In-flight ops per rank (pipeline depth; 1 = the paper's blocking
+    /// one-op-at-a-time client, DESIGN.md §3).
+    pub pipeline: u32,
 }
 
 impl KvCfg {
@@ -83,6 +86,7 @@ impl KvCfg {
             zipf_range: 0,
             win_bytes: 0,
             seed: 0xBEAC_0BE,
+            pipeline: 1,
         }
     }
 
@@ -198,7 +202,7 @@ impl KvWorkload {
 impl Workload for KvWorkload {
     type Sm = DhtSm;
 
-    fn next(&mut self, rank: u32, _now: Time) -> WorkItem<DhtSm> {
+    fn next(&mut self, rank: u32, _lane: u32, _now: Time) -> WorkItem<DhtSm> {
         let cfg_ops = self.cfg.ops_per_rank;
         let variant = self.dht.variant;
         let (key_len, val_len) = (self.cfg.key_len, self.cfg.val_len);
@@ -256,6 +260,7 @@ impl Workload for KvWorkload {
     fn on_complete(
         &mut self,
         rank: u32,
+        _lane: u32,
         _now: Time,
         latency: Time,
         out: crate::dht::OpOut,
@@ -298,7 +303,13 @@ pub fn run_kv_custom(dht: DhtConfig, net_cfg: NetConfig, cfg: KvCfg) -> KvResult
     let _ = variant;
     let net = Network::new(net_cfg, cfg.nranks);
     let workload = KvWorkload::new(cfg.clone(), dht);
-    let mut cluster = SimCluster::new(workload, net, cfg.nranks, win_bytes);
+    let mut cluster = SimCluster::with_pipeline(
+        workload,
+        net,
+        cfg.nranks,
+        win_bytes,
+        cfg.pipeline.max(1),
+    );
     let sim = cluster.run();
     let w = &cluster.workload;
 
@@ -347,7 +358,7 @@ struct DaosWorkload {
 impl Workload for DaosWorkload {
     type Sm = DaosSm;
 
-    fn next(&mut self, rank: u32, _now: Time) -> WorkItem<DaosSm> {
+    fn next(&mut self, rank: u32, _lane: u32, _now: Time) -> WorkItem<DaosSm> {
         let cfg_ops = self.cfg.ops_per_rank;
         let (key_len, val_len) = (self.cfg.key_len, self.cfg.val_len);
         let r = &mut self.ranks[rank as usize];
@@ -376,7 +387,14 @@ impl Workload for DaosWorkload {
         WorkItem::Finished
     }
 
-    fn on_complete(&mut self, rank: u32, _now: Time, latency: Time, out: DaosOut) {
+    fn on_complete(
+        &mut self,
+        rank: u32,
+        _lane: u32,
+        _now: Time,
+        latency: Time,
+        out: DaosOut,
+    ) {
         match out {
             DaosOut::ReadHit(_) => {
                 self.hits += 1;
@@ -501,6 +519,28 @@ mod tests {
         // ~95/5 split
         let read_frac = res.stats.reads as f64 / total as f64;
         assert!((0.9..0.99).contains(&read_frac), "read frac {read_frac}");
+    }
+
+    #[test]
+    fn pipelined_reads_beat_blocking_reads() {
+        // the acceptance bar for the pipelined execution layer: simulated
+        // read throughput at depth 16 strictly above depth 1 (lock-free)
+        for dist in [Dist::Uniform, Dist::Zipfian] {
+            let base = small_cfg(32, dist, Mode::WriteThenRead);
+            let d1 = run_kv(Variant::LockFree, NetConfig::pik_ndr(), base.clone());
+            let mut piped = base;
+            piped.pipeline = 16;
+            let d16 = run_kv(Variant::LockFree, NetConfig::pik_ndr(), piped);
+            assert!(
+                d16.read_mops > d1.read_mops,
+                "{dist:?}: depth 16 {} Mops <= depth 1 {} Mops",
+                d16.read_mops,
+                d1.read_mops
+            );
+            // all ops still complete and reads still overwhelmingly hit
+            assert_eq!(d16.stats.reads, 32 * 200);
+            assert!(d16.stats.hit_rate() > 0.9, "{}", d16.stats.hit_rate());
+        }
     }
 
     /// Calibration probe: run with

@@ -22,7 +22,7 @@ const VALUED: &[&str] = &[
     "--ny", "--nx", "--steps", "--workers", "--digits", "--dt",
     "--engine", "--artifacts", "--win-bytes", "--seed", "--config",
     "--set", "--clients", "--out", "--repeats", "--read-percent",
-    "--zipf-range", "--theta", "--grid",
+    "--zipf-range", "--theta", "--grid", "--pipeline",
 ];
 
 impl Args {

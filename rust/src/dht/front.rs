@@ -1,23 +1,42 @@
 //! Blocking DHT front-end — the paper's four-call API (§3.1):
-//! `DHT_create`, `DHT_read`, `DHT_write`, `DHT_free`.
+//! `DHT_create`, `DHT_read`, `DHT_write`, `DHT_free` — plus the pipelined
+//! batch API (`DHT_read_batch` / `DHT_write_batch`, DESIGN.md §3).
 //!
-//! This is what applications (the POET coordinator, the examples) use on
-//! the threaded shm backend; each worker thread holds its own [`Dht`]
-//! handle ("rank") onto the shared cluster, mirroring how each MPI rank
-//! holds its own window handle in the paper.
+//! [`Dht`] is generic over its [`RmaBackend`]: applications (the POET
+//! coordinator, the examples) use the threaded shm backend, where each
+//! worker thread holds its own handle ("rank") onto the shared cluster,
+//! mirroring how each MPI rank holds its own window handle in the paper;
+//! tests and benches can run the *same* front-end on the DES backend
+//! ([`Dht::create_sim`]) to measure simulated time instead of wall time.
+//!
+//! `DHT_free` has no explicit call: dropping a handle releases its rank's
+//! view, and the cluster's shared window memory is freed when the last
+//! handle of the cluster goes away (`Arc`-owned on shm, `Rc`-owned on the
+//! DES backend).  No guard code runs on drop — handles hold no resources
+//! beyond that shared ownership.
 
+use crate::net::Network;
 use crate::rma::shm::{ShmCluster, ShmRma};
+use crate::rma::sim::SimRma;
+use crate::rma::RmaBackend;
+use crate::sim::Time;
 
 use super::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
 
+/// Default pipeline depth for the batch calls: enough to hide a few µs of
+/// network latency behind ~hundreds-of-ns per-op target occupancy without
+/// flooding a single target's responder (see the `pipeline_depth` bench).
+pub const DEFAULT_PIPELINE: usize = 16;
+
 /// A per-rank handle to a shared DHT (`DHT_create` returns one per rank).
-pub struct Dht {
+pub struct Dht<B: RmaBackend = ShmRma> {
     cfg: DhtConfig,
-    rma: ShmRma,
+    rma: B,
     stats: DhtStats,
+    pipeline: usize,
 }
 
-impl Dht {
+impl Dht<ShmRma> {
     /// `DHT_create`: build a cluster of `nranks` windows of `win_bytes`
     /// each and return the per-rank handles.
     pub fn create(
@@ -30,7 +49,12 @@ impl Dht {
         let cfg = DhtConfig::new(variant, nranks, win_bytes, key_len, val_len);
         let cluster = ShmCluster::new(nranks, win_bytes);
         (0..nranks)
-            .map(|r| Dht { cfg: cfg.clone(), rma: cluster.rma(r), stats: DhtStats::default() })
+            .map(|r| Dht {
+                cfg: cfg.clone(),
+                rma: cluster.rma(r),
+                stats: DhtStats::default(),
+                pipeline: DEFAULT_PIPELINE,
+            })
             .collect()
     }
 
@@ -38,14 +62,48 @@ impl Dht {
     pub fn create_poet(variant: Variant, nranks: u32, win_bytes: usize) -> Vec<Dht> {
         Self::create(variant, nranks, win_bytes, 80, 104)
     }
+}
 
+impl Dht<SimRma> {
+    /// `DHT_create` on the discrete-event backend: the same front-end (and
+    /// batch API) measured in *simulated* time.  `pipeline_lanes` caps the
+    /// in-flight ops per rank for the whole cluster.  Single-threaded.
+    pub fn create_sim(
+        variant: Variant,
+        nranks: u32,
+        win_bytes: usize,
+        key_len: usize,
+        val_len: usize,
+        net: Network,
+        pipeline_lanes: u32,
+    ) -> Vec<Dht<SimRma>> {
+        let cfg = DhtConfig::new(variant, nranks, win_bytes, key_len, val_len);
+        SimRma::create(net, nranks, win_bytes, pipeline_lanes.max(1))
+            .into_iter()
+            .map(|rma| Dht {
+                cfg: cfg.clone(),
+                rma,
+                stats: DhtStats::default(),
+                pipeline: pipeline_lanes.max(1) as usize,
+            })
+            .collect()
+    }
+
+    /// Current simulated time (ns) of the underlying DES cluster.
+    pub fn sim_time(&self) -> Time {
+        self.rma.now()
+    }
+}
+
+impl<B: RmaBackend> Dht<B> {
     /// Clone a handle for another thread of the same rank (stats are
     /// per-handle; merge at the end).
-    pub fn fork(&self) -> Dht {
+    pub fn fork(&self) -> Dht<B> {
         Dht {
             cfg: self.cfg.clone(),
             rma: self.rma.clone(),
             stats: DhtStats::default(),
+            pipeline: self.pipeline,
         }
     }
 
@@ -54,14 +112,24 @@ impl Dht {
     }
 
     pub fn rank(&self) -> u32 {
-        self.rma.rank
+        self.rma.rank()
+    }
+
+    /// In-flight ops per batch call (pipeline depth).
+    pub fn pipeline(&self) -> usize {
+        self.pipeline
+    }
+
+    /// Set the pipeline depth used by the batch calls (min 1).
+    pub fn set_pipeline(&mut self, depth: usize) {
+        self.pipeline = depth.max(1);
     }
 
     /// `DHT_read`: returns the cached value, or `None` on miss/corruption.
     pub fn read(&mut self, key: &[u8]) -> Option<Vec<u8>> {
         assert_eq!(key.len(), self.cfg.layout.key_len());
-        let mut sm = DhtSm::read(self.cfg.variant, &self.cfg, key);
-        let out = self.rma.exec(&mut sm);
+        let sm = DhtSm::read(self.cfg.variant, &self.cfg, key);
+        let out = self.rma.exec(sm);
         self.stats.record(&out);
         match out.outcome {
             DhtOutcome::ReadHit(v) => Some(v),
@@ -73,10 +141,70 @@ impl Dht {
     pub fn write(&mut self, key: &[u8], value: &[u8]) -> DhtOutcome {
         assert_eq!(key.len(), self.cfg.layout.key_len());
         assert_eq!(value.len(), self.cfg.layout.val_len());
-        let mut sm = DhtSm::write(self.cfg.variant, &self.cfg, key, value);
-        let out = self.rma.exec(&mut sm);
+        let sm = DhtSm::write(self.cfg.variant, &self.cfg, key, value);
+        let out = self.rma.exec(sm);
         self.stats.record(&out);
         out.outcome
+    }
+
+    /// `DHT_read_batch`: one pipelined epoch of reads — up to
+    /// [`Self::pipeline`] in flight at once, flushed before returning.
+    /// Results are in key order; semantics per key are identical to
+    /// [`Self::read`].
+    pub fn read_batch<K: AsRef<[u8]>>(
+        &mut self,
+        keys: &[K],
+    ) -> Vec<Option<Vec<u8>>> {
+        let sms: Vec<DhtSm> = keys
+            .iter()
+            .map(|k| {
+                let k = k.as_ref();
+                assert_eq!(k.len(), self.cfg.layout.key_len());
+                DhtSm::read(self.cfg.variant, &self.cfg, k)
+            })
+            .collect();
+        let depth = self.pipeline;
+        self.rma
+            .exec_batch(sms, depth)
+            .into_iter()
+            .map(|out| {
+                self.stats.record(&out);
+                match out.outcome {
+                    DhtOutcome::ReadHit(v) => Some(v),
+                    _ => None,
+                }
+            })
+            .collect()
+    }
+
+    /// `DHT_write_batch`: one pipelined epoch of writes (`keys[i]` paired
+    /// with `values[i]`), flushed before returning.  Outcomes are in key
+    /// order; semantics per pair are identical to [`Self::write`].
+    pub fn write_batch<K: AsRef<[u8]>, V: AsRef<[u8]>>(
+        &mut self,
+        keys: &[K],
+        values: &[V],
+    ) -> Vec<DhtOutcome> {
+        assert_eq!(keys.len(), values.len(), "one value per key");
+        let sms: Vec<DhtSm> = keys
+            .iter()
+            .zip(values.iter())
+            .map(|(k, v)| {
+                let (k, v) = (k.as_ref(), v.as_ref());
+                assert_eq!(k.len(), self.cfg.layout.key_len());
+                assert_eq!(v.len(), self.cfg.layout.val_len());
+                DhtSm::write(self.cfg.variant, &self.cfg, k, v)
+            })
+            .collect();
+        let depth = self.pipeline;
+        self.rma
+            .exec_batch(sms, depth)
+            .into_iter()
+            .map(|out| {
+                self.stats.record(&out);
+                out.outcome
+            })
+            .collect()
     }
 
     pub fn stats(&self) -> &DhtStats {
@@ -86,11 +214,6 @@ impl Dht {
     pub fn take_stats(&mut self) -> DhtStats {
         std::mem::take(&mut self.stats)
     }
-}
-
-/// `DHT_free` is Drop.
-impl Drop for Dht {
-    fn drop(&mut self) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -115,8 +238,9 @@ pub struct DhtCheckpoint {
 impl DhtCheckpoint {
     /// Capture a checkpoint by scanning every rank's window.  Call at a
     /// quiescent point (application checkpointing barrier), like the
-    /// paper prescribes.
-    pub fn capture(handles: &[Dht]) -> DhtCheckpoint {
+    /// paper prescribes.  Works on any backend (the scan uses the
+    /// backend's direct-memory `peek`, not modelled RMA traffic).
+    pub fn capture<B: RmaBackend>(handles: &[Dht<B>]) -> DhtCheckpoint {
         let h0 = &handles[0];
         let cfg = h0.cfg();
         let l = cfg.layout;
@@ -126,7 +250,7 @@ impl DhtCheckpoint {
         for rank in 0..cfg.addressing.nranks() {
             for b in 0..buckets {
                 let off = l.bucket_off(b) + l.meta_off() as u64;
-                let rec = h0.rma.get(rank, off, rec_len);
+                let rec = h0.rma.peek(rank, off, rec_len);
                 let meta = l.meta_of(&rec);
                 if !meta.occupied() || meta.invalid() {
                     continue;
@@ -179,11 +303,20 @@ impl DhtCheckpoint {
             u32::from_le_bytes(data[9..13].try_into().ok()?) as usize;
         let val_len =
             u32::from_le_bytes(data[13..17].try_into().ok()?) as usize;
-        let n = u64::from_le_bytes(data[17..25].try_into().ok()?) as usize;
-        let rec = key_len + val_len;
-        if data.len() != 25 + n * rec {
+        if key_len == 0 || val_len == 0 {
             return None;
         }
+        let n64 = u64::from_le_bytes(data[17..25].try_into().ok()?);
+        let rec = key_len + val_len;
+        // checked math: an attacker-controlled n must not wrap the
+        // expected length (or blow up with_capacity below)
+        let expected = n64
+            .checked_mul(rec as u64)
+            .and_then(|b| b.checked_add(25))?;
+        if data.len() as u64 != expected {
+            return None;
+        }
+        let n = n64 as usize;
         let mut entries = Vec::with_capacity(n);
         for i in 0..n {
             let base = 25 + i * rec;
@@ -296,5 +429,130 @@ mod tests {
         assert_eq!(s.reads, 20);
         assert!(s.read_hits >= 9); // all 10 present barring eviction
         assert_eq!(h.stats().reads, 0);
+    }
+
+    #[test]
+    fn batch_matches_sequential_locking_variants() {
+        // The locking variants serialize every bucket access (window lock
+        // / per-bucket lock), so a single-threaded pipelined batch is
+        // outcome-identical to the sequential loop, bit for bit.
+        for variant in [Variant::Coarse, Variant::Fine] {
+            let mut seq = Dht::create_poet(variant, 4, 256 * 1024);
+            let mut bat = Dht::create_poet(variant, 4, 256 * 1024);
+            let keys: Vec<Vec<u8>> = (0..64u8).map(|i| vec![i; 80]).collect();
+            let vals: Vec<Vec<u8>> = (0..64u8).map(|i| vec![i ^ 7; 104]).collect();
+            // sequential reference
+            let mut seq_w = Vec::new();
+            for (k, v) in keys.iter().zip(vals.iter()) {
+                seq_w.push(seq[1].write(k, v));
+            }
+            let mut seq_r = Vec::new();
+            for k in &keys {
+                seq_r.push(seq[2].read(k));
+            }
+            // batched (pipelined) execution
+            let bat_w = bat[1].write_batch(&keys, &vals);
+            let bat_r = bat[2].read_batch(&keys);
+            assert_eq!(seq_w, bat_w, "{variant:?} write outcomes");
+            assert_eq!(seq_r, bat_r, "{variant:?} read results");
+            // stats agree too
+            assert_eq!(seq[1].stats().writes, bat[1].stats().writes);
+            assert_eq!(seq[2].stats().read_hits, bat[2].stats().read_hits);
+        }
+    }
+
+    #[test]
+    fn batch_lockfree_contract() {
+        // Lock-free has no locks: writes whose candidate buckets collide
+        // within one pipelined epoch race exactly like concurrent ranks do
+        // (last write wins), so the contract is the paper's: a read may
+        // miss, but a hit never returns a value that is not the key's.
+        let mut h = Dht::create_poet(Variant::LockFree, 4, 1 << 20);
+        let keys: Vec<Vec<u8>> = (0..64u8).map(|i| vec![i; 80]).collect();
+        let vals: Vec<Vec<u8>> = (0..64u8).map(|i| vec![i ^ 7; 104]).collect();
+        h[1].write_batch(&keys, &vals);
+        let got = h[2].read_batch(&keys);
+        let mut hits = 0;
+        for ((k, v), g) in keys.iter().zip(vals.iter()).zip(got.iter()) {
+            if let Some(gv) = g {
+                assert_eq!(gv, v, "wrong value for key {:?}", &k[..1]);
+                hits += 1;
+            }
+        }
+        // collisions are rare at this load factor: almost everything hits
+        assert!(hits >= 60, "only {hits}/64 hits");
+    }
+
+    #[test]
+    fn batch_depth_does_not_change_results() {
+        let keys: Vec<Vec<u8>> = (0..40u8).map(|i| vec![i; 80]).collect();
+        let vals: Vec<Vec<u8>> = (0..40u8).map(|i| vec![i + 1; 104]).collect();
+        let mut expected = None;
+        for depth in [1usize, 4, 16, 64] {
+            // fine-grained: per-bucket locking makes every placement
+            // findable, so results are depth-invariant
+            let mut h = Dht::create_poet(Variant::Fine, 2, 256 * 1024);
+            h[0].set_pipeline(depth);
+            assert_eq!(h[0].pipeline(), depth);
+            h[0].write_batch(&keys, &vals);
+            let got = h[0].read_batch(&keys);
+            match &expected {
+                None => expected = Some(got),
+                Some(e) => assert_eq!(e, &got, "depth {depth}"),
+            }
+        }
+        let e = expected.unwrap();
+        assert!(e.iter().all(|v| v.is_some()));
+    }
+
+    #[test]
+    fn dht_runs_on_sim_backend() {
+        use crate::net::NetConfig;
+        let net = Network::new(NetConfig::pik_ndr(), 4);
+        let mut handles =
+            Dht::create_sim(Variant::LockFree, 4, 256 * 1024, 80, 104, net, 16);
+        let keys: Vec<Vec<u8>> = (0..32u8).map(|i| vec![i; 80]).collect();
+        let vals: Vec<Vec<u8>> = (0..32u8).map(|i| vec![i | 64; 104]).collect();
+        let outcomes = handles[0].write_batch(&keys, &vals);
+        assert!(outcomes.iter().all(|o| *o == DhtOutcome::WriteFresh));
+        let t_after_writes = handles[0].sim_time();
+        assert!(t_after_writes > 0, "writes consumed simulated time");
+        // another rank reads the shared table back, in simulated time
+        let got = handles[3].read_batch(&keys);
+        for (v, g) in vals.iter().zip(got.iter()) {
+            assert_eq!(Some(v), g.as_ref(), "sim backend read");
+        }
+        assert!(handles[3].sim_time() > t_after_writes);
+        assert_eq!(handles[3].stats().read_hits, 32);
+    }
+
+    #[test]
+    fn sim_backend_pipelining_hides_latency() {
+        use crate::net::NetConfig;
+        let keys: Vec<Vec<u8>> = (0..64u8).map(|i| vec![i; 80]).collect();
+        let vals: Vec<Vec<u8>> = (0..64u8).map(|i| vec![i; 104]).collect();
+        let run = |lanes: u32| {
+            let net = Network::new(NetConfig::pik_ndr(), 256);
+            let mut handles = Dht::create_sim(
+                Variant::LockFree,
+                256,
+                256 * 1024,
+                80,
+                104,
+                net,
+                lanes,
+            );
+            handles[0].write_batch(&keys, &vals);
+            let t0 = handles[0].sim_time();
+            let got = handles[0].read_batch(&keys);
+            assert!(got.iter().all(|v| v.is_some()));
+            handles[0].sim_time() - t0
+        };
+        let d1 = run(1);
+        let d16 = run(16);
+        assert!(
+            d16 * 2 < d1,
+            "pipelined reads ({d16} ns) should be well under blocking ({d1} ns)"
+        );
     }
 }

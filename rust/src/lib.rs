@@ -8,7 +8,10 @@
 //!   designs ([`dht`]), the DAOS-like server baseline ([`daos`]), the POET
 //!   reactive-transport coordinator ([`poet`], [`coordinator`]), a
 //!   protocol-accurate discrete-event cluster ([`rma::sim`], [`net`]) and
-//!   a threaded shared-memory backend ([`rma::shm`]).
+//!   a threaded shared-memory backend ([`rma::shm`]) — both behind the
+//!   [`rma::RmaBackend`] trait, whose pipelined batch execution layer
+//!   (`Dht::read_batch`/`Dht::write_batch`, DESIGN.md §3) keeps many
+//!   one-sided ops in flight per rank.
 //! * **L2/L1 (python/, build time only)** — the geochemistry model and its
 //!   Pallas kernels, AOT-lowered to HLO text artifacts.
 //! * **runtime** — [`runtime`] loads the artifacts via PJRT and executes

@@ -61,14 +61,15 @@ COMMANDS:
                  --variant coarse|fine|lockfree   --dist uniform|zipfian
                  --mode wtr|mixed   --ranks 128..640:128   --ops N
                  --profile pik|turing  --read-percent 95  --seed N
+                 --pipeline D (in-flight ops per rank, default 1)
   bench-daos   server-based baseline vs coarse DHT (paper Fig. 3)
                  --clients 12..72:12  --ops N
   poet-des     POET in the DES cluster (paper Fig. 7)
                  --ranks list  --variant none|coarse|fine|lockfree
-                 --ny N --nx N --steps N --digits D
+                 --ny N --nx N --steps N --digits D --pipeline D
   poet         threaded POET on this machine (real PJRT chemistry)
                  --ny N --nx N --steps N --workers W --engine pjrt|native
-                 --variant none|coarse|fine|lockfree|all
+                 --variant none|coarse|fine|lockfree|all --pipeline D
 
 Common: --config file.toml  --set key=value (repeatable)
 "#;
@@ -139,6 +140,7 @@ fn cmd_bench_kv(args: &Args) -> Result<()> {
     for n in ranks {
         let mut kv = KvCfg::new(n, ops, dist, mode);
         kv.seed = args.u64_or("--seed", kv.seed)?;
+        kv.pipeline = args.u64_or("--pipeline", kv.pipeline as u64)? as u32;
         if let Some(z) = args.get("--zipf-range") {
             kv.zipf_range = z.parse()?;
         }
@@ -213,6 +215,7 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         c.nx = args.usize_or("--nx", c.nx)?;
         c.steps = args.usize_or("--steps", c.steps)?;
         c.digits = args.u64_or("--digits", c.digits as u64)? as u32;
+        c.pipeline = args.u64_or("--pipeline", c.pipeline as u64)? as u32;
         let res = run_poet_des(c, net.clone());
         t.row(vec![
             n.to_string(),
@@ -240,6 +243,7 @@ fn cmd_poet(args: &Args) -> Result<()> {
     cfg.workers = args.usize_or("--workers", cfg.workers)?;
     cfg.digits = args.u64_or("--digits", cfg.digits as u64)? as u32;
     cfg.dt = args.f64_or("--dt", cfg.dt)?;
+    cfg.pipeline = args.usize_or("--pipeline", cfg.pipeline)?;
     let variants: Vec<Option<Variant>> =
         match args.str_or("--variant", "lockfree") {
             "none" | "reference" => vec![None],

@@ -10,10 +10,18 @@
 //! ("the simulation has already reached the maximum degree of
 //! parallelization when using only one node").
 //!
+//! With `pipeline > 1` the per-step surrogate lookups are *pipelined*:
+//! every rank keeps up to `pipeline` DHT reads/writes in flight on the
+//! engine's lanes (the batched access pattern of the threaded driver),
+//! while chemistry remains serialized per rank — a rank has one CPU, but
+//! its NIC can overlap many one-sided ops (DESIGN.md §3).
+//!
 //! Grid scaling: the paper's 500x1500 grid is scaled down (default 60x180)
 //! with per-cell chemistry cost kept at the paper's magnitude; simulated
 //! runtimes therefore scale with the cell ratio, and the *relative* gains
 //! (Tab. 3) are the reproduction target.
+
+use std::collections::VecDeque;
 
 use crate::dht::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
 use crate::net::{NetConfig, Network};
@@ -25,6 +33,15 @@ use super::chemistry::{integrate_cell, ChemCost, N_OUT};
 use super::grid::GridState;
 use super::key::{cell_key, pack_row, unpack_value};
 use super::transport;
+
+/// Initial poll interval for a lane waiting on rank-level work (ns).
+/// Never hit at `pipeline == 1` (a single lane always has work or is at
+/// the barrier).  Idle lanes back off exponentially up to
+/// [`LANE_POLL_MAX_NS`] so a long serial-chemistry drain does not flood
+/// the event queue with polls; the cap bounds how late a lane can notice
+/// the end of the step (small vs the >= 1 ms step times).
+const LANE_POLL_NS: u64 = 2_000;
+const LANE_POLL_MAX_NS: u64 = 16_000;
 
 /// Configuration of a DES POET run.
 #[derive(Clone, Debug)]
@@ -50,6 +67,9 @@ pub struct PoetDesCfg {
     pub step_sync_ns: u64,
     /// Per-owned-cell transport compute, ns.
     pub transport_ns_per_cell: u64,
+    /// In-flight DHT ops per rank (pipeline depth; 1 = the classic
+    /// blocking per-cell loop).
+    pub pipeline: u32,
 }
 
 impl PoetDesCfg {
@@ -69,6 +89,7 @@ impl PoetDesCfg {
             step_overhead_ns: 250_000,
             step_sync_ns: 300_000,
             transport_ns_per_cell: 500,
+            pipeline: 1,
         }
     }
 }
@@ -97,39 +118,72 @@ impl PoetDesResult {
     }
 }
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-enum Phase {
-    /// Charge step overhead + transport share at step start.
-    StepStart,
-    /// Iterate owned cells.
-    Cells,
-    /// Miss: charge the simulated PHREEQC time of this cell.
-    MissCompute,
-    /// Miss: chemistry cost charged; write the result to the DHT.
-    MissWrite,
-    /// Waiting at the end-of-step barrier.
-    EndOfStep,
+/// What a (rank, lane) currently has in flight.
+enum LaneJob {
+    Idle,
+    /// Step-start overhead Think (transport + sync) in flight.
+    Overhead,
+    /// DHT read of `cell` outstanding; key kept for the miss path.
+    Read { cell: usize, key: Vec<u8> },
+    /// Chemistry Think in flight; on completion the result is written to
+    /// the DHT (`write` = Some) or just applied (reference run).
+    Compute { write: Option<(Vec<u8>, [f64; N_OUT])> },
+    /// DHT write outstanding.
+    Write,
 }
 
 struct RankCur {
     step: usize,
-    /// Index into this rank's owned-cell range.
-    idx: usize,
-    phase: Phase,
-    /// Pending miss: (cell, key bytes, output record).
-    pending: Option<(usize, Vec<u8>, [f64; N_OUT])>,
-    /// Simulated PHREEQC cost of the pending miss.
-    pending_cost: u64,
+    /// Next unread cell index within this rank's owned range.
+    next_cell: usize,
+    reads_inflight: u32,
+    writes_inflight: u32,
+    /// Cells whose read missed, awaiting (serialized) chemistry.
+    compute_q: VecDeque<(usize, Vec<u8>)>,
+    /// A chemistry Think is in flight (one CPU per rank).
+    computing: bool,
+    /// Step overhead charged / in flight.
+    overhead_done: bool,
+    overhead_inflight: bool,
+    /// All of this step's work drained; lanes park at the barrier.
+    step_complete: bool,
+}
+
+impl RankCur {
+    fn new() -> Self {
+        Self {
+            step: 0,
+            next_cell: 0,
+            reads_inflight: 0,
+            writes_inflight: 0,
+            compute_q: VecDeque::new(),
+            computing: false,
+            overhead_done: false,
+            overhead_inflight: false,
+            step_complete: false,
+        }
+    }
+
+    fn drained(&self) -> bool {
+        self.reads_inflight == 0
+            && self.writes_inflight == 0
+            && !self.computing
+            && self.compute_q.is_empty()
+    }
 }
 
 struct PoetWorkload {
     cfg: PoetDesCfg,
+    lanes: u32,
     dht: Option<DhtConfig>,
     grid: GridState,
     scratch: Vec<f64>,
     inflow: Vec<f64>,
     ranges: Vec<(usize, usize)>,
     cur: Vec<RankCur>,
+    lane_job: Vec<LaneJob>,
+    /// Per-lane idle-poll backoff (reset whenever the lane gets work).
+    poll_ns: Vec<u64>,
     /// Last step whose transport has been applied to the grid.
     transport_applied: i64,
     stats: DhtStats,
@@ -149,35 +203,35 @@ impl PoetWorkload {
         }
         let cells = grid.cells();
         let n = cfg.nranks as usize;
+        let lanes = cfg.pipeline.max(1);
         let ranges = (0..n)
             .map(|r| (r * cells / n, (r + 1) * cells / n))
             .collect();
-        let dht = cfg.variant.map(|v| {
-            DhtConfig::poet(v, cfg.nranks, cfg.win_bytes)
-        });
-        let cur = (0..n)
-            .map(|_| RankCur {
-                step: 0,
-                idx: 0,
-                phase: Phase::StepStart,
-                pending: None,
-                pending_cost: 0,
-            })
-            .collect();
+        let dht = cfg
+            .variant
+            .map(|v| DhtConfig::poet(v, cfg.nranks, cfg.win_bytes));
         Self {
-            cfg,
+            lanes,
             dht,
             grid,
             scratch: Vec::new(),
             inflow,
             ranges,
-            cur,
+            cur: (0..n).map(|_| RankCur::new()).collect(),
+            lane_job: (0..n * lanes as usize).map(|_| LaneJob::Idle).collect(),
+            poll_ns: vec![LANE_POLL_NS; n * lanes as usize],
             transport_applied: -1,
             stats: DhtStats::default(),
             hits: 0,
             misses: 0,
             chem_cells: 0,
+            cfg,
         }
+    }
+
+    #[inline]
+    fn ctx(&self, rank: u32, lane: u32) -> usize {
+        (rank * self.lanes + lane) as usize
     }
 
     fn apply_transport(&mut self, step: usize) {
@@ -195,126 +249,184 @@ impl PoetWorkload {
         );
         self.transport_applied = step as i64;
     }
+
+    /// Idle poll with per-lane exponential backoff.
+    fn poll(&mut self, ctx: usize) -> WorkItem<DhtSm> {
+        let ns = self.poll_ns[ctx];
+        self.poll_ns[ctx] = (ns * 2).min(LANE_POLL_MAX_NS);
+        WorkItem::Think(ns)
+    }
+
+    /// Run chemistry for `cell` now: integrate, apply to the grid, and
+    /// return the output record plus its simulated PHREEQC cost.
+    fn simulate_cell(&mut self, cell: usize) -> ([f64; N_OUT], u64) {
+        let row = self.grid.row(cell, self.cfg.dt);
+        let rec = integrate_cell(&row);
+        let cost = self.cfg.cost.cost_ns(&row, &rec);
+        self.grid.apply(cell, &rec);
+        self.chem_cells += 1;
+        (rec, cost)
+    }
 }
 
 impl Workload for PoetWorkload {
     type Sm = DhtSm;
 
-    fn next(&mut self, rank: u32, _now: Time) -> WorkItem<DhtSm> {
+    fn next(&mut self, rank: u32, lane: u32, _now: Time) -> WorkItem<DhtSm> {
         let r = rank as usize;
+        let ctx = self.ctx(rank, lane);
+
+        // A completed Think is signalled by this lane asking again while
+        // still holding an Overhead/Compute job.
+        match std::mem::replace(&mut self.lane_job[ctx], LaneJob::Idle) {
+            LaneJob::Overhead => {
+                self.cur[r].overhead_inflight = false;
+                self.cur[r].overhead_done = true;
+            }
+            LaneJob::Compute { write } => {
+                self.cur[r].computing = false;
+                if let Some((key, rec)) = write {
+                    // chemistry cost charged: store the result (the miss
+                    // write of the batched pass)
+                    let dcfg = self.dht.as_ref().expect("dht in miss write");
+                    let sm =
+                        DhtSm::write(dcfg.variant, dcfg, &key, &pack_row(&rec));
+                    self.lane_job[ctx] = LaneJob::Write;
+                    self.cur[r].writes_inflight += 1;
+                    self.poll_ns[ctx] = LANE_POLL_NS;
+                    return WorkItem::Op(sm);
+                }
+            }
+            LaneJob::Idle => {}
+            LaneJob::Read { .. } | LaneJob::Write => {
+                unreachable!("op jobs are cleared in on_complete")
+            }
+        }
+
         if self.cur[r].step >= self.cfg.steps {
             return WorkItem::Finished;
         }
-        match self.cur[r].phase {
-            Phase::StepStart => {
-                let step = self.cur[r].step;
-                self.apply_transport(step);
-                self.cur[r].phase = Phase::Cells;
-                let (lo, hi) = self.ranges[r];
-                let cells = (hi - lo) as u64;
-                let sync = (self.cfg.step_sync_ns as f64
-                    * (self.cfg.nranks.max(2) as f64).log2()) as u64;
-                WorkItem::Think(
-                    self.cfg.step_overhead_ns
-                        + sync
-                        + cells * self.cfg.transport_ns_per_cell,
-                )
-            }
-            Phase::Cells => {
-                let (lo, hi) = self.ranges[r];
-                let idx = self.cur[r].idx;
-                if lo + idx >= hi {
-                    self.cur[r].phase = Phase::EndOfStep;
-                    return WorkItem::Barrier;
-                }
-                let cell = lo + idx;
-                let row = self.grid.row(cell, self.cfg.dt);
-                match &self.dht {
-                    None => {
-                        // reference: simulate every cell, charge its cost
-                        let out = integrate_cell(&row);
-                        let cost = self.cfg.cost.cost_ns(&row, &out);
-                        self.grid.apply(cell, &out);
-                        self.chem_cells += 1;
-                        self.cur[r].idx += 1;
-                        WorkItem::Think(cost)
-                    }
-                    Some(dcfg) => {
-                        let key = cell_key(&row, self.cfg.digits);
-                        let sm = DhtSm::read(dcfg.variant, dcfg, &key);
-                        // stash for on_complete
-                        self.cur[r].pending = Some((cell, key, [0.0; N_OUT]));
-                        WorkItem::Op(sm)
-                    }
-                }
-            }
-            Phase::MissCompute => {
-                // charge the simulated PHREEQC time for the miss
-                let cost = self.cur[r].pending_cost;
-                self.cur[r].phase = Phase::MissWrite;
-                WorkItem::Think(cost)
-            }
-            Phase::MissWrite => {
-                // chemistry cost has been charged; now store the result
-                let dcfg = self.dht.as_ref().expect("dht in MissWrite");
-                let (_, key, out) =
-                    self.cur[r].pending.as_ref().expect("pending miss");
-                let sm = DhtSm::write(
-                    dcfg.variant,
-                    dcfg,
-                    key,
-                    &pack_row(out),
-                );
-                WorkItem::Op(sm)
-            }
-            Phase::EndOfStep => {
-                // barrier released: next step
-                self.cur[r].step += 1;
-                self.cur[r].idx = 0;
-                self.cur[r].phase = Phase::StepStart;
-                self.next(rank, _now)
+
+        // step advance (first lane to wake after the end-of-step barrier)
+        if self.cur[r].step_complete {
+            self.cur[r].step_complete = false;
+            self.cur[r].step += 1;
+            self.cur[r].next_cell = 0;
+            self.cur[r].overhead_done = false;
+            if self.cur[r].step >= self.cfg.steps {
+                return WorkItem::Finished;
             }
         }
+
+        // per-step serial overhead (transport + collective sync) first
+        if !self.cur[r].overhead_done {
+            if self.cur[r].overhead_inflight {
+                return self.poll(ctx);
+            }
+            let step = self.cur[r].step;
+            self.apply_transport(step);
+            self.cur[r].overhead_inflight = true;
+            self.lane_job[ctx] = LaneJob::Overhead;
+            self.poll_ns[ctx] = LANE_POLL_NS;
+            let (lo, hi) = self.ranges[r];
+            let cells = (hi - lo) as u64;
+            let sync = (self.cfg.step_sync_ns as f64
+                * (self.cfg.nranks.max(2) as f64).log2())
+                as u64;
+            return WorkItem::Think(
+                self.cfg.step_overhead_ns
+                    + sync
+                    + cells * self.cfg.transport_ns_per_cell,
+            );
+        }
+
+        // chemistry for queued misses (one CPU per rank: serialized)
+        if !self.cur[r].computing {
+            if let Some((cell, key)) = self.cur[r].compute_q.pop_front() {
+                self.cur[r].computing = true;
+                let (rec, cost) = self.simulate_cell(cell);
+                self.lane_job[ctx] = LaneJob::Compute {
+                    write: self.dht.as_ref().map(|_| (key, rec)),
+                };
+                self.poll_ns[ctx] = LANE_POLL_NS;
+                return WorkItem::Think(cost);
+            }
+        }
+
+        // issue the next cell
+        let (lo, hi) = self.ranges[r];
+        if lo + self.cur[r].next_cell < hi {
+            // reference runs simulate cells one at a time (one CPU per
+            // rank); do not consume a cell while another lane computes
+            if self.dht.is_none() && self.cur[r].computing {
+                return self.poll(ctx);
+            }
+            let cell = lo + self.cur[r].next_cell;
+            self.cur[r].next_cell += 1;
+            self.poll_ns[ctx] = LANE_POLL_NS;
+            match &self.dht {
+                None => {
+                    self.cur[r].computing = true;
+                    let (_rec, cost) = self.simulate_cell(cell);
+                    self.lane_job[ctx] = LaneJob::Compute { write: None };
+                    return WorkItem::Think(cost);
+                }
+                Some(dcfg) => {
+                    let row = self.grid.row(cell, self.cfg.dt);
+                    let key = cell_key(&row, self.cfg.digits);
+                    let sm = DhtSm::read(dcfg.variant, dcfg, &key);
+                    self.lane_job[ctx] = LaneJob::Read { cell, key };
+                    self.cur[r].reads_inflight += 1;
+                    return WorkItem::Op(sm);
+                }
+            }
+        }
+
+        // no new cells: wait for in-flight work, or end the step
+        if !self.cur[r].drained() {
+            return self.poll(ctx);
+        }
+        self.poll_ns[ctx] = LANE_POLL_NS;
+        self.cur[r].step_complete = true;
+        WorkItem::Barrier
     }
 
     fn on_complete(
         &mut self,
         rank: u32,
+        lane: u32,
         _now: Time,
         _latency: Time,
         out: <DhtSm as OpSm>::Out,
     ) {
         let r = rank as usize;
+        let ctx = self.ctx(rank, lane);
         self.stats.record(&out);
-        match out.outcome {
-            DhtOutcome::ReadHit(v) => {
-                let (cell, _, _) = self.cur[r].pending.take().expect("pending");
-                self.hits += 1;
-                self.grid.apply(cell, &unpack_value(&v));
-                self.cur[r].idx += 1;
-                self.cur[r].phase = Phase::Cells;
+        match std::mem::replace(&mut self.lane_job[ctx], LaneJob::Idle) {
+            LaneJob::Read { cell, key } => {
+                self.cur[r].reads_inflight -= 1;
+                match out.outcome {
+                    DhtOutcome::ReadHit(v) => {
+                        self.hits += 1;
+                        self.grid.apply(cell, &unpack_value(&v));
+                    }
+                    DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt => {
+                        self.misses += 1;
+                        self.cur[r].compute_q.push_back((cell, key));
+                    }
+                    other => unreachable!("read completed with {other:?}"),
+                }
             }
-            DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt => {
-                // simulate the cell now (real chemistry), charge its cost
-                // via a Think from the MissWrite transition
-                let (cell, key, _) =
-                    self.cur[r].pending.take().expect("pending");
-                let row = self.grid.row(cell, self.cfg.dt);
-                let rec = integrate_cell(&row);
-                self.cur[r].pending_cost = self.cfg.cost.cost_ns(&row, &rec);
-                self.grid.apply(cell, &rec);
-                self.chem_cells += 1;
-                self.misses += 1;
-                self.cur[r].pending = Some((cell, key, rec));
-                self.cur[r].phase = Phase::MissCompute;
+            LaneJob::Write => {
+                self.cur[r].writes_inflight -= 1;
+                debug_assert!(matches!(
+                    out.outcome,
+                    DhtOutcome::WriteFresh
+                        | DhtOutcome::WriteUpdate
+                        | DhtOutcome::WriteEvict
+                ));
             }
-            DhtOutcome::WriteFresh
-            | DhtOutcome::WriteUpdate
-            | DhtOutcome::WriteEvict => {
-                self.cur[r].pending = None;
-                self.cur[r].idx += 1;
-                self.cur[r].phase = Phase::Cells;
-            }
+            _ => unreachable!("op completion without an op job"),
         }
     }
 }
@@ -323,9 +435,15 @@ impl Workload for PoetWorkload {
 pub fn run_poet_des(cfg: PoetDesCfg, net_cfg: NetConfig) -> PoetDesResult {
     let nranks = cfg.nranks;
     let win_bytes = cfg.win_bytes;
+    let lanes = cfg.pipeline.max(1);
     let net = Network::new(net_cfg, nranks);
-    let mut cluster =
-        SimCluster::new(PoetWorkload::new(cfg), net, nranks, win_bytes);
+    let mut cluster = SimCluster::with_pipeline(
+        PoetWorkload::new(cfg),
+        net,
+        nranks,
+        win_bytes,
+        lanes,
+    );
     let sim = cluster.run();
     let w = &mut cluster.workload;
     PoetDesResult {
@@ -404,6 +522,32 @@ mod tests {
         );
         // same physics emerges
         assert!(lf.max_dolomite > 0.0);
+    }
+
+    #[test]
+    fn pipelined_poet_same_physics_faster_lookups() {
+        let mut base = tiny(8, Some(Variant::LockFree));
+        base.steps = 10;
+        let d1 = run_poet_des(base.clone(), NetConfig::pik_ndr());
+        let mut piped = base.clone();
+        piped.pipeline = 8;
+        let d8 = run_poet_des(piped, NetConfig::pik_ndr());
+        // identical coupled physics: every cell is read exactly once per
+        // step regardless of pipelining
+        assert_eq!(
+            d1.hits + d1.misses,
+            d8.hits + d8.misses,
+            "same number of surrogate lookups"
+        );
+        assert!(d8.hit_rate() > 0.4, "hit rate {}", d8.hit_rate());
+        assert!(d8.max_dolomite > 0.0);
+        // overlapping the per-cell DHT reads must not be slower
+        assert!(
+            d8.runtime_s <= d1.runtime_s * 1.05,
+            "pipelined {} vs blocking {}",
+            d8.runtime_s,
+            d1.runtime_s
+        );
     }
 
     #[test]

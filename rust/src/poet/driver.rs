@@ -4,8 +4,10 @@
 //! is advected (native transport, bit-identical to the AOT artifact),
 //! chemistry goes through a [`Chemistry`] engine (PJRT artifacts or the
 //! native mirror), and an optional DHT serves as the surrogate cache
-//! exactly as in the paper: round state -> key -> `DHT_read`; on miss,
-//! simulate + `DHT_write`.
+//! exactly as in the paper: round state -> key -> one pipelined
+//! `DHT_read_batch` over the worker's whole cell range; misses are
+//! simulated and stored with one `DHT_write_batch` pass after chemistry
+//! (DESIGN.md §3).
 //!
 //! Worker threads own disjoint cell ranges ("ranks"); each holds its own
 //! [`Dht`] handle onto the shared shm cluster, mirroring MPI ranks.
@@ -46,6 +48,9 @@ pub struct PoetConfig {
     /// so the surrogate cache operates in the paper's regime (paper:
     /// ~206 µs/cell).  Default 0 = off.
     pub chem_extra_us: f64,
+    /// In-flight DHT ops per batched surrogate lookup/store pass
+    /// (pipeline depth of `read_batch`/`write_batch`; DESIGN.md §3).
+    pub pipeline: usize,
 }
 
 impl PoetConfig {
@@ -62,6 +67,7 @@ impl PoetConfig {
             win_bytes: 4 << 20,
             chem_repeat: 1,
             chem_extra_us: 0.0,
+            pipeline: crate::dht::front::DEFAULT_PIPELINE,
         }
     }
 }
@@ -131,8 +137,11 @@ impl PoetDriver {
 
     /// Run with a DHT surrogate cache of the given variant.
     pub fn run_with_dht(&mut self, variant: Variant) -> PoetRunStats {
-        let handles =
+        let mut handles =
             Dht::create_poet(variant, self.cfg.workers as u32, self.cfg.win_bytes);
+        for h in &mut handles {
+            h.set_pipeline(self.cfg.pipeline);
+        }
         self.run_inner(Some(handles))
     }
 
@@ -235,20 +244,37 @@ fn worker_chunk(
     let mut miss_keys: Vec<Vec<u8>> = Vec::new();
     let mut miss_rows: Vec<f64> = Vec::new();
 
-    for cell in lo..hi {
-        let row = grid.row(cell, dt);
-        if let Some(d) = dht.as_deref_mut() {
-            let key = cell_key(&row, digits);
-            if let Some(v) = d.read(&key) {
-                out.hits += 1;
-                out.updates.push((cell, unpack_value(&v)));
-                continue;
-            }
-            out.misses += 1;
-            miss_keys.push(key);
+    if let Some(d) = dht.as_deref_mut() {
+        // ONE pipelined surrogate lookup for the whole cell range (the
+        // paper's access pattern: every cell's state is keyed per round)
+        let mut keys: Vec<Vec<u8>> = Vec::with_capacity(hi - lo);
+        let mut rows = Vec::with_capacity(hi - lo);
+        for cell in lo..hi {
+            let row = grid.row(cell, dt);
+            keys.push(cell_key(&row, digits));
+            rows.push(row);
         }
-        miss_cells.push(cell);
-        miss_rows.extend_from_slice(&row);
+        let values = d.read_batch(&keys);
+        for (i, val) in values.into_iter().enumerate() {
+            let cell = lo + i;
+            match val {
+                Some(v) => {
+                    out.hits += 1;
+                    out.updates.push((cell, unpack_value(&v)));
+                }
+                None => {
+                    out.misses += 1;
+                    miss_cells.push(cell);
+                    miss_keys.push(std::mem::take(&mut keys[i]));
+                    miss_rows.extend_from_slice(&rows[i]);
+                }
+            }
+        }
+    } else {
+        for cell in lo..hi {
+            miss_cells.push(cell);
+            miss_rows.extend_from_slice(&grid.row(cell, dt));
+        }
     }
 
     if !miss_cells.is_empty() {
@@ -269,13 +295,18 @@ fn worker_chunk(
             }
         }
         out.chem_cells += n as u64;
+        let mut miss_vals: Vec<Vec<u8>> = Vec::with_capacity(n);
         for (i, cell) in miss_cells.iter().enumerate() {
             let rec: [f64; N_OUT] =
                 res[i * N_OUT..(i + 1) * N_OUT].try_into().unwrap();
-            if let Some(d) = dht.as_deref_mut() {
-                d.write(&miss_keys[i], &pack_row(&rec));
+            if dht.is_some() {
+                miss_vals.push(pack_row(&rec));
             }
             out.updates.push((*cell, rec));
+        }
+        if let Some(d) = dht.as_deref_mut() {
+            // ONE pipelined write pass for all misses after chemistry
+            d.write_batch(&miss_keys, &miss_vals);
         }
     }
     out

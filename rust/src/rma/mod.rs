@@ -17,6 +17,11 @@
 //! backends is the key design decision (DESIGN.md §2): the sim results are
 //! produced by exactly the code that the correctness tests exercise under
 //! real concurrency.
+//!
+//! Both backends implement [`RmaBackend`], which adds the *pipelined epoch*
+//! execution model (DESIGN.md §3): instead of one blocking op per rank, up
+//! to `depth` state machines are in flight concurrently — issue many,
+//! flush once, exactly how real `MPI_Put`/`MPI_Get` epochs hide latency.
 
 pub mod shm;
 pub mod sim;
@@ -103,6 +108,42 @@ pub trait OpSm {
     fn step(&mut self, resp: Resp) -> SmStep<Self::Out>;
 }
 
+/// A per-rank execution backend for operation state machines.
+///
+/// Unifies the threaded shared-memory backend ([`shm::ShmRma`]) and the
+/// discrete-event cluster ([`sim::SimRma`]) behind one API, so the DHT
+/// front-end ([`crate::dht::Dht`]) is generic over where its protocol
+/// actually runs.
+///
+/// `exec` is the classic blocking one-op-at-a-time path; `exec_batch` is
+/// the pipelined epoch: all `sms` run to completion with up to `depth` in
+/// flight at once, and the call returns only when every SM has finished
+/// (the epoch-style flush).  Outputs are returned in input order.
+pub trait RmaBackend: Clone {
+    /// The rank this handle issues operations from.
+    fn rank(&self) -> u32;
+
+    /// Ranks (windows) in the cluster.
+    fn nranks(&self) -> u32;
+
+    /// Drive one state machine to completion (blocking).
+    fn exec<S>(&mut self, sm: S) -> S::Out
+    where
+        S: OpSm + 'static,
+        S::Out: 'static;
+
+    /// Pipelined epoch: drive all `sms` with up to `depth` in flight,
+    /// flush, and return their outputs in input order.
+    fn exec_batch<S>(&mut self, sms: Vec<S>, depth: usize) -> Vec<S::Out>
+    where
+        S: OpSm + 'static,
+        S::Out: 'static;
+
+    /// Direct read of raw bytes from a target window (diagnostics,
+    /// checkpointing — not an RMA-modelled operation).
+    fn peek(&self, target: u32, offset: u64, len: u32) -> Vec<u8>;
+}
+
 /// Work item a workload hands to the DES engine for a rank.
 pub enum WorkItem<S> {
     /// Run this operation state machine.
@@ -117,17 +158,23 @@ pub enum WorkItem<S> {
 }
 
 /// A benchmark/application workload driving the DES engine.
+///
+/// With a pipelined cluster (`SimCluster::with_pipeline`), every rank has
+/// `depth` independent *lanes*, each executing one op at a time; `lane`
+/// identifies which of them is asking for work / reporting completion.
+/// Workloads that keep at most one op in flight per rank can ignore it.
 pub trait Workload {
     type Sm: OpSm;
 
-    /// Next work item for `rank` at simulated time `now`.
-    fn next(&mut self, rank: u32, now: Time) -> WorkItem<Self::Sm>;
+    /// Next work item for `rank`'s `lane` at simulated time `now`.
+    fn next(&mut self, rank: u32, lane: u32, now: Time) -> WorkItem<Self::Sm>;
 
     /// Called when an op completes (latency = now - issue time is tracked
     /// by the engine and passed here).
     fn on_complete(
         &mut self,
         rank: u32,
+        lane: u32,
         now: Time,
         latency: Time,
         out: <Self::Sm as OpSm>::Out,

@@ -11,182 +11,299 @@
 //! constants + golden vectors — the single source of truth shared between
 //! the layers); [`Engine`] compiles artifacts on the PJRT CPU client and
 //! executes them with f64 buffers.
+//!
+//! The XLA bindings are not part of the offline crate set, so the real
+//! engine is gated behind the `pjrt` cargo feature (DESIGN.md §Build).
+//! Without it, [`Engine::load`] reports the runtime as unavailable and
+//! every consumer falls back to [`crate::poet::NativeChemistry`], the
+//! bit-compatible native mirror.
 
 pub mod manifest;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+#[cfg(not(feature = "pjrt"))]
+use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+use anyhow::Result;
 
 pub use manifest::{GoldenChemistry, GoldenTransport, Manifest};
 
-/// A compiled artifact cache over the PJRT CPU client.
-pub struct Engine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    execs: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+/// Default artifact directory: `$MPI_DHT_ARTIFACTS` or `./artifacts`.
+fn artifact_dir() -> PathBuf {
+    std::env::var_os("MPI_DHT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
+// ---------------------------------------------------------------------------
+// Stub engine (default build): same API, reports PJRT as unavailable.
+// ---------------------------------------------------------------------------
+
+/// A compiled artifact cache over the PJRT CPU client (stub: the `pjrt`
+/// feature is disabled, so loading always fails with a clear message).
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    #[allow(dead_code)] // never constructed in stub builds
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
 impl Engine {
+    /// Whether this build can execute PJRT artifacts at all.  Callers
+    /// that skip when artifacts are missing should skip on this too —
+    /// artifacts may exist on disk while the runtime is compiled out.
+    pub const fn available() -> bool {
+        false
+    }
+
+    fn unavailable() -> anyhow::Error {
+        anyhow::anyhow!(
+            "built without the `pjrt` feature: the XLA/PJRT runtime is \
+             unavailable; use the native chemistry engine (--engine native)"
+        )
+    }
+
     /// Load the artifact directory (must contain `manifest.txt`).
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.txt"))?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Self {
-            client,
-            dir,
-            manifest,
-            execs: std::sync::Mutex::new(HashMap::new()),
-        })
+        // Validate the manifest so the error distinguishes "no artifacts"
+        // from "artifacts fine, runtime missing".
+        let _ = Manifest::load(dir.as_ref().join("manifest.txt"))?;
+        Err(Self::unavailable())
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        unreachable!("stub Engine cannot be constructed")
     }
 
-    /// Compile (or fetch cached) an artifact by file name.
-    fn executable(&self, file: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.execs.lock().unwrap().get(file) {
-            return Ok(e.clone());
-        }
-        let path = self.dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .map_err(|e| anyhow!("parse {file}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exec = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {file}: {e:?}"))?;
-        let exec = std::sync::Arc::new(exec);
-        self.execs
-            .lock()
-            .unwrap()
-            .insert(file.to_string(), exec.clone());
-        Ok(exec)
-    }
-
-    /// Eagerly compile every artifact (startup warm-up).
     pub fn warm_up(&self) -> Result<()> {
-        for c in &self.manifest.chemistry {
-            self.executable(&c.file)?;
-        }
-        for t in &self.manifest.transport {
-            self.executable(&t.file)?;
-        }
-        Ok(())
+        Err(Self::unavailable())
     }
 
-    /// Smallest lowered chemistry batch size >= n (or the largest one).
-    pub fn chemistry_batch_for(&self, n: usize) -> Result<usize> {
-        let mut sizes: Vec<usize> =
-            self.manifest.chemistry.iter().map(|c| c.batch).collect();
-        if sizes.is_empty() {
-            return Err(anyhow!("no chemistry artifacts in manifest"));
-        }
-        sizes.sort_unstable();
-        Ok(*sizes.iter().find(|&&b| b >= n).unwrap_or(sizes.last().unwrap()))
+    pub fn chemistry_batch_for(&self, _n: usize) -> Result<usize> {
+        Err(Self::unavailable())
     }
 
-    /// Run the batched chemistry step on `rows` (`n` cells of
-    /// `n_in` doubles each, row-major).  Pads to the nearest lowered batch
-    /// size and splits across multiple calls when needed.  Returns
-    /// `n * n_out` doubles.
-    pub fn chemistry(&self, rows: &[f64], n: usize) -> Result<Vec<f64>> {
-        let n_in = self.manifest.n_in;
-        let n_out = self.manifest.n_out;
-        assert_eq!(rows.len(), n * n_in, "row buffer shape");
-        let mut out = Vec::with_capacity(n * n_out);
-        let mut done = 0usize;
-        while done < n {
-            let batch = self.chemistry_batch_for(n - done)?;
-            let take = batch.min(n - done);
-            let art = self
-                .manifest
-                .chemistry
-                .iter()
-                .find(|c| c.batch == batch)
-                .expect("batch size from manifest");
-            let exec = self.executable(&art.file)?;
-            // pad the tail with copies of the first row (valid states)
-            let mut buf = Vec::with_capacity(batch * n_in);
-            buf.extend_from_slice(&rows[done * n_in..(done + take) * n_in]);
-            for _ in take..batch {
-                buf.extend_from_slice(&rows[done * n_in..done * n_in + n_in]);
-            }
-            let lit = xla::Literal::vec1(&buf)
-                .reshape(&[batch as i64, n_in as i64])
-                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
-            let result = exec
-                .execute::<xla::Literal>(&[lit])
-                .map_err(|e| anyhow!("execute chemistry: {e:?}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-            // aot.py lowers with return_tuple=True: unwrap the 1-tuple
-            let vals = result
-                .to_tuple1()
-                .map_err(|e| anyhow!("untuple: {e:?}"))?
-                .to_vec::<f64>()
-                .map_err(|e| anyhow!("to_vec: {e:?}"))?;
-            out.extend_from_slice(&vals[..take * n_out]);
-            done += take;
-        }
-        Ok(out)
+    pub fn chemistry(&self, _rows: &[f64], _n: usize) -> Result<Vec<f64>> {
+        Err(Self::unavailable())
     }
 
-    /// Run the transport artifact for grid (ny, nx): `c` is
-    /// `n_solutes*ny*nx` doubles; returns the advected planes.
     pub fn transport(
         &self,
-        ny: usize,
-        nx: usize,
-        c: &[f64],
-        inflow: &[f64],
-        cf: [f64; 2],
-        inj_rows: i32,
+        _ny: usize,
+        _nx: usize,
+        _c: &[f64],
+        _inflow: &[f64],
+        _cf: [f64; 2],
+        _inj_rows: i32,
     ) -> Result<Vec<f64>> {
-        let ns = self.manifest.n_solutes;
-        assert_eq!(c.len(), ns * ny * nx);
-        assert_eq!(inflow.len(), ns * 2);
-        let art = self
-            .manifest
-            .transport
-            .iter()
-            .find(|t| t.ny == ny && t.nx == nx)
-            .ok_or_else(|| {
-                anyhow!("no transport artifact for {ny}x{nx} (rebuild with \
-                         `make artifacts` and --grids)")
-            })?;
-        let exec = self.executable(&art.file)?;
-        let lit_c = xla::Literal::vec1(c)
-            .reshape(&[ns as i64, ny as i64, nx as i64])
-            .map_err(|e| anyhow!("reshape c: {e:?}"))?;
-        let lit_inflow = xla::Literal::vec1(inflow)
-            .reshape(&[ns as i64, 2])
-            .map_err(|e| anyhow!("reshape inflow: {e:?}"))?;
-        let lit_cf = xla::Literal::vec1(&cf[..]);
-        let lit_inj = xla::Literal::vec1(&[inj_rows][..]);
-        let result = exec
-            .execute::<xla::Literal>(&[lit_c, lit_inflow, lit_cf, lit_inj])
-            .map_err(|e| anyhow!("execute transport: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        result
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?
-            .to_vec::<f64>()
-            .map_err(|e| anyhow!("to_vec: {e:?}"))
+        Err(Self::unavailable())
     }
 
     /// Default artifact directory: `$MPI_DHT_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
-        std::env::var_os("MPI_DHT_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
+        artifact_dir()
     }
 }
+
+// ---------------------------------------------------------------------------
+// Real engine (feature `pjrt`): requires the `xla` bindings crate.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_engine {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{anyhow, Context, Result};
+
+    use super::Manifest;
+
+    /// A compiled artifact cache over the PJRT CPU client.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        manifest: Manifest,
+        execs: std::sync::Mutex<
+            HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>,
+        >,
+    }
+
+    impl Engine {
+        /// Whether this build can execute PJRT artifacts at all.
+        pub const fn available() -> bool {
+            true
+        }
+
+        /// Load the artifact directory (must contain `manifest.txt`).
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(dir.join("manifest.txt"))?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(Self {
+                client,
+                dir,
+                manifest,
+                execs: std::sync::Mutex::new(HashMap::new()),
+            })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Compile (or fetch cached) an artifact by file name.
+        fn executable(
+            &self,
+            file: &str,
+        ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            if let Some(e) = self.execs.lock().unwrap().get(file) {
+                return Ok(e.clone());
+            }
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parse {file}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exec = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {file}: {e:?}"))?;
+            let exec = std::sync::Arc::new(exec);
+            self.execs
+                .lock()
+                .unwrap()
+                .insert(file.to_string(), exec.clone());
+            Ok(exec)
+        }
+
+        /// Eagerly compile every artifact (startup warm-up).
+        pub fn warm_up(&self) -> Result<()> {
+            for c in &self.manifest.chemistry {
+                self.executable(&c.file)?;
+            }
+            for t in &self.manifest.transport {
+                self.executable(&t.file)?;
+            }
+            Ok(())
+        }
+
+        /// Smallest lowered chemistry batch size >= n (or the largest one).
+        pub fn chemistry_batch_for(&self, n: usize) -> Result<usize> {
+            let mut sizes: Vec<usize> =
+                self.manifest.chemistry.iter().map(|c| c.batch).collect();
+            if sizes.is_empty() {
+                return Err(anyhow!("no chemistry artifacts in manifest"));
+            }
+            sizes.sort_unstable();
+            Ok(*sizes
+                .iter()
+                .find(|&&b| b >= n)
+                .unwrap_or(sizes.last().unwrap()))
+        }
+
+        /// Run the batched chemistry step on `rows` (`n` cells of
+        /// `n_in` doubles each, row-major).  Pads to the nearest lowered
+        /// batch size and splits across multiple calls when needed.
+        /// Returns `n * n_out` doubles.
+        pub fn chemistry(&self, rows: &[f64], n: usize) -> Result<Vec<f64>> {
+            let n_in = self.manifest.n_in;
+            let n_out = self.manifest.n_out;
+            assert_eq!(rows.len(), n * n_in, "row buffer shape");
+            let mut out = Vec::with_capacity(n * n_out);
+            let mut done = 0usize;
+            while done < n {
+                let batch = self.chemistry_batch_for(n - done)?;
+                let take = batch.min(n - done);
+                let art = self
+                    .manifest
+                    .chemistry
+                    .iter()
+                    .find(|c| c.batch == batch)
+                    .expect("batch size from manifest");
+                let exec = self.executable(&art.file)?;
+                // pad the tail with copies of the first row (valid states)
+                let mut buf = Vec::with_capacity(batch * n_in);
+                buf.extend_from_slice(&rows[done * n_in..(done + take) * n_in]);
+                for _ in take..batch {
+                    buf.extend_from_slice(
+                        &rows[done * n_in..done * n_in + n_in],
+                    );
+                }
+                let lit = xla::Literal::vec1(&buf)
+                    .reshape(&[batch as i64, n_in as i64])
+                    .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+                let result = exec
+                    .execute::<xla::Literal>(&[lit])
+                    .map_err(|e| anyhow!("execute chemistry: {e:?}"))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+                // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+                let vals = result
+                    .to_tuple1()
+                    .map_err(|e| anyhow!("untuple: {e:?}"))?
+                    .to_vec::<f64>()
+                    .map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                out.extend_from_slice(&vals[..take * n_out]);
+                done += take;
+            }
+            Ok(out)
+        }
+
+        /// Run the transport artifact for grid (ny, nx): `c` is
+        /// `n_solutes*ny*nx` doubles; returns the advected planes.
+        pub fn transport(
+            &self,
+            ny: usize,
+            nx: usize,
+            c: &[f64],
+            inflow: &[f64],
+            cf: [f64; 2],
+            inj_rows: i32,
+        ) -> Result<Vec<f64>> {
+            let ns = self.manifest.n_solutes;
+            assert_eq!(c.len(), ns * ny * nx);
+            assert_eq!(inflow.len(), ns * 2);
+            let art = self
+                .manifest
+                .transport
+                .iter()
+                .find(|t| t.ny == ny && t.nx == nx)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "no transport artifact for {ny}x{nx} (rebuild with \
+                         `make artifacts` and --grids)"
+                    )
+                })?;
+            let exec = self.executable(&art.file)?;
+            let lit_c = xla::Literal::vec1(c)
+                .reshape(&[ns as i64, ny as i64, nx as i64])
+                .map_err(|e| anyhow!("reshape c: {e:?}"))?;
+            let lit_inflow = xla::Literal::vec1(inflow)
+                .reshape(&[ns as i64, 2])
+                .map_err(|e| anyhow!("reshape inflow: {e:?}"))?;
+            let lit_cf = xla::Literal::vec1(&cf[..]);
+            let lit_inj = xla::Literal::vec1(&[inj_rows][..]);
+            let result = exec
+                .execute::<xla::Literal>(&[lit_c, lit_inflow, lit_cf, lit_inj])
+                .map_err(|e| anyhow!("execute transport: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            result
+                .to_tuple1()
+                .map_err(|e| anyhow!("untuple: {e:?}"))?
+                .to_vec::<f64>()
+                .map_err(|e| anyhow!("to_vec: {e:?}"))
+        }
+
+        /// Default artifact directory: `$MPI_DHT_ARTIFACTS` or `./artifacts`.
+        pub fn default_dir() -> PathBuf {
+            super::artifact_dir()
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_engine::Engine;

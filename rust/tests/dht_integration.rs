@@ -207,11 +207,95 @@ fn checkpoint_skips_invalid_buckets() {
 fn checkpoint_from_bytes_rejects_garbage() {
     assert!(DhtCheckpoint::from_bytes(b"").is_none());
     assert!(DhtCheckpoint::from_bytes(b"DHTCKPT1").is_none());
-    let mut good = {
+    let good = {
         let mut h = Dht::create_poet(Variant::LockFree, 1, 1 << 20);
         h[0].write(&key_for(1, 80), &value_for(1, 104));
         DhtCheckpoint::capture(&h).to_bytes()
     };
-    good.pop(); // truncate
-    assert!(DhtCheckpoint::from_bytes(&good).is_none());
+    // truncated payload
+    let mut truncated = good.clone();
+    truncated.pop();
+    assert!(DhtCheckpoint::from_bytes(&truncated).is_none());
+    // trailing garbage (length mismatch the other way)
+    let mut padded = good.clone();
+    padded.push(0);
+    assert!(DhtCheckpoint::from_bytes(&padded).is_none());
+    // corrupted magic
+    let mut bad_magic = good.clone();
+    bad_magic[0] ^= 0xFF;
+    assert!(DhtCheckpoint::from_bytes(&bad_magic).is_none());
+    // unknown variant byte
+    let mut bad_variant = good.clone();
+    bad_variant[8] = 9;
+    assert!(DhtCheckpoint::from_bytes(&bad_variant).is_none());
+    // zero-length record geometry must be rejected, not divide the world
+    let mut bad_geom = good.clone();
+    bad_geom[9..13].copy_from_slice(&0u32.to_le_bytes());
+    assert!(DhtCheckpoint::from_bytes(&bad_geom).is_none());
+    // an entry count crafted to wrap `25 + n * rec` must not pass the
+    // length check (or blow up Vec::with_capacity)
+    let mut overflow = Vec::new();
+    overflow.extend_from_slice(b"DHTCKPT1");
+    overflow.push(2); // lock-free
+    overflow.extend_from_slice(&1u32.to_le_bytes()); // key_len = 1
+    overflow.extend_from_slice(&7u32.to_le_bytes()); // val_len = 7
+    overflow.extend_from_slice(&(1u64 << 61).to_le_bytes()); // n * 8 wraps
+    assert_eq!(overflow.len(), 25);
+    assert!(DhtCheckpoint::from_bytes(&overflow).is_none());
+    // the untouched original still parses
+    assert!(DhtCheckpoint::from_bytes(&good).is_some());
+}
+
+/// `to_bytes`/`from_bytes` round-trips exactly, for all three variants.
+#[test]
+fn checkpoint_bytes_roundtrip_all_variants() {
+    for variant in Variant::ALL {
+        let mut h = Dht::create_poet(variant, 3, 1 << 20);
+        for i in 0..120u64 {
+            h[(i % 3) as usize].write(&key_for(i, 80), &value_for(i * 7, 104));
+        }
+        let ckpt = DhtCheckpoint::capture(&h);
+        assert!(ckpt.entries.len() >= 118, "{variant:?}");
+        let parsed =
+            DhtCheckpoint::from_bytes(&ckpt.to_bytes()).expect("parse");
+        assert_eq!(parsed.variant, ckpt.variant, "{variant:?}");
+        assert_eq!(parsed.key_len, ckpt.key_len);
+        assert_eq!(parsed.val_len, ckpt.val_len);
+        // entry multiset identical (order is deterministic: window scan)
+        assert_eq!(parsed.entries, ckpt.entries, "{variant:?}");
+    }
+}
+
+/// Shrinking restore (ranks 4 -> 2, much smaller windows): entries
+/// re-route, evictions happen, and everything still readable is correct.
+#[test]
+fn checkpoint_restore_shrinking_geometry() {
+    let mut src = Dht::create_poet(Variant::LockFree, 4, 1 << 20);
+    for i in 0..400u64 {
+        src[(i % 4) as usize].write(&key_for(i, 80), &value_for(i * 3, 104));
+    }
+    let ckpt = DhtCheckpoint::capture(&src);
+    assert!(ckpt.entries.len() >= 395);
+
+    // 2 ranks x 100 buckets: far too small for 400 entries -> evictions
+    let bucket = mpi_dht::dht::BucketLayout::new(Variant::LockFree, 80, 104)
+        .size();
+    let mut small = ckpt.restore(Variant::LockFree, 2, 100 * bucket);
+    let mut hits = 0u64;
+    for i in 0..400u64 {
+        if let Some(v) = small[(i % 2) as usize].read(&key_for(i, 80)) {
+            assert_eq!(v, value_for(i * 3, 104), "wrong value after restore");
+            hits += 1;
+        }
+    }
+    // the shrunken table keeps only what fits, but never invents data
+    assert!(hits > 0, "some entries must survive");
+    assert!(
+        (hits as usize) < ckpt.entries.len(),
+        "a 200-bucket table cannot hold all {} entries",
+        ckpt.entries.len()
+    );
+    // restore stats were cleared; only our probe reads are counted
+    let reads: u64 = small.iter().map(|h| h.stats().reads).sum();
+    assert_eq!(reads, 400);
 }

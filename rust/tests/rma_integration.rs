@@ -139,7 +139,7 @@ impl OpSm for ProbeSm {
 impl Workload for TornProbe {
     type Sm = ProbeSm;
 
-    fn next(&mut self, rank: u32, _now: Time) -> WorkItem<ProbeSm> {
+    fn next(&mut self, rank: u32, _lane: u32, _now: Time) -> WorkItem<ProbeSm> {
         match rank {
             0 if self.launched[0] < self.writer_ops => {
                 self.launched[0] += 1;
@@ -156,6 +156,7 @@ impl Workload for TornProbe {
     fn on_complete(
         &mut self,
         _rank: u32,
+        _lane: u32,
         _now: Time,
         _lat: Time,
         out: Option<Vec<u8>>,

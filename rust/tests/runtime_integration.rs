@@ -7,6 +7,10 @@
 use mpi_dht::runtime::Engine;
 
 fn engine() -> Option<Engine> {
+    if !Engine::available() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let dir = Engine::default_dir();
     if !dir.join("manifest.txt").exists() {
         eprintln!("skipping: artifacts not built");

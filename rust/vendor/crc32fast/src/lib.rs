@@ -1,0 +1,87 @@
+//! Minimal CRC32 (IEEE 802.3 polynomial, reflected) exposing the
+//! `crc32fast::Hasher` API surface this workspace uses.  Vendored for the
+//! offline build environment; the DHT protocol only requires *a* fixed
+//! 32-bit checksum (see `dht::bucket::record_crc`), and this computes the
+//! standard CRC32 so results match the real `crc32fast` crate if it is
+//! ever swapped back in.
+
+const POLY: u32 = 0xEDB8_8320;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// Streaming CRC32 hasher (API-compatible subset of `crc32fast::Hasher`).
+#[derive(Clone, Debug)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher {
+    pub fn new() -> Self {
+        Hasher { state: !0 }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut crc = self.state;
+        for &b in bytes {
+            crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+        }
+        self.state = crc;
+    }
+
+    pub fn finalize(self) -> u32 {
+        !self.state
+    }
+}
+
+/// One-shot convenience (`crc32fast::hash`).
+pub fn hash(bytes: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(bytes);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard CRC32 ("123456789") = 0xCBF43926
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        // streaming equals one-shot
+        let mut h = Hasher::new();
+        h.update(b"1234");
+        h.update(b"56789");
+        assert_eq!(h.finalize(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn detects_single_byte_changes() {
+        let a = hash(b"hello world");
+        let b = hash(b"hellp world");
+        assert_ne!(a, b);
+    }
+}
