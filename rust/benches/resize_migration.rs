@@ -1,0 +1,266 @@
+//! Elastic-resize ablation (DESIGN.md §8): read/write throughput *during*
+//! an online capacity resize, for all three DHT variants, on both
+//! backends.
+//!
+//! The headline claim: the lock-free variant keeps completing reads while
+//! the table doubles under it — no stop-the-world barrier, only the
+//! dual-lookup surcharge — whereas the coarse variant serializes each
+//! migrated bucket behind its window lock (migration quanta and readers
+//! exclude each other per rank).  The DES section measures simulated
+//! time (deterministic, paper-calibrated network); the shm section
+//! measures wall time under real thread concurrency.
+//!
+//! Run: `cargo bench --bench resize_migration`.
+
+mod common;
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use common::banner;
+use mpi_dht::bench::keys::{key_for, value_for};
+use mpi_dht::bench::table::Table;
+use mpi_dht::dht::{Dht, Variant};
+use mpi_dht::net::{NetConfig, Network};
+
+const KEY: usize = 16;
+const VAL: usize = 32;
+
+// ------------------------------------------------------------------ DES
+
+fn des_section() {
+    const NRANKS: u32 = 8;
+    const LANES: u32 = 16;
+    const KEYS: u64 = 2048;
+    println!(
+        "\n[DES] {NRANKS} ranks, {KEYS} keys, grow x4 mid-run, \
+         PIK NDR profile (simulated time)"
+    );
+    let mut t = Table::new(vec![
+        "variant", "phase", "read Mops", "hit %", "rounds", "migrated",
+        "dual reads",
+    ]);
+    for variant in Variant::ALL {
+        let bucket =
+            mpi_dht::dht::BucketLayout::new(variant, KEY, VAL).size();
+        let win_bytes = 512 * bucket; // 512 buckets/rank, ~50 % load
+        let net = Network::new(NetConfig::pik_ndr(), NRANKS);
+        let mut h =
+            Dht::create_sim(variant, NRANKS, win_bytes, KEY, VAL, net, LANES);
+        let slice = |r: u32| -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+            let lo = KEYS * r as u64 / NRANKS as u64;
+            let hi = KEYS * (r as u64 + 1) / NRANKS as u64;
+            (
+                (lo..hi).map(|i| key_for(i, KEY)).collect(),
+                (lo..hi).map(|i| value_for(i * 3, VAL)).collect(),
+            )
+        };
+        for r in 0..NRANKS {
+            let (keys, vals) = slice(r);
+            h[r as usize].write_batch(&keys, &vals);
+        }
+        // one read round over every rank's slice; returns (reads, hits)
+        let mut round = |h: &mut [Dht<mpi_dht::rma::sim::SimRma>]| -> (u64, u64) {
+            let (mut reads, mut hits) = (0u64, 0u64);
+            for r in 0..NRANKS {
+                let (keys, vals) = slice(r);
+                let got = h[r as usize].read_batch(&keys);
+                for (g, v) in got.iter().zip(vals.iter()) {
+                    reads += 1;
+                    if let Some(gv) = g {
+                        assert_eq!(gv, v, "foreign value during resize");
+                        hits += 1;
+                    }
+                }
+            }
+            (reads, hits)
+        };
+        let sums = |h: &[Dht<mpi_dht::rma::sim::SimRma>]| {
+            let (mut mig, mut dual) = (0u64, 0u64);
+            for d in h {
+                mig += d.stats().migrated;
+                dual += d.stats().dual_reads;
+            }
+            (mig, dual)
+        };
+        let mut report = |label: &str,
+                          reads: u64,
+                          hits: u64,
+                          dt: u64,
+                          rounds: u64,
+                          mig: u64,
+                          dual: u64| {
+            let mops = reads as f64 / dt.max(1) as f64 * 1e3;
+            t.row(vec![
+                variant.name().to_string(),
+                label.to_string(),
+                format!("{mops:.2}"),
+                format!("{:.1}", 100.0 * hits as f64 / reads as f64),
+                rounds.to_string(),
+                mig.to_string(),
+                dual.to_string(),
+            ]);
+        };
+        // steady state before the resize
+        let t0 = h[0].sim_time();
+        let (reads, hits) = round(&mut h);
+        let dt = h[0].sim_time() - t0;
+        let (mig, dual) = sums(&h);
+        report("before", reads, hits, dt, 1, mig, dual);
+        // open the migration epoch and keep reading until it closes
+        let old_buckets = h[0].buckets_per_rank();
+        h[0].resize(old_buckets * 4).expect("resize");
+        let t0 = h[0].sim_time();
+        let (mut reads, mut hits, mut rounds) = (0u64, 0u64, 0u64);
+        while (0..NRANKS).any(|r| h[r as usize].migrating()) {
+            let (r, hh) = round(&mut h);
+            reads += r;
+            hits += hh;
+            rounds += 1;
+            assert!(rounds < 1000, "migration never completed");
+        }
+        let dt = h[0].sim_time() - t0;
+        let (mig, dual) = sums(&h);
+        report("during", reads, hits, dt, rounds, mig, dual);
+        assert_eq!(h[0].buckets_per_rank(), old_buckets * 4);
+        // steady state on the grown table
+        let t0 = h[0].sim_time();
+        let (reads, hits) = round(&mut h);
+        let dt = h[0].sim_time() - t0;
+        let (mig, dual) = sums(&h);
+        report("after", reads, hits, dt, 1, mig, dual);
+    }
+    print!("{}", t.render());
+}
+
+// ------------------------------------------------------------------ shm
+
+fn shm_section() {
+    const NRANKS: u32 = 4;
+    const KEYS: u64 = 4096;
+    println!(
+        "\n[shm] {NRANKS} rank threads, {KEYS} keys, grow x4 mid-run \
+         (wall time, concurrent readers vs live migration)"
+    );
+    let mut t = Table::new(vec![
+        "variant", "phase", "read Mops", "hit %", "migrated", "dual reads",
+    ]);
+    for variant in Variant::ALL {
+        let bucket =
+            mpi_dht::dht::BucketLayout::new(variant, KEY, VAL).size();
+        let win_bytes = 2048 * bucket;
+        let mut handles = Dht::create(variant, NRANKS, win_bytes, KEY, VAL);
+        for r in 0..NRANKS as u64 {
+            let lo = KEYS * r / NRANKS as u64;
+            let hi = KEYS * (r + 1) / NRANKS as u64;
+            let keys: Vec<Vec<u8>> =
+                (lo..hi).map(|i| key_for(i, KEY)).collect();
+            let vals: Vec<Vec<u8>> =
+                (lo..hi).map(|i| value_for(i * 3, VAL)).collect();
+            handles[r as usize].write_batch(&keys, &vals);
+        }
+        let initiator = handles[0].fork();
+        let start = Arc::new(Barrier::new(NRANKS as usize + 1));
+        let resized = Arc::new(Barrier::new(NRANKS as usize + 1));
+        let mut joins = Vec::new();
+        for (r, mut h) in handles.into_iter().enumerate() {
+            let start = Arc::clone(&start);
+            let resized = Arc::clone(&resized);
+            joins.push(std::thread::spawn(move || {
+                let lo = KEYS * r as u64 / NRANKS as u64;
+                let hi = KEYS * (r as u64 + 1) / NRANKS as u64;
+                let keys: Vec<Vec<u8>> =
+                    (lo..hi).map(|i| key_for(i, KEY)).collect();
+                let vals: Vec<Vec<u8>> =
+                    (lo..hi).map(|i| value_for(i * 3, VAL)).collect();
+                // steady phase
+                let t0 = Instant::now();
+                let (mut s_reads, mut s_hits) = (0u64, 0u64);
+                for _ in 0..10 {
+                    for (g, v) in
+                        h.read_batch(&keys).iter().zip(vals.iter())
+                    {
+                        s_reads += 1;
+                        if let Some(gv) = g {
+                            assert_eq!(gv, v, "foreign value (steady)");
+                            s_hits += 1;
+                        }
+                    }
+                }
+                let steady_s = t0.elapsed().as_secs_f64();
+                start.wait();
+                resized.wait(); // the migration epoch is now open
+                let t0 = Instant::now();
+                let (mut m_reads, mut m_hits) = (0u64, 0u64);
+                loop {
+                    for (g, v) in
+                        h.read_batch(&keys).iter().zip(vals.iter())
+                    {
+                        m_reads += 1;
+                        if let Some(gv) = g {
+                            assert_eq!(gv, v, "foreign value (migrating)");
+                            m_hits += 1;
+                        }
+                    }
+                    if !h.migrating() {
+                        break;
+                    }
+                }
+                let during_s = t0.elapsed().as_secs_f64();
+                (s_reads, s_hits, steady_s, m_reads, m_hits, during_s,
+                 h.take_stats())
+            }));
+        }
+        start.wait();
+        let mut initiator = initiator;
+        let old_buckets = initiator.buckets_per_rank();
+        initiator.resize(old_buckets * 4).expect("resize");
+        resized.wait();
+        let (mut s_reads, mut s_hits, mut s_secs) = (0u64, 0u64, 0f64);
+        let (mut m_reads, mut m_hits, mut m_secs) = (0u64, 0u64, 0f64);
+        let (mut migrated, mut dual) = (0u64, 0u64);
+        for j in joins {
+            let (sr, sh, ss, mr, mh, ms, stats) = j.join().expect("reader");
+            s_reads += sr;
+            s_hits += sh;
+            s_secs += ss;
+            m_reads += mr;
+            m_hits += mh;
+            m_secs += ms;
+            migrated += stats.migrated;
+            dual += stats.dual_reads;
+        }
+        let row = |label: &str, reads: u64, hits: u64, secs: f64,
+                   mig: u64, du: u64| {
+            vec![
+                variant.name().to_string(),
+                label.to_string(),
+                format!("{:.2}", reads as f64 / secs.max(1e-9) / 1e6),
+                format!("{:.1}", 100.0 * hits as f64 / reads.max(1) as f64),
+                mig.to_string(),
+                du.to_string(),
+            ]
+        };
+        t.row(row("before", s_reads, s_hits, s_secs, 0, 0));
+        t.row(row("during", m_reads, m_hits, m_secs, migrated, dual));
+        assert!(
+            m_reads > 0,
+            "{variant:?}: reads must keep completing during migration"
+        );
+    }
+    print!("{}", t.render());
+    println!(
+        "\n(every read during migration is verified against its key's \
+         value: no stop-the-world, no foreign values — lock-free pays \
+         only the dual-lookup surcharge)"
+    );
+}
+
+fn main() {
+    banner(
+        "Elastic resize — throughput during live lock-free migration",
+        "DESIGN.md §8 (beyond the paper: §6 defers resizing to restarts)",
+    );
+    des_section();
+    shm_section();
+}

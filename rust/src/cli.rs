@@ -23,6 +23,7 @@ const VALUED: &[&str] = &[
     "--engine", "--artifacts", "--win-bytes", "--seed", "--config",
     "--set", "--clients", "--out", "--repeats", "--read-percent",
     "--zipf-range", "--theta", "--grid", "--pipeline",
+    "--resize-at-iter", "--resize-factor",
 ];
 
 impl Args {

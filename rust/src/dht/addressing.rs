@@ -48,6 +48,16 @@ impl Addressing {
         8 - self.index_bytes + 1
     }
 
+    /// Same rank mapping, different per-window bucket count — the basis
+    /// of the elastic resize's epoch-tagged addressing (DESIGN.md §8).
+    /// During a migration epoch a key has two candidate sets: the *old*
+    /// one (this addressing) and the *new* one (`rescale(new_buckets)`).
+    /// `target` depends only on `nranks`, so both sets live on the same
+    /// rank and migration never moves entries across ranks.
+    pub fn rescale(&self, buckets_per_window: u64) -> Addressing {
+        Addressing::new(self.nranks, buckets_per_window)
+    }
+
     pub fn hash(&self, key: &[u8]) -> u64 {
         key_hash(key)
     }
@@ -139,5 +149,21 @@ mod tests {
         let a = Addressing::new(64, 10_000);
         let key = [7u8; 80];
         assert_eq!(a.indices(a.hash(&key)), a.indices(a.hash(&key)));
+    }
+
+    #[test]
+    fn rescale_keeps_rank_changes_candidates() {
+        let a = Addressing::new(64, 1000);
+        let b = a.rescale(70_000); // crosses an index-byte boundary
+        assert_eq!(b.nranks(), 64);
+        assert_eq!(b.buckets(), 70_000);
+        assert_eq!(b.index_bytes(), 3);
+        let key = [9u8; 80];
+        let h = a.hash(&key);
+        // the rank a key routes to is capacity-independent
+        assert_eq!(a.target(h), b.target(h));
+        for idx in b.indices(h) {
+            assert!(idx < 70_000);
+        }
     }
 }

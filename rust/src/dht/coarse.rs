@@ -18,12 +18,15 @@ use super::bucket::BucketLayout;
 use super::{DhtConfig, DhtOutcome, OpOut};
 
 /// Probe plan shared by the protocol SMs of all variants: target rank,
-/// candidate indices, layout, and request builders.
+/// candidate indices, layout, and request builders.  `base` locates the
+/// table's window segment (0 until an elastic resize re-homes the table —
+/// DESIGN.md §8), so one plan type serves every table epoch.
 #[derive(Clone, Debug)]
 pub(crate) struct Plan {
     pub target: u32,
     pub indices: Vec<u64>,
     pub layout: BucketLayout,
+    pub base: u64,
 }
 
 impl Plan {
@@ -33,11 +36,14 @@ impl Plan {
             target: cfg.addressing.target(hash),
             indices: cfg.addressing.indices(hash),
             layout: cfg.layout,
+            base: cfg.base,
         }
     }
 
     fn rec_off(&self, i: usize) -> u64 {
-        self.layout.bucket_off(self.indices[i]) + self.layout.meta_off() as u64
+        self.base
+            + self.layout.bucket_off(self.indices[i])
+            + self.layout.meta_off() as u64
     }
 
     /// Get the full bucket record (meta..end) at probe `i`.
@@ -66,7 +72,9 @@ impl Plan {
 
     /// Absolute window offset of the per-bucket lock word (fine-grained).
     pub fn lock_off(&self, i: usize) -> u64 {
-        self.layout.bucket_off(self.indices[i]) + self.layout.lock_off() as u64
+        self.base
+            + self.layout.bucket_off(self.indices[i])
+            + self.layout.lock_off() as u64
     }
 
     /// Put just the meta word at probe `i` (lock-free invalidation).

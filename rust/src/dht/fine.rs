@@ -10,6 +10,13 @@
 //! * reader: FAO(+1); success iff the previous value was below the
 //!   exclusive constant, otherwise FAO(-1) to revoke and try again;
 //! * release: FAO(-EXCLUSIVE) resp. FAO(-1).
+//!
+//! Under the elastic resize (DESIGN.md §8, [`super::migrate`]) the same
+//! bucket locks serialize migration: a migrating rank takes the *old*
+//! bucket's lock shared for the copy-out and each *new* candidate's lock
+//! exclusive for the write-if-absent, holding at most one lock at a time
+//! — so migration interleaves with concurrent readers/writers exactly
+//! like any other fine-grained op and never deadlocks.
 
 use crate::rma::{Req, Resp, SmStep, EXCLUSIVE_LOCK};
 

@@ -15,12 +15,15 @@
 //! DES backend).  No guard code runs on drop — handles hold no resources
 //! beyond that shared ownership.
 
+use anyhow::{ensure, Result};
+
 use crate::net::Network;
 use crate::rma::shm::{ShmCluster, ShmRma};
 use crate::rma::sim::SimRma;
-use crate::rma::RmaBackend;
+use crate::rma::{Req, Resp, RmaBackend};
 use crate::sim::Time;
 
+use super::migrate::{self, DualReadSm, MigrateSm, OneReq};
 use super::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
 
 /// Default pipeline depth for the batch calls: enough to hide a few µs of
@@ -28,12 +31,23 @@ use super::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
 /// flooding a single target's responder (see the `pipeline_depth` bench).
 pub const DEFAULT_PIPELINE: usize = 16;
 
+/// Old-table buckets a handle migrates per piggybacked quantum (every
+/// read/write/batch call during a migration epoch claims this many from
+/// its rank's cursor — DESIGN.md §8; tune with `Dht::set_migrate_quantum`).
+pub const DEFAULT_MIGRATE_QUANTUM: u64 = 32;
+
 /// A per-rank handle to a shared DHT (`DHT_create` returns one per rank).
 pub struct Dht<B: RmaBackend = ShmRma> {
+    /// Current-table view (base + addressing of the live epoch).
     cfg: DhtConfig,
+    /// Retiring-table view while a migration epoch is in flight.
+    old_cfg: Option<DhtConfig>,
+    /// Last control-window epoch this handle has synchronized with.
+    epoch: u64,
     rma: B,
     stats: DhtStats,
     pipeline: usize,
+    migrate_quantum: u64,
 }
 
 impl Dht<ShmRma> {
@@ -51,9 +65,12 @@ impl Dht<ShmRma> {
         (0..nranks)
             .map(|r| Dht {
                 cfg: cfg.clone(),
+                old_cfg: None,
+                epoch: 0,
                 rma: cluster.rma(r),
                 stats: DhtStats::default(),
                 pipeline: DEFAULT_PIPELINE,
+                migrate_quantum: DEFAULT_MIGRATE_QUANTUM,
             })
             .collect()
     }
@@ -68,6 +85,17 @@ impl Dht<SimRma> {
     /// `DHT_create` on the discrete-event backend: the same front-end (and
     /// batch API) measured in *simulated* time.  `pipeline_lanes` caps the
     /// in-flight ops per rank for the whole cluster.  Single-threaded.
+    ///
+    /// ```
+    /// use mpi_dht::dht::{Dht, Variant};
+    /// use mpi_dht::net::{NetConfig, Network};
+    /// let net = Network::new(NetConfig::pik_ndr(), 2);
+    /// let mut h =
+    ///     Dht::create_sim(Variant::LockFree, 2, 64 * 1024, 8, 8, net, 4);
+    /// h[0].write_batch(&[[1u8; 8]], &[[2u8; 8]]);
+    /// assert_eq!(h[1].read_batch(&[[1u8; 8]]), vec![Some(vec![2u8; 8])]);
+    /// assert!(h[1].sim_time() > 0); // simulated nanoseconds, not wall time
+    /// ```
     pub fn create_sim(
         variant: Variant,
         nranks: u32,
@@ -82,9 +110,12 @@ impl Dht<SimRma> {
             .into_iter()
             .map(|rma| Dht {
                 cfg: cfg.clone(),
+                old_cfg: None,
+                epoch: 0,
                 rma,
                 stats: DhtStats::default(),
                 pipeline: pipeline_lanes.max(1) as usize,
+                migrate_quantum: DEFAULT_MIGRATE_QUANTUM,
             })
             .collect()
     }
@@ -101,9 +132,12 @@ impl<B: RmaBackend> Dht<B> {
     pub fn fork(&self) -> Dht<B> {
         Dht {
             cfg: self.cfg.clone(),
+            old_cfg: self.old_cfg.clone(),
+            epoch: self.epoch,
             rma: self.rma.clone(),
             stats: DhtStats::default(),
             pipeline: self.pipeline,
+            migrate_quantum: self.migrate_quantum,
         }
     }
 
@@ -125,9 +159,433 @@ impl<B: RmaBackend> Dht<B> {
         self.pipeline = depth.max(1);
     }
 
+    /// Old-table buckets migrated per piggybacked quantum (min 1).
+    pub fn set_migrate_quantum(&mut self, quantum: u64) {
+        self.migrate_quantum = quantum.max(1);
+    }
+
+    // ------------------------------------------------------------ elastic
+
+    /// Direct (unmodelled) read of a control word — the local load an MPI
+    /// rank performs on its own window memory (allocation-free in the
+    /// backends; this sits on every op's epoch fast-path check).
+    fn peek_word(&self, target: u32, offset: u64) -> u64 {
+        self.rma.peek_word(target, offset)
+    }
+
+    /// Modelled atomic read of a control word: a CAS whose `expected`
+    /// never matches.  On the shm backend the failing compare-exchange
+    /// loads with *acquire* ordering, pairing with the publisher's
+    /// release CAS so the geometry words written before the epoch flip
+    /// are visible afterwards.
+    fn word_acquire(&mut self, target: u32, offset: u64) -> u64 {
+        self.ctrl_cas(target, offset, u64::MAX, u64::MAX)
+    }
+
+    fn ctrl_cas(&mut self, target: u32, offset: u64, expected: u64, desired: u64) -> u64 {
+        match self.rma.exec(OneReq(Some(Req::Cas {
+            target,
+            offset,
+            expected,
+            desired,
+        }))) {
+            Resp::Word(w) => w,
+            other => unreachable!("Cas returned {other:?}"),
+        }
+    }
+
+    fn ctrl_fao(&mut self, target: u32, offset: u64, add: i64) -> u64 {
+        match self.rma.exec(OneReq(Some(Req::Fao { target, offset, add }))) {
+            Resp::Word(w) => w,
+            other => unreachable!("Fao returned {other:?}"),
+        }
+    }
+
+    fn ctrl_put(&mut self, target: u32, offset: u64, data: Vec<u8>) {
+        self.rma.exec(OneReq(Some(Req::Put { target, offset, data })));
+    }
+
+    /// Tag-checked add on an epoch-tagged shard word (cursor layout):
+    /// returns the updated index, or `None` — leaving the word untouched
+    /// — if it now belongs to a different epoch.
+    fn tagged_add(
+        &mut self,
+        target: u32,
+        offset: u64,
+        tag: u64,
+        add: i64,
+    ) -> Option<u64> {
+        loop {
+            let cur = self.ctrl_fao(target, offset, 0);
+            if migrate::cursor_tag(cur) != tag {
+                return None;
+            }
+            let idx = migrate::cursor_index(cur);
+            let next = if add >= 0 {
+                idx + add as u64
+            } else {
+                // protocol guarantees a matching increment precedes every
+                // decrement within one epoch; saturate defensively
+                idx.saturating_sub(add.unsigned_abs())
+            };
+            let desired = migrate::cursor_word(tag, next);
+            if self.ctrl_cas(target, offset, cur, desired) == cur {
+                return Some(next);
+            }
+            // contention: another handle updated the word; retry
+        }
+    }
+
+    /// Decode the two table views published for epoch `e` in `rank`'s
+    /// geometry bank (shared by `sync_epoch` and checkpoint capture).
+    fn decode_views(
+        rma: &B,
+        cfg: &DhtConfig,
+        rank: u32,
+        e: u64,
+    ) -> (DhtConfig, Option<DhtConfig>) {
+        let geo = migrate::geo(e);
+        let cur = cfg.with_table(
+            rma.peek_word(rank, geo + migrate::GEO_CUR_BASE),
+            rma.peek_word(rank, geo + migrate::GEO_CUR_BUCKETS),
+        );
+        let old = if e % 2 == 1 {
+            Some(cfg.with_table(
+                rma.peek_word(rank, geo + migrate::GEO_OLD_BASE),
+                rma.peek_word(rank, geo + migrate::GEO_OLD_BUCKETS),
+            ))
+        } else {
+            None
+        };
+        (cur, old)
+    }
+
+    /// Adopt the control window's current epoch if it moved past this
+    /// handle's cached view (cheap local peek on the fast path).
+    fn sync_epoch(&mut self) {
+        let rank = self.rma.rank();
+        if self.peek_word(rank, migrate::EPOCH) == self.epoch {
+            return;
+        }
+        loop {
+            let e = self.word_acquire(rank, migrate::EPOCH);
+            if e == self.epoch {
+                return;
+            }
+            // epoch e's geometry lives in the parity bank a transition
+            // to e+1 never touches (module docs of `dht::migrate`)
+            let (cur, old) = Self::decode_views(&self.rma, &self.cfg, rank, e);
+            // acquire-strength re-check: two back-to-back transitions
+            // reuse our parity bank, and a relaxed re-read could legally
+            // still return `e` after we saw mixed bank contents — the
+            // failing-CAS read cannot
+            if self.word_acquire(rank, migrate::EPOCH) != e {
+                continue;
+            }
+            self.cfg = cur;
+            self.old_cfg = old;
+            self.epoch = e;
+            return;
+        }
+    }
+
+    /// Whether a migration epoch is currently in flight.
+    pub fn migrating(&mut self) -> bool {
+        self.sync_epoch();
+        self.old_cfg.is_some()
+    }
+
+    /// The control-window epoch this handle last synchronized with
+    /// (even = stable, odd = migration in progress).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Current per-rank bucket capacity.
+    pub fn buckets_per_rank(&mut self) -> u64 {
+        self.sync_epoch();
+        self.cfg.addressing.buckets()
+    }
+
+    /// Online elastic resize (DESIGN.md §8): allocate a fresh table
+    /// window of `new_buckets_per_rank` buckets on every rank and open a
+    /// migration epoch.  Returns immediately — concurrent reads keep
+    /// completing (dual lookup), writes go to the new table, and every
+    /// rank migrates its own shard piggybacked on its subsequent DHT
+    /// calls (or explicitly via [`Self::finish_local_migration`] /
+    /// [`Self::drain_migration`]).  The epoch closes automatically when
+    /// the last shard finishes.
+    ///
+    /// ```
+    /// use mpi_dht::dht::{Dht, Variant};
+    /// let mut h = Dht::create(Variant::LockFree, 1, 8 * 1024, 8, 8);
+    /// h[0].write(&[5u8; 8], &[6u8; 8]);
+    /// h[0].resize(1024).unwrap(); // grow: a migration epoch opens
+    /// // reads keep hitting mid-migration (dual lookup)...
+    /// assert_eq!(h[0].read(&[5u8; 8]), Some(vec![6u8; 8]));
+    /// h[0].drain_migration(); // ...and after the epoch closes
+    /// assert!(!h[0].migrating());
+    /// assert_eq!(h[0].read(&[5u8; 8]), Some(vec![6u8; 8]));
+    /// ```
+    pub fn resize(&mut self, new_buckets_per_rank: u64) -> Result<()> {
+        ensure!(new_buckets_per_rank > 0, "resize: bucket count must be > 0");
+        self.sync_epoch();
+        ensure!(
+            self.old_cfg.is_none(),
+            "resize: a migration epoch is already in progress"
+        );
+        // checked sizing: the new table must fit one window segment
+        // (offsets above 2^SEG_SHIFT would alias the next segment id)
+        let bytes = new_buckets_per_rank
+            .checked_mul(self.cfg.layout.size() as u64)
+            .filter(|b| *b < 1u64 << crate::rma::SEG_SHIFT)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "resize: {} buckets x {} B exceeds the window segment \
+                     address space",
+                    new_buckets_per_rank,
+                    self.cfg.layout.size()
+                )
+            })? as usize;
+        // serialize initiators on rank 0's control word
+        let prev = self.ctrl_cas(0, migrate::RESIZE_LOCK, 0, 1);
+        ensure!(prev == 0, "resize: another rank is already resizing");
+        self.sync_epoch();
+        if self.old_cfg.is_some() {
+            // lost a race with an epoch we had not yet observed
+            self.ctrl_fao(0, migrate::RESIZE_LOCK, -1);
+            anyhow::bail!("resize: a migration epoch is already in progress");
+        }
+        let Some(base) = self.rma.alloc_window(bytes) else {
+            self.ctrl_fao(0, migrate::RESIZE_LOCK, -1);
+            anyhow::bail!(
+                "resize: no window segment slots left on this cluster"
+            );
+        };
+        // reset the completion counter before any shard can finish
+        self.ctrl_put(0, migrate::DONE_COUNT, 0u64.to_le_bytes().to_vec());
+        let epoch = self.epoch;
+        let old_base = self.cfg.base;
+        let old_buckets = self.cfg.addressing.buckets();
+        // Pass 1: geometry into the NEXT epoch's parity bank (untouched
+        // for current-epoch readers) + cursor/done/in-flight reset, on
+        // EVERY rank, before any epoch word flips — a handle that sees
+        // one rank's new epoch may immediately work-steal any other
+        // rank's shard, so no shard state may still be stale by then.
+        for r in 0..self.rma.nranks() {
+            self.ctrl_put(
+                r,
+                migrate::geo(epoch + 1),
+                migrate::geo_bank(
+                    base,
+                    new_buckets_per_rank,
+                    old_base,
+                    old_buckets,
+                ),
+            );
+            let mut cursor = Vec::with_capacity(24);
+            // cursor, done and in-flight: all epoch-tagged, index 0
+            let reset = migrate::cursor_word(epoch + 1, 0).to_le_bytes();
+            cursor.extend(reset); // cursor
+            cursor.extend(reset); // done
+            cursor.extend(reset); // in-flight
+            self.ctrl_put(r, migrate::CURSOR, cursor);
+        }
+        // Pass 2: flip the epochs; the release/acquire pairing in
+        // `word_acquire` publishes everything written in pass 1.
+        for r in 0..self.rma.nranks() {
+            let prev = self.ctrl_cas(r, migrate::EPOCH, epoch, epoch + 1);
+            debug_assert_eq!(prev, epoch, "epochs advance in lockstep");
+        }
+        self.stats.resizes += 1;
+        self.sync_epoch();
+        debug_assert!(self.old_cfg.is_some());
+        Ok(())
+    }
+
+    /// Piggybacked cooperative migration: claim and migrate one quantum
+    /// of this handle's own shard (no-op outside a migration epoch).
+    fn migrate_step(&mut self) {
+        if self.old_cfg.is_some() {
+            self.migrate_range(self.rma.rank(), self.migrate_quantum);
+        }
+    }
+
+    /// Claim up to `quantum` old buckets of `target`'s shard cursor and
+    /// migrate them; returns how many buckets this call actually
+    /// migrated.  A shard counts as complete only when its cursor is
+    /// exhausted AND all outstanding claims have finished executing (the
+    /// in-flight counter, see `dht::migrate`); the observer that wins
+    /// the DONE CAS reports it, and the report that completes the last
+    /// shard closes the epoch for the whole cluster.
+    fn migrate_range(&mut self, target: u32, quantum: u64) -> u64 {
+        let Some(old) = self.old_cfg.clone() else { return 0 };
+        // fast path: the shard has already reported complete for the
+        // current epoch (its DONE reset happens-before the epoch flip we
+        // synced on), so skip the control-word round trips while the
+        // remaining shards finish — an unmodelled local/diagnostic load,
+        // like the per-op epoch check
+        let done_word = migrate::cursor_word(self.epoch, 1);
+        if self.peek_word(target, migrate::DONE) == done_word {
+            return 0;
+        }
+        let old_buckets = old.addressing.buckets();
+        let tag = self.epoch & 0xFFFF;
+        // register the claim BEFORE taking it, tag-checked: completion
+        // must wait for every claimed bucket to actually land, and a
+        // successful increment proves our epoch is still open (the
+        // counter blocks completion until our decrement).  A stale
+        // handle aborts here without touching the fresh epoch's words.
+        if self
+            .tagged_add(target, migrate::INFLIGHT, tag, 1)
+            .is_none()
+        {
+            return 0; // stale epoch: next op re-syncs
+        }
+        // CAS-claim under this epoch's cursor tag (same stale guard)
+        let (prev, end) = loop {
+            let cur = self.ctrl_fao(target, migrate::CURSOR, 0);
+            if migrate::cursor_tag(cur) != tag {
+                // unreachable while our in-flight increment holds the
+                // epoch open, but stay defensive: undo and abort
+                self.tagged_add(target, migrate::INFLIGHT, tag, -1);
+                return 0;
+            }
+            let idx = migrate::cursor_index(cur);
+            if idx >= old_buckets {
+                break (idx, idx); // shard fully claimed already
+            }
+            let end = (idx + quantum).min(old_buckets);
+            let desired = migrate::cursor_word(self.epoch, end);
+            if self.ctrl_cas(target, migrate::CURSOR, cur, desired) == cur {
+                break (idx, end);
+            }
+            // another claimant moved the cursor: retry
+        };
+        let migrated = if prev < end {
+            let sms: Vec<MigrateSm> = (prev..end)
+                .map(|b| MigrateSm::new(&self.cfg, &old, target, b))
+                .collect();
+            let depth = self.pipeline;
+            for out in self.rma.exec_batch(sms, depth) {
+                self.stats.record_migrate(&out);
+            }
+            end - prev
+        } else {
+            0
+        };
+        let left = self.tagged_add(target, migrate::INFLIGHT, tag, -1);
+        if left == Some(0) {
+            let cur = self.ctrl_fao(target, migrate::CURSOR, 0);
+            // the DONE CAS is epoch-tagged, so it atomically re-validates
+            // the epoch: a straggler racing the next resize's relaxed
+            // per-word resets fails here even without cross-word ordering
+            let done_empty = migrate::cursor_word(self.epoch, 0);
+            if migrate::cursor_tag(cur) == tag
+                && migrate::cursor_index(cur) >= old_buckets
+                && self.ctrl_cas(target, migrate::DONE, done_empty, done_word)
+                    == done_empty
+            {
+                // exactly one observer reports each completed shard
+                let done = self.ctrl_fao(0, migrate::DONE_COUNT, 1) + 1;
+                if done == self.rma.nranks() as u64 {
+                    self.publish_completion();
+                }
+            }
+        }
+        migrated
+    }
+
+    /// Close the migration epoch on every rank (called by whichever
+    /// handle finishes the last shard).
+    fn publish_completion(&mut self) {
+        let epoch = self.epoch;
+        debug_assert_eq!(epoch % 2, 1, "completion closes an odd epoch");
+        let cur_base = self.cfg.base;
+        let cur_buckets = self.cfg.addressing.buckets();
+        for r in 0..self.rma.nranks() {
+            // geometry into the closing epoch's parity bank (old view
+            // cleared), epoch flip second; cursor/done words are left
+            // for the next resize to reset
+            self.ctrl_put(
+                r,
+                migrate::geo(epoch + 1),
+                migrate::geo_bank(cur_base, cur_buckets, 0, 0),
+            );
+            let prev = self.ctrl_cas(r, migrate::EPOCH, epoch, epoch + 1);
+            debug_assert_eq!(prev, epoch, "epochs advance in lockstep");
+        }
+        // release the initiation lock with an RMW (release ordering on
+        // shm): the next initiator's acquiring CAS then sees every epoch
+        // flip published above
+        let prev = self.ctrl_fao(0, migrate::RESIZE_LOCK, -1);
+        debug_assert_eq!(prev, 1, "completion releases a held resize lock");
+        self.old_cfg = None;
+        self.epoch += 1;
+    }
+
+    /// Drive this handle's own shard of an in-flight migration to the
+    /// end of its cursor (other shards stay cooperative).
+    pub fn finish_local_migration(&mut self) {
+        self.sync_epoch();
+        let rank = self.rma.rank();
+        while self.old_cfg.is_some()
+            && self.migrate_range(rank, self.migrate_quantum) > 0
+        {}
+    }
+
+    /// Cooperatively migrate *every* rank's shard until the epoch closes
+    /// — work stealing over RMA for benches, tests and drivers that want
+    /// a bounded migration window.  Safe to call from any handle.
+    pub fn drain_migration(&mut self) {
+        loop {
+            self.sync_epoch();
+            if self.old_cfg.is_none() {
+                return;
+            }
+            let mut moved = 0;
+            for r in 0..self.rma.nranks() {
+                moved += self.migrate_range(r, self.migrate_quantum);
+                if self.old_cfg.is_none() {
+                    return;
+                }
+            }
+            if moved == 0 {
+                // every bucket is claimed; concurrent handles still hold
+                // unfinished claims — wait for their completion publish
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------- ops
+
     /// `DHT_read`: returns the cached value, or `None` on miss/corruption.
+    ///
+    /// During a migration epoch this is the two-table lookup: new table
+    /// first, fall back to the retiring table (DESIGN.md §8) — so a
+    /// resize never makes an entry unreadable.
+    ///
+    /// ```
+    /// use mpi_dht::dht::{Dht, Variant};
+    /// let mut h = Dht::create(Variant::Fine, 2, 64 * 1024, 8, 16);
+    /// let keys = [[7u8; 8], [8u8; 8]];
+    /// let vals = [[1u8; 16], [2u8; 16]];
+    /// h[0].write_batch(&keys, &vals);
+    /// // any rank sees the shared table
+    /// let got = h[1].read_batch(&keys);
+    /// assert_eq!(got[0].as_deref(), Some(&vals[0][..]));
+    /// assert_eq!(got[1].as_deref(), Some(&vals[1][..]));
+    /// assert_eq!(h[1].read(&[9u8; 8]), None);
+    /// ```
     pub fn read(&mut self, key: &[u8]) -> Option<Vec<u8>> {
         assert_eq!(key.len(), self.cfg.layout.key_len());
+        self.sync_epoch();
+        if self.old_cfg.is_some() {
+            // migration epoch: share the batch machinery (one-key batch)
+            // so the dual-lookup path exists exactly once
+            return self.read_batch(&[key]).pop().expect("one result");
+        }
         let sm = DhtSm::read(self.cfg.variant, &self.cfg, key);
         let out = self.rma.exec(sm);
         self.stats.record(&out);
@@ -138,9 +596,12 @@ impl<B: RmaBackend> Dht<B> {
     }
 
     /// `DHT_write`: stores/updates the pair (evicting if necessary).
+    /// During a migration epoch writes go to the new table only.
     pub fn write(&mut self, key: &[u8], value: &[u8]) -> DhtOutcome {
         assert_eq!(key.len(), self.cfg.layout.key_len());
         assert_eq!(value.len(), self.cfg.layout.val_len());
+        self.sync_epoch();
+        self.migrate_step();
         let sm = DhtSm::write(self.cfg.variant, &self.cfg, key, value);
         let out = self.rma.exec(sm);
         self.stats.record(&out);
@@ -150,11 +611,45 @@ impl<B: RmaBackend> Dht<B> {
     /// `DHT_read_batch`: one pipelined epoch of reads — up to
     /// [`Self::pipeline`] in flight at once, flushed before returning.
     /// Results are in key order; semantics per key are identical to
-    /// [`Self::read`].
+    /// [`Self::read`] (including the two-table lookup while a migration
+    /// epoch is in flight).
     pub fn read_batch<K: AsRef<[u8]>>(
         &mut self,
         keys: &[K],
     ) -> Vec<Option<Vec<u8>>> {
+        self.sync_epoch();
+        self.migrate_step();
+        let depth = self.pipeline;
+        if let Some(old) = self.old_cfg.clone() {
+            let sms: Vec<DualReadSm> = keys
+                .iter()
+                .map(|k| {
+                    let k = k.as_ref();
+                    assert_eq!(k.len(), self.cfg.layout.key_len());
+                    DualReadSm::new(&self.cfg, &old, k)
+                })
+                .collect();
+            return self
+                .rma
+                .exec_batch(sms, depth)
+                .into_iter()
+                .map(|d| {
+                    if d.fell_back {
+                        self.stats.dual_reads += 1;
+                    }
+                    if d.primary_corrupt {
+                        // the new-table probe invalidated a torn bucket
+                        // before the fallback superseded its outcome
+                        self.stats.invalidations += 1;
+                    }
+                    self.stats.record(&d.out);
+                    match d.out.outcome {
+                        DhtOutcome::ReadHit(v) => Some(v),
+                        _ => None,
+                    }
+                })
+                .collect();
+        }
         let sms: Vec<DhtSm> = keys
             .iter()
             .map(|k| {
@@ -163,7 +658,6 @@ impl<B: RmaBackend> Dht<B> {
                 DhtSm::read(self.cfg.variant, &self.cfg, k)
             })
             .collect();
-        let depth = self.pipeline;
         self.rma
             .exec_batch(sms, depth)
             .into_iter()
@@ -186,6 +680,8 @@ impl<B: RmaBackend> Dht<B> {
         values: &[V],
     ) -> Vec<DhtOutcome> {
         assert_eq!(keys.len(), values.len(), "one value per key");
+        self.sync_epoch();
+        self.migrate_step();
         let sms: Vec<DhtSm> = keys
             .iter()
             .zip(values.iter())
@@ -223,6 +719,11 @@ impl<B: RmaBackend> Dht<B> {
 // on restart."  A checkpoint walks every window, collects the occupied
 // (valid) buckets, and can be restored into a cluster of a *different*
 // rank count and window size — entries are re-hashed and re-routed.
+//
+// Format v2 additionally records the captured geometry (buckets per rank
+// and rank count), so a restore can *reject* a target too small for the
+// snapshot instead of silently evicting (see `restore_strict`).  v1
+// checkpoints still load; they simply carry no geometry.
 // ---------------------------------------------------------------------------
 
 /// A portable snapshot of a DHT's contents.
@@ -231,6 +732,10 @@ pub struct DhtCheckpoint {
     pub variant: Variant,
     pub key_len: usize,
     pub val_len: usize,
+    /// Buckets per rank at capture time (format v2; `None` for v1).
+    pub buckets_per_rank: Option<u64>,
+    /// Rank count at capture time (format v2; `None` for v1).
+    pub nranks: Option<u32>,
     /// All live key-value pairs (corrupt/invalid buckets are skipped).
     pub entries: Vec<(Vec<u8>, Vec<u8>)>,
 }
@@ -239,40 +744,59 @@ impl DhtCheckpoint {
     /// Capture a checkpoint by scanning every rank's window.  Call at a
     /// quiescent point (application checkpointing barrier), like the
     /// paper prescribes.  Works on any backend (the scan uses the
-    /// backend's direct-memory `peek`, not modelled RMA traffic).
+    /// backend's direct-memory `peek`, not modelled RMA traffic).  If a
+    /// migration epoch is in flight, both tables are scanned (new table
+    /// wins on duplicate keys) so nothing is lost mid-resize.
     pub fn capture<B: RmaBackend>(handles: &[Dht<B>]) -> DhtCheckpoint {
         let h0 = &handles[0];
-        let cfg = h0.cfg();
-        let l = cfg.layout;
-        let buckets = cfg.addressing.buckets();
+        // read the control window's views without mutating the handle
+        // (quiescent point: no transition races)
+        let rank = h0.rma.rank();
+        let e = h0.peek_word(rank, migrate::EPOCH);
+        let (cur, old) = if e == h0.epoch {
+            (h0.cfg.clone(), h0.old_cfg.clone())
+        } else {
+            Dht::decode_views(&h0.rma, &h0.cfg, rank, e)
+        };
+        let l = cur.layout;
         let mut entries = Vec::new();
+        let mut seen = std::collections::HashSet::new();
         let rec_len = (l.size() - l.meta_off()) as u32;
-        for rank in 0..cfg.addressing.nranks() {
-            for b in 0..buckets {
-                let off = l.bucket_off(b) + l.meta_off() as u64;
-                let rec = h0.rma.peek(rank, off, rec_len);
-                let meta = l.meta_of(&rec);
-                if !meta.occupied() || meta.invalid() {
-                    continue;
+        for cfg in std::iter::once(&cur).chain(old.iter()) {
+            for rank in 0..cfg.addressing.nranks() {
+                for b in 0..cfg.addressing.buckets() {
+                    let off =
+                        cfg.base + l.bucket_off(b) + l.meta_off() as u64;
+                    let rec = h0.rma.peek(rank, off, rec_len);
+                    let meta = l.meta_of(&rec);
+                    if !meta.occupied() || meta.invalid() {
+                        continue;
+                    }
+                    if cfg.variant == Variant::LockFree && !l.crc_ok(&rec) {
+                        continue; // torn write caught mid-checkpoint: skip
+                    }
+                    let key = l.key_of(&rec).to_vec();
+                    if !seen.insert(key.clone()) {
+                        continue; // new-table copy already captured
+                    }
+                    entries.push((key, l.val_of(&rec).to_vec()));
                 }
-                if cfg.variant == Variant::LockFree && !l.crc_ok(&rec) {
-                    continue; // torn write caught mid-checkpoint: skip
-                }
-                entries.push((l.key_of(&rec).to_vec(), l.val_of(&rec).to_vec()));
             }
         }
         DhtCheckpoint {
-            variant: cfg.variant,
+            variant: cur.variant,
             key_len: l.key_len(),
             val_len: l.val_len(),
+            buckets_per_rank: Some(cur.addressing.buckets()),
+            nranks: Some(cur.addressing.nranks()),
             entries,
         }
     }
 
-    /// Serialize to a simple length-prefixed binary format.
+    /// Serialize to a simple length-prefixed binary format (v2).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
-        out.extend_from_slice(b"DHTCKPT1");
+        out.extend_from_slice(b"DHTCKPT2");
         out.push(match self.variant {
             Variant::Coarse => 0,
             Variant::Fine => 1,
@@ -280,6 +804,10 @@ impl DhtCheckpoint {
         });
         out.extend_from_slice(&(self.key_len as u32).to_le_bytes());
         out.extend_from_slice(&(self.val_len as u32).to_le_bytes());
+        out.extend_from_slice(
+            &self.buckets_per_rank.unwrap_or(0).to_le_bytes(),
+        );
+        out.extend_from_slice(&self.nranks.unwrap_or(0).to_le_bytes());
         out.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
         for (k, v) in &self.entries {
             out.extend_from_slice(k);
@@ -288,11 +816,18 @@ impl DhtCheckpoint {
         out
     }
 
-    /// Parse the binary format produced by [`Self::to_bytes`].
+    /// Parse the binary formats produced by [`Self::to_bytes`]: v2
+    /// (`DHTCKPT2`, geometry-carrying) and the legacy v1 (`DHTCKPT1`),
+    /// which loads with `buckets_per_rank`/`nranks` set to `None`.
     pub fn from_bytes(data: &[u8]) -> Option<DhtCheckpoint> {
-        if data.len() < 8 + 1 + 4 + 4 + 8 || &data[..8] != b"DHTCKPT1" {
+        if data.len() < 8 + 1 + 4 + 4 + 8 {
             return None;
         }
+        let v2 = match &data[..8] {
+            b"DHTCKPT1" => false,
+            b"DHTCKPT2" => true,
+            _ => return None,
+        };
         let variant = match data[8] {
             0 => Variant::Coarse,
             1 => Variant::Fine,
@@ -306,26 +841,48 @@ impl DhtCheckpoint {
         if key_len == 0 || val_len == 0 {
             return None;
         }
-        let n64 = u64::from_le_bytes(data[17..25].try_into().ok()?);
+        let (buckets_per_rank, nranks, head) = if v2 {
+            if data.len() < 17 + 8 + 4 + 8 {
+                return None;
+            }
+            let b = u64::from_le_bytes(data[17..25].try_into().ok()?);
+            let r = u32::from_le_bytes(data[25..29].try_into().ok()?);
+            (
+                if b > 0 { Some(b) } else { None },
+                if r > 0 { Some(r) } else { None },
+                29usize,
+            )
+        } else {
+            (None, None, 17usize)
+        };
+        let n64 = u64::from_le_bytes(data[head..head + 8].try_into().ok()?);
         let rec = key_len + val_len;
         // checked math: an attacker-controlled n must not wrap the
         // expected length (or blow up with_capacity below)
         let expected = n64
             .checked_mul(rec as u64)
-            .and_then(|b| b.checked_add(25))?;
+            .and_then(|b| b.checked_add(head as u64 + 8))?;
         if data.len() as u64 != expected {
             return None;
         }
         let n = n64 as usize;
+        let start = head + 8;
         let mut entries = Vec::with_capacity(n);
         for i in 0..n {
-            let base = 25 + i * rec;
+            let base = start + i * rec;
             entries.push((
                 data[base..base + key_len].to_vec(),
                 data[base + key_len..base + rec].to_vec(),
             ));
         }
-        Some(DhtCheckpoint { variant, key_len, val_len, entries })
+        Some(DhtCheckpoint {
+            variant,
+            key_len,
+            val_len,
+            buckets_per_rank,
+            nranks,
+            entries,
+        })
     }
 
     /// Restore into a fresh cluster of possibly different geometry — the
@@ -349,6 +906,51 @@ impl DhtCheckpoint {
             h.take_stats(); // restore traffic is not application traffic
         }
         handles
+    }
+
+    /// Like [`Self::restore`], but reject a target whose total capacity
+    /// is below the captured table's — a v2 checkpoint of a grown table
+    /// must not silently evict on restart into a mis-sized cluster.  v1
+    /// checkpoints carry no geometry and restore as before.
+    pub fn restore_strict(
+        &self,
+        variant: Variant,
+        nranks: u32,
+        win_bytes: usize,
+    ) -> Result<Vec<Dht>> {
+        let layout =
+            super::BucketLayout::new(variant, self.key_len, self.val_len);
+        let per_rank = (win_bytes / layout.size()) as u64;
+        ensure!(per_rank > 0, "restore: window smaller than one bucket");
+        if let Some(captured_per_rank) = self.buckets_per_rank {
+            // checked math: the geometry fields are attacker-controlled
+            // (parsed from the checkpoint), like the entry count above
+            let captured = captured_per_rank
+                .checked_mul(u64::from(self.nranks.unwrap_or(1)))
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "restore: checkpoint geometry overflows ({} \
+                         buckets/rank x {} ranks)",
+                        captured_per_rank,
+                        self.nranks.unwrap_or(1)
+                    )
+                })?;
+            let target = per_rank * u64::from(nranks);
+            ensure!(
+                target >= captured,
+                "restore: checkpoint capacity mismatch — captured {} \
+                 buckets ({} ranks x {}/rank) but the restore target holds \
+                 only {} ({} ranks x {}/rank); grow win_bytes/nranks or use \
+                 restore() to accept evictions",
+                captured,
+                self.nranks.unwrap_or(1),
+                captured_per_rank,
+                target,
+                nranks,
+                per_rank,
+            );
+        }
+        Ok(self.restore(variant, nranks, win_bytes))
     }
 }
 

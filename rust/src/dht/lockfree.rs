@@ -7,6 +7,14 @@
 //! recompute it and retry on mismatch.  If the mismatch persists after
 //! `crc_retries` re-reads, the reader flags the bucket *invalid* in its
 //! meta word; a later write may reuse the invalid bucket.
+//!
+//! The self-verifying bucket is also what makes this variant the headline
+//! path of the *elastic resize* (DESIGN.md §8, [`super::migrate`]): a
+//! migrating rank reads old buckets with plain gets — no stop-the-world,
+//! no locks — because a record torn by a straggling writer fails its
+//! checksum and is simply skipped (dropping a cache entry is always
+//! safe), while reads during the epoch fall back from the new table to
+//! the old one and keep completing throughout.
 
 use crate::rma::{Resp, SmStep};
 

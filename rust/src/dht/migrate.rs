@@ -1,0 +1,837 @@
+//! Elastic capacity: online resize with live, lock-free migration
+//! (DESIGN.md §8).
+//!
+//! The paper's DHT is sized once at `DHT_create` and can only overwrite
+//! (§3.1 cache evictions); §6 defers resizing to checkpoint/restart.
+//! This module implements the *online* alternative: `Dht::resize`
+//! allocates a fresh table window on every rank and opens a **migration
+//! epoch** during which
+//!
+//! * **writes** go to the new table only,
+//! * **reads** are *dual lookups* ([`DualReadSm`]): new table first, old
+//!   table as fallback — so no entry ever becomes unreadable,
+//! * every rank **cooperatively migrates its own shard** ([`MigrateSm`]),
+//!   claiming bucket ranges from a cursor in its control window; because
+//!   a key's target rank is `hash % nranks` (capacity-independent),
+//!   migration is rank-local and needs no cross-rank data movement.
+//!
+//! There is no stop-the-world barrier: the lock-free variant migrates
+//! with plain `MPI_Get`/`MPI_Put` (torn old records are caught by their
+//! checksum and skipped — dropping a cache entry is always safe), the
+//! fine-grained variant holds at most one bucket lock at a time, and the
+//! coarse variant reuses its per-window exclusive lock (the "simple
+//! per-window-locked migration": readers of that window wait exactly as
+//! they do for a writer, but other windows stay fully available).
+//!
+//! # Control window layout
+//!
+//! Each rank's control window (at [`CTRL_BASE`], allocated with the
+//! cluster) publishes the geometry readers need and the cursor migrators
+//! claim from, all manipulated with modelled RMA ops:
+//!
+//! ```text
+//! word 0      EPOCH        even = stable, odd = migration in progress
+//! words 1-4   GEO bank 0   geometry of even epochs
+//! words 5-8   GEO bank 1   geometry of odd epochs
+//!             (each bank: cur_base, cur_buckets, old_base, old_buckets)
+//! word 9      CURSOR       next unmigrated old-bucket index of this
+//!                          shard (epoch-tagged, CAS-claimed in quanta)
+//! word 10     DONE         epoch-tagged flag: shard fully migrated
+//! word 11     INFLIGHT     epoch-tagged count of claims still executing
+//! word 12     DONE_COUNT   rank 0 only: shards finished this epoch
+//! word 13     RESIZE_LOCK  rank 0 only: CAS-guard on initiations
+//! ```
+//!
+//! The three shard words carry the epoch in their high bits
+//! ([`cursor_word`]) and are only ever CAS-updated against that tag, so
+//! a handle still acting on a closed epoch aborts instead of consuming
+//! or corrupting the fresh epoch's state — no cross-word ordering is
+//! needed between the next resize's per-word resets.  A shard is *done*
+//! only when its cursor is exhausted AND its in-flight counter has
+//! drained back to zero (claimants raise it before claiming and lower
+//! it after their buckets have landed; a successful raise provably
+//! holds the epoch open until the matching lower); the observer that
+//! drains it to zero wins the tagged CAS on the DONE word, so each
+//! shard is reported to the completion counter exactly once even under
+//! concurrent work stealing.
+//!
+//! Transitioning to epoch `e+1` writes the geometry into bank
+//! `(e+1) % 2` — the bank readers of epoch `e` never touch — *before*
+//! flipping the epoch word with a CAS.  Epoch `e`'s geometry words are
+//! therefore never overwritten while `e` is current: a reader acquires
+//! the epoch (on shm the failing-CAS read's acquire pairs with the
+//! publisher's release CAS, making the bank visible), reads its bank,
+//! and re-checks the epoch word — torn geometry is impossible, a racing
+//! further transition just retries the read.
+//!
+//! # Invariants
+//!
+//! 1. Reads never block on migration (lock-free path) and never return a
+//!    foreign value — migrated records carry their full key (+ CRC).
+//! 2. Every old bucket is migrated exactly once (cursor claims are
+//!    disjoint), and a key stays readable throughout the epoch via the
+//!    dual lookup.
+//! 3. Migration does not overwrite data it can see is newer: a key
+//!    already present in the new table is skipped
+//!    ([`MigrateResult::SkippedPresent`]).  On the locking variants the
+//!    probe+put holds the bucket/window lock, so this is absolute; on
+//!    the lock-free path a migration put racing a concurrent same-key
+//!    write is last-write-wins (the §4.2 contract) and may rarely leave
+//!    the *older* value — never a foreign one.  In the surrogate-cache
+//!    setting values are deterministic functions of their key, so a
+//!    stale-value race is observably harmless.
+//! 4. Migration may *drop* entries (checksum-torn old records, or all
+//!    new-table candidates taken): this is cache semantics, identical to
+//!    the paper's §3.1 eviction contract.  On the lock-free path two
+//!    *concurrent* migrations (or a migration and a write) whose keys
+//!    share a free candidate bucket race last-write-wins, exactly like
+//!    concurrent §4.2 writers — rarely, an entry is silently evicted.
+//!    The locking variants are loss-free: fine holds the candidate's
+//!    lock from probe through put, coarse holds the window lock.
+
+use crate::rma::{OpSm, Req, Resp, SmStep, CTRL_BASE, EXCLUSIVE_LOCK};
+
+use super::coarse::Plan;
+use super::{DhtConfig, DhtOutcome, DhtSm, OpOut, Variant};
+
+/// Byte offset of the epoch word in a rank's control window.
+pub const EPOCH: u64 = CTRL_BASE;
+/// Migration cursor of this rank's shard.  The word is epoch-*tagged*
+/// (see [`cursor_word`]) and claimed with CAS, so a handle still acting
+/// on a closed epoch can never consume — or corrupt — a fresh epoch's
+/// cursor: its expected tag no longer matches and the claim aborts.
+pub const CURSOR: u64 = CTRL_BASE + 72;
+
+/// Bit position of the epoch tag inside a cursor word: low 48 bits are
+/// the next unmigrated bucket index, high 16 bits the epoch (mod 2^16).
+pub const CURSOR_TAG_SHIFT: u32 = 48;
+
+/// Compose a cursor word from an epoch and a bucket index.
+pub fn cursor_word(epoch: u64, index: u64) -> u64 {
+    debug_assert!(index < 1u64 << CURSOR_TAG_SHIFT);
+    ((epoch & 0xFFFF) << CURSOR_TAG_SHIFT) | index
+}
+
+/// The epoch tag of a cursor word (mod 2^16).
+pub fn cursor_tag(word: u64) -> u64 {
+    word >> CURSOR_TAG_SHIFT
+}
+
+/// The bucket index of a cursor word.
+pub fn cursor_index(word: u64) -> u64 {
+    word & ((1u64 << CURSOR_TAG_SHIFT) - 1)
+}
+
+/// Encode one geometry bank (the four words at [`geo`]), the single
+/// serialization point shared by resize, completion and the readers.
+pub(crate) fn geo_bank(
+    cur_base: u64,
+    cur_buckets: u64,
+    old_base: u64,
+    old_buckets: u64,
+) -> Vec<u8> {
+    let mut v = Vec::with_capacity(32);
+    v.extend(cur_base.to_le_bytes());
+    v.extend(cur_buckets.to_le_bytes());
+    v.extend(old_base.to_le_bytes());
+    v.extend(old_buckets.to_le_bytes());
+    v
+}
+/// CAS'd index 0 -> 1 (epoch-tagged, [`cursor_word`]) by the observer
+/// that finds this rank's shard complete (cursor exhausted, in-flight
+/// drained) — the exactly-once guard.  Tagging makes the CAS itself
+/// validate the epoch: relaxed resets of different control words need
+/// no cross-word ordering for a straggler's CAS to fail safely.
+pub const DONE: u64 = CTRL_BASE + 80;
+/// Claims of this shard whose buckets are still being migrated.  Like
+/// [`CURSOR`] the word is epoch-tagged and CAS-updated: an increment
+/// only succeeds against the caller's own epoch (so a successful
+/// increment provably blocks completion until its decrement), and a
+/// stale decrement aborts instead of corrupting the fresh epoch's
+/// counter.
+pub const INFLIGHT: u64 = CTRL_BASE + 88;
+/// Rank 0 only: number of shards finished this epoch.
+pub const DONE_COUNT: u64 = CTRL_BASE + 96;
+/// Rank 0 only: CAS-guard serializing resize initiations.
+pub const RESIZE_LOCK: u64 = CTRL_BASE + 104;
+
+/// Byte offset of `epoch`'s geometry bank (see the module docs): four
+/// words — cur_base, cur_buckets, old_base, old_buckets.  Banks
+/// alternate with epoch parity so a transition never overwrites the
+/// geometry a current-epoch reader is looking at.
+pub fn geo(epoch: u64) -> u64 {
+    CTRL_BASE + 8 + (epoch % 2) * 32
+}
+
+/// Offsets of the four geometry words within a bank.
+pub const GEO_CUR_BASE: u64 = 0;
+pub const GEO_CUR_BUCKETS: u64 = 8;
+pub const GEO_OLD_BASE: u64 = 16;
+pub const GEO_OLD_BUCKETS: u64 = 24;
+
+/// What happened to one old bucket under migration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrateResult {
+    /// The record was copied into the new table.
+    Copied,
+    /// Nothing to migrate: empty, invalidated, or checksum-torn bucket.
+    SkippedEmpty,
+    /// The key already lives in the new table (a concurrent write
+    /// superseded the old record); the newer data wins.
+    SkippedPresent,
+    /// Every new-table candidate is taken by a foreign key: the entry is
+    /// dropped (cache semantics — never evict fresher data for old).
+    Dropped,
+}
+
+/// Output of one [`MigrateSm`] (recorded via `DhtStats::record_migrate`).
+#[derive(Clone, Debug)]
+pub struct MigrateOut {
+    pub result: MigrateResult,
+    /// New-table candidate buckets probed.
+    pub probes: u32,
+    /// Bucket-lock retries (fine-grained only).
+    pub lock_retries: u32,
+}
+
+fn data_of(resp: Resp) -> Vec<u8> {
+    match resp {
+        Resp::Data(d) => d,
+        other => panic!("protocol error: expected Data, got {other:?}"),
+    }
+}
+
+fn word_of(resp: Resp) -> u64 {
+    match resp {
+        Resp::Word(w) => w,
+        other => panic!("protocol error: expected Word, got {other:?}"),
+    }
+}
+
+/// One raw request, returning its raw response — the control-plane
+/// helper the front-end drives for epoch/geometry/cursor words (all of
+/// it modelled RMA traffic).
+pub(crate) struct OneReq(pub Option<Req>);
+
+impl OpSm for OneReq {
+    type Out = Resp;
+    fn step(&mut self, resp: Resp) -> SmStep<Resp> {
+        match self.0.take() {
+            Some(r) => SmStep::Issue(r),
+            None => SmStep::Done(resp),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- dual read
+
+/// Result of a [`DualReadSm`]: the merged per-op counters plus the
+/// dual-lookup bookkeeping the front-end's stats need.
+#[derive(Clone, Debug)]
+pub struct DualOut {
+    pub out: OpOut,
+    /// The fallback (old-table) lookup ran.
+    pub fell_back: bool,
+    /// The new-table probe terminated in a checksum invalidation before
+    /// the fallback ran — a real table mutation that must be counted
+    /// even though the fallback's outcome supersedes it.
+    pub primary_corrupt: bool,
+}
+
+/// `DHT_read` during a migration epoch: the migrate-read step shared by
+/// all three protocol variants.  Probes the current table with the
+/// variant's ordinary read SM; on a miss (or a corrupt terminal) it
+/// falls through to the retiring table.  Returns the merged [`OpOut`]
+/// plus the dual-lookup bookkeeping ([`DualOut`]).
+pub struct DualReadSm {
+    cur: DhtSm,
+    old: Option<DhtSm>,
+    fell_back: bool,
+    primary_corrupt: bool,
+    /// Counters of the completed first phase, folded into the result.
+    probes: u32,
+    crc_retries: u32,
+    lock_retries: u32,
+}
+
+impl DualReadSm {
+    pub fn new(cur_cfg: &DhtConfig, old_cfg: &DhtConfig, key: &[u8]) -> Self {
+        Self {
+            cur: DhtSm::read(cur_cfg.variant, cur_cfg, key),
+            old: Some(DhtSm::read(old_cfg.variant, old_cfg, key)),
+            fell_back: false,
+            primary_corrupt: false,
+            probes: 0,
+            crc_retries: 0,
+            lock_retries: 0,
+        }
+    }
+}
+
+impl OpSm for DualReadSm {
+    type Out = DualOut;
+    fn step(&mut self, resp: Resp) -> SmStep<DualOut> {
+        let mut resp = resp;
+        loop {
+            match self.cur.step(resp) {
+                SmStep::Issue(r) => return SmStep::Issue(r),
+                SmStep::Done(out) => {
+                    let miss = matches!(
+                        out.outcome,
+                        DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt
+                    );
+                    if miss && !self.fell_back {
+                        if let Some(old) = self.old.take() {
+                            // fall through to the retiring table
+                            self.fell_back = true;
+                            self.primary_corrupt =
+                                out.outcome == DhtOutcome::ReadCorrupt;
+                            self.probes = out.probes;
+                            self.crc_retries = out.crc_retries;
+                            self.lock_retries = out.lock_retries;
+                            self.cur = old;
+                            resp = Resp::Start;
+                            continue;
+                        }
+                    }
+                    let merged = OpOut {
+                        outcome: out.outcome,
+                        probes: out.probes + self.probes,
+                        crc_retries: out.crc_retries + self.crc_retries,
+                        lock_retries: out.lock_retries + self.lock_retries,
+                    };
+                    return SmStep::Done(DualOut {
+                        out: merged,
+                        fell_back: self.fell_back,
+                        primary_corrupt: self.primary_corrupt,
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- migrate
+
+enum MState {
+    Init,
+    /// coarse: exclusive `MPI_Win_lock` on the target window outstanding.
+    AwaitWinLock,
+    /// fine: FAO(+1) on the old bucket's lock outstanding.
+    AwaitOldIncr,
+    /// fine: revoking FAO(-1) after seeing a writer on the old bucket.
+    AwaitOldRevoke,
+    /// Full-record Get of the old bucket outstanding.
+    AwaitOldRecord,
+    /// fine: FAO(-1) releasing the old bucket after its Get; proceeds to
+    /// probing unless the result is already decided.
+    AwaitOldRelease,
+    /// fine: CAS(0 -> EXCL) on new-table candidate `i`'s lock.
+    AwaitCurCas(usize),
+    /// meta+key probe Get of new-table candidate `i` outstanding.
+    AwaitCurProbe(usize),
+    /// fine: releasing candidate `i`'s lock before probing `i+1`.
+    AwaitCurMoveOn(usize),
+    /// Record Put into candidate `i` outstanding.
+    AwaitPut(usize),
+    /// Final lock release outstanding (fine bucket FAO / coarse unlock).
+    AwaitFinish,
+}
+
+/// Migrate ONE old-table bucket into the new table (write-if-absent,
+/// drop-on-full — see the module invariants).  Consistency follows the
+/// bucket's variant: coarse holds the target's window lock for the whole
+/// bucket, fine holds at most one bucket lock at a time (old shared for
+/// the read, then each new candidate exclusive), lock-free holds nothing
+/// and trusts the checksum.
+pub struct MigrateSm {
+    variant: Variant,
+    layout: super::BucketLayout,
+    target: u32,
+    /// Absolute offset of the old bucket's record (at its meta word).
+    old_rec_off: u64,
+    /// Absolute offset of the old bucket's lock word (fine-grained; the
+    /// lock word leads the bucket, so this is the bucket's base).
+    old_lock_off: u64,
+    cur_cfg: DhtConfig,
+    /// Probe plan into the new table, built once the key is known.
+    plan: Option<Plan>,
+    /// The old record bytes (meta..end, layout-identical in both tables).
+    record: Vec<u8>,
+    state: MState,
+    probes: u32,
+    lock_retries: u32,
+    result: Option<MigrateResult>,
+}
+
+impl MigrateSm {
+    /// `cur_cfg`/`old_cfg` are the migration epoch's two table views
+    /// (same variant/layout/nranks, different base + bucket count);
+    /// `bucket` indexes `target`'s shard of the *old* table.
+    pub fn new(
+        cur_cfg: &DhtConfig,
+        old_cfg: &DhtConfig,
+        target: u32,
+        bucket: u64,
+    ) -> Self {
+        debug_assert!(bucket < old_cfg.addressing.buckets());
+        let l = cur_cfg.layout;
+        let bucket_base = old_cfg.base + l.bucket_off(bucket);
+        Self {
+            variant: cur_cfg.variant,
+            layout: l,
+            target,
+            old_rec_off: bucket_base + l.meta_off() as u64,
+            old_lock_off: bucket_base,
+            cur_cfg: cur_cfg.clone(),
+            plan: None,
+            record: Vec::new(),
+            state: MState::Init,
+            probes: 0,
+            lock_retries: 0,
+            result: None,
+        }
+    }
+
+    fn plan(&self) -> &Plan {
+        self.plan.as_ref().expect("plan built after old record read")
+    }
+
+    fn get_old(&self) -> Req {
+        Req::Get {
+            target: self.target,
+            offset: self.old_rec_off,
+            len: (self.layout.size() - self.layout.meta_off()) as u32,
+        }
+    }
+
+    fn done(&mut self) -> SmStep<MigrateOut> {
+        SmStep::Done(MigrateOut {
+            result: self.result.take().expect("result decided"),
+            probes: self.probes,
+            lock_retries: self.lock_retries,
+        })
+    }
+
+    /// Begin probing new-table candidate `i` (variant-specific entry).
+    fn start_probe(&mut self, i: usize) -> SmStep<MigrateOut> {
+        self.probes += 1;
+        if self.variant == Variant::Fine {
+            self.state = MState::AwaitCurCas(i);
+            SmStep::Issue(Req::Cas {
+                target: self.target,
+                offset: self.plan().lock_off(i),
+                expected: 0,
+                desired: EXCLUSIVE_LOCK,
+            })
+        } else {
+            self.state = MState::AwaitCurProbe(i);
+            SmStep::Issue(self.plan().get_probe(i))
+        }
+    }
+
+    /// Release whatever is held after the probe/put of candidate `i`,
+    /// then finish (`result` must be decided).
+    fn finish_after_probe(&mut self, i: usize) -> SmStep<MigrateOut> {
+        match self.variant {
+            Variant::Fine => {
+                self.state = MState::AwaitFinish;
+                SmStep::Issue(Req::Fao {
+                    target: self.target,
+                    offset: self.plan().lock_off(i),
+                    add: -(EXCLUSIVE_LOCK as i64),
+                })
+            }
+            Variant::Coarse => {
+                self.state = MState::AwaitFinish;
+                SmStep::Issue(Req::UnlockWin {
+                    target: self.target,
+                    exclusive: true,
+                })
+            }
+            Variant::LockFree => self.done(),
+        }
+    }
+}
+
+impl OpSm for MigrateSm {
+    type Out = MigrateOut;
+    fn step(&mut self, resp: Resp) -> SmStep<MigrateOut> {
+        match self.state {
+            MState::Init => match self.variant {
+                Variant::Coarse => {
+                    self.state = MState::AwaitWinLock;
+                    SmStep::Issue(Req::LockWin {
+                        target: self.target,
+                        exclusive: true,
+                    })
+                }
+                Variant::Fine => {
+                    self.state = MState::AwaitOldIncr;
+                    SmStep::Issue(Req::Fao {
+                        target: self.target,
+                        offset: self.old_lock_off,
+                        add: 1,
+                    })
+                }
+                Variant::LockFree => {
+                    self.state = MState::AwaitOldRecord;
+                    SmStep::Issue(self.get_old())
+                }
+            },
+            MState::AwaitWinLock => {
+                debug_assert!(matches!(resp, Resp::Ack));
+                self.state = MState::AwaitOldRecord;
+                SmStep::Issue(self.get_old())
+            }
+            MState::AwaitOldIncr => {
+                let prev = word_of(resp);
+                if prev < EXCLUSIVE_LOCK {
+                    self.state = MState::AwaitOldRecord;
+                    SmStep::Issue(self.get_old())
+                } else {
+                    // a straggler writer still holds the old bucket
+                    self.lock_retries += 1;
+                    self.state = MState::AwaitOldRevoke;
+                    SmStep::Issue(Req::Fao {
+                        target: self.target,
+                        offset: self.old_lock_off,
+                        add: -1,
+                    })
+                }
+            }
+            MState::AwaitOldRevoke => {
+                let _ = word_of(resp);
+                self.state = MState::AwaitOldIncr;
+                SmStep::Issue(Req::Fao {
+                    target: self.target,
+                    offset: self.old_lock_off,
+                    add: 1,
+                })
+            }
+            MState::AwaitOldRecord => {
+                let data = data_of(resp);
+                let l = &self.layout;
+                let meta = l.meta_of(&data);
+                let dead = !meta.occupied()
+                    || meta.invalid()
+                    || (self.variant == Variant::LockFree && !l.crc_ok(&data));
+                if dead {
+                    self.result = Some(MigrateResult::SkippedEmpty);
+                } else {
+                    let plan = Plan::new(&self.cur_cfg, l.key_of(&data));
+                    debug_assert_eq!(
+                        plan.target, self.target,
+                        "nranks is resize-invariant: migration is rank-local"
+                    );
+                    self.plan = Some(plan);
+                    self.record = data;
+                }
+                match self.variant {
+                    Variant::Fine => {
+                        self.state = MState::AwaitOldRelease;
+                        SmStep::Issue(Req::Fao {
+                            target: self.target,
+                            offset: self.old_lock_off,
+                            add: -1,
+                        })
+                    }
+                    Variant::Coarse => {
+                        if self.result.is_some() {
+                            self.state = MState::AwaitFinish;
+                            SmStep::Issue(Req::UnlockWin {
+                                target: self.target,
+                                exclusive: true,
+                            })
+                        } else {
+                            self.start_probe(0)
+                        }
+                    }
+                    Variant::LockFree => {
+                        if self.result.is_some() {
+                            self.done()
+                        } else {
+                            self.start_probe(0)
+                        }
+                    }
+                }
+            }
+            MState::AwaitOldRelease => {
+                let _ = word_of(resp);
+                if self.result.is_some() {
+                    self.done()
+                } else {
+                    self.start_probe(0)
+                }
+            }
+            MState::AwaitCurCas(i) => {
+                let prev = word_of(resp);
+                if prev == 0 {
+                    self.state = MState::AwaitCurProbe(i);
+                    SmStep::Issue(self.plan().get_probe(i))
+                } else {
+                    self.lock_retries += 1;
+                    SmStep::Issue(Req::Cas {
+                        target: self.target,
+                        offset: self.plan().lock_off(i),
+                        expected: 0,
+                        desired: EXCLUSIVE_LOCK,
+                    })
+                }
+            }
+            MState::AwaitCurProbe(i) => {
+                let data = data_of(resp);
+                let l = &self.layout;
+                let meta = l.meta_of(&data);
+                let free = !meta.occupied()
+                    || (self.variant == Variant::LockFree && meta.invalid());
+                if free {
+                    self.state = MState::AwaitPut(i);
+                    return SmStep::Issue(
+                        self.plan().put_record(i, self.record.clone()),
+                    );
+                }
+                if l.key_of(&data) == l.key_of(&self.record) {
+                    // a concurrent write already stored this key: newer
+                    // data wins, the old record is superseded
+                    self.result = Some(MigrateResult::SkippedPresent);
+                    return self.finish_after_probe(i);
+                }
+                if i + 1 == self.plan().n() {
+                    self.result = Some(MigrateResult::Dropped);
+                    return self.finish_after_probe(i);
+                }
+                if self.variant == Variant::Fine {
+                    self.state = MState::AwaitCurMoveOn(i);
+                    SmStep::Issue(Req::Fao {
+                        target: self.target,
+                        offset: self.plan().lock_off(i),
+                        add: -(EXCLUSIVE_LOCK as i64),
+                    })
+                } else {
+                    self.start_probe(i + 1)
+                }
+            }
+            MState::AwaitCurMoveOn(i) => {
+                let _ = word_of(resp);
+                self.start_probe(i + 1)
+            }
+            MState::AwaitPut(i) => {
+                debug_assert!(matches!(resp, Resp::Ack));
+                self.result = Some(MigrateResult::Copied);
+                self.finish_after_probe(i)
+            }
+            MState::AwaitFinish => {
+                // fine: the release FAO's previous value; coarse: Ack
+                self.done()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::{coarse, fine, lockfree};
+    use crate::rma::shm::ShmCluster;
+
+    const KEY: usize = 16;
+    const VAL: usize = 24;
+
+    fn write(
+        rma: &crate::rma::shm::ShmRma,
+        cfg: &DhtConfig,
+        key: &[u8],
+        val: &[u8],
+    ) -> OpOut {
+        match cfg.variant {
+            Variant::Coarse => {
+                rma.exec(&mut coarse::WriteSm::new(cfg, key, val))
+            }
+            Variant::Fine => rma.exec(&mut fine::WriteSm::new(cfg, key, val)),
+            Variant::LockFree => {
+                rma.exec(&mut lockfree::WriteSm::new(cfg, key, val))
+            }
+        }
+    }
+
+    fn read(
+        rma: &crate::rma::shm::ShmRma,
+        cfg: &DhtConfig,
+        key: &[u8],
+    ) -> DhtOutcome {
+        match cfg.variant {
+            Variant::Coarse => {
+                rma.exec(&mut coarse::ReadSm::new(cfg, key)).outcome
+            }
+            Variant::Fine => rma.exec(&mut fine::ReadSm::new(cfg, key)).outcome,
+            Variant::LockFree => {
+                rma.exec(&mut lockfree::ReadSm::new(cfg, key)).outcome
+            }
+        }
+    }
+
+    /// Migrate every old bucket; returns per-result counts (copied,
+    /// skipped-empty, skipped-present, dropped).
+    fn migrate_all(
+        rma: &crate::rma::shm::ShmRma,
+        cur: &DhtConfig,
+        old: &DhtConfig,
+        target: u32,
+    ) -> (u64, u64, u64, u64) {
+        let (mut c, mut se, mut sp, mut d) = (0, 0, 0, 0);
+        for b in 0..old.addressing.buckets() {
+            let out = rma.exec(&mut MigrateSm::new(cur, old, target, b));
+            match out.result {
+                MigrateResult::Copied => c += 1,
+                MigrateResult::SkippedEmpty => se += 1,
+                MigrateResult::SkippedPresent => sp += 1,
+                MigrateResult::Dropped => d += 1,
+            }
+        }
+        (c, se, sp, d)
+    }
+
+    #[test]
+    fn migrate_copies_entries_all_variants() {
+        for variant in Variant::ALL {
+            let old = DhtConfig::new(variant, 1, 16 * 1024, KEY, VAL);
+            let cluster = ShmCluster::new(1, 16 * 1024);
+            let rma = cluster.rma(0);
+            for i in 0..20u8 {
+                write(&rma, &old, &[i; KEY], &[i ^ 0x5A; VAL]);
+            }
+            // allocate the new table at 4x capacity and migrate
+            let buckets = old.addressing.buckets() * 4;
+            let base = cluster
+                .alloc_window(buckets as usize * old.layout.size())
+                .expect("segment slot");
+            let cur = old.with_table(base, buckets);
+            let (copied, _, sp, dropped) = migrate_all(&rma, &cur, &old, 0);
+            assert_eq!(sp, 0, "{variant:?}: nothing was superseded");
+            assert_eq!(dropped, 0, "{variant:?}: 4x table never fills");
+            assert!(copied >= 19, "{variant:?}: copied {copied}/20");
+            for i in 0..20u8 {
+                let out = read(&rma, &cur, &[i; KEY]);
+                if let DhtOutcome::ReadHit(v) = out {
+                    assert_eq!(v, vec![i ^ 0x5A; VAL], "{variant:?} key {i}");
+                } else if read(&rma, &old, &[i; KEY])
+                    != DhtOutcome::ReadMiss
+                {
+                    panic!("{variant:?}: key {i} lost in migration: {out:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn migrate_never_clobbers_newer_writes() {
+        let old = DhtConfig::new(Variant::LockFree, 1, 8 * 1024, KEY, VAL);
+        let cluster = ShmCluster::new(1, 8 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![7u8; KEY];
+        write(&rma, &old, &key, &[1u8; VAL]);
+        let buckets = old.addressing.buckets() * 2;
+        let base = cluster
+            .alloc_window(buckets as usize * old.layout.size())
+            .expect("segment slot");
+        let cur = old.with_table(base, buckets);
+        // a concurrent write already stored a newer value in the new table
+        write(&rma, &cur, &key, &[9u8; VAL]);
+        let (copied, _, sp, _) = migrate_all(&rma, &cur, &old, 0);
+        assert_eq!(copied, 0);
+        assert_eq!(sp, 1, "the superseded old record is skipped");
+        assert_eq!(
+            read(&rma, &cur, &key),
+            DhtOutcome::ReadHit(vec![9u8; VAL]),
+            "newer value survives migration"
+        );
+    }
+
+    #[test]
+    fn migrate_releases_all_locks() {
+        for variant in [Variant::Coarse, Variant::Fine] {
+            let old = DhtConfig::new(variant, 1, 4 * 1024, KEY, VAL);
+            let cluster = ShmCluster::new(1, 4 * 1024);
+            let rma = cluster.rma(0);
+            for i in 0..10u8 {
+                write(&rma, &old, &[i; KEY], &[i; VAL]);
+            }
+            let buckets = old.addressing.buckets() * 2;
+            let base = cluster
+                .alloc_window(buckets as usize * old.layout.size())
+                .expect("segment slot");
+            let cur = old.with_table(base, buckets);
+            migrate_all(&rma, &cur, &old, 0);
+            if variant == Variant::Fine {
+                for b in 0..buckets {
+                    let off = base + old.layout.bucket_off(b);
+                    assert_eq!(
+                        rma.peek_word(0, off),
+                        0,
+                        "new bucket {b} lock leaked"
+                    );
+                }
+            }
+            // coarse: exclusive window lock must be free again — a fresh
+            // exclusive op completes immediately
+            write(&rma, &cur, &[99u8; KEY], &[99u8; VAL]);
+        }
+    }
+
+    #[test]
+    fn torn_old_record_is_skipped_not_copied() {
+        let old = DhtConfig::new(Variant::LockFree, 1, 4 * 1024, KEY, VAL);
+        let cluster = ShmCluster::new(1, 4 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![3u8; KEY];
+        write(&rma, &old, &key, &[3u8; VAL]);
+        // corrupt a value byte behind the DHT's back (simulated tear)
+        let plan = Plan::new(&old, &key);
+        let off = plan.layout.bucket_off(plan.indices[0])
+            + plan.layout.val_off() as u64;
+        let mut word = rma.get(0, off, 8);
+        word[0] ^= 0xFF;
+        rma.exec(&mut OneReq(Some(Req::Put { target: 0, offset: off, data: word })));
+        let buckets = old.addressing.buckets() * 2;
+        let base = cluster
+            .alloc_window(buckets as usize * old.layout.size())
+            .expect("segment slot");
+        let cur = old.with_table(base, buckets);
+        let (copied, _, _, dropped) = migrate_all(&rma, &cur, &old, 0);
+        assert_eq!(copied, 0, "torn record must not be migrated");
+        assert_eq!(dropped, 0);
+        assert_eq!(read(&rma, &cur, &key), DhtOutcome::ReadMiss);
+    }
+
+    #[test]
+    fn dual_read_falls_back_to_old_table() {
+        for variant in Variant::ALL {
+            let old = DhtConfig::new(variant, 1, 8 * 1024, KEY, VAL);
+            let cluster = ShmCluster::new(1, 8 * 1024);
+            let rma = cluster.rma(0);
+            let key_old = vec![1u8; KEY];
+            let key_new = vec![2u8; KEY];
+            write(&rma, &old, &key_old, &[11u8; VAL]);
+            let buckets = old.addressing.buckets() * 2;
+            let base = cluster
+                .alloc_window(buckets as usize * old.layout.size())
+                .expect("segment slot");
+            let cur = old.with_table(base, buckets);
+            write(&rma, &cur, &key_new, &[22u8; VAL]);
+            // new-table key: primary lookup, no fallback
+            let d = rma.exec(&mut DualReadSm::new(&cur, &old, &key_new));
+            assert_eq!(d.out.outcome, DhtOutcome::ReadHit(vec![22u8; VAL]));
+            assert!(!d.fell_back, "{variant:?}");
+            assert!(!d.primary_corrupt);
+            // old-table key: miss in new, hit via fallback
+            let d = rma.exec(&mut DualReadSm::new(&cur, &old, &key_old));
+            assert_eq!(d.out.outcome, DhtOutcome::ReadHit(vec![11u8; VAL]));
+            assert!(d.fell_back, "{variant:?}");
+            // absent key: dual miss
+            let d = rma.exec(&mut DualReadSm::new(&cur, &old, &[8u8; KEY]));
+            assert_eq!(d.out.outcome, DhtOutcome::ReadMiss);
+            assert!(d.fell_back, "{variant:?}");
+        }
+    }
+}

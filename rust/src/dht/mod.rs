@@ -24,6 +24,7 @@ pub mod coarse;
 pub mod fine;
 pub mod front;
 pub mod lockfree;
+pub mod migrate;
 pub mod stats;
 
 use crate::rma::{OpSm, Resp, SmStep};
@@ -31,6 +32,7 @@ use crate::rma::{OpSm, Resp, SmStep};
 pub use addressing::Addressing;
 pub use bucket::{BucketLayout, Meta};
 pub use front::{Dht, DhtCheckpoint};
+pub use migrate::{DualOut, MigrateOut, MigrateResult};
 pub use stats::DhtStats;
 
 /// Which consistency design a DHT instance uses.
@@ -55,6 +57,10 @@ impl Variant {
             Variant::LockFree => "lock-free",
         }
     }
+
+    /// The names [`Self::parse`] accepts (for CLI error messages).
+    pub const ACCEPTED: &'static str =
+        "coarse, coarse-grained, fine, fine-grained, lockfree, lock-free";
 
     pub fn parse(s: &str) -> Option<Variant> {
         match s {
@@ -154,6 +160,12 @@ impl OpSm for DhtSm {
 }
 
 /// Static configuration shared by every DHT op (cheap to clone).
+///
+/// With the elastic subsystem (DESIGN.md §8) a `DhtConfig` describes one
+/// *table epoch*: `base` locates the table's window segment and
+/// `addressing` carries that epoch's bucket count.  During a migration
+/// epoch the front-end holds two of these — the current table and the
+/// retiring one — and [`DhtConfig::with_table`] derives the new view.
 #[derive(Clone, Debug)]
 pub struct DhtConfig {
     pub variant: Variant,
@@ -161,6 +173,10 @@ pub struct DhtConfig {
     pub layout: BucketLayout,
     /// Lock-free: checksum re-read attempts before invalidating (§4.2).
     pub crc_retries: u32,
+    /// Base window offset of the table segment this config addresses
+    /// (0 = the table sized at `DHT_create`; elastic resizes point this
+    /// at freshly allocated segments, [`crate::rma::SEG_SHIFT`]).
+    pub base: u64,
 }
 
 impl DhtConfig {
@@ -181,11 +197,23 @@ impl DhtConfig {
             addressing: Addressing::new(nranks, buckets),
             layout,
             crc_retries: 3,
+            base: 0,
         }
     }
 
     /// The paper's POET record geometry: 80-byte key, 104-byte value.
     pub fn poet(variant: Variant, nranks: u32, win_bytes: usize) -> Self {
         Self::new(variant, nranks, win_bytes, 80, 104)
+    }
+
+    /// The same DHT pointed at a different table: `base` locates the
+    /// table's window segment, `buckets_per_rank` its capacity.  Keys
+    /// keep their target rank (`hash % nranks` is capacity-independent),
+    /// which is what makes elastic migration rank-local (DESIGN.md §8).
+    pub fn with_table(&self, base: u64, buckets_per_rank: u64) -> Self {
+        let mut c = self.clone();
+        c.addressing = self.addressing.rescale(buckets_per_rank);
+        c.base = base;
+        c
     }
 }

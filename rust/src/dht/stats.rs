@@ -1,6 +1,8 @@
 //! Per-instance DHT statistics (hit rates, evictions, mismatches —
-//! everything Tables 2 and 4 of the paper report).
+//! everything Tables 2 and 4 of the paper report), plus the elastic
+//! resize's migration counters (DESIGN.md §8).
 
+use super::migrate::{MigrateOut, MigrateResult};
 use super::{DhtOutcome, OpOut};
 
 #[derive(Clone, Debug, Default)]
@@ -25,6 +27,17 @@ pub struct DhtStats {
     pub probes: u64,
     /// Fine-grained lock acquisition retries observed at protocol level.
     pub lock_retries: u64,
+    /// Elastic resizes initiated by this handle (DESIGN.md §8).
+    pub resizes: u64,
+    /// Entries this handle copied old table -> new table.
+    pub migrated: u64,
+    /// Old records skipped because a newer write already stored the key.
+    pub migrate_skipped: u64,
+    /// Old records dropped (all new-table candidates taken).
+    pub migrate_dropped: u64,
+    /// Reads that fell back to the retiring table during a migration
+    /// epoch (the dual-lookup cost of resizing online).
+    pub dual_reads: u64,
 }
 
 impl DhtStats {
@@ -68,6 +81,18 @@ impl DhtStats {
         }
     }
 
+    /// Classify one migration-bucket outcome (elastic resize).  Kept out
+    /// of the per-op counters (`probes`, `reads`, ...) so migration never
+    /// skews the paper's application metrics.
+    pub fn record_migrate(&mut self, out: &MigrateOut) {
+        match out.result {
+            MigrateResult::Copied => self.migrated += 1,
+            MigrateResult::SkippedEmpty => {}
+            MigrateResult::SkippedPresent => self.migrate_skipped += 1,
+            MigrateResult::Dropped => self.migrate_dropped += 1,
+        }
+    }
+
     pub fn merge(&mut self, o: &DhtStats) {
         self.invalidations += o.invalidations;
         self.reads += o.reads;
@@ -81,6 +106,11 @@ impl DhtStats {
         self.evictions += o.evictions;
         self.probes += o.probes;
         self.lock_retries += o.lock_retries;
+        self.resizes += o.resizes;
+        self.migrated += o.migrated;
+        self.migrate_skipped += o.migrate_skipped;
+        self.migrate_dropped += o.migrate_dropped;
+        self.dual_reads += o.dual_reads;
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -141,6 +171,83 @@ mod tests {
         b.record(&out(DhtOutcome::ReadMiss));
         a.merge(&b);
         assert_eq!(a.reads, 2);
+    }
+
+    /// Fill every counter with a distinct value so any field `merge`
+    /// forgets (including the migration counters) fails the assertion.
+    fn distinct(seed: u64) -> DhtStats {
+        DhtStats {
+            reads: seed + 1,
+            writes: seed + 2,
+            read_hits: seed + 3,
+            read_misses: seed + 4,
+            mismatches: seed + 5,
+            invalidations: seed + 6,
+            crc_retries: seed + 7,
+            writes_fresh: seed + 8,
+            writes_update: seed + 9,
+            evictions: seed + 10,
+            probes: seed + 11,
+            lock_retries: seed + 12,
+            resizes: seed + 13,
+            migrated: seed + 14,
+            migrate_skipped: seed + 15,
+            migrate_dropped: seed + 16,
+            dual_reads: seed + 17,
+        }
+    }
+
+    #[test]
+    fn merge_covers_every_counter() {
+        let mut a = distinct(100);
+        let b = distinct(2000);
+        a.merge(&b);
+        // field with per-seed offset k must sum to (100+k) + (2000+k)
+        let off = distinct(0);
+        assert_eq!(a.reads, 2100 + 2 * off.reads);
+        assert_eq!(a.writes, 2100 + 2 * off.writes);
+        assert_eq!(a.read_hits, 2100 + 2 * off.read_hits);
+        assert_eq!(a.read_misses, 2100 + 2 * off.read_misses);
+        assert_eq!(a.mismatches, 2100 + 2 * off.mismatches);
+        assert_eq!(a.invalidations, 2100 + 2 * off.invalidations);
+        assert_eq!(a.crc_retries, 2100 + 2 * off.crc_retries);
+        assert_eq!(a.writes_fresh, 2100 + 2 * off.writes_fresh);
+        assert_eq!(a.writes_update, 2100 + 2 * off.writes_update);
+        assert_eq!(a.evictions, 2100 + 2 * off.evictions);
+        assert_eq!(a.probes, 2100 + 2 * off.probes);
+        assert_eq!(a.lock_retries, 2100 + 2 * off.lock_retries);
+        assert_eq!(a.resizes, 2100 + 2 * off.resizes);
+        assert_eq!(a.migrated, 2100 + 2 * off.migrated);
+        assert_eq!(a.migrate_skipped, 2100 + 2 * off.migrate_skipped);
+        assert_eq!(a.migrate_dropped, 2100 + 2 * off.migrate_dropped);
+        assert_eq!(a.dual_reads, 2100 + 2 * off.dual_reads);
+    }
+
+    #[test]
+    fn record_migrate_classifies_results() {
+        let mut s = DhtStats::default();
+        for (result, n) in [
+            (MigrateResult::Copied, 3),
+            (MigrateResult::SkippedEmpty, 5),
+            (MigrateResult::SkippedPresent, 2),
+            (MigrateResult::Dropped, 1),
+        ] {
+            for _ in 0..n {
+                s.record_migrate(&MigrateOut {
+                    result,
+                    probes: 4,
+                    lock_retries: 1,
+                });
+            }
+        }
+        assert_eq!(s.migrated, 3);
+        assert_eq!(s.migrate_skipped, 2);
+        assert_eq!(s.migrate_dropped, 1);
+        // migration never skews the per-op application metrics
+        assert_eq!(s.probes, 0);
+        assert_eq!(s.lock_retries, 0);
+        assert_eq!(s.reads, 0);
+        assert_eq!(s.writes, 0);
     }
 
     #[test]

@@ -11,14 +11,18 @@
 //!   a threaded shared-memory backend ([`rma::shm`]) — both behind the
 //!   [`rma::RmaBackend`] trait, whose pipelined batch execution layer
 //!   (`Dht::read_batch`/`Dht::write_batch`, DESIGN.md §3) keeps many
-//!   one-sided ops in flight per rank.
+//!   one-sided ops in flight per rank.  Beyond the paper, the *elastic
+//!   capacity* subsystem ([`dht::migrate`], DESIGN.md §8) resizes the
+//!   table online with live, lock-free cooperative migration.
 //! * **L2/L1 (python/, build time only)** — the geochemistry model and its
 //!   Pallas kernels, AOT-lowered to HLO text artifacts.
 //! * **runtime** — [`runtime`] loads the artifacts via PJRT and executes
 //!   them from the Rust request path (Python is never on it).
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
-//! results vs. the paper.
+//! See README.md for the tour, DESIGN.md for the architecture and
+//! EXPERIMENTS.md for measured results vs. the paper.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod bench;
 pub mod cli;

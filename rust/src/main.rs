@@ -70,6 +70,8 @@ COMMANDS:
   poet         threaded POET on this machine (real PJRT chemistry)
                  --ny N --nx N --steps N --workers W --engine pjrt|native
                  --variant none|coarse|fine|lockfree|all --pipeline D
+                 --resize-at-iter N --resize-factor F (online elastic
+                 resize mid-run; hit rate recovers live, DESIGN.md §8)
 
 Common: --config file.toml  --set key=value (repeatable)
 "#;
@@ -112,7 +114,9 @@ fn cmd_info() -> Result<()> {
 }
 
 fn parse_variant(s: &str) -> Result<Variant> {
-    Variant::parse(s).ok_or_else(|| anyhow!("unknown variant {s:?}"))
+    Variant::parse(s).ok_or_else(|| {
+        anyhow!("unknown variant {s:?}; accepted: {}", Variant::ACCEPTED)
+    })
 }
 
 fn cmd_bench_kv(args: &Args) -> Result<()> {
@@ -244,6 +248,12 @@ fn cmd_poet(args: &Args) -> Result<()> {
     cfg.digits = args.u64_or("--digits", cfg.digits as u64)? as u32;
     cfg.dt = args.f64_or("--dt", cfg.dt)?;
     cfg.pipeline = args.usize_or("--pipeline", cfg.pipeline)?;
+    cfg.win_bytes = args.usize_or("--win-bytes", cfg.win_bytes)?;
+    if args.get("--resize-at-iter").is_some() {
+        cfg.resize_at_step =
+            Some(args.usize_or("--resize-at-iter", 0)?);
+    }
+    cfg.resize_factor = args.f64_or("--resize-factor", cfg.resize_factor)?;
     let variants: Vec<Option<Variant>> =
         match args.str_or("--variant", "lockfree") {
             "none" | "reference" => vec![None],
@@ -285,5 +295,28 @@ fn cmd_poet(args: &Args) -> Result<()> {
         cfg.ny, cfg.nx, cfg.steps, cfg.workers
     );
     print!("{}", t.render());
+    if let Some(at) = cfg.resize_at_step {
+        for r in &runs {
+            // only report resizes that actually executed (an
+            // out-of-range --resize-at-iter never fires)
+            if r.label == "reference" || r.stats.dht.resizes == 0 {
+                continue;
+            }
+            let pre = r.stats.hit_rate_over(at.saturating_sub(10), at);
+            let post = r
+                .stats
+                .hit_rate_over(cfg.steps.saturating_sub(10), cfg.steps);
+            println!(
+                "# {}: resize at step {at} (x{:.1}) — hit rate {:.3} \
+                 (pre) -> {:.3} (final), {} migrated / {} dual reads",
+                r.label,
+                cfg.resize_factor,
+                pre,
+                post,
+                r.stats.dht.migrated,
+                r.stats.dht.dual_reads
+            );
+        }
+    }
     Ok(())
 }

@@ -51,6 +51,13 @@ pub struct PoetConfig {
     /// In-flight DHT ops per batched surrogate lookup/store pass
     /// (pipeline depth of `read_batch`/`write_batch`; DESIGN.md §3).
     pub pipeline: usize,
+    /// Mid-run elastic resize (DESIGN.md §8): before this step, grow (or
+    /// shrink) the DHT to `resize_factor` x its per-rank bucket count.
+    /// Demonstrates online hit-rate recovery for an undersized table
+    /// (CLI: `--resize-at-iter N --resize-factor F`).
+    pub resize_at_step: Option<usize>,
+    /// Capacity factor applied at `resize_at_step`.
+    pub resize_factor: f64,
 }
 
 impl PoetConfig {
@@ -68,6 +75,8 @@ impl PoetConfig {
             chem_repeat: 1,
             chem_extra_us: 0.0,
             pipeline: crate::dht::front::DEFAULT_PIPELINE,
+            resize_at_step: None,
+            resize_factor: 2.0,
         }
     }
 }
@@ -82,6 +91,9 @@ pub struct PoetRunStats {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub dht: DhtStats,
+    /// Per-step (hits, misses) — the hit-rate trajectory a mid-run
+    /// resize is judged by (empty for reference runs).
+    pub step_hits: Vec<(u64, u64)>,
     /// Final-state diagnostics.
     pub max_dolomite: f64,
     pub inlet_calcite: f64,
@@ -94,6 +106,20 @@ impl PoetRunStats {
             0.0
         } else {
             self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Mean hit rate over the step range `[lo, hi)` (clamped).
+    pub fn hit_rate_over(&self, lo: usize, hi: usize) -> f64 {
+        let hi = hi.min(self.step_hits.len());
+        let lo = lo.min(hi);
+        let (h, m) = self.step_hits[lo..hi]
+            .iter()
+            .fold((0u64, 0u64), |(h, m), (sh, sm)| (h + sh, m + sm));
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
         }
     }
 }
@@ -158,6 +184,7 @@ impl PoetDriver {
             Some(hs) => hs.into_iter().map(Some).collect(),
             None => (0..nworkers).map(|_| None).collect(),
         };
+        let with_dht = handles.iter().any(Option::is_some);
 
         // cell ranges per worker (contiguous blocks, like POET's
         // cell-wise distribution over MPI ranks)
@@ -165,7 +192,19 @@ impl PoetDriver {
             .map(|w| (w * cells / nworkers, (w + 1) * cells / nworkers))
             .collect();
 
-        for _step in 0..cfg.steps {
+        for step in 0..cfg.steps {
+            // mid-run elastic resize: one handle initiates; every worker
+            // cooperatively migrates its own shard piggybacked on its
+            // subsequent batched lookups/stores (DESIGN.md §8)
+            if cfg.resize_at_step == Some(step) {
+                if let Some(h) = handles.iter_mut().flatten().next() {
+                    let cur = h.buckets_per_rank();
+                    let target = ((cur as f64 * cfg.resize_factor).ceil()
+                        as u64)
+                        .max(1);
+                    h.resize(target).expect("mid-run resize");
+                }
+            }
             transport::advect_step(
                 &mut self.grid.solutes,
                 &mut scratch,
@@ -192,13 +231,20 @@ impl PoetDriver {
                 joins.into_iter().map(|j| j.join().expect("worker")).collect()
             });
 
+            let mut step_h = 0u64;
+            let mut step_m = 0u64;
             for out in results {
+                step_h += out.hits;
+                step_m += out.misses;
                 stats.cache_hits += out.hits;
                 stats.cache_misses += out.misses;
                 stats.chem_cells += out.chem_cells;
                 for (cell, rec) in out.updates {
                     self.grid.apply(cell, &rec);
                 }
+            }
+            if with_dht {
+                stats.step_hits.push((step_h, step_m));
             }
         }
 
@@ -373,6 +419,48 @@ mod tests {
         for (x, y) in a.grid.minerals.iter().zip(b.grid.minerals.iter()) {
             assert!((x - y).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn mid_run_resize_recovers_hit_rate() {
+        // an undersized table is eviction-bound; growing it mid-run must
+        // lift the hit rate above the pre-resize steady state AND leave
+        // the physics identical to the reference (the acceptance demo of
+        // the elastic subsystem, DESIGN.md §8)
+        let mut cfg = PoetConfig::small();
+        cfg.steps = 60;
+        cfg.workers = 2;
+        cfg.ny = 12;
+        cfg.nx = 36;
+        cfg.inj_rows = 3;
+        // lock-free bucket = 200 B -> ~40 buckets/rank for 432 cells:
+        // the working set cannot fit before the resize
+        cfg.win_bytes = 8 * 1024;
+        cfg.resize_at_step = Some(30);
+        cfg.resize_factor = 64.0;
+        let mut d =
+            PoetDriver::with_default_waters(cfg, Arc::new(NativeChemistry));
+        let stats = d.run_with_dht(Variant::LockFree);
+        assert_eq!(stats.dht.resizes, 1, "exactly one resize initiated");
+        assert!(stats.dht.migrated > 0, "cooperative migration ran");
+        assert_eq!(stats.dht.mismatches, 0, "no wrong values mid-resize");
+        let pre = stats.hit_rate_over(20, 30);
+        let post = stats.hit_rate_over(50, 60);
+        assert!(
+            post > pre,
+            "hit rate must recover after the resize: pre {pre:.3} vs \
+             post {post:.3}"
+        );
+        // physics still matches the reference run
+        let mut r = small_driver(60, 1);
+        let ref_stats = r.run_reference();
+        let d_dol = (stats.max_dolomite - ref_stats.max_dolomite).abs();
+        assert!(
+            d_dol <= 0.35 * ref_stats.max_dolomite.max(1e-12),
+            "dolomite {} vs reference {}",
+            stats.max_dolomite,
+            ref_stats.max_dolomite
+        );
     }
 
     #[test]

@@ -32,6 +32,35 @@ use crate::sim::Time;
 /// increment by one below this (paper §4.1, Open MPI's scheme).
 pub const EXCLUSIVE_LOCK: u64 = 0x1000_0000;
 
+/// Bit position that selects the window *segment* inside a 64-bit RMA
+/// offset.  A rank's memory is a small set of independently allocated
+/// windows ("segments", the analogue of separate `MPI_Win` objects);
+/// segment `s` spans offsets `[s << SEG_SHIFT, s << SEG_SHIFT + len)`.
+/// Segment 0 is the table window sized at cluster creation, so all
+/// pre-elastic offsets are unchanged; segment 1 is the control window
+/// (see [`CTRL_BASE`]); further segments come from
+/// [`RmaBackend::alloc_window`] (the elastic resize, DESIGN.md §8).
+/// No single transfer may cross a segment boundary.
+pub const SEG_SHIFT: u32 = 40;
+
+/// Base offset of the per-rank *control window*: a small window allocated
+/// on every rank at cluster creation that carries the migration epoch,
+/// table geometry and per-rank migration cursors of the elastic resize
+/// protocol (DESIGN.md §8; word layout in [`crate::dht::migrate`]).
+pub const CTRL_BASE: u64 = 1u64 << SEG_SHIFT;
+
+/// Size of the control window (per rank), bytes.
+pub const CTRL_BYTES: usize = 128;
+
+/// Split an RMA offset into (segment id, offset within the segment).
+#[inline]
+pub(crate) fn split_offset(offset: u64) -> (usize, u64) {
+    (
+        (offset >> SEG_SHIFT) as usize,
+        offset & ((1u64 << SEG_SHIFT) - 1),
+    )
+}
+
 /// One-sided operation requests (offsets/lengths in bytes, 8-aligned).
 #[derive(Clone, Debug)]
 pub enum Req {
@@ -142,6 +171,23 @@ pub trait RmaBackend: Clone {
     /// Direct read of raw bytes from a target window (diagnostics,
     /// checkpointing — not an RMA-modelled operation).
     fn peek(&self, target: u32, offset: u64, len: u32) -> Vec<u8>;
+
+    /// Direct read of one u64 word (control-plane polling; unmodelled).
+    /// Backends override this with an allocation-free path — it sits on
+    /// the per-op epoch check of the elastic resize (DESIGN.md §8).
+    fn peek_word(&self, target: u32, offset: u64) -> u64 {
+        u64::from_le_bytes(self.peek(target, offset, 8).try_into().unwrap())
+    }
+
+    /// Collectively allocate a fresh window segment of `bytes` on every
+    /// rank and return its base offset (identical on all ranks) — the
+    /// `MPI_Win_create` of the elastic resize (DESIGN.md §8) — or `None`
+    /// if the backend has no segment slots left (callers surface this as
+    /// a recoverable error, never a panic).  The allocation itself is a
+    /// control-plane action and is not modelled as RMA traffic;
+    /// publishing the new geometry to the other ranks is the caller's
+    /// job (and *is* modelled, see `Dht::resize`).
+    fn alloc_window(&mut self, bytes: usize) -> Option<u64>;
 }
 
 /// Work item a workload hands to the DES engine for a rank.

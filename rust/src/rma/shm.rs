@@ -14,43 +14,74 @@
 //! holds the word.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::{
-    debug_check_aligned, OpSm, Req, Resp, RmaBackend, RpcReply, SmStep,
-    EXCLUSIVE_LOCK,
+    debug_check_aligned, split_offset, OpSm, Req, Resp, RmaBackend, RpcReply,
+    SmStep, CTRL_BYTES, EXCLUSIVE_LOCK,
 };
 
-/// One rank's shared window: a lock word plus word-granular memory.
+/// Window segment slots per rank (segment 0 = the table window, segment 1
+/// = the control window, the rest free for `alloc_window`).  14 elastic
+/// resizes per cluster is far beyond any workload here.
+const MAX_SEGS: usize = 16;
+
+/// One rank's shared window: a lock word plus word-granular memory,
+/// organised as independently allocated *segments* (see
+/// [`super::SEG_SHIFT`]).  Segment publication uses `OnceLock` so that
+/// concurrent readers route offsets lock-free while a resize allocates.
 pub struct ShmWindow {
     lock: AtomicU64,
-    mem: Box<[AtomicU64]>,
+    segs: Vec<OnceLock<Box<[AtomicU64]>>>,
 }
 
 impl ShmWindow {
     fn new(bytes: usize) -> Self {
+        let mut segs = Vec::with_capacity(MAX_SEGS);
+        segs.resize_with(MAX_SEGS, OnceLock::new);
+        let w = Self { lock: AtomicU64::new(0), segs };
+        assert!(w.segs[0].set(Self::alloc(bytes)).is_ok());
+        assert!(w.segs[1].set(Self::alloc(CTRL_BYTES)).is_ok());
+        w
+    }
+
+    fn alloc(bytes: usize) -> Box<[AtomicU64]> {
         assert_eq!(bytes % 8, 0);
         let words = bytes / 8;
         let mut v = Vec::with_capacity(words);
         v.resize_with(words, || AtomicU64::new(0));
-        Self { lock: AtomicU64::new(0), mem: v.into_boxed_slice() }
+        v.into_boxed_slice()
+    }
+
+    /// Route an offset to (segment memory, offset within the segment).
+    #[inline]
+    fn seg(&self, offset: u64) -> (&[AtomicU64], u64) {
+        let (s, off) = split_offset(offset);
+        let mem = self
+            .segs
+            .get(s)
+            .and_then(|slot| slot.get())
+            .expect("RMA access to unallocated window segment");
+        (mem, off)
     }
 
     #[inline]
     fn read_into(&self, offset: u64, out: &mut [u8]) {
-        let w0 = (offset / 8) as usize;
+        let (mem, off) = self.seg(offset);
+        let w0 = (off / 8) as usize;
         for (i, chunk) in out.chunks_exact_mut(8).enumerate() {
             chunk.copy_from_slice(
-                &self.mem[w0 + i].load(Ordering::Relaxed).to_le_bytes(),
+                &mem[w0 + i].load(Ordering::Relaxed).to_le_bytes(),
             );
         }
     }
 
     #[inline]
     fn write_from(&self, offset: u64, data: &[u8]) {
-        let w0 = (offset / 8) as usize;
+        let (mem, off) = self.seg(offset);
+        let w0 = (off / 8) as usize;
         for (i, chunk) in data.chunks_exact(8).enumerate() {
-            self.mem[w0 + i].store(
+            mem[w0 + i].store(
                 u64::from_le_bytes(chunk.try_into().unwrap()),
                 Ordering::Relaxed,
             );
@@ -59,7 +90,8 @@ impl ShmWindow {
 
     #[inline]
     fn word(&self, offset: u64) -> &AtomicU64 {
-        &self.mem[(offset / 8) as usize]
+        let (mem, off) = self.seg(offset);
+        &mem[(off / 8) as usize]
     }
 }
 
@@ -67,6 +99,8 @@ impl ShmWindow {
 pub struct ShmCluster {
     windows: Vec<ShmWindow>,
     win_bytes: usize,
+    /// Serializes segment allocation; all other access is lock-free.
+    next_seg: Mutex<usize>,
 }
 
 impl ShmCluster {
@@ -76,6 +110,7 @@ impl ShmCluster {
         Arc::new(Self {
             windows: (0..nranks).map(|_| ShmWindow::new(win_bytes)).collect(),
             win_bytes,
+            next_seg: Mutex::new(2),
         })
     }
 
@@ -85,6 +120,24 @@ impl ShmCluster {
 
     pub fn win_bytes(&self) -> usize {
         self.win_bytes
+    }
+
+    /// Collectively allocate a fresh `bytes`-sized segment on every
+    /// rank's window; returns the segment's base offset (the same on
+    /// every rank), or `None` once all [`MAX_SEGS`] slots are taken.
+    /// Concurrent DHT traffic keeps running: readers never touch a
+    /// segment before its base offset has been published.
+    pub fn alloc_window(&self, bytes: usize) -> Option<u64> {
+        let mut next = self.next_seg.lock().unwrap();
+        let seg = *next;
+        if seg >= MAX_SEGS {
+            return None;
+        }
+        for w in &self.windows {
+            assert!(w.segs[seg].set(ShmWindow::alloc(bytes)).is_ok());
+        }
+        *next = seg + 1;
+        Some((seg as u64) << super::SEG_SHIFT)
     }
 
     /// Handle for one rank (cheap to clone per worker thread).
@@ -159,7 +212,7 @@ impl ShmRma {
     /// *interleaving* (the schedule a real multi-op epoch would produce)
     /// rather than wall-clock overlap; it is also what keeps batch
     /// semantics identical between the shm and DES backends.  Window-lock
-    /// acquisitions go through [`Self::try_lock_win`] and park the slot on
+    /// acquisitions go through the non-blocking `try_lock_win` and park the slot on
     /// failure while its siblings keep running.
     pub fn exec_pipelined<S: OpSm>(
         &self,
@@ -367,6 +420,17 @@ impl RmaBackend for ShmRma {
     fn peek(&self, target: u32, offset: u64, len: u32) -> Vec<u8> {
         self.get(target, offset, len)
     }
+
+    fn peek_word(&self, target: u32, offset: u64) -> u64 {
+        // allocation-free: one relaxed atomic load (hot per-op path)
+        self.cluster.windows[target as usize]
+            .word(offset)
+            .load(Ordering::Relaxed)
+    }
+
+    fn alloc_window(&mut self, bytes: usize) -> Option<u64> {
+        self.cluster.alloc_window(bytes)
+    }
 }
 
 #[cfg(test)]
@@ -568,6 +632,48 @@ mod tests {
         for v in 0..32u64 {
             assert_eq!(rma.peek_word(0, v * 8), v);
         }
+    }
+
+    #[test]
+    fn alloc_window_segments_are_isolated() {
+        use super::super::{CTRL_BASE, SEG_SHIFT};
+        let cluster = ShmCluster::new(2, 256);
+        let rma = cluster.rma(0);
+        // the control segment exists from creation and starts zeroed
+        assert_eq!(rma.peek_word(1, CTRL_BASE), 0);
+        // a fresh segment lands at the next slot on every rank
+        let base = cluster.alloc_window(512).expect("slot");
+        assert_eq!(base, 2u64 << SEG_SHIFT);
+        for target in 0..2 {
+            rma.do_req(Req::Put {
+                target,
+                offset: base + 16,
+                data: vec![0xAB; 8],
+            });
+            // same low offset, different segment: independent memory
+            assert_eq!(rma.peek_word(target, 16), 0);
+            assert_eq!(rma.peek_word(target, CTRL_BASE + 16), 0);
+            assert_eq!(
+                rma.get(target, base + 16, 8),
+                vec![0xAB; 8],
+                "segment write visible"
+            );
+        }
+        let base2 = cluster.alloc_window(64).expect("slot");
+        assert_eq!(base2, 3u64 << SEG_SHIFT);
+    }
+
+    #[test]
+    fn alloc_window_slots_exhaust_cleanly() {
+        let cluster = ShmCluster::new(1, 256);
+        let mut got = 0;
+        while cluster.alloc_window(64).is_some() {
+            got += 1;
+        }
+        // 16 slots minus the table and control segments
+        assert_eq!(got, 14);
+        // exhaustion is a recoverable None, not a panic, and repeats
+        assert!(cluster.alloc_window(64).is_none());
     }
 
     #[test]

@@ -46,8 +46,8 @@ use crate::net::{Network, OpKind, OpTiming};
 use crate::sim::{EventQueue, Resource, Time};
 
 use super::{
-    debug_check_aligned, OpSm, Req, Resp, RmaBackend, SmStep, WorkItem,
-    Workload, EXCLUSIVE_LOCK,
+    debug_check_aligned, split_offset, OpSm, Req, Resp, RmaBackend, SmStep,
+    WorkItem, Workload, CTRL_BYTES, EXCLUSIVE_LOCK,
 };
 
 /// Engine events (two-phase per op; see module docs).  `ctx` identifies a
@@ -159,7 +159,10 @@ pub struct SimCluster<W: Workload> {
     /// Execution lanes (in-flight ops) per rank; 1 = classic blocking.
     lanes: u32,
     win_bytes: usize,
-    windows: Vec<Vec<u8>>,
+    /// Per rank: the window *segments* (index = `offset >> SEG_SHIFT`).
+    /// Segment 0 is the table window, segment 1 the control window, the
+    /// rest come from [`Self::alloc_window`] (elastic resize).
+    windows: Vec<Vec<Vec<u8>>>,
     inflight: Vec<Vec<InflightPut>>,
     /// `MPI_Win_lock` words, one per window (not part of window memory).
     win_locks: Vec<u64>,
@@ -203,7 +206,9 @@ impl<W: Workload> SimCluster<W> {
             nranks,
             lanes,
             win_bytes,
-            windows: (0..nranks).map(|_| vec![0u8; win_bytes]).collect(),
+            windows: (0..nranks)
+                .map(|_| vec![vec![0u8; win_bytes], vec![0u8; CTRL_BYTES]])
+                .collect(),
             inflight: (0..nranks).map(|_| Vec::new()).collect(),
             win_locks: vec![0; nranks as usize],
             net,
@@ -303,9 +308,22 @@ impl<W: Workload> SimCluster<W> {
 
     /// Read raw bytes from a window (post-run inspection / tests).
     pub fn peek(&self, target: u32, offset: u64, len: u32) -> Vec<u8> {
-        self.windows[target as usize]
-            [offset as usize..(offset + len as u64) as usize]
+        let (s, off) = split_offset(offset);
+        self.windows[target as usize][s]
+            [off as usize..(off + len as u64) as usize]
             .to_vec()
+    }
+
+    /// Collectively allocate a fresh window segment of `bytes` on every
+    /// rank; returns its base offset (see [`crate::rma::SEG_SHIFT`]).
+    pub fn alloc_window(&mut self, bytes: usize) -> u64 {
+        assert_eq!(bytes % 8, 0);
+        let seg = self.windows[0].len();
+        for w in &mut self.windows {
+            debug_assert_eq!(w.len(), seg);
+            w.push(vec![0u8; bytes]);
+        }
+        (seg as u64) << super::SEG_SHIFT
     }
 
     /// Current window-lock word (post-run inspection / tests).
@@ -690,14 +708,16 @@ impl<W: Workload> SimCluster<W> {
     // ------------------------------------------------------------- memory
 
     fn win_word(&self, target: u32, offset: u64) -> u64 {
-        let m = &self.windows[target as usize];
+        let (s, off) = split_offset(offset);
+        let m = &self.windows[target as usize][s];
         u64::from_le_bytes(
-            m[offset as usize..offset as usize + 8].try_into().unwrap(),
+            m[off as usize..off as usize + 8].try_into().unwrap(),
         )
     }
 
     fn set_win_word(&mut self, target: u32, offset: u64, v: u64) {
-        self.windows[target as usize][offset as usize..offset as usize + 8]
+        let (s, off) = split_offset(offset);
+        self.windows[target as usize][s][off as usize..off as usize + 8]
             .copy_from_slice(&v.to_le_bytes());
     }
 
@@ -705,16 +725,20 @@ impl<W: Workload> SimCluster<W> {
     /// torn window was registered at issue time).
     fn apply_put(&mut self, target: u32, offset: u64, data: Vec<u8>,
                  _timing: OpTiming) {
-        let mem = &mut self.windows[target as usize];
-        mem[offset as usize..offset as usize + data.len()]
-            .copy_from_slice(&data);
+        let (s, off) = split_offset(offset);
+        let mem = &mut self.windows[target as usize][s];
+        mem[off as usize..off as usize + data.len()].copy_from_slice(&data);
     }
 
-    /// Read with torn-write composition (see module docs).
+    /// Read with torn-write composition (see module docs).  Offsets in
+    /// the overlap arithmetic stay *global* (segment bits included):
+    /// transfers never span segments, so ranges from different segments
+    /// can never overlap.
     fn read_torn(&mut self, target: u32, offset: u64, len: u32) -> Vec<u8> {
-        let mem = &self.windows[target as usize];
+        let (s, off) = split_offset(offset);
+        let mem = &self.windows[target as usize][s];
         let mut out =
-            mem[offset as usize..offset as usize + len as usize].to_vec();
+            mem[off as usize..off as usize + len as usize].to_vec();
         // compose with in-flight DMA windows: a write that completes
         // *after* now has not yet landed its suffix; our memory already
         // holds the new data (applied at its exec), so for overlapping
@@ -926,6 +950,16 @@ impl RmaBackend for SimRma {
 
     fn peek(&self, target: u32, offset: u64, len: u32) -> Vec<u8> {
         self.shared.borrow().peek(target, offset, len)
+    }
+
+    fn peek_word(&self, target: u32, offset: u64) -> u64 {
+        // allocation-free: straight window-memory read
+        self.shared.borrow().peek_word(target, offset)
+    }
+
+    fn alloc_window(&mut self, bytes: usize) -> Option<u64> {
+        // heap-backed segments: the DES cluster never runs out of slots
+        Some(self.shared.borrow_mut().alloc_window(bytes))
     }
 }
 
@@ -1343,6 +1377,34 @@ mod tests {
             handles[1].peek(2, 8, 8),
             11u64.to_le_bytes().to_vec()
         );
+    }
+
+    #[test]
+    fn alloc_window_segments_are_isolated() {
+        use super::super::{CTRL_BASE, SEG_SHIFT};
+        let net = Network::new(NetConfig::pik_ndr(), 2);
+        let mut handles = SimRma::create(net, 2, 256, 1);
+        let base = handles[0].alloc_window(512).expect("slot");
+        assert_eq!(base, 2u64 << SEG_SHIFT);
+        struct PutSm(Option<u64>);
+        impl OpSm for PutSm {
+            type Out = ();
+            fn step(&mut self, _resp: Resp) -> SmStep<()> {
+                match self.0.take() {
+                    Some(off) => SmStep::Issue(Req::Put {
+                        target: 1,
+                        offset: off,
+                        data: vec![0xCD; 8],
+                    }),
+                    None => SmStep::Done(()),
+                }
+            }
+        }
+        handles[0].exec(PutSm(Some(base + 24)));
+        // same low offset in other segments is untouched
+        assert_eq!(handles[0].peek(1, 24, 8), vec![0u8; 8]);
+        assert_eq!(handles[0].peek(1, CTRL_BASE + 24, 8), vec![0u8; 8]);
+        assert_eq!(handles[0].peek(1, base + 24, 8), vec![0xCD; 8]);
     }
 
     #[test]

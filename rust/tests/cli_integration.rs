@@ -44,6 +44,22 @@ fn bench_kv_rejects_bad_variant() {
     let (ok, text) = run(&["bench-kv", "--variant", "bogus"]);
     assert!(!ok);
     assert!(text.contains("unknown variant"), "{text}");
+    // the error must teach the accepted spellings, not just reject
+    for name in ["coarse", "fine", "lockfree", "lock-free"] {
+        assert!(text.contains(name), "accepted name {name} missing: {text}");
+    }
+}
+
+#[test]
+fn poet_resize_flags_print_recovery_line() {
+    let (ok, text) = run(&[
+        "poet", "--engine", "native", "--ny", "8", "--nx", "16", "--steps",
+        "12", "--workers", "1", "--variant", "lockfree", "--win-bytes",
+        "8192", "--resize-at-iter", "6", "--resize-factor", "16",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("resize at step 6"), "{text}");
+    assert!(text.contains("migrated"), "{text}");
 }
 
 #[test]

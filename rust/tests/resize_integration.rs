@@ -1,0 +1,308 @@
+//! Elastic-resize integration (DESIGN.md §8): online capacity changes
+//! with live migration, across variants and backends.
+
+use mpi_dht::bench::keys::{key_for, value_for};
+use mpi_dht::dht::{Dht, DhtCheckpoint, Variant};
+use mpi_dht::net::{NetConfig, Network};
+
+const KEY: usize = 16;
+const VAL: usize = 32;
+
+/// Every key readable before a grow stays readable during the migration
+/// epoch (dual lookup) and after it closes, on every variant.
+#[test]
+fn grow_preserves_entries_all_variants() {
+    for variant in Variant::ALL {
+        let bucket =
+            mpi_dht::dht::BucketLayout::new(variant, KEY, VAL).size();
+        let mut h = Dht::create(variant, 4, 256 * bucket, KEY, VAL);
+        let mut present = Vec::new();
+        for i in 0..400u64 {
+            h[(i % 4) as usize].write(&key_for(i, KEY), &value_for(i, VAL));
+        }
+        for i in 0..400u64 {
+            if h[1].read(&key_for(i, KEY)) == Some(value_for(i, VAL)) {
+                present.push(i);
+            }
+        }
+        assert!(present.len() > 300, "{variant:?}: table mostly loaded");
+
+        let old = h[0].buckets_per_rank();
+        h[0].resize(old * 4).expect("resize");
+        assert!(h[2].migrating(), "{variant:?}: epoch visible everywhere");
+        assert_eq!(h[2].epoch() % 2, 1);
+        // mid-migration: present keys stay readable through the dual
+        // lookup; values are never foreign.  (Lock-free tolerates rare
+        // candidate-race evictions — the §4.2 last-write-wins contract.)
+        let survivors = |h: &mut Dht, tag: &str| -> usize {
+            let mut n = 0;
+            for &i in &present {
+                if let Some(v) = h.read(&key_for(i, KEY)) {
+                    assert_eq!(v, value_for(i, VAL), "{tag} key {i}");
+                    n += 1;
+                }
+            }
+            n
+        };
+        let mid = survivors(&mut h[2], "mid-migration");
+        assert!(
+            mid + 2 >= present.len(),
+            "{variant:?}: only {mid}/{} readable mid-migration",
+            present.len()
+        );
+        // drive the epoch closed from a single handle (work stealing)
+        h[3].drain_migration();
+        for hh in h.iter_mut() {
+            assert!(!hh.migrating(), "{variant:?}: epoch must be closed");
+            assert_eq!(hh.buckets_per_rank(), old * 4);
+        }
+        let after = survivors(&mut h[0], "post-migration");
+        assert!(
+            after + 2 >= present.len(),
+            "{variant:?}: only {after}/{} survived migration",
+            present.len()
+        );
+        // the locking variants are loss-free by construction
+        if variant != Variant::LockFree {
+            assert_eq!(after, present.len(), "{variant:?} lost entries");
+        }
+        // migration counters landed somewhere in the cluster
+        let mut stats = mpi_dht::dht::DhtStats::default();
+        for hh in h.iter() {
+            stats.merge(hh.stats());
+        }
+        assert_eq!(stats.resizes, 1, "{variant:?}");
+        assert!(
+            stats.migrated as usize + 2 >= present.len(),
+            "{variant:?}: migrated {} < present {}",
+            stats.migrated,
+            present.len()
+        );
+        assert!(stats.dual_reads > 0, "{variant:?}: dual lookups counted");
+    }
+}
+
+/// Writes during a migration epoch land in the new table and win over
+/// the old copy; reads see them immediately, mid-epoch and after.
+/// (Single-threaded schedule: the write completes before the migration
+/// quantum that could race it, so "newer wins" is deterministic here —
+/// under real concurrency the lock-free variant's same-key races are
+/// last-write-wins, see `dht::migrate` invariant 3.)
+#[test]
+fn writes_during_migration_supersede_old_entries() {
+    let mut h = Dht::create(Variant::LockFree, 2, 64 * 1024, KEY, VAL);
+    let stale = key_for(1, KEY);
+    let fresh = key_for(2, KEY);
+    h[0].write(&stale, &value_for(10, VAL));
+    h[0].write(&fresh, &value_for(20, VAL));
+    let old = h[0].buckets_per_rank();
+    h[0].resize(old * 2).expect("resize");
+    // update one key mid-epoch: the write goes to the new table only
+    assert!(h[1].migrating());
+    h[1].write(&fresh, &value_for(99, VAL));
+    assert_eq!(h[0].read(&fresh), Some(value_for(99, VAL)));
+    assert_eq!(h[0].read(&stale), Some(value_for(10, VAL)));
+    h[0].drain_migration();
+    // after the epoch: the mid-epoch update won, nothing resurrected
+    assert_eq!(h[1].read(&fresh), Some(value_for(99, VAL)));
+    assert_eq!(h[1].read(&stale), Some(value_for(10, VAL)));
+    // both occupied old buckets were processed: `stale` was copied, and
+    // `fresh` was either copied-then-updated (if its bucket migrated
+    // before our write) or skipped as superseded — never lost
+    let copied: u64 = h.iter().map(|x| x.stats().migrated).sum();
+    let skipped: u64 = h.iter().map(|x| x.stats().migrate_skipped).sum();
+    assert!(
+        copied + skipped >= 2,
+        "copied {copied} + skipped {skipped}"
+    );
+}
+
+/// A second resize during an open epoch is rejected with a clear error;
+/// after the epoch closes it succeeds.
+#[test]
+fn concurrent_resize_rejected() {
+    let mut h = Dht::create(Variant::Fine, 2, 32 * 1024, KEY, VAL);
+    let old = h[0].buckets_per_rank();
+    h[0].resize(old * 2).expect("first resize");
+    let err = h[1].resize(old * 8).unwrap_err();
+    assert!(
+        format!("{err}").contains("progress"),
+        "unexpected error: {err}"
+    );
+    assert_eq!(format!("{}", h[0].resize(0).unwrap_err()), "resize: bucket count must be > 0");
+    h[0].drain_migration();
+    h[1].resize(old * 8).expect("resize after close");
+    h[1].drain_migration();
+    assert_eq!(h[0].buckets_per_rank(), old * 8);
+}
+
+/// The same elastic protocol runs inside the DES cluster, in simulated
+/// time, with the pipelined batch front-end.
+#[test]
+fn sim_backend_resize_roundtrip() {
+    let net = Network::new(NetConfig::pik_ndr(), 4);
+    let mut h =
+        Dht::create_sim(Variant::LockFree, 4, 64 * 1024, KEY, VAL, net, 8);
+    let keys: Vec<Vec<u8>> = (0..64u64).map(|i| key_for(i, KEY)).collect();
+    let vals: Vec<Vec<u8>> =
+        (0..64u64).map(|i| value_for(i * 7, VAL)).collect();
+    h[0].write_batch(&keys, &vals);
+    let t_loaded = h[0].sim_time();
+    let old = h[0].buckets_per_rank();
+    h[0].resize(old * 2).expect("resize");
+    // dual lookups from another rank, mid-epoch, in simulated time
+    // (hits verified; lock-free tolerates rare candidate-race drops)
+    let count_hits = |got: &[Option<Vec<u8>>]| -> usize {
+        let mut hits = 0;
+        for (g, v) in got.iter().zip(vals.iter()) {
+            if let Some(gv) = g {
+                assert_eq!(gv, v, "foreign value in sim read");
+                hits += 1;
+            }
+        }
+        hits
+    };
+    let got = h[3].read_batch(&keys);
+    assert!(count_hits(&got) >= 62, "mid-migration sim reads");
+    assert!(h[3].sim_time() > t_loaded, "sim time advanced");
+    h[2].drain_migration();
+    assert!(!h[1].migrating());
+    let got = h[1].read_batch(&keys);
+    assert!(count_hits(&got) >= 62, "post-migration sim reads");
+    let migrated: u64 = h.iter().map(|x| x.stats().migrated).sum();
+    assert!(
+        (62..=64).contains(&migrated),
+        "every occupied bucket migrated exactly once: {migrated}"
+    );
+}
+
+/// Shrinking keeps cache semantics: surviving entries are always correct,
+/// overflow is dropped (never corrupted), and the drop is counted.
+#[test]
+fn shrink_drops_overflow_never_corrupts() {
+    let mut h = Dht::create(Variant::LockFree, 1, 128 * 1024, KEY, VAL);
+    let n = 600u64;
+    for i in 0..n {
+        h[0].write(&key_for(i, KEY), &value_for(i * 11, VAL));
+    }
+    h[0].resize(40).expect("shrink");
+    h[0].drain_migration();
+    assert_eq!(h[0].buckets_per_rank(), 40);
+    let mut hits = 0u64;
+    for i in 0..n {
+        if let Some(v) = h[0].read(&key_for(i, KEY)) {
+            assert_eq!(v, value_for(i * 11, VAL), "stale/foreign value");
+            hits += 1;
+        }
+    }
+    assert!(hits > 0, "some entries survive");
+    assert!(hits <= 40, "a 40-bucket table holds at most 40 entries");
+    let s = h[0].stats();
+    assert!(s.migrate_dropped > 0, "overflow drops are counted");
+    assert!(s.migrated <= 40);
+}
+
+/// Back-to-back epochs: grow, then grow again — each resize allocates a
+/// fresh window segment and the chain of epochs stays consistent.
+#[test]
+fn repeated_resizes_chain_epochs() {
+    let mut h = Dht::create(Variant::LockFree, 2, 32 * 1024, KEY, VAL);
+    for i in 0..50u64 {
+        h[(i % 2) as usize].write(&key_for(i, KEY), &value_for(i, VAL));
+    }
+    let b0 = h[0].buckets_per_rank();
+    for round in 1..=3u64 {
+        h[0].resize(b0 * (1 << round)).expect("grow");
+        h[1].drain_migration();
+        // h[0] must first observe the close published by h[1]'s drain
+        assert!(!h[0].migrating());
+        assert_eq!(h[0].epoch(), round * 2, "two epoch steps per resize");
+        let mut hits = 0;
+        for i in 0..50u64 {
+            if let Some(v) = h[1].read(&key_for(i, KEY)) {
+                assert_eq!(v, value_for(i, VAL), "round {round}, key {i}");
+                hits += 1;
+            }
+        }
+        // lock-free tolerates rare candidate-race drops per round
+        assert!(hits >= 48, "round {round}: only {hits}/50 survived");
+    }
+    assert_eq!(h[0].buckets_per_rank(), b0 * 8);
+}
+
+/// A checkpoint captured mid-migration sees both tables (union of
+/// entries, new table wins).
+#[test]
+fn checkpoint_capture_during_migration_sees_both_tables() {
+    let mut h = Dht::create(Variant::LockFree, 2, 64 * 1024, KEY, VAL);
+    for i in 0..100u64 {
+        h[(i % 2) as usize].write(&key_for(i, KEY), &value_for(i, VAL));
+    }
+    let old = h[0].buckets_per_rank();
+    h[0].resize(old * 2).expect("resize");
+    // mid-epoch write supersedes one old entry
+    h[1].write(&key_for(5, KEY), &value_for(555, VAL));
+    let ckpt = DhtCheckpoint::capture(&h);
+    assert!(ckpt.entries.len() >= 99, "{} captured", ckpt.entries.len());
+    let map: std::collections::HashMap<_, _> =
+        ckpt.entries.iter().cloned().collect();
+    assert_eq!(map.get(&key_for(5, KEY)), Some(&value_for(555, VAL)));
+    assert_eq!(map.get(&key_for(6, KEY)), Some(&value_for(6, VAL)));
+    // v2 geometry reflects the *new* table mid-migration
+    assert_eq!(ckpt.buckets_per_rank, Some(old * 2));
+    assert_eq!(ckpt.nranks, Some(2));
+}
+
+/// Checkpoint format v2 round-trips its geometry; legacy v1 bytes still
+/// load (with no geometry); `restore_strict` rejects a too-small target
+/// with a clear error and accepts an adequate one.
+#[test]
+fn checkpoint_v2_geometry_and_v1_compat() {
+    let mut h = Dht::create(Variant::LockFree, 2, 64 * 1024, KEY, VAL);
+    for i in 0..50u64 {
+        h[0].write(&key_for(i, KEY), &value_for(i, VAL));
+    }
+    let ckpt = DhtCheckpoint::capture(&h);
+    let per_rank = h[0].buckets_per_rank();
+    assert_eq!(ckpt.buckets_per_rank, Some(per_rank));
+    assert_eq!(ckpt.nranks, Some(2));
+    let bytes = ckpt.to_bytes();
+    assert_eq!(&bytes[..8], b"DHTCKPT2");
+    let parsed = DhtCheckpoint::from_bytes(&bytes).expect("v2 parse");
+    assert_eq!(parsed.buckets_per_rank, Some(per_rank));
+    assert_eq!(parsed.nranks, Some(2));
+    assert_eq!(parsed.entries, ckpt.entries);
+
+    // hand-built v1 payload: one entry, legacy magic, no geometry
+    let mut v1 = Vec::new();
+    v1.extend_from_slice(b"DHTCKPT1");
+    v1.push(2); // lock-free
+    v1.extend_from_slice(&(KEY as u32).to_le_bytes());
+    v1.extend_from_slice(&(VAL as u32).to_le_bytes());
+    v1.extend_from_slice(&1u64.to_le_bytes());
+    v1.extend_from_slice(&key_for(1, KEY));
+    v1.extend_from_slice(&value_for(1, VAL));
+    let legacy = DhtCheckpoint::from_bytes(&v1).expect("v1 parse");
+    assert_eq!(legacy.buckets_per_rank, None);
+    assert_eq!(legacy.nranks, None);
+    assert_eq!(legacy.entries.len(), 1);
+    // v1 checkpoints carry no geometry: strict restore cannot reject
+    let restored = legacy
+        .restore_strict(Variant::LockFree, 1, 64 * 1024)
+        .expect("v1 restores anywhere");
+    assert_eq!(restored.len(), 1);
+
+    // strict restore: too small -> clear error; adequate -> ok
+    let bucket =
+        mpi_dht::dht::BucketLayout::new(Variant::LockFree, KEY, VAL).size();
+    let err = ckpt
+        .restore_strict(Variant::LockFree, 1, 8 * bucket)
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("capacity mismatch"), "{msg}");
+    assert!(msg.contains("grow"), "actionable message: {msg}");
+    let mut ok = ckpt
+        .restore_strict(Variant::LockFree, 4, 64 * 1024)
+        .expect("adequate target");
+    assert_eq!(ok[0].read(&key_for(3, KEY)), Some(value_for(3, VAL)));
+}
