@@ -23,7 +23,8 @@ const VALUED: &[&str] = &[
     "--engine", "--artifacts", "--win-bytes", "--seed", "--config",
     "--set", "--clients", "--out", "--repeats", "--read-percent",
     "--zipf-range", "--theta", "--grid", "--pipeline",
-    "--resize-at-iter", "--resize-factor",
+    "--resize-at-iter", "--resize-factor", "--replicas", "--kill-rank",
+    "--kill-rank-at",
 ];
 
 impl Args {

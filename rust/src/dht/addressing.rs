@@ -1,4 +1,5 @@
-//! Addressing and collision handling (paper §3.1, Fig. 2).
+//! Addressing and collision handling (paper §3.1, Fig. 2), plus replica
+//! placement (DESIGN.md §9).
 //!
 //! A 64-bit xxHash of the key determines the target rank (`hash % nranks`).
 //! Candidate bucket indices are derived by sliding an n-byte window over
@@ -7,6 +8,13 @@
 //! hash yields 6 candidates exactly as in the paper's Figure 2.  No bucket
 //! movement ever happens (unlike cuckoo/hopscotch) — the last candidate is
 //! overwritten when all are taken (cache semantics).
+//!
+//! With k-way replication the `r`-th replica of a key lives on rank
+//! `(target + r) % nranks` — k *distinct* ranks per key (k is clamped to
+//! `nranks`) — using the *same* candidate bucket indices on every replica
+//! rank.  Placement depends only on `nranks` and the hash, so it is
+//! stable under [`Addressing::rescale`] (elastic resize, DESIGN.md §8):
+//! a migration epoch never moves a replica across ranks.
 
 use crate::util::hash::key_hash;
 
@@ -16,6 +24,8 @@ pub struct Addressing {
     nranks: u32,
     buckets: u64,
     index_bytes: u32,
+    /// Replication factor k (1 = the paper's single-owner placement).
+    replicas: u32,
 }
 
 impl Addressing {
@@ -27,7 +37,25 @@ impl Addressing {
         while n < 8 && (buckets_per_window as u128) > (1u128 << (8 * n)) {
             n += 1;
         }
-        Self { nranks, buckets: buckets_per_window, index_bytes: n }
+        Self {
+            nranks,
+            buckets: buckets_per_window,
+            index_bytes: n,
+            replicas: 1,
+        }
+    }
+
+    /// The same addressing with k-way replica placement (DESIGN.md §9).
+    /// A degenerate `k >= nranks` clamps to `nranks` (every rank holds a
+    /// copy) instead of panicking; `k == 0` clamps to 1.
+    pub fn with_replicas(mut self, k: u32) -> Self {
+        self.replicas = k.clamp(1, self.nranks);
+        self
+    }
+
+    /// Replication factor k (clamped to `[1, nranks]`).
+    pub fn replicas(&self) -> u32 {
+        self.replicas
     }
 
     pub fn nranks(&self) -> u32 {
@@ -56,6 +84,7 @@ impl Addressing {
     /// rank and migration never moves entries across ranks.
     pub fn rescale(&self, buckets_per_window: u64) -> Addressing {
         Addressing::new(self.nranks, buckets_per_window)
+            .with_replicas(self.replicas)
     }
 
     pub fn hash(&self, key: &[u8]) -> u64 {
@@ -65,6 +94,19 @@ impl Addressing {
     /// Target rank for a key hash.
     pub fn target(&self, hash: u64) -> u32 {
         (hash % self.nranks as u64) as u32
+    }
+
+    /// Rank holding the `r`-th replica of a key hash (`r = 0` is the
+    /// primary, identical to [`Self::target`]).  Successive replicas sit
+    /// on successive ranks, so the k replicas are always distinct.
+    pub fn replica_target(&self, hash: u64, r: u32) -> u32 {
+        debug_assert!(r < self.replicas, "replica index within factor");
+        ((self.target(hash) as u64 + r as u64) % self.nranks as u64) as u32
+    }
+
+    /// All k replica ranks of a key hash, primary first.
+    pub fn replica_targets(&self, hash: u64) -> Vec<u32> {
+        (0..self.replicas).map(|r| self.replica_target(hash, r)).collect()
     }
 
     /// The i-th candidate bucket index for a key hash (i < num_indices()).
@@ -149,6 +191,37 @@ mod tests {
         let a = Addressing::new(64, 10_000);
         let key = [7u8; 80];
         assert_eq!(a.indices(a.hash(&key)), a.indices(a.hash(&key)));
+    }
+
+    #[test]
+    fn replica_targets_distinct_and_clamped() {
+        let a = Addressing::new(8, 1000).with_replicas(3);
+        assert_eq!(a.replicas(), 3);
+        for h in [0u64, 7, u64::MAX, 0xdead_beef] {
+            let ts = a.replica_targets(h);
+            assert_eq!(ts.len(), 3);
+            assert_eq!(ts[0], a.target(h));
+            let set: std::collections::HashSet<u32> =
+                ts.iter().copied().collect();
+            assert_eq!(set.len(), 3, "replicas on distinct ranks");
+            assert!(ts.iter().all(|&t| t < 8));
+        }
+        // degenerate factors clamp instead of panicking
+        assert_eq!(Addressing::new(4, 10).with_replicas(99).replicas(), 4);
+        assert_eq!(Addressing::new(4, 10).with_replicas(0).replicas(), 1);
+        assert_eq!(Addressing::new(1, 10).with_replicas(2).replicas(), 1);
+    }
+
+    #[test]
+    fn replica_placement_stable_under_rescale() {
+        let a = Addressing::new(16, 500).with_replicas(3);
+        let b = a.rescale(70_000);
+        assert_eq!(b.replicas(), 3);
+        for h in [1u64, 42, u64::MAX / 3] {
+            for r in 0..3 {
+                assert_eq!(a.replica_target(h, r), b.replica_target(h, r));
+            }
+        }
     }
 
     #[test]

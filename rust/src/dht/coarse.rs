@@ -31,9 +31,16 @@ pub(crate) struct Plan {
 
 impl Plan {
     pub fn new(cfg: &DhtConfig, key: &[u8]) -> Self {
+        Self::replica(cfg, key, 0)
+    }
+
+    /// Probe plan for the key's `r`-th replica (DESIGN.md §9): the
+    /// replica's rank, with the *same* candidate bucket indices — index
+    /// derivation depends only on the hash, not the rank.
+    pub fn replica(cfg: &DhtConfig, key: &[u8], r: u32) -> Self {
         let hash = cfg.addressing.hash(key);
         Self {
-            target: cfg.addressing.target(hash),
+            target: cfg.addressing.replica_target(hash, r),
             indices: cfg.addressing.indices(hash),
             layout: cfg.layout,
             base: cfg.base,
@@ -118,8 +125,13 @@ pub struct ReadSm {
 
 impl ReadSm {
     pub fn new(cfg: &DhtConfig, key: &[u8]) -> Self {
+        Self::new_at(cfg, key, 0)
+    }
+
+    /// Read probing the key's `r`-th replica (DESIGN.md §9).
+    pub fn new_at(cfg: &DhtConfig, key: &[u8], r: u32) -> Self {
         Self {
-            plan: Plan::new(cfg, key),
+            plan: Plan::replica(cfg, key, r),
             key: key.to_vec(),
             state: RState::Init,
             probes: 0,
@@ -201,7 +213,12 @@ pub struct WriteSm {
 
 impl WriteSm {
     pub fn new(cfg: &DhtConfig, key: &[u8], value: &[u8]) -> Self {
-        let plan = Plan::new(cfg, key);
+        Self::new_at(cfg, key, value, 0)
+    }
+
+    /// Write storing into the key's `r`-th replica (DESIGN.md §9).
+    pub fn new_at(cfg: &DhtConfig, key: &[u8], value: &[u8], r: u32) -> Self {
+        let plan = Plan::replica(cfg, key, r);
         let record = plan.layout.encode_record(key, value);
         Self {
             plan,
@@ -212,8 +229,6 @@ impl WriteSm {
             pending: None,
         }
     }
-
-
 }
 
 impl crate::rma::OpSm for WriteSm {

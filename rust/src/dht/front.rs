@@ -18,12 +18,14 @@
 use anyhow::{ensure, Result};
 
 use crate::net::Network;
+use crate::rma::fault::{FaultPlan, FaultStats};
 use crate::rma::shm::{ShmCluster, ShmRma};
 use crate::rma::sim::SimRma;
 use crate::rma::{Req, Resp, RmaBackend};
 use crate::sim::Time;
 
 use super::migrate::{self, DualReadSm, MigrateSm, OneReq};
+use super::replica::ReplReadSm;
 use super::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
 
 /// Default pipeline depth for the batch calls: enough to hide a few µs of
@@ -79,6 +81,15 @@ impl Dht<ShmRma> {
     pub fn create_poet(variant: Variant, nranks: u32, win_bytes: usize) -> Vec<Dht> {
         Self::create(variant, nranks, win_bytes, 80, 104)
     }
+
+    /// Test-only chaos hook: mark `rank`'s windows failed/alive on the
+    /// shared shm cluster — the threaded analogue of the DES backend's
+    /// deterministic rank kill (DESIGN.md §9).  While failed, remote ops
+    /// at that rank complete in degraded mode and replicated reads route
+    /// around it.
+    pub fn set_rank_failed(&self, rank: u32, failed: bool) {
+        self.rma.set_failed(rank, failed);
+    }
 }
 
 impl Dht<SimRma> {
@@ -124,6 +135,23 @@ impl Dht<SimRma> {
     pub fn sim_time(&self) -> Time {
         self.rma.now()
     }
+
+    /// Install a deterministic fault schedule on the underlying DES
+    /// cluster (chaos harness, DESIGN.md §9): rank kills, message
+    /// delay/drop windows, torn-put injection.
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        self.rma.set_fault_plan(plan);
+    }
+
+    /// Injected-fault counters of the underlying DES cluster.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.rma.fault_stats()
+    }
+
+    /// Modelled network traffic so far: (messages, payload bytes).
+    pub fn net_stats(&self) -> (u64, u128) {
+        self.rma.net_stats()
+    }
 }
 
 impl<B: RmaBackend> Dht<B> {
@@ -162,6 +190,25 @@ impl<B: RmaBackend> Dht<B> {
     /// Old-table buckets migrated per piggybacked quantum (min 1).
     pub fn set_migrate_quantum(&mut self, quantum: u64) {
         self.migrate_quantum = quantum.max(1);
+    }
+
+    /// Replication factor k of this handle (1 = the paper's
+    /// single-owner placement).
+    pub fn replicas(&self) -> u32 {
+        self.cfg.addressing.replicas()
+    }
+
+    /// Enable k-way replication (clamped to `[1, nranks]`; DESIGN.md
+    /// §9): writes fan out to the key's k replica ranks through the same
+    /// pipelined batch epoch, reads fail over replica-by-replica on
+    /// miss/corrupt/failed-rank.  Replication factor is part of the
+    /// *placement*, so set the same k on every handle of a cluster
+    /// (like `set_pipeline`, it is per-handle state).
+    pub fn set_replicas(&mut self, k: u32) {
+        self.cfg = self.cfg.with_replicas(k);
+        if let Some(old) = self.old_cfg.take() {
+            self.old_cfg = Some(old.with_replicas(k));
+        }
     }
 
     // ------------------------------------------------------------ elastic
@@ -581,9 +628,10 @@ impl<B: RmaBackend> Dht<B> {
     pub fn read(&mut self, key: &[u8]) -> Option<Vec<u8>> {
         assert_eq!(key.len(), self.cfg.layout.key_len());
         self.sync_epoch();
-        if self.old_cfg.is_some() {
-            // migration epoch: share the batch machinery (one-key batch)
-            // so the dual-lookup path exists exactly once
+        if self.old_cfg.is_some() || self.cfg.addressing.replicas() > 1 {
+            // migration epoch / replication: share the batch machinery
+            // (one-key batch) so the dual-lookup and failover paths each
+            // exist exactly once
             return self.read_batch(&[key]).pop().expect("one result");
         }
         let sm = DhtSm::read(self.cfg.variant, &self.cfg, key);
@@ -596,11 +644,20 @@ impl<B: RmaBackend> Dht<B> {
     }
 
     /// `DHT_write`: stores/updates the pair (evicting if necessary).
-    /// During a migration epoch writes go to the new table only.
+    /// During a migration epoch writes go to the new table only.  With
+    /// k-way replication the write fans out to all k replica ranks (the
+    /// batch machinery pipelines the copies); the returned outcome is
+    /// the primary's.
     pub fn write(&mut self, key: &[u8], value: &[u8]) -> DhtOutcome {
         assert_eq!(key.len(), self.cfg.layout.key_len());
         assert_eq!(value.len(), self.cfg.layout.val_len());
         self.sync_epoch();
+        if self.cfg.addressing.replicas() > 1 {
+            return self
+                .write_batch(&[key], &[value])
+                .pop()
+                .expect("one outcome");
+        }
         self.migrate_step();
         let sm = DhtSm::write(self.cfg.variant, &self.cfg, key, value);
         let out = self.rma.exec(sm);
@@ -620,6 +677,36 @@ impl<B: RmaBackend> Dht<B> {
         self.sync_epoch();
         self.migrate_step();
         let depth = self.pipeline;
+        if self.cfg.addressing.replicas() > 1 {
+            // replicated reads: primary first, degraded failover
+            // replica-by-replica (ReplReadSm composes the dual lookup
+            // internally while a migration epoch is in flight)
+            let cur = self.cfg.clone();
+            let old = self.old_cfg.clone();
+            let rma = &self.rma;
+            let sms: Vec<ReplReadSm> = keys
+                .iter()
+                .map(|k| {
+                    let k = k.as_ref();
+                    assert_eq!(k.len(), cur.layout.key_len());
+                    ReplReadSm::new(&cur, old.as_ref(), k, |t| {
+                        rma.rank_failed(t)
+                    })
+                })
+                .collect();
+            return self
+                .rma
+                .exec_batch(sms, depth)
+                .into_iter()
+                .map(|ro| {
+                    self.stats.record_failover(&ro);
+                    match ro.out.outcome {
+                        DhtOutcome::ReadHit(v) => Some(v),
+                        _ => None,
+                    }
+                })
+                .collect();
+        }
         if let Some(old) = self.old_cfg.clone() {
             let sms: Vec<DualReadSm> = keys
                 .iter()
@@ -674,6 +761,12 @@ impl<B: RmaBackend> Dht<B> {
     /// `DHT_write_batch`: one pipelined epoch of writes (`keys[i]` paired
     /// with `values[i]`), flushed before returning.  Outcomes are in key
     /// order; semantics per pair are identical to [`Self::write`].
+    ///
+    /// With k-way replication every pair expands to k write SMs — one
+    /// per replica rank — inside the *same* pipelined epoch, so the k-1
+    /// copies cost write amplification but no extra flushes (DESIGN.md
+    /// §9).  A copy landing at a dead rank is dropped in degraded mode;
+    /// the returned outcome is always the primary's.
     pub fn write_batch<K: AsRef<[u8]>, V: AsRef<[u8]>>(
         &mut self,
         keys: &[K],
@@ -682,6 +775,37 @@ impl<B: RmaBackend> Dht<B> {
         assert_eq!(keys.len(), values.len(), "one value per key");
         self.sync_epoch();
         self.migrate_step();
+        let k = self.cfg.addressing.replicas();
+        if k > 1 {
+            let mut sms: Vec<DhtSm> =
+                Vec::with_capacity(keys.len() * k as usize);
+            for (key, val) in keys.iter().zip(values.iter()) {
+                let (key, val) = (key.as_ref(), val.as_ref());
+                assert_eq!(key.len(), self.cfg.layout.key_len());
+                assert_eq!(val.len(), self.cfg.layout.val_len());
+                for r in 0..k {
+                    sms.push(DhtSm::write_at(
+                        self.cfg.variant,
+                        &self.cfg,
+                        key,
+                        val,
+                        r,
+                    ));
+                }
+            }
+            let depth = self.pipeline;
+            let outs = self.rma.exec_batch(sms, depth);
+            let mut res = Vec::with_capacity(keys.len());
+            for (i, out) in outs.into_iter().enumerate() {
+                if i % k as usize == 0 {
+                    self.stats.record(&out);
+                    res.push(out.outcome);
+                } else {
+                    self.stats.record_replica_write(&out);
+                }
+            }
+            return res;
+        }
         let sms: Vec<DhtSm> = keys
             .iter()
             .zip(values.iter())
@@ -894,8 +1018,27 @@ impl DhtCheckpoint {
         nranks: u32,
         win_bytes: usize,
     ) -> Vec<Dht> {
+        self.restore_replicated(variant, nranks, win_bytes, 1)
+    }
+
+    /// Like [`Self::restore`], but bring the cluster up with k-way
+    /// replication (DESIGN.md §9): every replayed entry fans out to its
+    /// k replica ranks, so the restored cache tolerates rank failures
+    /// from the first step.  A checkpoint captured from a replicated
+    /// cluster holds each key once (capture de-duplicates), so restore
+    /// is replication-factor agnostic in both directions.
+    pub fn restore_replicated(
+        &self,
+        variant: Variant,
+        nranks: u32,
+        win_bytes: usize,
+        replicas: u32,
+    ) -> Vec<Dht> {
         let mut handles =
             Dht::create(variant, nranks, win_bytes, self.key_len, self.val_len);
+        for h in &mut handles {
+            h.set_replicas(replicas);
+        }
         for (i, (k, v)) in self.entries.iter().enumerate() {
             // spread the restore work round-robin over ranks, as a
             // restart's ranks would replay their checkpoint shards
@@ -1014,6 +1157,48 @@ mod tests {
             }
             let bad: u32 = threads.into_iter().map(|t| t.join().unwrap()).sum();
             assert_eq!(bad, 0, "{variant:?} returned a wrong value");
+        }
+    }
+
+    #[test]
+    fn replicated_write_read_roundtrip_all_variants() {
+        for variant in Variant::ALL {
+            let mut h = Dht::create_poet(variant, 4, 256 * 1024);
+            for hh in h.iter_mut() {
+                hh.set_replicas(2);
+            }
+            assert_eq!(h[0].replicas(), 2);
+            let key = vec![5u8; 80];
+            let val = vec![6u8; 104];
+            h[0].write(&key, &val);
+            assert_eq!(h[2].read(&key), Some(val.clone()), "{variant:?}");
+            let s = h[0].stats();
+            assert_eq!(s.writes, 1, "{variant:?}: primary write counted");
+            assert_eq!(s.replica_writes, 1, "{variant:?}: one copy fanned out");
+            // the copy is live: mask the primary rank and read again
+            let hash = h[2].cfg().addressing.hash(&key);
+            let primary = h[2].cfg().addressing.replica_target(hash, 0);
+            h[2].set_rank_failed(primary, true);
+            assert_eq!(h[2].read(&key), Some(val.clone()), "{variant:?}");
+            assert!(h[2].stats().failover_reads >= 1, "{variant:?}");
+            h[2].set_rank_failed(primary, false);
+        }
+    }
+
+    #[test]
+    fn replicas_clamp_to_cluster_size() {
+        let mut h = Dht::create_poet(Variant::LockFree, 2, 64 * 1024);
+        h[0].set_replicas(64);
+        assert_eq!(h[0].replicas(), 2, "k clamps to nranks");
+        h[1].set_replicas(2);
+        let key = vec![9u8; 80];
+        let val = vec![1u8; 104];
+        h[0].write(&key, &val);
+        // every rank holds a copy: either rank alone can serve the key
+        for dead in 0..2u32 {
+            h[1].set_rank_failed(dead, true);
+            assert_eq!(h[1].read(&key), Some(val.clone()));
+            h[1].set_rank_failed(dead, false);
         }
     }
 

@@ -52,8 +52,13 @@ pub struct ReadSm {
 
 impl ReadSm {
     pub fn new(cfg: &DhtConfig, key: &[u8]) -> Self {
+        Self::new_at(cfg, key, 0)
+    }
+
+    /// Read probing the key's `r`-th replica (DESIGN.md §9).
+    pub fn new_at(cfg: &DhtConfig, key: &[u8], r: u32) -> Self {
         Self {
-            plan: Plan::new(cfg, key),
+            plan: Plan::replica(cfg, key, r),
             key: key.to_vec(),
             max_retries: cfg.crc_retries,
             state: RState::Init,
@@ -149,7 +154,12 @@ pub struct WriteSm {
 
 impl WriteSm {
     pub fn new(cfg: &DhtConfig, key: &[u8], value: &[u8]) -> Self {
-        let plan = Plan::new(cfg, key);
+        Self::new_at(cfg, key, value, 0)
+    }
+
+    /// Write storing into the key's `r`-th replica (DESIGN.md §9).
+    pub fn new_at(cfg: &DhtConfig, key: &[u8], value: &[u8], r: u32) -> Self {
+        let plan = Plan::replica(cfg, key, r);
         let record = plan.layout.encode_record(key, value);
         Self {
             plan,
@@ -160,8 +170,6 @@ impl WriteSm {
             pending: None,
         }
     }
-
-
 }
 
 impl crate::rma::OpSm for WriteSm {

@@ -256,9 +256,21 @@ pub struct DualReadSm {
 
 impl DualReadSm {
     pub fn new(cur_cfg: &DhtConfig, old_cfg: &DhtConfig, key: &[u8]) -> Self {
+        Self::new_at(cur_cfg, old_cfg, key, 0)
+    }
+
+    /// Dual lookup against the key's `r`-th replica (DESIGN.md §9): the
+    /// replica rank holds both table epochs like every rank, so the
+    /// new-then-old fallback applies there unchanged.
+    pub fn new_at(
+        cur_cfg: &DhtConfig,
+        old_cfg: &DhtConfig,
+        key: &[u8],
+        r: u32,
+    ) -> Self {
         Self {
-            cur: DhtSm::read(cur_cfg.variant, cur_cfg, key),
-            old: Some(DhtSm::read(old_cfg.variant, old_cfg, key)),
+            cur: DhtSm::read_at(cur_cfg.variant, cur_cfg, key, r),
+            old: Some(DhtSm::read_at(old_cfg.variant, old_cfg, key, r)),
             fell_back: false,
             primary_corrupt: false,
             probes: 0,
@@ -519,11 +531,16 @@ impl OpSm for MigrateSm {
                 if dead {
                     self.result = Some(MigrateResult::SkippedEmpty);
                 } else {
-                    let plan = Plan::new(&self.cur_cfg, l.key_of(&data));
-                    debug_assert_eq!(
-                        plan.target, self.target,
-                        "nranks is resize-invariant: migration is rank-local"
-                    );
+                    // re-home the probe plan at this shard's rank: with
+                    // k-way replication (DESIGN.md §9) a bucket may hold
+                    // a replica copy whose *primary* plan targets another
+                    // rank, but migration is strictly rank-local
+                    // (placement is rank-stable under rescale), so every
+                    // copy stays in its own rank's new table.  At k = 1
+                    // this is the identity (records only ever live on
+                    // their primary rank).
+                    let mut plan = Plan::new(&self.cur_cfg, l.key_of(&data));
+                    plan.target = self.target;
                     self.plan = Some(plan);
                     self.record = data;
                 }
@@ -802,6 +819,79 @@ mod tests {
         assert_eq!(copied, 0, "torn record must not be migrated");
         assert_eq!(dropped, 0);
         assert_eq!(read(&rma, &cur, &key), DhtOutcome::ReadMiss);
+    }
+
+    #[test]
+    fn migrate_drops_on_full_new_table_all_variants() {
+        // direct coverage of the drop-on-full path: shrink into a
+        // 1-bucket table whose sole bucket a foreign key already owns —
+        // every live old record has all candidates taken and is Dropped
+        // (cache semantics, module invariant 4)
+        for variant in Variant::ALL {
+            let old = DhtConfig::new(variant, 1, 4 * 1024, KEY, VAL);
+            let cluster = ShmCluster::new(1, 4 * 1024);
+            let rma = cluster.rma(0);
+            let mut live = 0;
+            for i in 0..10u8 {
+                write(&rma, &old, &[i; KEY], &[i; VAL]);
+            }
+            for i in 0..10u8 {
+                if read(&rma, &old, &[i; KEY]) != DhtOutcome::ReadMiss {
+                    live += 1;
+                }
+            }
+            assert!(live >= 2, "{variant:?}: old table holds entries");
+            let base = cluster
+                .alloc_window(old.layout.size())
+                .expect("segment slot");
+            let cur = old.with_table(base, 1);
+            // saturate the single new bucket with a key not in the old set
+            write(&rma, &cur, &[0xEE; KEY], &[0xEE; VAL]);
+            let (copied, _, sp, dropped) = migrate_all(&rma, &cur, &old, 0);
+            assert_eq!(copied, 0, "{variant:?}: nothing fits a full table");
+            assert_eq!(sp, 0, "{variant:?}: no old key is the foreign key");
+            assert_eq!(dropped, live, "{variant:?}: every live record drops");
+            // the fresher foreign entry is never evicted for old data
+            assert_eq!(
+                read(&rma, &cur, &[0xEE; KEY]),
+                DhtOutcome::ReadHit(vec![0xEE; VAL]),
+                "{variant:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn torn_old_record_skip_counts_as_empty_not_drop() {
+        // companion to `torn_old_record_is_skipped_not_copied`: the torn
+        // record must classify as SkippedEmpty (nothing to migrate), not
+        // as Dropped, so the stats separate data loss from tear cleanup
+        let old = DhtConfig::new(Variant::LockFree, 1, 4 * 1024, KEY, VAL);
+        let cluster = ShmCluster::new(1, 4 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![5u8; KEY];
+        write(&rma, &old, &key, &[5u8; VAL]);
+        let plan = Plan::new(&old, &key);
+        let off = plan.layout.bucket_off(plan.indices[0])
+            + plan.layout.key_off() as u64;
+        let mut word = rma.get(0, off, 8);
+        word[0] ^= 0xA5; // torn key byte: CRC can no longer match
+        rma.exec(&mut OneReq(Some(Req::Put {
+            target: 0,
+            offset: off,
+            data: word,
+        })));
+        let buckets = old.addressing.buckets() * 2;
+        let base = cluster
+            .alloc_window(buckets as usize * old.layout.size())
+            .expect("segment slot");
+        let cur = old.with_table(base, buckets);
+        let out = rma.exec(&mut MigrateSm::new(
+            &cur,
+            &old,
+            0,
+            plan.indices[0],
+        ));
+        assert_eq!(out.result, MigrateResult::SkippedEmpty);
     }
 
     #[test]

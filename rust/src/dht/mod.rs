@@ -25,6 +25,7 @@ pub mod fine;
 pub mod front;
 pub mod lockfree;
 pub mod migrate;
+pub mod replica;
 pub mod stats;
 
 use crate::rma::{OpSm, Resp, SmStep};
@@ -33,6 +34,7 @@ pub use addressing::Addressing;
 pub use bucket::{BucketLayout, Meta};
 pub use front::{Dht, DhtCheckpoint};
 pub use migrate::{DualOut, MigrateOut, MigrateResult};
+pub use replica::{ReplOut, ReplReadSm, ReplSm};
 pub use stats::DhtStats;
 
 /// Which consistency design a DHT instance uses.
@@ -113,34 +115,58 @@ pub enum DhtSm {
 }
 
 impl DhtSm {
-    /// Build the read SM for `variant`.
+    /// Build the read SM for `variant` (primary replica).
     pub fn read(variant: Variant, cfg: &DhtConfig, key: &[u8]) -> DhtSm {
+        Self::read_at(variant, cfg, key, 0)
+    }
+
+    /// Build the read SM probing the key's `r`-th replica (DESIGN.md §9).
+    pub fn read_at(
+        variant: Variant,
+        cfg: &DhtConfig,
+        key: &[u8],
+        r: u32,
+    ) -> DhtSm {
         match variant {
-            Variant::Coarse => DhtSm::CoarseRead(coarse::ReadSm::new(cfg, key)),
-            Variant::Fine => DhtSm::FineRead(fine::ReadSm::new(cfg, key)),
+            Variant::Coarse => {
+                DhtSm::CoarseRead(coarse::ReadSm::new_at(cfg, key, r))
+            }
+            Variant::Fine => DhtSm::FineRead(fine::ReadSm::new_at(cfg, key, r)),
             Variant::LockFree => {
-                DhtSm::LockFreeRead(lockfree::ReadSm::new(cfg, key))
+                DhtSm::LockFreeRead(lockfree::ReadSm::new_at(cfg, key, r))
             }
         }
     }
 
-    /// Build the write SM for `variant`.
+    /// Build the write SM for `variant` (primary replica).
     pub fn write(
         variant: Variant,
         cfg: &DhtConfig,
         key: &[u8],
         value: &[u8],
     ) -> DhtSm {
+        Self::write_at(variant, cfg, key, value, 0)
+    }
+
+    /// Build the write SM storing into the key's `r`-th replica — the
+    /// fan-out unit of replicated writes (DESIGN.md §9).
+    pub fn write_at(
+        variant: Variant,
+        cfg: &DhtConfig,
+        key: &[u8],
+        value: &[u8],
+        r: u32,
+    ) -> DhtSm {
         match variant {
             Variant::Coarse => {
-                DhtSm::CoarseWrite(coarse::WriteSm::new(cfg, key, value))
+                DhtSm::CoarseWrite(coarse::WriteSm::new_at(cfg, key, value, r))
             }
             Variant::Fine => {
-                DhtSm::FineWrite(fine::WriteSm::new(cfg, key, value))
+                DhtSm::FineWrite(fine::WriteSm::new_at(cfg, key, value, r))
             }
-            Variant::LockFree => {
-                DhtSm::LockFreeWrite(lockfree::WriteSm::new(cfg, key, value))
-            }
+            Variant::LockFree => DhtSm::LockFreeWrite(
+                lockfree::WriteSm::new_at(cfg, key, value, r),
+            ),
         }
     }
 }
@@ -210,10 +236,19 @@ impl DhtConfig {
     /// table's window segment, `buckets_per_rank` its capacity.  Keys
     /// keep their target rank (`hash % nranks` is capacity-independent),
     /// which is what makes elastic migration rank-local (DESIGN.md §8).
+    /// Replica placement is preserved (it only depends on `nranks`).
     pub fn with_table(&self, base: u64, buckets_per_rank: u64) -> Self {
         let mut c = self.clone();
         c.addressing = self.addressing.rescale(buckets_per_rank);
         c.base = base;
+        c
+    }
+
+    /// The same DHT with k-way replica placement (clamped to `[1,
+    /// nranks]` — DESIGN.md §9).
+    pub fn with_replicas(&self, k: u32) -> Self {
+        let mut c = self.clone();
+        c.addressing = c.addressing.with_replicas(k);
         c
     }
 }

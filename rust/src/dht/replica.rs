@@ -1,0 +1,414 @@
+//! k-way replication with degraded-read failover (DESIGN.md §9).
+//!
+//! The paper's DHT stores each entry on exactly one owner rank (§3.1), so
+//! a dead or unreachable rank silently erases its shard of the surrogate
+//! cache.  With k-way replication every write fans out to the key's k
+//! replica ranks ([`Addressing::replica_target`]) *through the same
+//! pipelined batch epoch* — replicas ride alongside the primary in one
+//! `exec_batch` flush, so replication costs write amplification (k puts)
+//! but no extra round-trip latency.  Reads stay cheap: only the primary
+//! is probed; a read **fails over** replica-by-replica when the primary
+//! misses, returns corrupt, or its rank is marked failed by the local
+//! failure detector ([`crate::rma::RmaBackend::rank_failed`]).
+//!
+//! Consistency contract (cache semantics, §3.1/§4.2): replicas are
+//! *best-effort copies*, not a quorum.  A replica can lag (its bucket
+//! was evicted by a foreign key, its write was dropped at a dead rank),
+//! in which case a failover read may return an older value for a key —
+//! never a foreign one (key equality + CRC hold per bucket exactly as in
+//! the unreplicated protocol).  In the surrogate-cache setting values
+//! are deterministic functions of their key, so lag is observably
+//! harmless; the [`ReplOut::diverged`] flag still counts the disagreement
+//! (`DhtStats::replica_divergence`) so chaos runs can watch it.
+//!
+//! During a migration epoch (DESIGN.md §8) each replica lookup is the
+//! two-table [`DualReadSm`]; replica placement only depends on `nranks`,
+//! which `rescale` preserves, so replication composes with the elastic
+//! resize without data movement across ranks.
+
+use crate::rma::{OpSm, Resp, SmStep};
+
+use super::migrate::DualReadSm;
+use super::{DhtConfig, DhtOutcome, DhtSm, OpOut};
+
+#[allow(unused_imports)] // rustdoc link target
+use super::Addressing;
+
+/// Outcome of a replicated read: the merged per-op counters plus the
+/// failover bookkeeping [`super::DhtStats::record_failover`] consumes.
+#[derive(Clone, Debug)]
+pub struct ReplOut {
+    pub out: OpOut,
+    /// Replica slots routed around before the final outcome — failed
+    /// ranks skipped without traffic plus live replicas that missed.
+    /// `0` means the primary answered.
+    pub failovers: u32,
+    /// The primary was probed, missed, and a later replica hit: the
+    /// replica set disagrees for this key.  Includes the detector-lag
+    /// transient right after a kill — a probe already built for a dying
+    /// rank executes in degraded mode, and its empty read is honestly
+    /// indistinguishable from divergence.
+    pub diverged: bool,
+    /// A dual lookup fell back to the retiring table (migration epochs).
+    pub fell_back: bool,
+    /// A probe ended in a checksum invalidation — a real table mutation
+    /// — before a later lookup (old-table fallback or replica failover)
+    /// superseded its outcome.
+    pub primary_corrupt: bool,
+}
+
+/// One replica attempt: a plain variant read, or the two-table dual
+/// lookup while a migration epoch is in flight.
+enum Inner {
+    Plain(DhtSm),
+    Dual(DualReadSm),
+}
+
+/// `DHT_read` with degraded-read failover over the key's k replicas.
+///
+/// Probes the primary first (skipping it without traffic if the failure
+/// detector marks its rank failed), then falls through replica-by-replica
+/// on miss/corrupt.  The final outcome is the first hit, or the last
+/// replica's miss.
+pub struct ReplReadSm {
+    cur: DhtConfig,
+    old: Option<DhtConfig>,
+    key: Vec<u8>,
+    /// Per-replica-slot skip flags resolved against the failure detector
+    /// at build time (detector lag is the real-world semantics: an op
+    /// already issued at a dying rank still executes in degraded mode).
+    skip: Vec<bool>,
+    /// Replica slot the active inner SM probes.
+    r: u32,
+    inner: Option<Inner>,
+    /// The primary was actually probed and missed.
+    primary_missed: bool,
+    failovers: u32,
+    probes: u32,
+    crc_retries: u32,
+    lock_retries: u32,
+    fell_back: bool,
+    primary_corrupt: bool,
+}
+
+impl ReplReadSm {
+    /// `old` is the retiring table view while a migration epoch is in
+    /// flight; `failed` is the caller's failure detector (typically
+    /// [`crate::rma::RmaBackend::rank_failed`]).
+    pub fn new(
+        cur: &DhtConfig,
+        old: Option<&DhtConfig>,
+        key: &[u8],
+        failed: impl Fn(u32) -> bool,
+    ) -> Self {
+        let k = cur.addressing.replicas();
+        let hash = cur.addressing.hash(key);
+        let skip: Vec<bool> = (0..k)
+            .map(|r| failed(cur.addressing.replica_target(hash, r)))
+            .collect();
+        let mut r = 0u32;
+        let mut failovers = 0u32;
+        while (r as usize) < skip.len() && skip[r as usize] {
+            r += 1;
+            failovers += 1;
+        }
+        let inner = if (r as usize) < skip.len() {
+            Some(Self::inner_for(cur, old, key, r))
+        } else {
+            None
+        };
+        Self {
+            cur: cur.clone(),
+            old: old.cloned(),
+            key: key.to_vec(),
+            skip,
+            r,
+            inner,
+            primary_missed: false,
+            failovers,
+            probes: 0,
+            crc_retries: 0,
+            lock_retries: 0,
+            fell_back: false,
+            primary_corrupt: false,
+        }
+    }
+
+    fn inner_for(
+        cur: &DhtConfig,
+        old: Option<&DhtConfig>,
+        key: &[u8],
+        r: u32,
+    ) -> Inner {
+        match old {
+            Some(o) => Inner::Dual(DualReadSm::new_at(cur, o, key, r)),
+            None => Inner::Plain(DhtSm::read_at(cur.variant, cur, key, r)),
+        }
+    }
+
+    fn finish(&self, outcome: DhtOutcome, diverged: bool) -> ReplOut {
+        ReplOut {
+            out: OpOut {
+                outcome,
+                probes: self.probes,
+                crc_retries: self.crc_retries,
+                lock_retries: self.lock_retries,
+            },
+            failovers: self.failovers,
+            diverged,
+            fell_back: self.fell_back,
+            primary_corrupt: self.primary_corrupt,
+        }
+    }
+}
+
+impl OpSm for ReplReadSm {
+    type Out = ReplOut;
+    fn step(&mut self, resp: Resp) -> SmStep<ReplOut> {
+        let mut resp = resp;
+        loop {
+            if self.inner.is_none() {
+                // every replica rank is marked failed: degraded miss
+                // without issuing a single op
+                let out = self.finish(DhtOutcome::ReadMiss, false);
+                return SmStep::Done(out);
+            }
+            let step = match self.inner.as_mut().expect("checked above") {
+                Inner::Plain(sm) => match sm.step(resp) {
+                    SmStep::Issue(req) => return SmStep::Issue(req),
+                    SmStep::Done(o) => (o, false, false),
+                },
+                Inner::Dual(sm) => match sm.step(resp) {
+                    SmStep::Issue(req) => return SmStep::Issue(req),
+                    SmStep::Done(d) => (d.out, d.fell_back, d.primary_corrupt),
+                },
+            };
+            let (out, fell_back, corrupt) = step;
+            self.probes += out.probes;
+            self.crc_retries += out.crc_retries;
+            self.lock_retries += out.lock_retries;
+            self.fell_back |= fell_back;
+            self.primary_corrupt |= corrupt;
+            let miss = matches!(
+                out.outcome,
+                DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt
+            );
+            if !miss {
+                let diverged = self.primary_missed;
+                let done = self.finish(out.outcome, diverged);
+                return SmStep::Done(done);
+            }
+            if self.r == 0 {
+                self.primary_missed = true;
+            }
+            // advance to the next live replica slot
+            let mut next = self.r + 1;
+            let mut skipped = 0u32;
+            while (next as usize) < self.skip.len() && self.skip[next as usize]
+            {
+                next += 1;
+                skipped += 1;
+            }
+            if (next as usize) >= self.skip.len() {
+                // exhausted: the last replica's miss/corrupt stands
+                // (a final ReadCorrupt is counted by `record` itself)
+                let done = self.finish(out.outcome, false);
+                return SmStep::Done(done);
+            }
+            if out.outcome == DhtOutcome::ReadCorrupt {
+                // this probe invalidated a bucket — a real table
+                // mutation — and the next replica's outcome supersedes
+                // it; flag it for the stats like the dual path does
+                self.primary_corrupt = true;
+            }
+            self.failovers += 1 + skipped;
+            self.r = next;
+            self.inner =
+                Some(Self::inner_for(&self.cur, self.old.as_ref(), &self.key, next));
+            resp = Resp::Start;
+        }
+    }
+}
+
+/// Workload-facing wrapper so a single SM type drives both replicated
+/// reads and plain ops (writes, unreplicated reads) — used by the DES
+/// POET model, whose engine lanes are monomorphic over the SM type.
+pub enum ReplSm {
+    Read(ReplReadSm),
+    Op(DhtSm),
+}
+
+impl OpSm for ReplSm {
+    type Out = ReplOut;
+    fn step(&mut self, resp: Resp) -> SmStep<ReplOut> {
+        match self {
+            ReplSm::Read(sm) => sm.step(resp),
+            ReplSm::Op(sm) => match sm.step(resp) {
+                SmStep::Issue(req) => SmStep::Issue(req),
+                SmStep::Done(out) => SmStep::Done(ReplOut {
+                    out,
+                    failovers: 0,
+                    diverged: false,
+                    fell_back: false,
+                    primary_corrupt: false,
+                }),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::Variant;
+    use crate::rma::shm::ShmCluster;
+
+    const KEY: usize = 16;
+    const VAL: usize = 24;
+
+    fn exec_repl(
+        rma: &crate::rma::shm::ShmRma,
+        mut sm: ReplReadSm,
+    ) -> ReplOut {
+        rma.exec(&mut sm)
+    }
+
+    fn write_at(
+        rma: &crate::rma::shm::ShmRma,
+        cfg: &DhtConfig,
+        key: &[u8],
+        val: &[u8],
+        r: u32,
+    ) {
+        let mut sm = DhtSm::write_at(cfg.variant, cfg, key, val, r);
+        rma.exec(&mut sm);
+    }
+
+    #[test]
+    fn primary_hit_needs_no_failover() {
+        for variant in Variant::ALL {
+            let cfg = DhtConfig::new(variant, 4, 16 * 1024, KEY, VAL)
+                .with_replicas(2);
+            let cluster = ShmCluster::new(4, 16 * 1024);
+            let rma = cluster.rma(0);
+            let key = vec![1u8; KEY];
+            write_at(&rma, &cfg, &key, &[9u8; VAL], 0);
+            write_at(&rma, &cfg, &key, &[9u8; VAL], 1);
+            let out =
+                exec_repl(&rma, ReplReadSm::new(&cfg, None, &key, |_| false));
+            assert_eq!(
+                out.out.outcome,
+                DhtOutcome::ReadHit(vec![9u8; VAL]),
+                "{variant:?}"
+            );
+            assert_eq!(out.failovers, 0, "{variant:?}");
+            assert!(!out.diverged);
+        }
+    }
+
+    #[test]
+    fn failed_primary_is_skipped_without_traffic() {
+        let cfg = DhtConfig::new(Variant::LockFree, 4, 16 * 1024, KEY, VAL)
+            .with_replicas(2);
+        let cluster = ShmCluster::new(4, 16 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![2u8; KEY];
+        let hash = cfg.addressing.hash(&key);
+        let primary = cfg.addressing.replica_target(hash, 0);
+        write_at(&rma, &cfg, &key, &[7u8; VAL], 0);
+        write_at(&rma, &cfg, &key, &[7u8; VAL], 1);
+        let out = exec_repl(
+            &rma,
+            ReplReadSm::new(&cfg, None, &key, |t| t == primary),
+        );
+        assert_eq!(out.out.outcome, DhtOutcome::ReadHit(vec![7u8; VAL]));
+        assert_eq!(out.failovers, 1);
+        // the primary was never probed, so this is not divergence
+        assert!(!out.diverged);
+    }
+
+    #[test]
+    fn live_primary_miss_with_replica_hit_counts_divergence() {
+        let cfg = DhtConfig::new(Variant::LockFree, 4, 16 * 1024, KEY, VAL)
+            .with_replicas(2);
+        let cluster = ShmCluster::new(4, 16 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![3u8; KEY];
+        // only the replica holds the key (primary lags)
+        write_at(&rma, &cfg, &key, &[5u8; VAL], 1);
+        let out =
+            exec_repl(&rma, ReplReadSm::new(&cfg, None, &key, |_| false));
+        assert_eq!(out.out.outcome, DhtOutcome::ReadHit(vec![5u8; VAL]));
+        assert_eq!(out.failovers, 1);
+        assert!(out.diverged, "primary probed + missed, replica hit");
+    }
+
+    #[test]
+    fn all_replicas_missing_is_a_miss() {
+        let cfg = DhtConfig::new(Variant::Fine, 4, 16 * 1024, KEY, VAL)
+            .with_replicas(3);
+        let cluster = ShmCluster::new(4, 16 * 1024);
+        let rma = cluster.rma(1);
+        let out = exec_repl(
+            &rma,
+            ReplReadSm::new(&cfg, None, &[9u8; KEY], |_| false),
+        );
+        assert_eq!(out.out.outcome, DhtOutcome::ReadMiss);
+        assert_eq!(out.failovers, 2, "fell through every replica");
+        assert!(!out.diverged, "all replicas agree on the miss");
+    }
+
+    #[test]
+    fn superseded_corrupt_probe_still_counts_invalidation() {
+        use crate::rma::Req;
+        struct OneShot(Option<Req>);
+        impl OpSm for OneShot {
+            type Out = ();
+            fn step(&mut self, _resp: Resp) -> SmStep<()> {
+                match self.0.take() {
+                    Some(r) => SmStep::Issue(r),
+                    None => SmStep::Done(()),
+                }
+            }
+        }
+        let cfg = DhtConfig::new(Variant::LockFree, 4, 16 * 1024, KEY, VAL)
+            .with_replicas(2);
+        let cluster = ShmCluster::new(4, 16 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![6u8; KEY];
+        write_at(&rma, &cfg, &key, &[8u8; VAL], 0);
+        write_at(&rma, &cfg, &key, &[8u8; VAL], 1);
+        // tear the primary copy behind the DHT's back
+        let plan = crate::dht::coarse::Plan::replica(&cfg, &key, 0);
+        let off = cfg.layout.bucket_off(plan.indices[0])
+            + cfg.layout.val_off() as u64;
+        let mut word = rma.get(plan.target, off, 8);
+        word[0] ^= 0xFF;
+        rma.exec(&mut OneShot(Some(Req::Put {
+            target: plan.target,
+            offset: off,
+            data: word,
+        })));
+        let out =
+            exec_repl(&rma, ReplReadSm::new(&cfg, None, &key, |_| false));
+        // the replica serves the value; the primary's invalidation — a
+        // real table mutation — is flagged even though superseded
+        assert_eq!(out.out.outcome, DhtOutcome::ReadHit(vec![8u8; VAL]));
+        assert!(out.primary_corrupt, "superseded invalidation flagged");
+        assert!(out.out.crc_retries > 0, "the tear was detected by CRC");
+        assert_eq!(out.failovers, 1);
+    }
+
+    #[test]
+    fn every_rank_failed_degrades_to_traffic_free_miss() {
+        let cfg = DhtConfig::new(Variant::Coarse, 2, 16 * 1024, KEY, VAL)
+            .with_replicas(2);
+        let cluster = ShmCluster::new(2, 16 * 1024);
+        let rma = cluster.rma(0);
+        let out =
+            exec_repl(&rma, ReplReadSm::new(&cfg, None, &[4u8; KEY], |_| true));
+        assert_eq!(out.out.outcome, DhtOutcome::ReadMiss);
+        assert_eq!(out.out.probes, 0, "no op was issued");
+        assert_eq!(out.failovers, 2);
+    }
+}

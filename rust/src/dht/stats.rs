@@ -1,8 +1,10 @@
 //! Per-instance DHT statistics (hit rates, evictions, mismatches —
 //! everything Tables 2 and 4 of the paper report), plus the elastic
-//! resize's migration counters (DESIGN.md §8).
+//! resize's migration counters (DESIGN.md §8) and the replication /
+//! failover counters (DESIGN.md §9).
 
 use super::migrate::{MigrateOut, MigrateResult};
+use super::replica::ReplOut;
 use super::{DhtOutcome, OpOut};
 
 #[derive(Clone, Debug, Default)]
@@ -38,6 +40,17 @@ pub struct DhtStats {
     /// Reads that fell back to the retiring table during a migration
     /// epoch (the dual-lookup cost of resizing online).
     pub dual_reads: u64,
+    /// Writes fanned out to non-primary replicas (k-way replication,
+    /// DESIGN.md §9).  Kept out of `writes` so replication never skews
+    /// the paper's application metrics.
+    pub replica_writes: u64,
+    /// Reads whose outcome involved at least one replica beyond the
+    /// primary (degraded-read failover: the primary missed, returned
+    /// corrupt, or its rank was marked failed).
+    pub failover_reads: u64,
+    /// Failover reads that hit at a replica after the *live* primary
+    /// was probed and missed — the replica set disagreed for that key.
+    pub replica_divergence: u64,
 }
 
 impl DhtStats {
@@ -81,6 +94,34 @@ impl DhtStats {
         }
     }
 
+    /// Record one replicated read ([`crate::dht::ReplReadSm`]'s output):
+    /// the merged per-op counters plus the failover / divergence / dual
+    /// bookkeeping (DESIGN.md §9).
+    pub fn record_failover(&mut self, ro: &ReplOut) {
+        if ro.fell_back {
+            self.dual_reads += 1;
+        }
+        if ro.primary_corrupt {
+            // a superseded new-table invalidation is still a real table
+            // mutation (same rule as the front-end's dual-read path)
+            self.invalidations += 1;
+        }
+        self.record(&ro.out);
+        if ro.failovers > 0 {
+            self.failover_reads += 1;
+        }
+        if ro.diverged {
+            self.replica_divergence += 1;
+        }
+    }
+
+    /// Record one non-primary replica write.  Like migration, replica
+    /// fan-out stays out of the per-op counters (`writes`, `probes`, ...)
+    /// so the paper's application metrics are those of the primary path.
+    pub fn record_replica_write(&mut self, _out: &OpOut) {
+        self.replica_writes += 1;
+    }
+
     /// Classify one migration-bucket outcome (elastic resize).  Kept out
     /// of the per-op counters (`probes`, `reads`, ...) so migration never
     /// skews the paper's application metrics.
@@ -111,6 +152,9 @@ impl DhtStats {
         self.migrate_skipped += o.migrate_skipped;
         self.migrate_dropped += o.migrate_dropped;
         self.dual_reads += o.dual_reads;
+        self.replica_writes += o.replica_writes;
+        self.failover_reads += o.failover_reads;
+        self.replica_divergence += o.replica_divergence;
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -194,6 +238,9 @@ mod tests {
             migrate_skipped: seed + 15,
             migrate_dropped: seed + 16,
             dual_reads: seed + 17,
+            replica_writes: seed + 18,
+            failover_reads: seed + 19,
+            replica_divergence: seed + 20,
         }
     }
 
@@ -221,6 +268,12 @@ mod tests {
         assert_eq!(a.migrate_skipped, 2100 + 2 * off.migrate_skipped);
         assert_eq!(a.migrate_dropped, 2100 + 2 * off.migrate_dropped);
         assert_eq!(a.dual_reads, 2100 + 2 * off.dual_reads);
+        assert_eq!(a.replica_writes, 2100 + 2 * off.replica_writes);
+        assert_eq!(a.failover_reads, 2100 + 2 * off.failover_reads);
+        assert_eq!(
+            a.replica_divergence,
+            2100 + 2 * off.replica_divergence
+        );
     }
 
     #[test]
@@ -248,6 +301,36 @@ mod tests {
         assert_eq!(s.lock_retries, 0);
         assert_eq!(s.reads, 0);
         assert_eq!(s.writes, 0);
+    }
+
+    #[test]
+    fn record_failover_classifies_replica_outcomes() {
+        use crate::dht::replica::ReplOut;
+        let mut s = DhtStats::default();
+        let ro = |outcome: DhtOutcome, failovers: u32, diverged: bool| ReplOut {
+            out: OpOut { outcome, probes: 2, crc_retries: 0, lock_retries: 0 },
+            failovers,
+            diverged,
+            fell_back: false,
+            primary_corrupt: false,
+        };
+        s.record_failover(&ro(DhtOutcome::ReadHit(vec![]), 0, false));
+        s.record_failover(&ro(DhtOutcome::ReadHit(vec![]), 1, true));
+        s.record_failover(&ro(DhtOutcome::ReadMiss, 2, false));
+        assert_eq!(s.reads, 3);
+        assert_eq!(s.read_hits, 2);
+        assert_eq!(s.failover_reads, 2);
+        assert_eq!(s.replica_divergence, 1);
+        // replica fan-out writes never skew the application metrics
+        s.record_replica_write(&OpOut {
+            outcome: DhtOutcome::WriteFresh,
+            probes: 3,
+            crc_retries: 0,
+            lock_retries: 0,
+        });
+        assert_eq!(s.replica_writes, 1);
+        assert_eq!(s.writes, 0);
+        assert_eq!(s.probes, 6);
     }
 
     #[test]

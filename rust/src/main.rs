@@ -67,9 +67,14 @@ COMMANDS:
   poet-des     POET in the DES cluster (paper Fig. 7)
                  --ranks list  --variant none|coarse|fine|lockfree
                  --ny N --nx N --steps N --digits D --pipeline D
+                 --replicas K (k-way DHT replication, DESIGN.md §9)
+                 --kill-rank R --kill-rank-at SECONDS (chaos: kill a
+                 rank's DHT shard at a simulated instant; with K >= 2
+                 reads fail over and the hit rate survives)
   poet         threaded POET on this machine (real PJRT chemistry)
                  --ny N --nx N --steps N --workers W --engine pjrt|native
                  --variant none|coarse|fine|lockfree|all --pipeline D
+                 --replicas K (k-way DHT replication, DESIGN.md §9)
                  --resize-at-iter N --resize-factor F (online elastic
                  resize mid-run; hit rate recovers live, DESIGN.md §8)
 
@@ -212,6 +217,7 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
     )?;
     let mut t = Table::new(vec![
         "ranks", "runtime s", "hit rate", "mismatches", "chem cells",
+        "failovers", "repl writes",
     ]);
     for n in ranks {
         let mut c = PoetDesCfg::scaled(n, variant);
@@ -220,6 +226,16 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         c.steps = args.usize_or("--steps", c.steps)?;
         c.digits = args.u64_or("--digits", c.digits as u64)? as u32;
         c.pipeline = args.u64_or("--pipeline", c.pipeline as u64)? as u32;
+        c.replicas = args.u64_or("--replicas", c.replicas as u64)? as u32;
+        if args.get("--kill-rank-at").is_some() {
+            let at_s = args.f64_or("--kill-rank-at", 0.0)?;
+            let rank = args.u64_or("--kill-rank", 1)? as u32;
+            anyhow::ensure!(
+                rank < n,
+                "--kill-rank {rank} out of range for {n} ranks"
+            );
+            c.kill_rank_at = Some((rank, (at_s * 1e9) as u64));
+        }
         let res = run_poet_des(c, net.clone());
         t.row(vec![
             n.to_string(),
@@ -227,6 +243,8 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
             format!("{:.3}", res.hit_rate()),
             res.dht.mismatches.to_string(),
             res.chem_cells.to_string(),
+            res.dht.failover_reads.to_string(),
+            res.dht.replica_writes.to_string(),
         ]);
     }
     println!(
@@ -248,6 +266,7 @@ fn cmd_poet(args: &Args) -> Result<()> {
     cfg.digits = args.u64_or("--digits", cfg.digits as u64)? as u32;
     cfg.dt = args.f64_or("--dt", cfg.dt)?;
     cfg.pipeline = args.usize_or("--pipeline", cfg.pipeline)?;
+    cfg.replicas = args.u64_or("--replicas", cfg.replicas as u64)? as u32;
     cfg.win_bytes = args.usize_or("--win-bytes", cfg.win_bytes)?;
     if args.get("--resize-at-iter").is_some() {
         cfg.resize_at_step =

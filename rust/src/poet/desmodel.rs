@@ -23,10 +23,12 @@
 
 use std::collections::VecDeque;
 
+use crate::dht::replica::{ReplOut, ReplReadSm, ReplSm};
 use crate::dht::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
 use crate::net::{NetConfig, Network};
+use crate::rma::fault::FaultPlan;
 use crate::rma::sim::{SimCluster, SimReport};
-use crate::rma::{OpSm, WorkItem, Workload};
+use crate::rma::{WorkItem, Workload};
 use crate::sim::Time;
 
 use super::chemistry::{integrate_cell, ChemCost, N_OUT};
@@ -70,6 +72,13 @@ pub struct PoetDesCfg {
     /// In-flight DHT ops per rank (pipeline depth; 1 = the classic
     /// blocking per-cell loop).
     pub pipeline: u32,
+    /// k-way replication factor for the surrogate DHT (DESIGN.md §9;
+    /// 1 = the paper's single-owner placement, clamped to `nranks`).
+    pub replicas: u32,
+    /// Deterministic chaos injection: kill `(rank, at_ns)`'s DHT storage
+    /// at the given simulated instant — the shard is lost, reads fail
+    /// over to replicas, the compute plane keeps running.
+    pub kill_rank_at: Option<(u32, u64)>,
 }
 
 impl PoetDesCfg {
@@ -90,6 +99,8 @@ impl PoetDesCfg {
             step_sync_ns: 300_000,
             transport_ns_per_cell: 500,
             pipeline: 1,
+            replicas: 1,
+            kill_rank_at: None,
         }
     }
 }
@@ -105,6 +116,9 @@ pub struct PoetDesResult {
     pub dht: DhtStats,
     pub sim: SimReport,
     pub max_dolomite: f64,
+    /// Per-step (hits, misses) — the hit-rate trajectory a mid-run rank
+    /// kill is judged by (all zeros for reference runs).
+    pub step_hits: Vec<(u64, u64)>,
 }
 
 impl PoetDesResult {
@@ -114,6 +128,20 @@ impl PoetDesResult {
             0.0
         } else {
             self.hits as f64 / t as f64
+        }
+    }
+
+    /// Mean hit rate over the step range `[lo, hi)` (clamped).
+    pub fn hit_rate_over(&self, lo: usize, hi: usize) -> f64 {
+        let hi = hi.min(self.step_hits.len());
+        let lo = lo.min(hi);
+        let (h, m) = self.step_hits[lo..hi]
+            .iter()
+            .fold((0u64, 0u64), |(h, m), (sh, sm)| (h + sh, m + sm));
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
         }
     }
 }
@@ -128,8 +156,9 @@ enum LaneJob {
     /// Chemistry Think in flight; on completion the result is written to
     /// the DHT (`write` = Some) or just applied (reference run).
     Compute { write: Option<(Vec<u8>, [f64; N_OUT])> },
-    /// DHT write outstanding.
-    Write,
+    /// DHT write outstanding (`replica`: a non-primary fan-out copy —
+    /// kept out of the application write metrics, DESIGN.md §9).
+    Write { replica: bool },
 }
 
 struct RankCur {
@@ -140,6 +169,10 @@ struct RankCur {
     writes_inflight: u32,
     /// Cells whose read missed, awaiting (serialized) chemistry.
     compute_q: VecDeque<(usize, Vec<u8>)>,
+    /// Replica fan-out writes awaiting a free lane (the primary write
+    /// leaves on the computing lane; the k-1 copies queue here so the
+    /// fan-out pipelines over sibling lanes instead of serializing).
+    write_q: VecDeque<DhtSm>,
     /// A chemistry Think is in flight (one CPU per rank).
     computing: bool,
     /// Step overhead charged / in flight.
@@ -157,6 +190,7 @@ impl RankCur {
             reads_inflight: 0,
             writes_inflight: 0,
             compute_q: VecDeque::new(),
+            write_q: VecDeque::new(),
             computing: false,
             overhead_done: false,
             overhead_inflight: false,
@@ -169,6 +203,7 @@ impl RankCur {
             && self.writes_inflight == 0
             && !self.computing
             && self.compute_q.is_empty()
+            && self.write_q.is_empty()
     }
 }
 
@@ -189,6 +224,8 @@ struct PoetWorkload {
     stats: DhtStats,
     hits: u64,
     misses: u64,
+    /// Per-step (hits, misses) trajectory.
+    step_hits: Vec<(u64, u64)>,
     chem_cells: u64,
 }
 
@@ -209,7 +246,10 @@ impl PoetWorkload {
             .collect();
         let dht = cfg
             .variant
-            .map(|v| DhtConfig::poet(v, cfg.nranks, cfg.win_bytes));
+            .map(|v| {
+                DhtConfig::poet(v, cfg.nranks, cfg.win_bytes)
+                    .with_replicas(cfg.replicas)
+            });
         Self {
             lanes,
             dht,
@@ -224,9 +264,18 @@ impl PoetWorkload {
             stats: DhtStats::default(),
             hits: 0,
             misses: 0,
+            step_hits: vec![(0, 0); cfg.steps],
             chem_cells: 0,
             cfg,
         }
+    }
+
+    /// The deterministic failure detector: the workload knows the fault
+    /// plan, so a rank is "detected" failed from its kill instant on —
+    /// an oracle detector, which is exactly what a reproducible chaos
+    /// run wants (ops already in flight still execute in degraded mode).
+    fn rank_dead(&self, target: u32, now: Time) -> bool {
+        matches!(self.cfg.kill_rank_at, Some((r, at)) if r == target && now >= at)
     }
 
     #[inline]
@@ -251,7 +300,7 @@ impl PoetWorkload {
     }
 
     /// Idle poll with per-lane exponential backoff.
-    fn poll(&mut self, ctx: usize) -> WorkItem<DhtSm> {
+    fn poll(&mut self, ctx: usize) -> WorkItem<ReplSm> {
         let ns = self.poll_ns[ctx];
         self.poll_ns[ctx] = (ns * 2).min(LANE_POLL_MAX_NS);
         WorkItem::Think(ns)
@@ -270,9 +319,9 @@ impl PoetWorkload {
 }
 
 impl Workload for PoetWorkload {
-    type Sm = DhtSm;
+    type Sm = ReplSm;
 
-    fn next(&mut self, rank: u32, lane: u32, _now: Time) -> WorkItem<DhtSm> {
+    fn next(&mut self, rank: u32, lane: u32, now: Time) -> WorkItem<ReplSm> {
         let r = rank as usize;
         let ctx = self.ctx(rank, lane);
 
@@ -287,18 +336,30 @@ impl Workload for PoetWorkload {
                 self.cur[r].computing = false;
                 if let Some((key, rec)) = write {
                     // chemistry cost charged: store the result (the miss
-                    // write of the batched pass)
-                    let dcfg = self.dht.as_ref().expect("dht in miss write");
-                    let sm =
-                        DhtSm::write(dcfg.variant, dcfg, &key, &pack_row(&rec));
-                    self.lane_job[ctx] = LaneJob::Write;
+                    // write of the batched pass).  With replication the
+                    // k-1 copies queue for sibling lanes so the fan-out
+                    // rides the same pipelined epoch (DESIGN.md §9).
+                    let dcfg =
+                        self.dht.clone().expect("dht in miss write");
+                    let val = pack_row(&rec);
+                    for rep in 1..dcfg.addressing.replicas() {
+                        self.cur[r].write_q.push_back(DhtSm::write_at(
+                            dcfg.variant,
+                            &dcfg,
+                            &key,
+                            &val,
+                            rep,
+                        ));
+                    }
+                    let sm = DhtSm::write(dcfg.variant, &dcfg, &key, &val);
+                    self.lane_job[ctx] = LaneJob::Write { replica: false };
                     self.cur[r].writes_inflight += 1;
                     self.poll_ns[ctx] = LANE_POLL_NS;
-                    return WorkItem::Op(sm);
+                    return WorkItem::Op(ReplSm::Op(sm));
                 }
             }
             LaneJob::Idle => {}
-            LaneJob::Read { .. } | LaneJob::Write => {
+            LaneJob::Read { .. } | LaneJob::Write { .. } => {
                 unreachable!("op jobs are cleared in on_complete")
             }
         }
@@ -340,6 +401,16 @@ impl Workload for PoetWorkload {
             );
         }
 
+        // replica fan-out writes queued by completed chemistry first
+        // (they are paid-for results; draining them promptly keeps the
+        // copies close behind their primaries)
+        if let Some(sm) = self.cur[r].write_q.pop_front() {
+            self.cur[r].writes_inflight += 1;
+            self.lane_job[ctx] = LaneJob::Write { replica: true };
+            self.poll_ns[ctx] = LANE_POLL_NS;
+            return WorkItem::Op(ReplSm::Op(sm));
+        }
+
         // chemistry for queued misses (one CPU per rank: serialized)
         if !self.cur[r].computing {
             if let Some((cell, key)) = self.cur[r].compute_q.pop_front() {
@@ -374,7 +445,15 @@ impl Workload for PoetWorkload {
                 Some(dcfg) => {
                     let row = self.grid.row(cell, self.cfg.dt);
                     let key = cell_key(&row, self.cfg.digits);
-                    let sm = DhtSm::read(dcfg.variant, dcfg, &key);
+                    let sm = if dcfg.addressing.replicas() > 1 {
+                        // degraded-read failover: skip ranks the fault
+                        // plan has killed by `now`, fall through on miss
+                        ReplSm::Read(ReplReadSm::new(dcfg, None, &key, |t| {
+                            self.rank_dead(t, now)
+                        }))
+                    } else {
+                        ReplSm::Op(DhtSm::read(dcfg.variant, dcfg, &key))
+                    };
                     self.lane_job[ctx] = LaneJob::Read { cell, key };
                     self.cur[r].reads_inflight += 1;
                     return WorkItem::Op(sm);
@@ -397,30 +476,39 @@ impl Workload for PoetWorkload {
         lane: u32,
         _now: Time,
         _latency: Time,
-        out: <DhtSm as OpSm>::Out,
+        out: ReplOut,
     ) {
         let r = rank as usize;
         let ctx = self.ctx(rank, lane);
-        self.stats.record(&out);
         match std::mem::replace(&mut self.lane_job[ctx], LaneJob::Idle) {
             LaneJob::Read { cell, key } => {
                 self.cur[r].reads_inflight -= 1;
-                match out.outcome {
+                // failover/divergence bookkeeping + the plain record
+                self.stats.record_failover(&out);
+                let step = self.cur[r].step.min(self.step_hits.len() - 1);
+                match out.out.outcome {
                     DhtOutcome::ReadHit(v) => {
                         self.hits += 1;
+                        self.step_hits[step].0 += 1;
                         self.grid.apply(cell, &unpack_value(&v));
                     }
                     DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt => {
                         self.misses += 1;
+                        self.step_hits[step].1 += 1;
                         self.cur[r].compute_q.push_back((cell, key));
                     }
                     other => unreachable!("read completed with {other:?}"),
                 }
             }
-            LaneJob::Write => {
+            LaneJob::Write { replica } => {
                 self.cur[r].writes_inflight -= 1;
+                if replica {
+                    self.stats.record_replica_write(&out.out);
+                } else {
+                    self.stats.record(&out.out);
+                }
                 debug_assert!(matches!(
-                    out.outcome,
+                    out.out.outcome,
                     DhtOutcome::WriteFresh
                         | DhtOutcome::WriteUpdate
                         | DhtOutcome::WriteEvict
@@ -436,6 +524,9 @@ pub fn run_poet_des(cfg: PoetDesCfg, net_cfg: NetConfig) -> PoetDesResult {
     let nranks = cfg.nranks;
     let win_bytes = cfg.win_bytes;
     let lanes = cfg.pipeline.max(1);
+    let fault = cfg
+        .kill_rank_at
+        .map(|(rank, at)| FaultPlan::default().kill_rank_at(rank, at));
     let net = Network::new(net_cfg, nranks);
     let mut cluster = SimCluster::with_pipeline(
         PoetWorkload::new(cfg),
@@ -444,6 +535,9 @@ pub fn run_poet_des(cfg: PoetDesCfg, net_cfg: NetConfig) -> PoetDesResult {
         win_bytes,
         lanes,
     );
+    if let Some(plan) = fault {
+        cluster.set_fault_plan(plan);
+    }
     let sim = cluster.run();
     let w = &mut cluster.workload;
     PoetDesResult {
@@ -453,6 +547,7 @@ pub fn run_poet_des(cfg: PoetDesCfg, net_cfg: NetConfig) -> PoetDesResult {
         misses: w.misses,
         dht: std::mem::take(&mut w.stats),
         max_dolomite: w.grid.max_dolomite(),
+        step_hits: std::mem::take(&mut w.step_hits),
         sim,
     }
 }
@@ -548,6 +643,36 @@ mod tests {
             d8.runtime_s,
             d1.runtime_s
         );
+    }
+
+    #[test]
+    fn replicated_poet_same_lookups_and_physics() {
+        // k = 2 must not change the coupled physics or the number of
+        // surrogate lookups — only add the fan-out copies
+        let base = tiny(8, Some(Variant::LockFree));
+        let d1 = run_poet_des(base.clone(), NetConfig::pik_ndr());
+        let mut repl = base.clone();
+        repl.replicas = 2;
+        repl.pipeline = 4;
+        let d2 = run_poet_des(repl, NetConfig::pik_ndr());
+        assert_eq!(
+            d1.hits + d1.misses,
+            d2.hits + d2.misses,
+            "same number of surrogate lookups"
+        );
+        assert!(d2.dht.replica_writes > 0, "copies fanned out");
+        assert_eq!(
+            d2.dht.replica_writes, d2.dht.writes,
+            "exactly one copy per primary write at k=2"
+        );
+        assert!(d2.hit_rate() > 0.4, "hit rate {}", d2.hit_rate());
+        assert!(d2.max_dolomite > 0.0);
+        // per-step trajectory accounts for every lookup
+        let (h, m) = d2
+            .step_hits
+            .iter()
+            .fold((0u64, 0u64), |(a, b), (x, y)| (a + x, b + y));
+        assert_eq!((h, m), (d2.hits, d2.misses));
     }
 
     #[test]

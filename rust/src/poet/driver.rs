@@ -51,6 +51,9 @@ pub struct PoetConfig {
     /// In-flight DHT ops per batched surrogate lookup/store pass
     /// (pipeline depth of `read_batch`/`write_batch`; DESIGN.md §3).
     pub pipeline: usize,
+    /// k-way DHT replication factor (DESIGN.md §9; 1 = the paper's
+    /// single-owner placement, clamped to the worker count).
+    pub replicas: u32,
     /// Mid-run elastic resize (DESIGN.md §8): before this step, grow (or
     /// shrink) the DHT to `resize_factor` x its per-rank bucket count.
     /// Demonstrates online hit-rate recovery for an undersized table
@@ -75,6 +78,7 @@ impl PoetConfig {
             chem_repeat: 1,
             chem_extra_us: 0.0,
             pipeline: crate::dht::front::DEFAULT_PIPELINE,
+            replicas: 1,
             resize_at_step: None,
             resize_factor: 2.0,
         }
@@ -167,6 +171,7 @@ impl PoetDriver {
             Dht::create_poet(variant, self.cfg.workers as u32, self.cfg.win_bytes);
         for h in &mut handles {
             h.set_pipeline(self.cfg.pipeline);
+            h.set_replicas(self.cfg.replicas);
         }
         self.run_inner(Some(handles))
     }
@@ -458,6 +463,28 @@ mod tests {
         assert!(
             d_dol <= 0.35 * ref_stats.max_dolomite.max(1e-12),
             "dolomite {} vs reference {}",
+            stats.max_dolomite,
+            ref_stats.max_dolomite
+        );
+    }
+
+    #[test]
+    fn replicated_run_matches_reference_physics() {
+        let mut ref_d = small_driver(20, 1);
+        let ref_stats = ref_d.run_reference();
+        let mut d = small_driver(20, 2);
+        d.cfg.replicas = 2;
+        let stats = d.run_with_dht(Variant::LockFree);
+        assert!(stats.hit_rate() > 0.5, "hit rate {}", stats.hit_rate());
+        assert!(stats.dht.replica_writes > 0, "copies fanned out");
+        assert_eq!(
+            stats.dht.replica_writes, stats.dht.writes,
+            "one copy per primary write at k=2"
+        );
+        let d_dol = (stats.max_dolomite - ref_stats.max_dolomite).abs();
+        assert!(
+            d_dol <= 0.35 * ref_stats.max_dolomite.max(1e-12),
+            "dolomite {} vs {}",
             stats.max_dolomite,
             ref_stats.max_dolomite
         );

@@ -1,0 +1,212 @@
+//! Deterministic fault injection for the DES backend (DESIGN.md §9).
+//!
+//! The discrete-event cluster is fully deterministic, which lets the
+//! chaos harness do what a real MPI run cannot: kill a rank at an exact
+//! simulated nanosecond, reproduce the failure from a log line, and
+//! assert on the recovery.  A [`FaultPlan`] describes the schedule; the
+//! cluster applies it at the *exec* phase of each op, so injected faults
+//! serialize with ordinary traffic in global simulated-time order.
+//!
+//! Failure model (storage-plane kill): killing a rank makes its window
+//! memory unreachable — the shard is lost.  Remote ops at a dead rank
+//! complete in degraded mode instead of hanging, mirroring an RMA
+//! completion-in-error: a `Get` reads as empty (all-zero bytes, i.e. an
+//! unoccupied bucket), a `Put` is dropped, an `Fao` returns 0, and a
+//! `Cas` — like the window locks — succeeds *vacuously* (returns its
+//! expected operand): mutual exclusion over lost memory is moot, and a
+//! failing CAS would trap every CAS-acquire loop (the fine-grained
+//! bucket locks) in an unbounded retry, violating the no-hang contract.
+//! Epoch-tagged control words are not confused by the illusion: their
+//! guards re-validate through FAO reads, which return 0 at a dead rank
+//! (epoch-tag mismatch, so stragglers abort).
+//! The compute plane keeps running — the POET model treats a kill as a
+//! lost cache shard (ULFM-style respawn with cold state), which is
+//! exactly the failure a replicated surrogate cache must survive.
+//!
+//! Delay and drop windows perturb message *timing*: the modelled
+//! transport is reliable (InfiniBand-like), so a dropped message
+//! surfaces as a retransmission penalty rather than silent loss — true
+//! unreachability is what rank kills are for.  Torn-put injection
+//! truncates a chosen `Put`'s payload at a byte cut, the tear the
+//! lock-free variant's CRC guard (§4.2) must catch.
+
+use crate::sim::Time;
+
+/// Kill `rank`'s storage plane at `at_ns` of simulated time.
+#[derive(Clone, Copy, Debug)]
+pub struct RankKill {
+    pub rank: u32,
+    pub at_ns: Time,
+}
+
+/// Timing perturbation for messages *targeting* `target` that are issued
+/// in `[from_ns, until_ns)`: each is delayed by `extra_ns`.
+#[derive(Clone, Copy, Debug)]
+pub struct NetWindow {
+    pub target: u32,
+    pub from_ns: Time,
+    pub until_ns: Time,
+    pub extra_ns: u64,
+}
+
+impl NetWindow {
+    fn matches(&self, target: u32, now: Time) -> bool {
+        target == self.target && now >= self.from_ns && now < self.until_ns
+    }
+}
+
+/// Truncate the `nth` Put applied at `target` (0-based, counted in exec
+/// order over the whole run) to its first `cut` bytes — the suffix never
+/// lands, exactly like a DMA torn mid-transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct TornPut {
+    pub target: u32,
+    pub nth: u64,
+    pub cut: usize,
+}
+
+/// A deterministic fault schedule for one DES run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub kills: Vec<RankKill>,
+    pub delays: Vec<NetWindow>,
+    /// Drops are modelled as loss + retransmission: a matching message
+    /// pays the window's `extra_ns` (typically a timeout, much larger
+    /// than a delay) and is counted separately.
+    pub drops: Vec<NetWindow>,
+    pub torn_puts: Vec<TornPut>,
+}
+
+impl FaultPlan {
+    /// Chainable builder: kill `rank` at `at_ns`.
+    pub fn kill_rank_at(mut self, rank: u32, at_ns: Time) -> Self {
+        self.kills.push(RankKill { rank, at_ns });
+        self
+    }
+
+    /// Chainable builder: delay messages to `target` issued in
+    /// `[from_ns, until_ns)` by `extra_ns`.
+    pub fn delay_window(
+        mut self,
+        target: u32,
+        from_ns: Time,
+        until_ns: Time,
+        extra_ns: u64,
+    ) -> Self {
+        self.delays.push(NetWindow { target, from_ns, until_ns, extra_ns });
+        self
+    }
+
+    /// Chainable builder: drop (lose + retransmit after `retrans_ns`)
+    /// messages to `target` issued in `[from_ns, until_ns)`.
+    pub fn drop_window(
+        mut self,
+        target: u32,
+        from_ns: Time,
+        until_ns: Time,
+        retrans_ns: u64,
+    ) -> Self {
+        self.drops.push(NetWindow {
+            target,
+            from_ns,
+            until_ns,
+            extra_ns: retrans_ns,
+        });
+        self
+    }
+
+    /// Chainable builder: truncate the `nth` Put applied at `target` to
+    /// its first `cut` bytes.
+    pub fn torn_put(mut self, target: u32, nth: u64, cut: usize) -> Self {
+        self.torn_puts.push(TornPut { target, nth, cut });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+            && self.delays.is_empty()
+            && self.drops.is_empty()
+            && self.torn_puts.is_empty()
+    }
+
+    /// Whether `rank`'s storage is dead at simulated time `now`.
+    pub fn is_failed(&self, rank: u32, now: Time) -> bool {
+        self.kills.iter().any(|k| k.rank == rank && now >= k.at_ns)
+    }
+
+    /// Extra latency (delay, drop-retransmission) for a message to
+    /// `target` issued at `now`.
+    pub fn perturb_ns(&self, target: u32, now: Time) -> (u64, u64) {
+        let delay = self
+            .delays
+            .iter()
+            .filter(|w| w.matches(target, now))
+            .map(|w| w.extra_ns)
+            .sum();
+        let drop = self
+            .drops
+            .iter()
+            .filter(|w| w.matches(target, now))
+            .map(|w| w.extra_ns)
+            .sum();
+        (delay, drop)
+    }
+
+    /// Byte cut for the `nth` Put applied at `target`, if one is planned.
+    pub fn torn_cut(&self, target: u32, nth: u64) -> Option<usize> {
+        self.torn_puts
+            .iter()
+            .find(|t| t.target == target && t.nth == nth)
+            .map(|t| t.cut)
+    }
+}
+
+/// Injected-fault counters, reported in `SimReport::faults`.
+#[derive(Clone, Debug, Default)]
+pub struct FaultStats {
+    /// Ops short-circuited in degraded mode at a dead rank.
+    pub failed_ops: u64,
+    /// Messages delayed by a delay window.
+    pub delayed_msgs: u64,
+    /// Messages dropped (retransmission penalty applied).
+    pub dropped_msgs: u64,
+    /// Puts truncated by torn-write injection.
+    pub torn_puts: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_is_permanent_from_its_instant() {
+        let p = FaultPlan::default().kill_rank_at(3, 1_000);
+        assert!(!p.is_failed(3, 999));
+        assert!(p.is_failed(3, 1_000));
+        assert!(p.is_failed(3, u64::MAX));
+        assert!(!p.is_failed(2, u64::MAX));
+    }
+
+    #[test]
+    fn windows_match_target_and_issue_time() {
+        let p = FaultPlan::default()
+            .delay_window(1, 100, 200, 50)
+            .drop_window(1, 150, 250, 9_000);
+        assert_eq!(p.perturb_ns(1, 99), (0, 0));
+        assert_eq!(p.perturb_ns(1, 100), (50, 0));
+        assert_eq!(p.perturb_ns(1, 150), (50, 9_000));
+        assert_eq!(p.perturb_ns(1, 200), (0, 9_000));
+        assert_eq!(p.perturb_ns(1, 250), (0, 0));
+        assert_eq!(p.perturb_ns(0, 150), (0, 0));
+    }
+
+    #[test]
+    fn torn_cut_selects_the_nth_put() {
+        let p = FaultPlan::default().torn_put(0, 2, 24);
+        assert_eq!(p.torn_cut(0, 2), Some(24));
+        assert_eq!(p.torn_cut(0, 1), None);
+        assert_eq!(p.torn_cut(1, 2), None);
+        assert!(!p.is_empty());
+        assert!(FaultPlan::default().is_empty());
+    }
+}

@@ -23,8 +23,11 @@
 //! to `depth` state machines are in flight concurrently — issue many,
 //! flush once, exactly how real `MPI_Put`/`MPI_Get` epochs hide latency.
 
+pub mod fault;
 pub mod shm;
 pub mod sim;
+
+pub use fault::{FaultPlan, FaultStats};
 
 use crate::sim::Time;
 
@@ -188,6 +191,17 @@ pub trait RmaBackend: Clone {
     /// publishing the new geometry to the other ranks is the caller's
     /// job (and *is* modelled, see `Dht::resize`).
     fn alloc_window(&mut self, bytes: usize) -> Option<u64>;
+
+    /// Whether the local failure detector currently marks `target`'s
+    /// storage as failed (dead shard, DESIGN.md §9).  Ops issued at a
+    /// failed rank complete in *degraded mode* (gets read as empty, puts
+    /// are dropped) rather than hanging; the replicated front-end uses
+    /// this to route reads around dead replicas without traffic.  The
+    /// check is an unmodelled local lookup, like `peek_word`.  Default:
+    /// no failures.
+    fn rank_failed(&self, _target: u32) -> bool {
+        false
+    }
 }
 
 /// Work item a workload hands to the DES engine for a rank.

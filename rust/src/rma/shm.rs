@@ -13,7 +13,7 @@
 //! CAS `0 -> EXCLUSIVE_LOCK`, readers fetch-add 1 and revoke if a writer
 //! holds the word.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::{
@@ -101,6 +101,11 @@ pub struct ShmCluster {
     win_bytes: usize,
     /// Serializes segment allocation; all other access is lock-free.
     next_seg: Mutex<usize>,
+    /// Test-only chaos mask (DESIGN.md §9): a failed rank's windows
+    /// behave like the DES backend's killed ranks — gets read as empty,
+    /// puts are dropped, atomics fail safely, locks succeed vacuously —
+    /// giving the shm backend the same degraded-mode trait surface.
+    failed: Vec<AtomicBool>,
 }
 
 impl ShmCluster {
@@ -111,7 +116,19 @@ impl ShmCluster {
             windows: (0..nranks).map(|_| ShmWindow::new(win_bytes)).collect(),
             win_bytes,
             next_seg: Mutex::new(2),
+            failed: (0..nranks).map(|_| AtomicBool::new(false)).collect(),
         })
+    }
+
+    /// Mark `rank`'s storage failed (or alive again) — the shm analogue
+    /// of the DES backend's deterministic rank kill, for chaos tests.
+    pub fn set_failed(&self, rank: u32, failed: bool) {
+        self.failed[rank as usize].store(failed, Ordering::Release);
+    }
+
+    /// Whether `rank` is currently masked failed.
+    pub fn is_failed(&self, rank: u32) -> bool {
+        self.failed[rank as usize].load(Ordering::Acquire)
     }
 
     pub fn nranks(&self) -> u32 {
@@ -179,11 +196,22 @@ impl ShmRma {
         u64::from_le_bytes(self.get(target, offset, 8).try_into().unwrap())
     }
 
+    /// Test-only chaos hook: mark `rank`'s storage failed/alive (see
+    /// [`ShmCluster::set_failed`]).
+    pub fn set_failed(&self, rank: u32, failed: bool) {
+        self.cluster.set_failed(rank, failed);
+    }
+
     /// One non-blocking `MPI_Win_lock` attempt (the pipelined executor
     /// must never busy-wait inside a single slot: a sibling SM of the same
     /// batch may be the lock holder, so parking-and-rotating is the only
     /// deadlock-free schedule).
     fn try_lock_win(&self, target: u32, exclusive: bool) -> bool {
+        if self.cluster.is_failed(target) {
+            // a failed rank's lock word is lost: acquisition succeeds
+            // vacuously (degraded mode; the memory reads as empty)
+            return true;
+        }
         let lock = &self.cluster.windows[target as usize].lock;
         if exclusive {
             lock.compare_exchange(
@@ -312,6 +340,37 @@ impl ShmRma {
     }
 
     fn do_req(&self, req: Req) -> Resp {
+        // degraded mode at a masked-failed rank (same contract as the
+        // DES backend's killed ranks — see `rma::fault`)
+        let target = match &req {
+            Req::Get { target, .. }
+            | Req::Put { target, .. }
+            | Req::Cas { target, .. }
+            | Req::Fao { target, .. }
+            | Req::LockWin { target, .. }
+            | Req::UnlockWin { target, .. } => Some(*target),
+            Req::Rpc { server, .. } => Some(*server),
+            Req::Compute { .. } => None,
+        };
+        if let Some(t) = target {
+            if self.cluster.is_failed(t) {
+                return match req {
+                    Req::Get { len, .. } => {
+                        Resp::Data(vec![0u8; len as usize])
+                    }
+                    // vacuous success, like the window locks: a failing
+                    // CAS would trap CAS-acquire loops (fine-grained
+                    // bucket locks) forever at a dead rank
+                    Req::Cas { expected, .. } => Resp::Word(expected),
+                    Req::Fao { .. } => Resp::Word(0),
+                    Req::Put { .. }
+                    | Req::LockWin { .. }
+                    | Req::UnlockWin { .. }
+                    | Req::Compute { .. } => Resp::Ack,
+                    Req::Rpc { .. } => Resp::Rpc(RpcReply::Ok),
+                };
+            }
+        }
         match req {
             Req::Get { target, offset, len } => {
                 debug_check_aligned(offset, len);
@@ -430,6 +489,10 @@ impl RmaBackend for ShmRma {
 
     fn alloc_window(&mut self, bytes: usize) -> Option<u64> {
         self.cluster.alloc_window(bytes)
+    }
+
+    fn rank_failed(&self, target: u32) -> bool {
+        self.cluster.is_failed(target)
     }
 }
 
@@ -674,6 +737,43 @@ mod tests {
         assert_eq!(got, 14);
         // exhaustion is a recoverable None, not a panic, and repeats
         assert!(cluster.alloc_window(64).is_none());
+    }
+
+    #[test]
+    fn failed_mask_degrades_ops_and_revives() {
+        let cluster = ShmCluster::new(2, 256);
+        let rma = cluster.rma(0);
+        rma.do_req(Req::Put { target: 1, offset: 8, data: vec![0xAA; 8] });
+        cluster.set_failed(1, true);
+        assert!(rma.rank_failed(1));
+        assert!(!rma.rank_failed(0));
+        // gets read as empty; CAS succeeds vacuously (so CAS-acquire
+        // loops terminate) without touching the lost memory
+        match rma.do_req(Req::Get { target: 1, offset: 8, len: 8 }) {
+            Resp::Data(d) => assert_eq!(d, vec![0u8; 8]),
+            other => panic!("unexpected {other:?}"),
+        }
+        match rma.do_req(Req::Cas {
+            target: 1,
+            offset: 8,
+            expected: 3,
+            desired: 9,
+        }) {
+            Resp::Word(w) => {
+                assert_eq!(w, 3, "degraded CAS reports vacuous success")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        rma.do_req(Req::LockWin { target: 1, exclusive: true });
+        rma.do_req(Req::UnlockWin { target: 1, exclusive: true });
+        // the mask models unreachability: reviving exposes the memory
+        // again untouched (no put/CAS landed while failed)
+        cluster.set_failed(1, false);
+        match rma.do_req(Req::Get { target: 1, offset: 8, len: 8 }) {
+            Resp::Data(d) => assert_eq!(d, vec![0xAA; 8]),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(cluster.windows[1].lock.load(Ordering::SeqCst), 0);
     }
 
     #[test]

@@ -45,9 +45,11 @@ use crate::metrics::Histogram;
 use crate::net::{Network, OpKind, OpTiming};
 use crate::sim::{EventQueue, Resource, Time};
 
+use super::fault::{FaultPlan, FaultStats};
 use super::{
-    debug_check_aligned, split_offset, OpSm, Req, Resp, RmaBackend, SmStep,
-    WorkItem, Workload, CTRL_BYTES, EXCLUSIVE_LOCK,
+    debug_check_aligned, split_offset, OpSm, Req, Resp, RmaBackend,
+    RpcPayload, RpcReply, SmStep, WorkItem, Workload, CTRL_BYTES,
+    EXCLUSIVE_LOCK,
 };
 
 /// Engine events (two-phase per op; see module docs).  `ctx` identifies a
@@ -150,6 +152,8 @@ pub struct SimReport {
     pub atomic_util: Vec<f64>,
     pub responder_util: Vec<f64>,
     pub nic_util: Vec<f64>,
+    /// Injected-fault counters (chaos harness, DESIGN.md §9).
+    pub faults: FaultStats,
 }
 
 /// The DES cluster executing a [`Workload`].
@@ -175,6 +179,10 @@ pub struct SimCluster<W: Workload> {
     /// lanes park at the barrier instead of pulling more work (otherwise
     /// they would run the workload straight past its phase boundary).
     rank_barrier: Vec<bool>,
+    /// Deterministic fault schedule (chaos harness, DESIGN.md §9).
+    fault: FaultPlan,
+    /// Puts applied per target rank (exec order) — the torn-put index.
+    puts_applied: Vec<u64>,
     now: Time,
     report: SimReport,
 }
@@ -216,9 +224,24 @@ impl<W: Workload> SimCluster<W> {
             queue: EventQueue::new(),
             ctxs: (0..nctx).map(|_| CtxState::new()).collect(),
             rank_barrier: vec![false; nranks as usize],
+            fault: FaultPlan::default(),
+            puts_applied: vec![0; nranks as usize],
             now: 0,
             report: SimReport::default(),
         }
+    }
+
+    /// Install a deterministic fault schedule (chaos harness).  Usually
+    /// set before `run`; mid-run installation is valid and applies from
+    /// the current simulated instant.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault = plan;
+    }
+
+    /// Whether `rank`'s storage is dead at the current simulated time —
+    /// the cluster-side view behind [`RmaBackend::rank_failed`].
+    pub fn is_failed(&self, rank: u32) -> bool {
+        self.fault.is_failed(rank, self.now)
     }
 
     pub fn nranks(&self) -> u32 {
@@ -359,11 +382,17 @@ impl<W: Workload> SimCluster<W> {
         {
             if !self.ctxs[ctx as usize].unlock_applied {
                 self.ctxs[ctx as usize].unlock_applied = true;
-                let word = &mut self.win_locks[target as usize];
-                if exclusive {
-                    *word -= EXCLUSIVE_LOCK;
+                if self.fault.is_failed(target, self.now) {
+                    // the lock word died with the rank; releasing lost
+                    // memory is a no-op (see rma::fault)
+                    self.report.faults.failed_ops += 1;
                 } else {
-                    *word -= 1;
+                    let word = &mut self.win_locks[target as usize];
+                    if exclusive {
+                        *word -= EXCLUSIVE_LOCK;
+                    } else {
+                        *word -= 1;
+                    }
                 }
             }
             let cs = &mut self.ctxs[ctx as usize];
@@ -385,30 +414,73 @@ impl<W: Workload> SimCluster<W> {
             .pending_req
             .take()
             .expect("Exec without pending request");
+        // Ops at a dead rank complete in degraded mode instead of
+        // hanging (see `rma::fault` for the failure model): gets read as
+        // empty, puts are dropped, atomics fail safely.
         let resp = match req {
             Req::Get { target, offset, len } => {
-                let data = self.read_torn(target, offset, len);
-                Resp::Data(data)
+                if self.fault.is_failed(target, self.now) {
+                    self.report.faults.failed_ops += 1;
+                    Resp::Data(vec![0u8; len as usize])
+                } else {
+                    let data = self.read_torn(target, offset, len);
+                    Resp::Data(data)
+                }
             }
             Req::Put { target, offset, data } => {
-                self.apply_put(target, offset, data, timing);
+                if self.fault.is_failed(target, self.now) {
+                    self.report.faults.failed_ops += 1;
+                } else {
+                    self.apply_put(target, offset, data, timing);
+                }
                 Resp::Ack
             }
             Req::Cas { target, offset, expected, desired } => {
-                let w = self.win_word(target, offset);
-                if w == expected {
-                    self.set_win_word(target, offset, desired);
+                if self.fault.is_failed(target, self.now) {
+                    self.report.faults.failed_ops += 1;
+                    // vacuous success (returns `expected`), like the
+                    // window locks: a failing CAS would trap every
+                    // CAS-acquire loop (fine-grained bucket locks) in an
+                    // unbounded retry against memory that no longer
+                    // exists, while "success" lets the protocol proceed
+                    // against a table that reads as empty and a put that
+                    // is dropped.  Epoch-tagged control words stay safe:
+                    // their guards re-validate via FAO reads, which
+                    // return 0 at a dead rank (tag mismatch -> abort).
+                    Resp::Word(expected)
+                } else {
+                    let w = self.win_word(target, offset);
+                    if w == expected {
+                        self.set_win_word(target, offset, desired);
+                    }
+                    Resp::Word(w)
                 }
-                Resp::Word(w)
             }
             Req::Fao { target, offset, add } => {
-                let w = self.win_word(target, offset);
-                self.set_win_word(target, offset, w.wrapping_add(add as u64));
-                Resp::Word(w)
+                if self.fault.is_failed(target, self.now) {
+                    self.report.faults.failed_ops += 1;
+                    Resp::Word(0)
+                } else {
+                    let w = self.win_word(target, offset);
+                    self.set_win_word(
+                        target,
+                        offset,
+                        w.wrapping_add(add as u64),
+                    );
+                    Resp::Word(w)
+                }
             }
-            Req::Rpc { proc_ns: _, payload, .. } => {
-                let reply = self.workload.serve_rpc(self.now, &payload);
-                Resp::Rpc(reply)
+            Req::Rpc { server, proc_ns: _, payload, .. } => {
+                if self.fault.is_failed(server, self.now) {
+                    self.report.faults.failed_ops += 1;
+                    Resp::Rpc(match &payload {
+                        RpcPayload::KvGet { .. } => RpcReply::Value(None),
+                        RpcPayload::KvPut { .. } => RpcReply::Ok,
+                    })
+                } else {
+                    let reply = self.workload.serve_rpc(self.now, &payload);
+                    Resp::Rpc(reply)
+                }
             }
             Req::LockWin { .. } | Req::UnlockWin { .. } | Req::Compute { .. } => {
                 unreachable!("handled before this match")
@@ -422,6 +494,20 @@ impl<W: Workload> SimCluster<W> {
     fn exec_lock_attempt(&mut self, ctx: u32) {
         let rank = self.rank_of(ctx);
         let timing = self.ctxs[ctx as usize].pending_timing.unwrap();
+        // a killed target's lock word is lost: acquisition succeeds
+        // vacuously (degraded mode — mutual exclusion over memory that
+        // reads as empty is moot; see rma::fault)
+        let dead = {
+            let lw = self.ctxs[ctx as usize].lock_wait.as_ref().unwrap();
+            self.fault.is_failed(lw.target, self.now)
+        };
+        if dead {
+            self.report.faults.failed_ops += 1;
+            self.ctxs[ctx as usize].lock_wait = None;
+            self.ctxs[ctx as usize].pending_resp = Some(Resp::Ack);
+            self.queue.push(timing.resume, Ev::Resume { ctx });
+            return;
+        }
         let lw = self.ctxs[ctx as usize].lock_wait.as_mut().unwrap();
         // mid-attempt: more atomics of this attempt to go (issued one by
         // one so each loads the engine at its own event time)
@@ -565,6 +651,25 @@ impl<W: Workload> SimCluster<W> {
         }
     }
 
+    /// Apply the fault plan's delay/drop perturbation to a modelled op's
+    /// timing (windows match the op's *issue* instant; a drop is loss +
+    /// retransmission on the reliable transport — see `rma::fault`).
+    fn faulted(&mut self, target: u32, mut t: OpTiming) -> OpTiming {
+        let (delay, drop) = self.fault.perturb_ns(target, self.now);
+        if delay > 0 {
+            self.report.faults.delayed_msgs += 1;
+        }
+        if drop > 0 {
+            self.report.faults.dropped_msgs += 1;
+        }
+        let extra = delay + drop;
+        if extra > 0 {
+            t.exec += extra;
+            t.resume += extra;
+        }
+        t
+    }
+
     /// Translate a request into events; returns true (always waits).
     fn issue(&mut self, ctx: u32, req: Req) -> bool {
         let rank = self.rank_of(ctx);
@@ -593,6 +698,7 @@ impl<W: Workload> SimCluster<W> {
                     chain_left: n.saturating_sub(1),
                 });
                 let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
+                let t = self.faulted(target, t);
                 self.ctxs[ctx as usize].pending_timing = Some(t);
                 self.queue.push(t.exec, Ev::Exec { ctx });
             }
@@ -603,6 +709,7 @@ impl<W: Workload> SimCluster<W> {
                     1
                 };
                 let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
+                let t = self.faulted(target, t);
                 self.ctxs[ctx as usize].pending_req =
                     Some(Req::UnlockWin { target, exclusive });
                 // the release applies at the first atomic's exec — it must
@@ -619,6 +726,7 @@ impl<W: Workload> SimCluster<W> {
                 // the server process itself
                 let t_net =
                     self.net.rma(self.now, rank, server, OpKind::Put, req_bytes);
+                let t_net = self.faulted(server, t_net);
                 let srv = self.servers.entry(server).or_default();
                 let t_done = srv.acquire(t_net.exec, proc_ns);
                 let resume = t_done
@@ -638,6 +746,7 @@ impl<W: Workload> SimCluster<W> {
             Req::Get { target, offset, len } => {
                 debug_check_aligned(offset, len);
                 let t = self.net.rma(self.now, rank, target, OpKind::Get, len);
+                let t = self.faulted(target, t);
                 self.ctxs[ctx as usize].pending_req =
                     Some(Req::Get { target, offset, len });
                 self.ctxs[ctx as usize].pending_timing = Some(t);
@@ -652,6 +761,7 @@ impl<W: Workload> SimCluster<W> {
                     OpKind::Put,
                     data.len() as u32,
                 );
+                let t = self.faulted(target, t);
                 // register the DMA window NOW (a concurrent Get whose exec
                 // lands inside it is processed before this put's Exec
                 // event and must already see the new prefix)
@@ -672,6 +782,7 @@ impl<W: Workload> SimCluster<W> {
             }
             Req::Cas { target, offset, expected, desired } => {
                 let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
+                let t = self.faulted(target, t);
                 self.ctxs[ctx as usize].pending_req =
                     Some(Req::Cas { target, offset, expected, desired });
                 self.ctxs[ctx as usize].pending_timing = Some(t);
@@ -679,6 +790,7 @@ impl<W: Workload> SimCluster<W> {
             }
             Req::Fao { target, offset, add } => {
                 let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
+                let t = self.faulted(target, t);
                 self.ctxs[ctx as usize].pending_req =
                     Some(Req::Fao { target, offset, add });
                 self.ctxs[ctx as usize].pending_timing = Some(t);
@@ -722,12 +834,25 @@ impl<W: Workload> SimCluster<W> {
     }
 
     /// Apply a Put's payload to window memory at its exec instant (the
-    /// torn window was registered at issue time).
+    /// torn window was registered at issue time).  Torn-put injection
+    /// truncates the payload at the planned byte cut — the suffix never
+    /// lands, exactly like a DMA torn mid-transfer (the lock-free CRC
+    /// guard must catch the resulting half-record).
     fn apply_put(&mut self, target: u32, offset: u64, data: Vec<u8>,
                  _timing: OpTiming) {
+        let nth = self.puts_applied[target as usize];
+        self.puts_applied[target as usize] += 1;
+        let landed = match self.fault.torn_cut(target, nth) {
+            Some(cut) if cut < data.len() => {
+                self.report.faults.torn_puts += 1;
+                &data[..cut]
+            }
+            _ => &data[..],
+        };
         let (s, off) = split_offset(offset);
         let mem = &mut self.windows[target as usize][s];
-        mem[off as usize..off as usize + data.len()].copy_from_slice(&data);
+        mem[off as usize..off as usize + landed.len()]
+            .copy_from_slice(landed);
     }
 
     /// Read with torn-write composition (see module docs).  Offsets in
@@ -897,6 +1022,23 @@ impl SimRma {
         self.shared.borrow().report.events
     }
 
+    /// Install a deterministic fault schedule on the shared cluster
+    /// (chaos harness, DESIGN.md §9).
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        self.shared.borrow_mut().set_fault_plan(plan);
+    }
+
+    /// Injected-fault counters so far.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.shared.borrow().report.faults.clone()
+    }
+
+    /// Modelled network traffic so far: (messages, payload bytes).
+    pub fn net_stats(&self) -> (u64, u128) {
+        let c = self.shared.borrow();
+        (c.net().messages, c.net().bytes)
+    }
+
     fn run_batch(&self, sms: Vec<FeedSm>, depth: usize) -> Vec<Box<dyn Any>> {
         let n = sms.len();
         let rank = self.rank as usize;
@@ -960,6 +1102,10 @@ impl RmaBackend for SimRma {
     fn alloc_window(&mut self, bytes: usize) -> Option<u64> {
         // heap-backed segments: the DES cluster never runs out of slots
         Some(self.shared.borrow_mut().alloc_window(bytes))
+    }
+
+    fn rank_failed(&self, target: u32) -> bool {
+        self.shared.borrow().is_failed(target)
     }
 }
 
@@ -1405,6 +1551,97 @@ mod tests {
         assert_eq!(handles[0].peek(1, 24, 8), vec![0u8; 8]);
         assert_eq!(handles[0].peek(1, CTRL_BASE + 24, 8), vec![0u8; 8]);
         assert_eq!(handles[0].peek(1, base + 24, 8), vec![0xCD; 8]);
+    }
+
+    // ------------------------------------------------------------ faults
+
+    /// One Put then done (fault tests).
+    struct FPutSm(Option<(u64, Vec<u8>)>);
+    impl OpSm for FPutSm {
+        type Out = ();
+        fn step(&mut self, _resp: Resp) -> SmStep<()> {
+            match self.0.take() {
+                Some((off, data)) => {
+                    SmStep::Issue(Req::Put { target: 1, offset: off, data })
+                }
+                None => SmStep::Done(()),
+            }
+        }
+    }
+
+    /// One Get of `len` bytes then done (fault tests).
+    struct FGetSm(Option<(u64, u32)>);
+    impl OpSm for FGetSm {
+        type Out = Vec<u8>;
+        fn step(&mut self, resp: Resp) -> SmStep<Vec<u8>> {
+            match self.0.take() {
+                Some((off, len)) => {
+                    SmStep::Issue(Req::Get { target: 1, offset: off, len })
+                }
+                None => match resp {
+                    Resp::Data(d) => SmStep::Done(d),
+                    other => panic!("unexpected {other:?}"),
+                },
+            }
+        }
+    }
+
+    #[test]
+    fn killed_rank_degrades_ops_instead_of_hanging() {
+        let net = Network::new(NetConfig::pik_ndr(), 2);
+        let mut handles = SimRma::create(net, 2, 256, 1);
+        handles[0].exec(FPutSm(Some((16, vec![0xAB; 8]))));
+        assert_eq!(handles[0].exec(FGetSm(Some((16, 8)))), vec![0xAB; 8]);
+        // kill rank 1 now: its shard is lost, remote ops degrade
+        let t = handles[0].now();
+        handles[0].set_fault_plan(FaultPlan::default().kill_rank_at(1, t));
+        assert!(handles[0].rank_failed(1));
+        assert!(!handles[0].rank_failed(0));
+        assert_eq!(handles[0].exec(FGetSm(Some((16, 8)))), vec![0u8; 8]);
+        handles[0].exec(FPutSm(Some((24, vec![0xEE; 8])))); // dropped
+        assert_eq!(handles[0].fault_stats().failed_ops, 2);
+    }
+
+    #[test]
+    fn torn_put_lands_only_its_prefix() {
+        let net = Network::new(NetConfig::pik_ndr(), 2);
+        let mut handles = SimRma::create(net, 2, 256, 1);
+        handles[0].set_fault_plan(FaultPlan::default().torn_put(1, 0, 8));
+        handles[0].exec(FPutSm(Some((0, vec![0xCD; 16]))));
+        let got = handles[0].exec(FGetSm(Some((0, 16))));
+        assert_eq!(&got[..8], &[0xCD; 8][..], "prefix landed");
+        assert_eq!(&got[8..], &[0u8; 8][..], "suffix never landed");
+        assert_eq!(handles[0].fault_stats().torn_puts, 1);
+        // the *next* put at the same target is whole again
+        handles[0].exec(FPutSm(Some((32, vec![0x11; 16]))));
+        assert_eq!(handles[0].exec(FGetSm(Some((32, 16)))), vec![0x11; 16]);
+    }
+
+    #[test]
+    fn delay_and_drop_windows_slow_matching_ops() {
+        let run = |plan: Option<FaultPlan>| {
+            let net = Network::new(NetConfig::pik_ndr(), 2);
+            let mut h = SimRma::create(net, 2, 1024, 1).remove(0);
+            if let Some(p) = plan {
+                h.set_fault_plan(p);
+            }
+            for _ in 0..8 {
+                h.exec(FGetSm(Some((0, 8))));
+            }
+            (h.now(), h.fault_stats())
+        };
+        let (base, fs) = run(None);
+        assert_eq!(fs.delayed_msgs + fs.dropped_msgs, 0);
+        let (delayed, fs) = run(Some(
+            FaultPlan::default().delay_window(1, 0, u64::MAX, 10_000),
+        ));
+        assert!(delayed >= base + 8 * 10_000, "{delayed} vs {base}");
+        assert_eq!(fs.delayed_msgs, 8);
+        let (dropped, fs) = run(Some(
+            FaultPlan::default().drop_window(1, 0, u64::MAX, 50_000),
+        ));
+        assert!(dropped > delayed, "retransmission costs more than delay");
+        assert_eq!(fs.dropped_msgs, 8);
     }
 
     #[test]

@@ -1,0 +1,355 @@
+//! Chaos harness (DESIGN.md §9): deterministic fault injection against
+//! the replicated DHT, from raw backend faults up to the coupled POET
+//! model.
+//!
+//! Everything here is deterministic: the DES backend replays identical
+//! event schedules for identical configs (kill instants are derived from
+//! a fault-free run's simulated duration, not wall time), and the shm
+//! tests use the explicit failed-rank mask — so any failure reproduces
+//! exactly from the config in the log.
+
+use mpi_dht::bench::keys::{key_for, value_for};
+use mpi_dht::dht::{Dht, DhtCheckpoint, Variant};
+use mpi_dht::net::{NetConfig, Network};
+use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
+use mpi_dht::rma::sim::SimRma;
+use mpi_dht::rma::FaultPlan;
+
+const KEY: usize = 16;
+const VAL: usize = 32;
+const KEYS: u64 = 200;
+
+fn sim_handles(variant: Variant, nranks: u32, k: u32) -> Vec<Dht<SimRma>> {
+    let net = Network::new(NetConfig::pik_ndr(), nranks);
+    let mut h =
+        Dht::create_sim(variant, nranks, 256 * 1024, KEY, VAL, net, 8);
+    for hh in h.iter_mut() {
+        hh.set_replicas(k);
+    }
+    h
+}
+
+fn keyset() -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    (
+        (0..KEYS).map(|i| key_for(i, KEY)).collect(),
+        (0..KEYS).map(|i| value_for(i * 3, VAL)).collect(),
+    )
+}
+
+/// With k = 2 every key stays readable after a rank kill: reads whose
+/// primary died fail over to the replica, on every variant.
+#[test]
+fn replicated_reads_survive_rank_kill_on_sim() {
+    for variant in Variant::ALL {
+        let mut h = sim_handles(variant, 4, 2);
+        let (keys, vals) = keyset();
+        h[0].write_batch(&keys, &vals);
+        // kill at the current instant: the failure detector already
+        // reports rank 1 dead when the read SMs are built, so dead
+        // primaries are skipped without traffic
+        let at = h[0].sim_time();
+        h[0].set_fault_plan(FaultPlan::default().kill_rank_at(1, at));
+        let got = h[2].read_batch(&keys);
+        let mut hits = 0u64;
+        for ((k, v), g) in keys.iter().zip(vals.iter()).zip(got.iter()) {
+            if let Some(gv) = g {
+                assert_eq!(gv, v, "{variant:?}: wrong value for {:?}", &k[..2]);
+                hits += 1;
+            }
+        }
+        assert!(
+            hits >= KEYS - 2,
+            "{variant:?}: only {hits}/{KEYS} served after the kill"
+        );
+        let s = h[2].stats();
+        assert!(s.failover_reads > 0, "{variant:?}: failover must engage");
+        assert_eq!(
+            s.replica_divergence, 0,
+            "{variant:?}: skipping a detected-dead primary is not divergence"
+        );
+    }
+}
+
+/// Detector lag: a kill landing *after* the read SMs were built means
+/// the dead primary is still probed — its degraded miss then replica
+/// hit is indistinguishable from divergence and is counted as such
+/// (the honest semantics of an asynchronous failure detector).  Every
+/// key is still served correctly.
+#[test]
+fn detector_lag_kill_counts_as_divergence_but_serves_reads() {
+    let mut h = sim_handles(Variant::LockFree, 4, 2);
+    let (keys, vals) = keyset();
+    h[0].write_batch(&keys, &vals);
+    // kill strictly in the future: SMs built now still probe rank 1
+    let at = h[0].sim_time() + 1;
+    h[0].set_fault_plan(FaultPlan::default().kill_rank_at(1, at));
+    let got = h[2].read_batch(&keys);
+    let mut hits = 0u64;
+    for (v, g) in vals.iter().zip(got.iter()) {
+        if let Some(gv) = g {
+            assert_eq!(gv, v, "never a foreign value");
+            hits += 1;
+        }
+    }
+    assert!(hits >= KEYS - 2, "only {hits}/{KEYS} served via failover");
+    let s = h[2].stats();
+    assert!(s.failover_reads > 0);
+    assert!(
+        s.replica_divergence > 0,
+        "in-flight probes of the dying rank read as diverged"
+    );
+}
+
+/// Without replication the dead shard is simply lost: its keys read as
+/// misses (never wrong values), everything else is still served.
+#[test]
+fn unreplicated_kill_loses_exactly_the_dead_shard() {
+    let mut h = sim_handles(Variant::LockFree, 4, 1);
+    let (keys, vals) = keyset();
+    h[0].write_batch(&keys, &vals);
+    let at = h[0].sim_time() + 1;
+    h[0].set_fault_plan(FaultPlan::default().kill_rank_at(1, at));
+    let got = h[2].read_batch(&keys);
+    let mut lost = 0u64;
+    for (i, g) in got.iter().enumerate() {
+        let a = &h[2].cfg().addressing;
+        if a.target(a.hash(&keys[i])) == 1 {
+            assert!(g.is_none(), "dead shard must read as empty");
+            lost += 1;
+        } else if let Some(gv) = g {
+            assert_eq!(gv, &vals[i]);
+        }
+    }
+    assert!(lost > 0, "some keys lived on the killed rank");
+    assert_eq!(h[2].stats().failover_reads, 0, "k = 1: nowhere to go");
+}
+
+/// Torn-write injection: the truncated record's CRC cannot match, so the
+/// lock-free read returns miss/corrupt — never a half-written value —
+/// and a later write repairs the bucket.
+#[test]
+fn torn_write_is_caught_by_the_crc_guard() {
+    let net = Network::new(NetConfig::pik_ndr(), 1);
+    let mut h =
+        Dht::create_sim(Variant::LockFree, 1, 64 * 1024, KEY, VAL, net, 4);
+    // the first Put applied at rank 0 is the first write's record put;
+    // tear it mid-value (record = meta 8 + key 16 + val 32 + crc 8)
+    h[0].set_fault_plan(FaultPlan::default().torn_put(0, 0, 40));
+    let key = key_for(7, KEY);
+    h[0].write(&key, &value_for(7, VAL));
+    assert_eq!(h[0].fault_stats().torn_puts, 1, "the tear was injected");
+    assert_eq!(h[0].read(&key), None, "half-record must not be served");
+    let s = h[0].stats();
+    assert!(
+        s.mismatches >= 1,
+        "the CRC guard must have caught the tear"
+    );
+    // a fresh write reuses the invalidated bucket
+    h[0].write(&key, &value_for(9, VAL));
+    assert_eq!(h[0].read(&key), Some(value_for(9, VAL)));
+}
+
+/// Delay and drop windows slow replicated traffic down without changing
+/// any outcome (the modelled transport is reliable).
+#[test]
+fn delay_and_drop_windows_preserve_replicated_results() {
+    let run = |plan: Option<FaultPlan>| {
+        let mut h = sim_handles(Variant::LockFree, 4, 2);
+        if let Some(p) = plan {
+            h[0].set_fault_plan(p);
+        }
+        let (keys, vals) = keyset();
+        let t0 = h[0].sim_time();
+        h[0].write_batch(&keys, &vals);
+        let got = h[3].read_batch(&keys);
+        for (v, g) in vals.iter().zip(got.iter()) {
+            assert_eq!(Some(v), g.as_ref());
+        }
+        (h[0].sim_time() - t0, h[0].fault_stats())
+    };
+    let (base, _) = run(None);
+    let (slow, fs) = run(Some(
+        FaultPlan::default()
+            .delay_window(1, 0, u64::MAX, 5_000)
+            .drop_window(2, 0, u64::MAX, 20_000),
+    ));
+    assert!(slow > base, "perturbed run is slower ({slow} vs {base})");
+    assert!(fs.delayed_msgs > 0 && fs.dropped_msgs > 0);
+}
+
+/// Liveness of the degraded write path: a replicated write whose copy
+/// lands at a failed rank must *terminate* on every variant — in
+/// particular the fine-grained bucket-lock CAS loop must not spin
+/// forever against lost memory (vacuous-success CAS, see `rma::fault`).
+#[test]
+fn writes_at_failed_rank_terminate_all_variants() {
+    for variant in Variant::ALL {
+        let mut h = Dht::create(variant, 4, 64 * 1024, KEY, VAL);
+        for hh in h.iter_mut() {
+            hh.set_replicas(2);
+        }
+        h[0].set_rank_failed(2, true);
+        // copies targeting rank 2 are dropped in degraded mode; the
+        // batch still completes and primaries land
+        let keys: Vec<Vec<u8>> = (0..40u64).map(|i| key_for(i, KEY)).collect();
+        let vals: Vec<Vec<u8>> =
+            (0..40u64).map(|i| value_for(i, VAL)).collect();
+        h[0].write_batch(&keys, &vals);
+        let got = h[1].read_batch(&keys);
+        let mut hits = 0;
+        for (g, v) in got.iter().zip(vals.iter()) {
+            if let Some(gv) = g {
+                assert_eq!(gv, v, "{variant:?}: never a foreign value");
+                hits += 1;
+            }
+        }
+        // every key keeps one live copy: primaries land for keys owned
+        // by live ranks, and a key owned by the dead rank has its
+        // replica on the next (live) rank — so reads serve everything
+        assert!(hits >= 38, "{variant:?}: only {hits}/40 after the kill");
+        h[0].set_rank_failed(2, false);
+    }
+}
+
+/// The shm backend's failed-rank mask provides the same failover surface
+/// under real thread concurrency.
+#[test]
+fn shm_failed_mask_failover_roundtrip() {
+    let mut h = Dht::create(Variant::LockFree, 4, 256 * 1024, KEY, VAL);
+    for hh in h.iter_mut() {
+        hh.set_replicas(2);
+    }
+    let (keys, vals) = keyset();
+    h[1].write_batch(&keys, &vals);
+    h[0].set_rank_failed(3, true);
+    let got = h[0].read_batch(&keys);
+    let mut hits = 0u64;
+    for (v, g) in vals.iter().zip(got.iter()) {
+        if let Some(gv) = g {
+            assert_eq!(gv, v);
+            hits += 1;
+        }
+    }
+    assert!(hits >= KEYS - 2, "only {hits}/{KEYS} with a masked rank");
+    assert!(h[0].stats().failover_reads > 0);
+    // reviving the rank restores the primary path
+    h[0].set_rank_failed(3, false);
+    let again = h[0].read_batch(&keys);
+    assert!(again.iter().filter(|g| g.is_some()).count() as u64 >= KEYS - 2);
+}
+
+/// Checkpoint round trip through a replicated cluster: capture
+/// de-duplicates the copies, `restore_replicated` fans them back out,
+/// and the restored cache tolerates a kill immediately.
+#[test]
+fn checkpoint_restore_with_replicas_roundtrip() {
+    let mut h = Dht::create(Variant::LockFree, 4, 128 * 1024, KEY, VAL);
+    for hh in h.iter_mut() {
+        hh.set_replicas(2);
+    }
+    let (keys, vals) = keyset();
+    h[0].write_batch(&keys, &vals);
+    let cp = DhtCheckpoint::capture(&h);
+    assert!(
+        cp.entries.len() as u64 >= KEYS - 2,
+        "copies de-duplicate to one entry per key ({})",
+        cp.entries.len()
+    );
+    assert!(cp.entries.len() as u64 <= KEYS);
+    let bytes = cp.to_bytes();
+    let cp2 = DhtCheckpoint::from_bytes(&bytes).expect("v2 parses");
+    // different geometry AND replication from step one
+    let mut r = cp2.restore_replicated(Variant::LockFree, 3, 256 * 1024, 2);
+    r[0].set_rank_failed(1, true);
+    let got = r[2].read_batch(&keys);
+    let hits = got
+        .iter()
+        .zip(vals.iter())
+        .filter(|(g, v)| g.as_ref() == Some(*v))
+        .count() as u64;
+    assert!(hits >= KEYS - 4, "only {hits}/{KEYS} after restore + kill");
+    assert!(r[2].stats().failover_reads > 0);
+}
+
+// ------------------------------------------------------------- POET soak
+
+fn chaos_cfg(replicas: u32) -> PoetDesCfg {
+    let mut c = PoetDesCfg::scaled(8, Some(Variant::LockFree));
+    c.ny = 12;
+    c.nx = 24;
+    c.steps = 16;
+    c.inj_rows = 3;
+    c.replicas = replicas;
+    c
+}
+
+/// The headline chaos soak (acceptance criterion): kill a rank mid-run
+/// in the DES POET model with k = 2 — the run completes, reads fail
+/// over, the final-window hit rate stays within 5 points of the
+/// fault-free run, and the physics still matches the no-DHT baseline.
+#[test]
+fn poet_kill_with_replication_recovers_hit_rate() {
+    let base = chaos_cfg(2);
+    let fault_free = run_poet_des(base.clone(), NetConfig::pik_ndr());
+    assert!(fault_free.hit_rate() > 0.5, "{}", fault_free.hit_rate());
+    let mut chaos = base.clone();
+    // kill rank 3 at ~40 % of the fault-free simulated runtime —
+    // derived from simulated time, so the schedule is reproducible
+    let kill_at = (fault_free.runtime_s * 0.4 * 1e9) as u64;
+    chaos.kill_rank_at = Some((3, kill_at));
+    let res = run_poet_des(chaos, NetConfig::pik_ndr());
+    assert!(
+        res.dht.failover_reads > 0,
+        "replica failover must have served reads"
+    );
+    let lo = base.steps * 3 / 4;
+    let ff = fault_free.hit_rate_over(lo, base.steps);
+    let ch = res.hit_rate_over(lo, base.steps);
+    assert!(
+        ch + 0.05 >= ff,
+        "final-window hit rate {ch:.3} must be within 5 points of the \
+         fault-free {ff:.3}"
+    );
+    // the cache surviving must not corrupt the physics: the final
+    // concentrations match the no-DHT reference within §5 tolerance
+    let mut refc = PoetDesCfg::scaled(8, None);
+    refc.ny = 12;
+    refc.nx = 24;
+    refc.steps = 16;
+    refc.inj_rows = 3;
+    let refr = run_poet_des(refc, NetConfig::pik_ndr());
+    let d = (res.max_dolomite - refr.max_dolomite).abs();
+    assert!(
+        d <= 0.35 * refr.max_dolomite.max(1e-12),
+        "dolomite {} vs reference {}",
+        res.max_dolomite,
+        refr.max_dolomite
+    );
+}
+
+/// The same kill without replication: the run still completes with
+/// correct physics, but the lost shard costs misses for the rest of the
+/// run — the gap replication closes.
+#[test]
+fn poet_kill_without_replication_degrades() {
+    let base = chaos_cfg(1);
+    let fault_free = run_poet_des(base.clone(), NetConfig::pik_ndr());
+    let mut chaos = base.clone();
+    chaos.kill_rank_at =
+        Some((3, (fault_free.runtime_s * 0.4 * 1e9) as u64));
+    let res = run_poet_des(chaos, NetConfig::pik_ndr());
+    assert!(res.max_dolomite > 0.0, "the run completed with physics");
+    assert_eq!(res.dht.failover_reads, 0, "k = 1 has nowhere to fail over");
+    assert!(
+        res.misses > fault_free.misses,
+        "the lost shard must cost misses ({} vs {})",
+        res.misses,
+        fault_free.misses
+    );
+    let lo = base.steps * 3 / 4;
+    assert!(
+        res.hit_rate_over(lo, base.steps)
+            < fault_free.hit_rate_over(lo, base.steps),
+        "unreplicated hit rate must stay degraded"
+    );
+}

@@ -82,6 +82,29 @@ fn poet_des_prints_table() {
 }
 
 #[test]
+fn poet_des_chaos_flags_run() {
+    let (ok, text) = run(&[
+        "poet-des", "--ranks", "4", "--ny", "8", "--nx", "8", "--steps",
+        "4", "--variant", "lockfree", "--replicas", "2", "--kill-rank",
+        "1", "--kill-rank-at", "0.001",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("failovers"), "{text}");
+    assert!(text.contains("repl writes"), "{text}");
+}
+
+#[test]
+fn poet_des_rejects_out_of_range_kill_rank() {
+    let (ok, text) = run(&[
+        "poet-des", "--ranks", "4", "--ny", "8", "--nx", "8", "--steps",
+        "2", "--variant", "lockfree", "--kill-rank", "9",
+        "--kill-rank-at", "1",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("out of range"), "{text}");
+}
+
+#[test]
 fn poet_native_runs() {
     let (ok, text) = run(&[
         "poet", "--engine", "native", "--ny", "8", "--nx", "16", "--steps",

@@ -5,7 +5,9 @@
 use std::collections::HashMap;
 
 use mpi_dht::dht::bucket::record_crc;
-use mpi_dht::dht::{Addressing, BucketLayout, Dht, DhtOutcome, Variant};
+use mpi_dht::dht::{
+    Addressing, BucketLayout, Dht, DhtCheckpoint, DhtOutcome, Variant,
+};
 use mpi_dht::poet::key::round_sig;
 use mpi_dht::util::prop::{prop_check, G};
 use mpi_dht::util::zipf::Zipf;
@@ -35,6 +37,129 @@ fn prop_addressing_invariants() {
             prop_assert!(*i < buckets);
         }
         prop_assert_eq!(a.indices(h), idx);
+        Ok(())
+    });
+}
+
+/// Replica placement (DESIGN.md §9): k replicas always land on k
+/// distinct in-range ranks with the primary first, a degenerate
+/// `k >= nranks` clamps instead of panicking, and placement is stable
+/// across `rescale` epochs (so replication composes with the elastic
+/// resize without cross-rank movement).
+#[test]
+fn prop_replica_placement() {
+    prop_check("replica-placement", 300, |g: &mut G| {
+        let nranks = g.u64_in(1..2048) as u32;
+        let buckets = g.u64_in(1..1_000_000);
+        let k_req = g.u64_in(1..4096) as u32; // may exceed nranks
+        let a = Addressing::new(nranks, buckets).with_replicas(k_req);
+        let k = a.replicas();
+        prop_assert_eq!(k, k_req.clamp(1, nranks));
+        let key = g.bytes(80);
+        let h = a.hash(&key);
+        let targets = a.replica_targets(h);
+        prop_assert_eq!(targets.len(), k as usize);
+        prop_assert_eq!(targets[0], a.target(h));
+        for &t in &targets {
+            prop_assert!(t < nranks);
+        }
+        let distinct: std::collections::HashSet<u32> =
+            targets.iter().copied().collect();
+        prop_assert_eq!(distinct.len(), k as usize);
+        // stable under rescale (elastic resize epochs)
+        let b = a.rescale(g.u64_in(1..1_000_000));
+        prop_assert_eq!(b.replicas(), k);
+        for (r, &t) in targets.iter().enumerate() {
+            prop_assert_eq!(b.replica_target(h, r as u32), t);
+        }
+        Ok(())
+    });
+}
+
+/// Fuzz `DhtCheckpoint::from_bytes`: a pristine v1/v2 buffer parses and
+/// round-trips; mutated, truncated, or extended buffers must return
+/// `None` or a sane checkpoint — never panic.
+#[test]
+fn prop_checkpoint_from_bytes_never_panics() {
+    prop_check("checkpoint-fuzz", 300, |g: &mut G| {
+        let key_len = g.usize_in(1..40);
+        let val_len = g.usize_in(1..40);
+        let n = g.usize_in(0..16);
+        let entries: Vec<(Vec<u8>, Vec<u8>)> =
+            (0..n).map(|_| (g.bytes(key_len), g.bytes(val_len))).collect();
+        let v2 = g.bool();
+        let bytes = if v2 {
+            DhtCheckpoint {
+                variant: *g.pick(&Variant::ALL),
+                key_len,
+                val_len,
+                buckets_per_rank: Some(g.u64_in(1..1_000_000)),
+                nranks: Some(g.u64_in(1..1024) as u32),
+                entries: entries.clone(),
+            }
+            .to_bytes()
+        } else {
+            // hand-built legacy v1: magic, variant, lens, count, entries
+            let mut b = Vec::new();
+            b.extend_from_slice(b"DHTCKPT1");
+            b.push(g.u64_in(0..3) as u8);
+            b.extend_from_slice(&(key_len as u32).to_le_bytes());
+            b.extend_from_slice(&(val_len as u32).to_le_bytes());
+            b.extend_from_slice(&(n as u64).to_le_bytes());
+            for (k, v) in &entries {
+                b.extend_from_slice(k);
+                b.extend_from_slice(v);
+            }
+            b
+        };
+        // pristine buffer parses and round-trips its entries
+        let cp = DhtCheckpoint::from_bytes(&bytes)
+            .ok_or("pristine checkpoint must parse")?;
+        prop_assert_eq!(cp.key_len, key_len);
+        prop_assert_eq!(cp.val_len, val_len);
+        prop_assert_eq!(&cp.entries, &entries);
+        prop_assert_eq!(cp.buckets_per_rank.is_some(), v2);
+        match g.u64_in(0..3) {
+            0 => {
+                // strict truncation: the exact-length check must reject
+                let cut = g.usize_in(0..bytes.len());
+                prop_assert!(
+                    DhtCheckpoint::from_bytes(&bytes[..cut]).is_none(),
+                    "truncated at {cut}/{} must not parse",
+                    bytes.len()
+                );
+            }
+            1 => {
+                // header byte flip: parse may fail or yield a different
+                // but sane checkpoint — it must never panic
+                let mut bad = bytes.clone();
+                let pos = g.usize_in(0..bad.len().min(29));
+                bad[pos] ^= 1u8 << g.u64_in(0..8);
+                if let Some(c) = DhtCheckpoint::from_bytes(&bad) {
+                    prop_assert!(c.key_len > 0 && c.val_len > 0);
+                    prop_assert_eq!(
+                        c.entries.len() * (c.key_len + c.val_len)
+                            + if c.buckets_per_rank.is_some()
+                                || c.nranks.is_some()
+                            {
+                                37
+                            } else {
+                                25
+                            },
+                        bad.len()
+                    );
+                }
+            }
+            _ => {
+                // trailing garbage: the exact-length check must reject
+                let mut bad = bytes.clone();
+                bad.extend(g.bytes(g.usize_in(1..16)));
+                prop_assert!(
+                    DhtCheckpoint::from_bytes(&bad).is_none(),
+                    "extended buffer must not parse"
+                );
+            }
+        }
         Ok(())
     });
 }

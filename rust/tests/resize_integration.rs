@@ -202,6 +202,49 @@ fn shrink_drops_overflow_never_corrupts() {
     assert!(s.migrated <= 40);
 }
 
+/// k-way replication composes with the elastic resize (DESIGN.md §9):
+/// placement is rescale-stable, so a mid-epoch grow keeps every replica
+/// readable and degraded-read failover works across the migration epoch.
+#[test]
+fn replicated_cluster_resizes_without_losing_failover() {
+    let mut h = Dht::create(Variant::LockFree, 4, 64 * 1024, KEY, VAL);
+    for hh in h.iter_mut() {
+        hh.set_replicas(2);
+    }
+    let keys: Vec<Vec<u8>> = (0..120u64).map(|i| key_for(i, KEY)).collect();
+    let vals: Vec<Vec<u8>> =
+        (0..120u64).map(|i| value_for(i * 5, VAL)).collect();
+    h[0].write_batch(&keys, &vals);
+    let old = h[0].buckets_per_rank();
+    h[0].resize(old * 2).expect("resize");
+    assert!(h[1].migrating());
+    assert_eq!(h[1].replicas(), 2, "replication survives the epoch flip");
+    // mid-epoch with a masked rank: dual lookup + failover compose
+    h[2].set_rank_failed(1, true);
+    let got = h[2].read_batch(&keys);
+    let hits = got
+        .iter()
+        .zip(vals.iter())
+        .filter(|(g, v)| g.as_ref() == Some(*v))
+        .count();
+    assert!(hits >= 118, "mid-epoch masked hits {hits}/120");
+    assert!(h[2].stats().failover_reads > 0, "failover engaged mid-epoch");
+    h[2].set_rank_failed(1, false);
+    h[3].drain_migration();
+    for hh in h.iter_mut() {
+        assert!(!hh.migrating());
+        assert_eq!(hh.replicas(), 2, "replication survives epoch close");
+        assert_eq!(hh.buckets_per_rank(), old * 2);
+    }
+    let got = h[0].read_batch(&keys);
+    let hits = got
+        .iter()
+        .zip(vals.iter())
+        .filter(|(g, v)| g.as_ref() == Some(*v))
+        .count();
+    assert!(hits >= 118, "post-epoch hits {hits}/120");
+}
+
 /// Back-to-back epochs: grow, then grow again — each resize allocates a
 /// fresh window segment and the chain of epochs stays consistent.
 #[test]
