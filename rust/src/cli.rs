@@ -24,7 +24,7 @@ const VALUED: &[&str] = &[
     "--set", "--clients", "--out", "--repeats", "--read-percent",
     "--zipf-range", "--theta", "--grid", "--pipeline",
     "--resize-at-iter", "--resize-factor", "--replicas", "--kill-rank",
-    "--kill-rank-at",
+    "--kill-rank-at", "--digits-ladder", "--ladder-tol", "--l1-bytes",
 ];
 
 impl Args {
@@ -165,6 +165,17 @@ mod tests {
         );
         let a = parse(&["x"]);
         assert_eq!(a.u32_list_or("--ranks", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn approx_lookup_flags_take_values() {
+        let a = parse(&[
+            "poet-des", "--digits-ladder", "2", "--ladder-tol", "5e-3",
+            "--l1-bytes", "1048576",
+        ]);
+        assert_eq!(a.u64_or("--digits-ladder", 0).unwrap(), 2);
+        assert_eq!(a.f64_or("--ladder-tol", 0.0).unwrap(), 5e-3);
+        assert_eq!(a.usize_or("--l1-bytes", 0).unwrap(), 1048576);
     }
 
     #[test]

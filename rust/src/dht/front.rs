@@ -24,6 +24,7 @@ use crate::rma::sim::SimRma;
 use crate::rma::{Req, Resp, RmaBackend};
 use crate::sim::Time;
 
+use super::l1::L1Cache;
 use super::migrate::{self, DualReadSm, MigrateSm, OneReq};
 use super::replica::ReplReadSm;
 use super::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
@@ -50,6 +51,11 @@ pub struct Dht<B: RmaBackend = ShmRma> {
     stats: DhtStats,
     pipeline: usize,
     migrate_quantum: u64,
+    /// Rank-local L1 read-through cache (DESIGN.md §10; `None` = off).
+    l1: Option<L1Cache>,
+    /// Configured L1 budget (kept so [`Self::fork`] can hand the new
+    /// thread its own private cache of the same size).
+    l1_bytes: usize,
 }
 
 impl Dht<ShmRma> {
@@ -73,6 +79,8 @@ impl Dht<ShmRma> {
                 stats: DhtStats::default(),
                 pipeline: DEFAULT_PIPELINE,
                 migrate_quantum: DEFAULT_MIGRATE_QUANTUM,
+                l1: None,
+                l1_bytes: 0,
             })
             .collect()
     }
@@ -127,6 +135,8 @@ impl Dht<SimRma> {
                 stats: DhtStats::default(),
                 pipeline: pipeline_lanes.max(1) as usize,
                 migrate_quantum: DEFAULT_MIGRATE_QUANTUM,
+                l1: None,
+                l1_bytes: 0,
             })
             .collect()
     }
@@ -158,7 +168,7 @@ impl<B: RmaBackend> Dht<B> {
     /// Clone a handle for another thread of the same rank (stats are
     /// per-handle; merge at the end).
     pub fn fork(&self) -> Dht<B> {
-        Dht {
+        let mut h = Dht {
             cfg: self.cfg.clone(),
             old_cfg: self.old_cfg.clone(),
             epoch: self.epoch,
@@ -166,7 +176,12 @@ impl<B: RmaBackend> Dht<B> {
             stats: DhtStats::default(),
             pipeline: self.pipeline,
             migrate_quantum: self.migrate_quantum,
-        }
+            l1: None,
+            l1_bytes: 0,
+        };
+        // each thread gets its own private cache (same budget, empty)
+        h.set_l1_bytes(self.l1_bytes);
+        h
     }
 
     pub fn cfg(&self) -> &DhtConfig {
@@ -190,6 +205,59 @@ impl<B: RmaBackend> Dht<B> {
     /// Old-table buckets migrated per piggybacked quantum (min 1).
     pub fn set_migrate_quantum(&mut self, quantum: u64) {
         self.migrate_quantum = quantum.max(1);
+    }
+
+    /// Enable (or disable, with 0) the rank-local L1 read-through cache
+    /// bounded by `bytes` (DESIGN.md §10).  Like `set_pipeline`, this is
+    /// per-handle state: each handle caches privately, so set it on
+    /// every handle that should benefit.  A budget below one record
+    /// leaves the cache off.
+    pub fn set_l1_bytes(&mut self, bytes: usize) {
+        self.l1_bytes = bytes;
+        self.l1 = if bytes == 0 {
+            None
+        } else {
+            let mut c = L1Cache::new(
+                bytes,
+                self.cfg.layout.key_len(),
+                self.cfg.layout.val_len(),
+            );
+            if let Some(c) = c.as_mut() {
+                c.sync_epoch(self.epoch);
+            }
+            c
+        };
+    }
+
+    /// Configured L1 budget in bytes (0 = off).
+    pub fn l1_bytes(&self) -> usize {
+        self.l1_bytes
+    }
+
+    /// Local counters of this handle's L1 cache, if enabled.
+    pub fn l1_stats(&self) -> Option<super::l1::L1Stats> {
+        self.l1.as_ref().map(|c| c.stats())
+    }
+
+    /// Bring the L1's epoch tag up to date with the handle's view (calls
+    /// follow every `sync_epoch` on the op paths, so a resize-epoch
+    /// change is observed before any cached entry can be served).
+    fn l1_sync(&mut self) {
+        if let Some(c) = self.l1.as_mut() {
+            c.sync_epoch(self.epoch);
+        }
+    }
+
+    /// L1 lookup returning an owned value (fast path of the op calls).
+    fn l1_get(&mut self, key: &[u8]) -> Option<Vec<u8>> {
+        self.l1.as_mut().and_then(|c| c.get(key)).map(|v| v.to_vec())
+    }
+
+    /// Read-through / write-through fill.
+    fn l1_put(&mut self, key: &[u8], val: &[u8]) {
+        if let Some(c) = self.l1.as_mut() {
+            c.put(key, val);
+        }
     }
 
     /// Replication factor k of this handle (1 = the paper's
@@ -628,19 +696,36 @@ impl<B: RmaBackend> Dht<B> {
     pub fn read(&mut self, key: &[u8]) -> Option<Vec<u8>> {
         assert_eq!(key.len(), self.cfg.layout.key_len());
         self.sync_epoch();
-        if self.old_cfg.is_some() || self.cfg.addressing.replicas() > 1 {
+        // piggybacked migration quantum BEFORE the L1 fast path (no-op
+        // outside a migration epoch): a read-mostly workload whose hot
+        // set fits in the L1 must still drive its shard's migration
+        // forward, or a resize epoch could stall indefinitely
+        self.migrate_step();
+        self.l1_sync();
+        if let Some(v) = self.l1_get(key) {
+            self.stats.record_l1_hit();
+            return Some(v);
+        }
+        let got = if self.old_cfg.is_some()
+            || self.cfg.addressing.replicas() > 1
+        {
             // migration epoch / replication: share the batch machinery
             // (one-key batch) so the dual-lookup and failover paths each
             // exist exactly once
-            return self.read_batch(&[key]).pop().expect("one result");
+            self.read_batch_remote(&[key]).pop().expect("one result")
+        } else {
+            let sm = DhtSm::read(self.cfg.variant, &self.cfg, key);
+            let out = self.rma.exec(sm);
+            self.stats.record(&out);
+            match out.outcome {
+                DhtOutcome::ReadHit(v) => Some(v),
+                _ => None,
+            }
+        };
+        if let Some(v) = &got {
+            self.l1_put(key, v);
         }
-        let sm = DhtSm::read(self.cfg.variant, &self.cfg, key);
-        let out = self.rma.exec(sm);
-        self.stats.record(&out);
-        match out.outcome {
-            DhtOutcome::ReadHit(v) => Some(v),
-            _ => None,
-        }
+        got
     }
 
     /// `DHT_write`: stores/updates the pair (evicting if necessary).
@@ -659,6 +744,8 @@ impl<B: RmaBackend> Dht<B> {
                 .expect("one outcome");
         }
         self.migrate_step();
+        self.l1_sync();
+        self.l1_put(key, value); // write-through
         let sm = DhtSm::write(self.cfg.variant, &self.cfg, key, value);
         let out = self.rma.exec(sm);
         self.stats.record(&out);
@@ -676,6 +763,42 @@ impl<B: RmaBackend> Dht<B> {
     ) -> Vec<Option<Vec<u8>>> {
         self.sync_epoch();
         self.migrate_step();
+        self.l1_sync();
+        if self.l1.is_none() {
+            let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_ref()).collect();
+            return self.read_batch_remote(&refs);
+        }
+        // L1 front: answer what we can locally, batch the rest remotely,
+        // then stitch results back into key order and read-through fill
+        // (slots left None are exactly the remote misses)
+        let mut results: Vec<Option<Vec<u8>>> = vec![None; keys.len()];
+        let mut remote_idx: Vec<usize> = Vec::new();
+        let mut remote_keys: Vec<&[u8]> = Vec::new();
+        for (i, k) in keys.iter().enumerate() {
+            let k = k.as_ref();
+            assert_eq!(k.len(), self.cfg.layout.key_len());
+            if let Some(v) = self.l1_get(k) {
+                self.stats.record_l1_hit();
+                results[i] = Some(v);
+            } else {
+                remote_idx.push(i);
+                remote_keys.push(k);
+            }
+        }
+        let got = self.read_batch_remote(&remote_keys);
+        for (i, v) in remote_idx.into_iter().zip(got.into_iter()) {
+            if let Some(v) = &v {
+                self.l1_put(keys[i].as_ref(), v);
+            }
+            results[i] = v;
+        }
+        results
+    }
+
+    /// The remote leg of [`Self::read_batch`] (everything below the L1):
+    /// plain / dual-lookup / replicated reads through one pipelined
+    /// epoch.  Callers have already run `sync_epoch` + `migrate_step`.
+    fn read_batch_remote(&mut self, keys: &[&[u8]]) -> Vec<Option<Vec<u8>>> {
         let depth = self.pipeline;
         if self.cfg.addressing.replicas() > 1 {
             // replicated reads: primary first, degraded failover
@@ -775,6 +898,13 @@ impl<B: RmaBackend> Dht<B> {
         assert_eq!(keys.len(), values.len(), "one value per key");
         self.sync_epoch();
         self.migrate_step();
+        self.l1_sync();
+        if self.l1.is_some() {
+            // write-through: this rank just produced these values
+            for (k, v) in keys.iter().zip(values.iter()) {
+                self.l1_put(k.as_ref(), v.as_ref());
+            }
+        }
         let k = self.cfg.addressing.replicas();
         if k > 1 {
             let mut sms: Vec<DhtSm> =
@@ -829,6 +959,22 @@ impl<B: RmaBackend> Dht<B> {
 
     pub fn stats(&self) -> &DhtStats {
         &self.stats
+    }
+
+    /// Record an accepted surrogate hit at ladder `level` introducing
+    /// `rel_err` relative deviation — application-level accounting the
+    /// handle cannot observe itself (the POET drivers decide acceptance;
+    /// DESIGN.md §10).  Narrow on purpose: general mutable access to
+    /// the stats would let callers corrupt the op counters.
+    pub fn note_ladder_hit(&mut self, level: usize, rel_err: f64) {
+        self.stats.record_ladder_hit(level, rel_err);
+    }
+
+    /// Record a lookup skipped because the input row was non-finite
+    /// (same narrow application-level channel as
+    /// [`Self::note_ladder_hit`]).
+    pub fn note_nonfinite_skip(&mut self) {
+        self.stats.record_nonfinite_skip();
     }
 
     pub fn take_stats(&mut self) -> DhtStats {
@@ -1200,6 +1346,55 @@ mod tests {
             assert_eq!(h[1].read(&key), Some(val.clone()));
             h[1].set_rank_failed(dead, false);
         }
+    }
+
+    #[test]
+    fn l1_serves_repeated_reads_without_remote_probes() {
+        let mut h = Dht::create_poet(Variant::LockFree, 2, 256 * 1024);
+        h[1].set_l1_bytes(64 * 1024);
+        assert_eq!(h[1].l1_bytes(), 64 * 1024);
+        let key = vec![3u8; 80];
+        let val = vec![4u8; 104];
+        h[0].write(&key, &val);
+        // cold read: remote, fills the reader's L1
+        assert_eq!(h[1].read(&key), Some(val.clone()));
+        assert_eq!(h[1].stats().l1_hits, 0);
+        let probes = h[1].stats().probes;
+        assert!(probes > 0);
+        // hot read: served locally — no new probes
+        assert_eq!(h[1].read(&key), Some(val.clone()));
+        assert_eq!(h[1].stats().l1_hits, 1);
+        assert_eq!(h[1].stats().probes, probes, "no remote traffic");
+        assert_eq!(h[1].stats().read_hits, 2, "L1 hits count as hits");
+        // batch path shares the L1 front
+        let got = h[1].read_batch(&[key.clone()]);
+        assert_eq!(got[0].as_deref(), Some(&val[..]));
+        assert_eq!(h[1].stats().l1_hits, 2);
+        assert_eq!(h[1].stats().probes, probes);
+        // the writer's own L1 was filled by write-through
+        h[0].set_l1_bytes(64 * 1024);
+        h[0].write(&key, &val);
+        assert_eq!(h[0].read(&key), Some(val.clone()));
+        assert_eq!(h[0].stats().l1_hits, 1);
+    }
+
+    #[test]
+    fn fork_gets_a_private_empty_l1() {
+        let mut h = create_single(Variant::LockFree, 1, 64 * 1024);
+        h.set_l1_bytes(32 * 1024);
+        let key = vec![8u8; 80];
+        let val = vec![9u8; 104];
+        h.write(&key, &val);
+        assert_eq!(h.read(&key), Some(val.clone()));
+        assert_eq!(h.stats().l1_hits, 1);
+        let mut f = h.fork();
+        assert_eq!(f.l1_bytes(), 32 * 1024, "budget inherited");
+        assert_eq!(f.l1_stats().unwrap().hits, 0, "contents are not");
+        // the fork's first read is remote, then local
+        assert_eq!(f.read(&key), Some(val.clone()));
+        assert_eq!(f.stats().l1_hits, 0);
+        assert_eq!(f.read(&key), Some(val.clone()));
+        assert_eq!(f.stats().l1_hits, 1);
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Rank-local L1 read-through cache (DESIGN.md §10).
+//!
+//! Sits *in front of* the remote DHT path: a bounded-memory
+//! open-addressing table private to one rank (one handle / one DES rank),
+//! so repeated hot keys skip the remote round trip entirely — the
+//! rank-local analogue of the thread-local fast paths in Maier et al.,
+//! *Concurrent Hash Tables: Fast and General?(!)*.  No locks anywhere:
+//! the cache is owned by exactly one execution context (`&mut self` on
+//! every call).
+//!
+//! Soundness rests on the surrogate cache's *memoization* semantics: a
+//! key (the rounded chemistry state) determines its value (the chemistry
+//! result), so serving a locally cached copy can never return wrong
+//! physics even if the remote table has since evicted or migrated the
+//! entry.  The one place the remote table's view does change shape is an
+//! elastic resize (DESIGN.md §8), so the L1 is tagged with the control
+//! window's epoch and drops its entire contents whenever the epoch it
+//! last observed moves — entries cached during a migration epoch are
+//! dropped again when the epoch closes.  This also composes with
+//! replication: failover reads fill the L1 like any other hit, and a
+//! kill never requires invalidation (values are immutable under
+//! memoization).
+//!
+//! Layout: `slots` (power of two) fixed-size records, linear probing over
+//! a short window, last-candidate overwrite on a full window — the same
+//! cache-eviction discipline as the remote table (§3.1), scaled down.
+
+use crate::util::hash::key_hash;
+
+/// Buckets probed per lookup/insert (short, cache-friendly window).
+const PROBE: usize = 4;
+
+/// Per-slot bookkeeping word: bit 0 = occupied, bits 1.. = hash tag.
+#[inline]
+fn tag(hash: u64) -> u64 {
+    (hash << 1) | 1
+}
+
+/// Local counters of one L1 instance (merged into
+/// [`super::DhtStats`]-level reporting by the owners).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct L1Stats {
+    pub hits: u64,
+    pub misses: u64,
+    pub fills: u64,
+    pub evictions: u64,
+    /// Whole-cache drops triggered by a resize-epoch change.
+    pub invalidations: u64,
+}
+
+/// A bounded rank-local key→value cache (see module docs).
+pub struct L1Cache {
+    key_len: usize,
+    val_len: usize,
+    /// Power-of-two slot count; `mask = slots - 1`.
+    mask: u64,
+    /// One word per slot: 0 = empty, else `tag(hash)`.
+    meta: Vec<u64>,
+    /// `slots * (key_len + val_len)` flat storage.
+    data: Vec<u8>,
+    /// Control-window epoch the contents are valid for.
+    epoch: u64,
+    stats: L1Stats,
+}
+
+impl L1Cache {
+    /// Build a cache bounded by `bytes` of slot storage; `None` when the
+    /// budget is below one slot (the caller treats that as "disabled").
+    pub fn new(bytes: usize, key_len: usize, val_len: usize) -> Option<L1Cache> {
+        let slot = key_len + val_len + 8; // record + meta word
+        if bytes < slot {
+            return None;
+        }
+        // round down to a power of two so the probe mask is a mask
+        let slots = ((bytes / slot).max(1) as u64).next_power_of_two();
+        let slots = if slots as usize * slot > bytes { slots / 2 } else { slots };
+        let slots = slots.max(1);
+        Some(L1Cache {
+            key_len,
+            val_len,
+            mask: slots - 1,
+            meta: vec![0; slots as usize],
+            data: vec![0; slots as usize * (key_len + val_len)],
+            epoch: 0,
+            stats: L1Stats::default(),
+        })
+    }
+
+    /// Slot capacity (diagnostics / tests).
+    pub fn slots(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn stats(&self) -> L1Stats {
+        self.stats
+    }
+
+    /// Adopt `epoch`: if it differs from the contents' epoch, drop
+    /// everything (the remote table changed shape under us — see module
+    /// docs).  Cheap no-op on the fast path.
+    pub fn sync_epoch(&mut self, epoch: u64) {
+        if self.epoch == epoch {
+            return;
+        }
+        self.meta.fill(0);
+        self.epoch = epoch;
+        self.stats.invalidations += 1;
+    }
+
+    #[inline]
+    fn rec(&self, slot: usize) -> usize {
+        slot * (self.key_len + self.val_len)
+    }
+
+    /// Look `key` up; a hit returns the cached value bytes.
+    pub fn get(&mut self, key: &[u8]) -> Option<&[u8]> {
+        debug_assert_eq!(key.len(), self.key_len);
+        let h = key_hash(key);
+        let t = tag(h);
+        for i in 0..PROBE {
+            let slot = ((h.wrapping_add(i as u64)) & self.mask) as usize;
+            let m = self.meta[slot];
+            if m == 0 {
+                break; // first empty slot ends the probe, like the DHT
+            }
+            if m == t {
+                let r = self.rec(slot);
+                if &self.data[r..r + self.key_len] == key {
+                    self.stats.hits += 1;
+                    let v = r + self.key_len;
+                    return Some(&self.data[v..v + self.val_len]);
+                }
+            }
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Insert/refresh `key → val` (read-through fill or write-through).
+    /// A full probe window overwrites its last candidate (cache
+    /// semantics, §3.1).
+    pub fn put(&mut self, key: &[u8], val: &[u8]) {
+        debug_assert_eq!(key.len(), self.key_len);
+        debug_assert_eq!(val.len(), self.val_len);
+        let h = key_hash(key);
+        let t = tag(h);
+        let mut target = ((h.wrapping_add(PROBE as u64 - 1)) & self.mask) as usize;
+        let mut evict = true;
+        for i in 0..PROBE {
+            let slot = ((h.wrapping_add(i as u64)) & self.mask) as usize;
+            let m = self.meta[slot];
+            if m == 0 {
+                target = slot;
+                evict = false;
+                break;
+            }
+            if m == t {
+                let r = self.rec(slot);
+                if &self.data[r..r + self.key_len] == key {
+                    target = slot;
+                    evict = false;
+                    break;
+                }
+            }
+        }
+        if evict {
+            self.stats.evictions += 1;
+        }
+        self.stats.fills += 1;
+        let r = self.rec(target);
+        self.data[r..r + self.key_len].copy_from_slice(key);
+        self.data[r + self.key_len..r + self.key_len + self.val_len]
+            .copy_from_slice(val);
+        self.meta[target] = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(i: u64) -> Vec<u8> {
+        let mut k = vec![0u8; 16];
+        k[..8].copy_from_slice(&i.to_le_bytes());
+        k
+    }
+
+    #[test]
+    fn roundtrip_and_miss() {
+        let mut c = L1Cache::new(4096, 16, 8).unwrap();
+        assert!(c.get(&key(1)).is_none());
+        c.put(&key(1), b"AAAABBBB");
+        assert_eq!(c.get(&key(1)), Some(&b"AAAABBBB"[..]));
+        assert!(c.get(&key(2)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.fills), (1, 2, 1));
+    }
+
+    #[test]
+    fn update_in_place() {
+        let mut c = L1Cache::new(4096, 16, 8).unwrap();
+        c.put(&key(7), b"AAAABBBB");
+        c.put(&key(7), b"CCCCDDDD");
+        assert_eq!(c.get(&key(7)), Some(&b"CCCCDDDD"[..]));
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn epoch_change_drops_everything() {
+        let mut c = L1Cache::new(4096, 16, 8).unwrap();
+        c.put(&key(1), b"AAAABBBB");
+        c.sync_epoch(0); // same epoch: no-op
+        assert_eq!(c.get(&key(1)), Some(&b"AAAABBBB"[..]));
+        c.sync_epoch(1);
+        assert!(c.get(&key(1)).is_none(), "resize epoch invalidates");
+        assert_eq!(c.stats().invalidations, 1);
+        // refill works in the new epoch
+        c.put(&key(1), b"CCCCDDDD");
+        assert_eq!(c.get(&key(1)), Some(&b"CCCCDDDD"[..]));
+    }
+
+    #[test]
+    fn bounded_memory_evicts_instead_of_growing() {
+        // tiny budget: 4 slots; insert many more keys than capacity
+        let slot = 16 + 8 + 8;
+        let mut c = L1Cache::new(4 * slot, 16, 8).unwrap();
+        assert!(c.slots() <= 4);
+        for i in 0..256u64 {
+            c.put(&key(i), b"AAAABBBB");
+        }
+        let s = c.stats();
+        assert!(s.evictions > 0, "tiny cache must evict");
+        assert_eq!(s.fills, 256);
+        // whatever is still cached is correct
+        let mut live = 0;
+        for i in 0..256u64 {
+            if let Some(v) = c.get(&key(i)) {
+                assert_eq!(v, b"AAAABBBB");
+                live += 1;
+            }
+        }
+        assert!(live <= c.slots());
+    }
+
+    #[test]
+    fn sub_slot_budget_is_disabled() {
+        assert!(L1Cache::new(0, 80, 104).is_none());
+        assert!(L1Cache::new(100, 80, 104).is_none());
+        assert!(L1Cache::new(4096, 80, 104).is_some());
+    }
+
+    #[test]
+    fn never_returns_wrong_value() {
+        // adversarial small table: every key's value is derived from the
+        // key; any hit must match
+        let slot = 16 + 8 + 8;
+        let mut c = L1Cache::new(8 * slot, 16, 8).unwrap();
+        for round in 0..50u64 {
+            for i in 0..32u64 {
+                let mut v = [0u8; 8];
+                v.copy_from_slice(&(i * 1000 + 1).to_le_bytes());
+                c.put(&key(i), &v);
+                let _ = round;
+            }
+            for i in 0..32u64 {
+                if let Some(v) = c.get(&key(i)) {
+                    assert_eq!(
+                        u64::from_le_bytes(v.try_into().unwrap()),
+                        i * 1000 + 1
+                    );
+                }
+            }
+        }
+    }
+}

@@ -23,6 +23,7 @@ pub mod bucket;
 pub mod coarse;
 pub mod fine;
 pub mod front;
+pub mod l1;
 pub mod lockfree;
 pub mod migrate;
 pub mod replica;
@@ -33,6 +34,7 @@ use crate::rma::{OpSm, Resp, SmStep};
 pub use addressing::Addressing;
 pub use bucket::{BucketLayout, Meta};
 pub use front::{Dht, DhtCheckpoint};
+pub use l1::{L1Cache, L1Stats};
 pub use migrate::{DualOut, MigrateOut, MigrateResult};
 pub use replica::{ReplOut, ReplReadSm, ReplSm};
 pub use stats::DhtStats;

@@ -51,6 +51,22 @@ pub struct DhtStats {
     /// Failover reads that hit at a replica after the *live* primary
     /// was probed and missed — the replica set disagreed for that key.
     pub replica_divergence: u64,
+    /// Reads served by the rank-local L1 cache without a remote round
+    /// trip (DESIGN.md §10).  Also counted in `reads`/`read_hits` so the
+    /// hit rate keeps its meaning.
+    pub l1_hits: u64,
+    /// Lookups skipped entirely because the input row contained a
+    /// non-finite value (no key is sound for such a state; the row goes
+    /// straight to chemistry).
+    pub nonfinite_skips: u64,
+    /// Accepted surrogate hits per ladder level (`[0]` = exact fine-level
+    /// match, `[l]` = hit at `digits - l` significant digits accepted by
+    /// the relative-tolerance test; DESIGN.md §10).  Grows on demand.
+    pub ladder_hits: Vec<u64>,
+    /// Max per-species relative deviation over all *accepted
+    /// coarse-level* (level >= 1) hits — the accuracy channel the
+    /// approximate lookup path is judged by.  Merged with `max`.
+    pub max_rel_err: f64,
 }
 
 impl DhtStats {
@@ -122,6 +138,34 @@ impl DhtStats {
         self.replica_writes += 1;
     }
 
+    /// Record a read served by the rank-local L1 cache (no remote
+    /// traffic; DESIGN.md §10).  Counted as a read hit so `hit_rate`
+    /// keeps describing "fraction of lookups that skipped chemistry".
+    pub fn record_l1_hit(&mut self) {
+        self.reads += 1;
+        self.read_hits += 1;
+        self.l1_hits += 1;
+    }
+
+    /// Record a lookup skipped because the input row was non-finite.
+    pub fn record_nonfinite_skip(&mut self) {
+        self.nonfinite_skips += 1;
+    }
+
+    /// Record one *accepted* surrogate hit at ladder `level` introducing
+    /// `rel_err` relative deviation (level 0 = exact fine-level match,
+    /// whose rounding error is the paper's status quo and stays out of
+    /// the `max_rel_err` channel).
+    pub fn record_ladder_hit(&mut self, level: usize, rel_err: f64) {
+        if self.ladder_hits.len() <= level {
+            self.ladder_hits.resize(level + 1, 0);
+        }
+        self.ladder_hits[level] += 1;
+        if level > 0 {
+            self.max_rel_err = self.max_rel_err.max(rel_err);
+        }
+    }
+
     /// Classify one migration-bucket outcome (elastic resize).  Kept out
     /// of the per-op counters (`probes`, `reads`, ...) so migration never
     /// skews the paper's application metrics.
@@ -155,6 +199,15 @@ impl DhtStats {
         self.replica_writes += o.replica_writes;
         self.failover_reads += o.failover_reads;
         self.replica_divergence += o.replica_divergence;
+        self.l1_hits += o.l1_hits;
+        self.nonfinite_skips += o.nonfinite_skips;
+        if self.ladder_hits.len() < o.ladder_hits.len() {
+            self.ladder_hits.resize(o.ladder_hits.len(), 0);
+        }
+        for (a, b) in self.ladder_hits.iter_mut().zip(o.ladder_hits.iter()) {
+            *a += b;
+        }
+        self.max_rel_err = self.max_rel_err.max(o.max_rel_err);
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -241,6 +294,10 @@ mod tests {
             replica_writes: seed + 18,
             failover_reads: seed + 19,
             replica_divergence: seed + 20,
+            l1_hits: seed + 21,
+            nonfinite_skips: seed + 22,
+            ladder_hits: vec![seed + 23, seed + 24, seed + 25],
+            max_rel_err: seed as f64 * 1e-6,
         }
     }
 
@@ -274,6 +331,51 @@ mod tests {
             a.replica_divergence,
             2100 + 2 * off.replica_divergence
         );
+        assert_eq!(a.l1_hits, 2100 + 2 * off.l1_hits);
+        assert_eq!(a.nonfinite_skips, 2100 + 2 * off.nonfinite_skips);
+        for (i, v) in a.ladder_hits.iter().enumerate() {
+            assert_eq!(*v, 2100 + 2 * off.ladder_hits[i], "ladder level {i}");
+        }
+        // max-channel: merge takes the larger of the two
+        assert_eq!(a.max_rel_err, 2000.0 * 1e-6);
+    }
+
+    #[test]
+    fn merge_grows_ladder_levels() {
+        let mut a = DhtStats::default();
+        a.record_ladder_hit(0, 0.0);
+        let mut b = DhtStats::default();
+        b.record_ladder_hit(2, 3e-3);
+        a.merge(&b);
+        assert_eq!(a.ladder_hits, vec![1, 0, 1]);
+        assert_eq!(a.max_rel_err, 3e-3);
+        // the shorter side merging a longer one also works in reverse
+        let mut c = DhtStats::default();
+        c.record_ladder_hit(1, 1e-3);
+        c.merge(&a);
+        assert_eq!(c.ladder_hits, vec![1, 1, 1]);
+        assert_eq!(c.max_rel_err, 3e-3);
+    }
+
+    #[test]
+    fn l1_and_ladder_records() {
+        let mut s = DhtStats::default();
+        s.record_l1_hit();
+        s.record_l1_hit();
+        assert_eq!(s.l1_hits, 2);
+        assert_eq!(s.reads, 2, "L1 hits count as reads");
+        assert_eq!(s.read_hits, 2);
+        assert_eq!(s.hit_rate(), 1.0);
+        s.record_nonfinite_skip();
+        assert_eq!(s.nonfinite_skips, 1);
+        assert_eq!(s.reads, 2, "skips are not reads");
+        // level-0 (exact) hits never move the approximation-error channel
+        s.record_ladder_hit(0, 0.5);
+        assert_eq!(s.max_rel_err, 0.0);
+        s.record_ladder_hit(1, 2e-3);
+        s.record_ladder_hit(1, 1e-3);
+        assert_eq!(s.ladder_hits, vec![1, 2]);
+        assert_eq!(s.max_rel_err, 2e-3);
     }
 
     #[test]

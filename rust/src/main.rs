@@ -71,12 +71,19 @@ COMMANDS:
                  --kill-rank R --kill-rank-at SECONDS (chaos: kill a
                  rank's DHT shard at a simulated instant; with K >= 2
                  reads fail over and the hit rate survives)
+                 --digits-ladder L --ladder-tol T --l1-bytes B
+                 (approximate surrogate lookup: L coarser key levels
+                 probed on a fine miss, accepted within relative
+                 tolerance T; B bytes of rank-local L1 cache —
+                 DESIGN.md §10)
   poet         threaded POET on this machine (real PJRT chemistry)
                  --ny N --nx N --steps N --workers W --engine pjrt|native
                  --variant none|coarse|fine|lockfree|all --pipeline D
                  --replicas K (k-way DHT replication, DESIGN.md §9)
                  --resize-at-iter N --resize-factor F (online elastic
                  resize mid-run; hit rate recovers live, DESIGN.md §8)
+                 --digits-ladder L --ladder-tol T --l1-bytes B
+                 (approximate surrogate lookup, DESIGN.md §10)
 
 Common: --config file.toml  --set key=value (repeatable)
 "#;
@@ -216,8 +223,9 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         cfg.as_ref(),
     )?;
     let mut t = Table::new(vec![
-        "ranks", "runtime s", "hit rate", "mismatches", "chem cells",
-        "failovers", "repl writes",
+        "ranks", "runtime s", "hit rate", "l1 hits", "ladder hits",
+        "max relerr", "mismatches", "chem cells", "failovers",
+        "repl writes",
     ]);
     for n in ranks {
         let mut c = PoetDesCfg::scaled(n, variant);
@@ -225,6 +233,9 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         c.nx = args.usize_or("--nx", c.nx)?;
         c.steps = args.usize_or("--steps", c.steps)?;
         c.digits = args.u64_or("--digits", c.digits as u64)? as u32;
+        c.ladder = args.u64_or("--digits-ladder", c.ladder as u64)? as u32;
+        c.ladder_rel_tol = args.f64_or("--ladder-tol", c.ladder_rel_tol)?;
+        c.l1_bytes = args.usize_or("--l1-bytes", c.l1_bytes)?;
         c.pipeline = args.u64_or("--pipeline", c.pipeline as u64)? as u32;
         c.replicas = args.u64_or("--replicas", c.replicas as u64)? as u32;
         if args.get("--kill-rank-at").is_some() {
@@ -237,10 +248,16 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
             c.kill_rank_at = Some((rank, (at_s * 1e9) as u64));
         }
         let res = run_poet_des(c, net.clone());
+        // coarse-level (approximate) hits: everything above level 0
+        let ladder_hits: u64 =
+            res.dht.ladder_hits.iter().skip(1).sum();
         t.row(vec![
             n.to_string(),
             format!("{:.1}", res.runtime_s),
             format!("{:.3}", res.hit_rate()),
+            res.dht.l1_hits.to_string(),
+            ladder_hits.to_string(),
+            format!("{:.1e}", res.dht.max_rel_err),
             res.dht.mismatches.to_string(),
             res.chem_cells.to_string(),
             res.dht.failover_reads.to_string(),
@@ -264,6 +281,9 @@ fn cmd_poet(args: &Args) -> Result<()> {
     cfg.steps = args.usize_or("--steps", cfg.steps)?;
     cfg.workers = args.usize_or("--workers", cfg.workers)?;
     cfg.digits = args.u64_or("--digits", cfg.digits as u64)? as u32;
+    cfg.ladder = args.u64_or("--digits-ladder", cfg.ladder as u64)? as u32;
+    cfg.ladder_rel_tol = args.f64_or("--ladder-tol", cfg.ladder_rel_tol)?;
+    cfg.l1_bytes = args.usize_or("--l1-bytes", cfg.l1_bytes)?;
     cfg.dt = args.f64_or("--dt", cfg.dt)?;
     cfg.pipeline = args.usize_or("--pipeline", cfg.pipeline)?;
     cfg.replicas = args.u64_or("--replicas", cfg.replicas as u64)? as u32;
@@ -314,6 +334,25 @@ fn cmd_poet(args: &Args) -> Result<()> {
         cfg.ny, cfg.nx, cfg.steps, cfg.workers
     );
     print!("{}", t.render());
+    if cfg.ladder > 0 || cfg.l1_bytes > 0 {
+        for r in &runs {
+            if r.label == "reference" {
+                continue;
+            }
+            let s = &r.stats.dht;
+            let ladder_hits: u64 = s.ladder_hits.iter().skip(1).sum();
+            println!(
+                "# {}: approx lookup — {} L1 hits, {} coarse-level hits \
+                 (max rel err {:.1e}, tol {:.1e}), {} non-finite bypasses",
+                r.label,
+                s.l1_hits,
+                ladder_hits,
+                s.max_rel_err,
+                cfg.ladder_rel_tol,
+                s.nonfinite_skips
+            );
+        }
+    }
     if let Some(at) = cfg.resize_at_step {
         for r in &runs {
             // only report resizes that actually executed (an

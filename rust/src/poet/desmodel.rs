@@ -21,8 +21,9 @@
 //! runtimes therefore scale with the cell ratio, and the *relative* gains
 //! (Tab. 3) are the reproduction target.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
+use crate::dht::l1::L1Cache;
 use crate::dht::replica::{ReplOut, ReplReadSm, ReplSm};
 use crate::dht::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
 use crate::net::{NetConfig, Network};
@@ -33,7 +34,9 @@ use crate::sim::Time;
 
 use super::chemistry::{integrate_cell, ChemCost, N_OUT};
 use super::grid::GridState;
-use super::key::{cell_key, pack_row, unpack_value};
+use super::key::{
+    ladder_key, pack_row, row_is_finite, unpack_value, LadderCfg,
+};
 use super::transport;
 
 /// Initial poll interval for a lane waiting on rank-level work (ns).
@@ -56,6 +59,15 @@ pub struct PoetDesCfg {
     pub cf: [f64; 2],
     pub inj_rows: usize,
     pub digits: u32,
+    /// Extra coarser key-ladder levels probed on a fine-level miss
+    /// (DESIGN.md §10; 0 = exact-match only).
+    pub ladder: u32,
+    /// Acceptance tolerance of the ladder (max per-species relative
+    /// deviation an accepted coarse hit may introduce).
+    pub ladder_rel_tol: f64,
+    /// Rank-local L1 read-through cache budget per rank, bytes
+    /// (DESIGN.md §10; 0 = off).
+    pub l1_bytes: usize,
     /// None = reference run (no DHT).
     pub variant: Option<Variant>,
     pub win_bytes: usize,
@@ -92,6 +104,9 @@ impl PoetDesCfg {
             cf: [0.5, 0.0],
             inj_rows: 12,
             digits: 4,
+            ladder: 0,
+            ladder_rel_tol: 5e-3,
+            l1_bytes: 0,
             variant,
             win_bytes: 2 << 20,
             cost: ChemCost::default(),
@@ -151,14 +166,29 @@ enum LaneJob {
     Idle,
     /// Step-start overhead Think (transport + sync) in flight.
     Overhead,
-    /// DHT read of `cell` outstanding; key kept for the miss path.
+    /// Fine-level DHT read of `cell` outstanding; key kept for the
+    /// ladder/miss path.
     Read { cell: usize, key: Vec<u8> },
+    /// Coarse ladder probe of `cell` at `level` outstanding (`err` =
+    /// the level's pre-computed acceptance error, `key` kept for the
+    /// L1 read-through fill; DESIGN.md §10).
+    Ladder { cell: usize, level: u32, err: f64, key: Vec<u8> },
     /// Chemistry Think in flight; on completion the result is written to
-    /// the DHT (`write` = Some) or just applied (reference run).
-    Compute { write: Option<(Vec<u8>, [f64; N_OUT])> },
+    /// the DHT (`write` = Some: fine key, coarse ladder store keys,
+    /// record) or just applied (reference run / non-finite state).
+    Compute { write: Option<(Vec<u8>, Vec<Vec<u8>>, [f64; N_OUT])> },
     /// DHT write outstanding (`replica`: a non-primary fan-out copy —
     /// kept out of the application write metrics, DESIGN.md §9).
     Write { replica: bool },
+}
+
+/// Per-cell ladder state while its coarse probes are in flight.
+struct LadderPend {
+    fine_key: Vec<u8>,
+    /// Probes queued or in flight for this cell.
+    outstanding: u32,
+    /// Finest accepted hit so far: (level, rel_err, value bytes).
+    best: Option<(u32, f64, Vec<u8>)>,
 }
 
 struct RankCur {
@@ -167,12 +197,18 @@ struct RankCur {
     next_cell: usize,
     reads_inflight: u32,
     writes_inflight: u32,
-    /// Cells whose read missed, awaiting (serialized) chemistry.
-    compute_q: VecDeque<(usize, Vec<u8>)>,
-    /// Replica fan-out writes awaiting a free lane (the primary write
-    /// leaves on the computing lane; the k-1 copies queue here so the
-    /// fan-out pipelines over sibling lanes instead of serializing).
-    write_q: VecDeque<DhtSm>,
+    /// Cells whose lookups all missed, awaiting (serialized) chemistry;
+    /// `None` key = non-finite state, simulated but never stored.
+    compute_q: VecDeque<(usize, Option<Vec<u8>>)>,
+    /// Writes awaiting a free lane: replica fan-out copies (`true`) and
+    /// ladder back-fill primaries (`false`).  Queued so they pipeline
+    /// over sibling lanes instead of serializing.
+    write_q: VecDeque<(DhtSm, bool)>,
+    /// Coarse ladder probes awaiting a free lane: (cell, level, key,
+    /// acceptance err).
+    ladder_q: VecDeque<(usize, u32, Vec<u8>, f64)>,
+    /// Ladder state per cell with probes outstanding.
+    ladder_pending: HashMap<usize, LadderPend>,
     /// A chemistry Think is in flight (one CPU per rank).
     computing: bool,
     /// Step overhead charged / in flight.
@@ -191,6 +227,8 @@ impl RankCur {
             writes_inflight: 0,
             compute_q: VecDeque::new(),
             write_q: VecDeque::new(),
+            ladder_q: VecDeque::new(),
+            ladder_pending: HashMap::new(),
             computing: false,
             overhead_done: false,
             overhead_inflight: false,
@@ -204,13 +242,19 @@ impl RankCur {
             && !self.computing
             && self.compute_q.is_empty()
             && self.write_q.is_empty()
+            && self.ladder_q.is_empty()
+            && self.ladder_pending.is_empty()
     }
 }
 
 struct PoetWorkload {
     cfg: PoetDesCfg,
+    lcfg: LadderCfg,
     lanes: u32,
     dht: Option<DhtConfig>,
+    /// Rank-local L1 read-through caches (DESIGN.md §10; `None` per
+    /// rank when disabled or on reference runs).
+    l1: Vec<Option<L1Cache>>,
     grid: GridState,
     scratch: Vec<f64>,
     inflow: Vec<f64>,
@@ -250,9 +294,27 @@ impl PoetWorkload {
                 DhtConfig::poet(v, cfg.nranks, cfg.win_bytes)
                     .with_replicas(cfg.replicas)
             });
+        let l1 = (0..n)
+            .map(|_| {
+                dht.as_ref().and_then(|d| {
+                    L1Cache::new(
+                        cfg.l1_bytes,
+                        d.layout.key_len(),
+                        d.layout.val_len(),
+                    )
+                })
+            })
+            .collect();
+        let lcfg = LadderCfg {
+            digits: cfg.digits,
+            levels: cfg.ladder,
+            rel_tol: cfg.ladder_rel_tol,
+        };
         Self {
+            lcfg,
             lanes,
             dht,
+            l1,
             grid,
             scratch: Vec::new(),
             inflow,
@@ -306,6 +368,98 @@ impl PoetWorkload {
         WorkItem::Think(ns)
     }
 
+    /// Queue a `key -> val` store on rank `r`'s write queue: the primary
+    /// write (unless the caller issues it on its own lane) plus the k-1
+    /// replica fan-out copies (DESIGN.md §9/§10).
+    fn queue_store(
+        &mut self,
+        r: usize,
+        dcfg: &DhtConfig,
+        key: &[u8],
+        val: &[u8],
+        queue_primary: bool,
+    ) {
+        if queue_primary {
+            self.cur[r].write_q.push_back((
+                DhtSm::write(dcfg.variant, dcfg, key, val),
+                false,
+            ));
+        }
+        for rep in 1..dcfg.addressing.replicas() {
+            self.cur[r].write_q.push_back((
+                DhtSm::write_at(dcfg.variant, dcfg, key, val, rep),
+                true,
+            ));
+        }
+    }
+
+    /// Per-step application hit/miss accounting, shared by every
+    /// resolution path (fine read, L1 fast path, ladder resolution,
+    /// non-finite bypass) so `step_hits` can never drift between them.
+    fn note_outcome(&mut self, r: usize, hit: bool) {
+        let step = self.cur[r].step.min(self.step_hits.len() - 1);
+        if hit {
+            self.hits += 1;
+            self.step_hits[step].0 += 1;
+        } else {
+            self.misses += 1;
+            self.step_hits[step].1 += 1;
+        }
+    }
+
+    /// Resolve one ladder probe of `cell` at `level` (`hit` = value if
+    /// the probe found the coarse key, remotely or in the L1).  When
+    /// the last outstanding probe for the cell lands, the finest
+    /// accepted hit is applied and back-filled — or the cell falls
+    /// through to chemistry (DESIGN.md §10).
+    fn ladder_probe_done(
+        &mut self,
+        r: usize,
+        cell: usize,
+        level: u32,
+        err: f64,
+        hit: Option<Vec<u8>>,
+    ) {
+        let pend = self.cur[r]
+            .ladder_pending
+            .get_mut(&cell)
+            .expect("ladder probe without pending state");
+        pend.outstanding -= 1;
+        if let Some(v) = hit {
+            let finer =
+                matches!(&pend.best, Some((bl, _, _)) if *bl <= level);
+            if !finer {
+                pend.best = Some((level, err, v));
+            }
+        }
+        if pend.outstanding > 0 {
+            return;
+        }
+        let pend = self.cur[r]
+            .ladder_pending
+            .remove(&cell)
+            .expect("pending just seen");
+        match pend.best {
+            Some((lvl, e, v)) => {
+                // accepted approximate hit: apply, account, and
+                // back-fill the fine level so the next occurrence of
+                // this state hits without a ladder epoch
+                self.note_outcome(r, true);
+                self.stats.record_ladder_hit(lvl as usize, e);
+                if let Some(c) = self.l1[r].as_mut() {
+                    c.put(&pend.fine_key, &v);
+                }
+                self.grid.apply(cell, &unpack_value(&v));
+                let dcfg = self.dht.clone().expect("dht in ladder");
+                self.queue_store(r, &dcfg, &pend.fine_key, &v, true);
+            }
+            None => {
+                self.note_outcome(r, false);
+                self.cur[r].compute_q.push_back((cell, Some(pend.fine_key)));
+            }
+        }
+    }
+
     /// Run chemistry for `cell` now: integrate, apply to the grid, and
     /// return the output record plus its simulated PHREEQC cost.
     fn simulate_cell(&mut self, cell: usize) -> ([f64; N_OUT], u64) {
@@ -334,23 +488,30 @@ impl Workload for PoetWorkload {
             }
             LaneJob::Compute { write } => {
                 self.cur[r].computing = false;
-                if let Some((key, rec)) = write {
+                if let Some((key, coarse, rec)) = write {
                     // chemistry cost charged: store the result (the miss
                     // write of the batched pass).  With replication the
                     // k-1 copies queue for sibling lanes so the fan-out
-                    // rides the same pipelined epoch (DESIGN.md §9).
+                    // rides the same pipelined epoch (DESIGN.md §9);
+                    // coarse ladder-level stores queue the same way
+                    // (DESIGN.md §10's write amplification).
                     let dcfg =
                         self.dht.clone().expect("dht in miss write");
                     let val = pack_row(&rec);
-                    for rep in 1..dcfg.addressing.replicas() {
-                        self.cur[r].write_q.push_back(DhtSm::write_at(
-                            dcfg.variant,
-                            &dcfg,
-                            &key,
-                            &val,
-                            rep,
-                        ));
+                    if let Some(c) = self.l1[r].as_mut() {
+                        c.put(&key, &val); // write-through
                     }
+                    for ck in coarse {
+                        // write-through for coarse keys too, mirroring
+                        // the threaded driver's write_batch L1 fill
+                        if let Some(c) = self.l1[r].as_mut() {
+                            c.put(&ck, &val);
+                        }
+                        self.queue_store(r, &dcfg, &ck, &val, true);
+                    }
+                    // fine-key replica copies; the primary write leaves
+                    // on this lane below
+                    self.queue_store(r, &dcfg, &key, &val, false);
                     let sm = DhtSm::write(dcfg.variant, &dcfg, &key, &val);
                     self.lane_job[ctx] = LaneJob::Write { replica: false };
                     self.cur[r].writes_inflight += 1;
@@ -359,7 +520,9 @@ impl Workload for PoetWorkload {
                 }
             }
             LaneJob::Idle => {}
-            LaneJob::Read { .. } | LaneJob::Write { .. } => {
+            LaneJob::Read { .. }
+            | LaneJob::Ladder { .. }
+            | LaneJob::Write { .. } => {
                 unreachable!("op jobs are cleared in on_complete")
             }
         }
@@ -401,32 +564,88 @@ impl Workload for PoetWorkload {
             );
         }
 
-        // replica fan-out writes queued by completed chemistry first
-        // (they are paid-for results; draining them promptly keeps the
-        // copies close behind their primaries)
-        if let Some(sm) = self.cur[r].write_q.pop_front() {
+        // queued writes first (they are paid-for results; draining them
+        // promptly keeps replica copies close behind their primaries and
+        // ladder back-fills visible for the next round)
+        if let Some((sm, replica)) = self.cur[r].write_q.pop_front() {
             self.cur[r].writes_inflight += 1;
-            self.lane_job[ctx] = LaneJob::Write { replica: true };
+            self.lane_job[ctx] = LaneJob::Write { replica };
             self.poll_ns[ctx] = LANE_POLL_NS;
             return WorkItem::Op(ReplSm::Op(sm));
+        }
+
+        // coarse ladder probes of fine-level misses next: resolving them
+        // gates chemistry, so they ride the pipeline ahead of new cells
+        // (the "one extra batched epoch" of DESIGN.md §10).  A probe
+        // whose coarse key sits in the rank-local L1 resolves locally —
+        // the same L1 front the threaded driver's read_batch gives its
+        // ladder epoch — so the loop keeps consuming until a probe
+        // actually needs the network.
+        while let Some((cell, level, key, err)) =
+            self.cur[r].ladder_q.pop_front()
+        {
+            if let Some(v) = self.l1[r]
+                .as_mut()
+                .and_then(|c| c.get(&key))
+                .map(|v| v.to_vec())
+            {
+                self.stats.record_l1_hit();
+                self.ladder_probe_done(r, cell, level, err, Some(v));
+                continue;
+            }
+            let dcfg = self.dht.clone().expect("dht in ladder probe");
+            let sm = if dcfg.addressing.replicas() > 1 {
+                ReplSm::Read(ReplReadSm::new(&dcfg, None, &key, |t| {
+                    self.rank_dead(t, now)
+                }))
+            } else {
+                ReplSm::Op(DhtSm::read(dcfg.variant, &dcfg, &key))
+            };
+            self.lane_job[ctx] = LaneJob::Ladder { cell, level, err, key };
+            self.cur[r].reads_inflight += 1;
+            self.poll_ns[ctx] = LANE_POLL_NS;
+            return WorkItem::Op(sm);
         }
 
         // chemistry for queued misses (one CPU per rank: serialized)
         if !self.cur[r].computing {
             if let Some((cell, key)) = self.cur[r].compute_q.pop_front() {
                 self.cur[r].computing = true;
+                // acceptable coarse-level store keys derive from the
+                // *input* row, so build them before chemistry updates
+                // the grid cell
+                let coarse: Vec<Vec<u8>> = if self.dht.is_some()
+                    && key.is_some()
+                    && self.lcfg.levels > 0
+                {
+                    let row = self.grid.row(cell, self.cfg.dt);
+                    self.lcfg
+                        .probes(&row)
+                        .into_iter()
+                        .map(|(_, k, _)| k)
+                        .collect()
+                } else {
+                    Vec::new()
+                };
                 let (rec, cost) = self.simulate_cell(cell);
+                // no store for non-finite states (key = None): they
+                // bypass the DHT entirely (DESIGN.md §10)
                 self.lane_job[ctx] = LaneJob::Compute {
-                    write: self.dht.as_ref().map(|_| (key, rec)),
+                    write: if self.dht.is_some() {
+                        key.map(|k| (k, coarse, rec))
+                    } else {
+                        None
+                    },
                 };
                 self.poll_ns[ctx] = LANE_POLL_NS;
                 return WorkItem::Think(cost);
             }
         }
 
-        // issue the next cell
+        // issue the next cell (looping over cells the rank answers
+        // locally: L1 hits and non-finite bypasses consume no lane)
         let (lo, hi) = self.ranges[r];
-        if lo + self.cur[r].next_cell < hi {
+        while lo + self.cur[r].next_cell < hi {
             // reference runs simulate cells one at a time (one CPU per
             // rank); do not consume a cell while another lane computes
             if self.dht.is_none() && self.cur[r].computing {
@@ -435,30 +654,48 @@ impl Workload for PoetWorkload {
             let cell = lo + self.cur[r].next_cell;
             self.cur[r].next_cell += 1;
             self.poll_ns[ctx] = LANE_POLL_NS;
-            match &self.dht {
-                None => {
-                    self.cur[r].computing = true;
-                    let (_rec, cost) = self.simulate_cell(cell);
-                    self.lane_job[ctx] = LaneJob::Compute { write: None };
-                    return WorkItem::Think(cost);
-                }
-                Some(dcfg) => {
-                    let row = self.grid.row(cell, self.cfg.dt);
-                    let key = cell_key(&row, self.cfg.digits);
-                    let sm = if dcfg.addressing.replicas() > 1 {
-                        // degraded-read failover: skip ranks the fault
-                        // plan has killed by `now`, fall through on miss
-                        ReplSm::Read(ReplReadSm::new(dcfg, None, &key, |t| {
-                            self.rank_dead(t, now)
-                        }))
-                    } else {
-                        ReplSm::Op(DhtSm::read(dcfg.variant, dcfg, &key))
-                    };
-                    self.lane_job[ctx] = LaneJob::Read { cell, key };
-                    self.cur[r].reads_inflight += 1;
-                    return WorkItem::Op(sm);
-                }
+            if self.dht.is_none() {
+                self.cur[r].computing = true;
+                let (_rec, cost) = self.simulate_cell(cell);
+                self.lane_job[ctx] = LaneJob::Compute { write: None };
+                return WorkItem::Think(cost);
             }
+            let row = self.grid.row(cell, self.cfg.dt);
+            if !row_is_finite(&row) {
+                // no key is sound for a non-finite state: bypass the
+                // DHT entirely — simulated, never stored (DESIGN.md §10)
+                self.stats.record_nonfinite_skip();
+                self.note_outcome(r, false);
+                self.cur[r].compute_q.push_back((cell, None));
+                continue;
+            }
+            let key = ladder_key(&row, &self.lcfg, 0);
+            // rank-local L1 front: a hit skips the remote round trip
+            // (and its simulated network time) entirely
+            if let Some(v) = self.l1[r]
+                .as_mut()
+                .and_then(|c| c.get(&key))
+                .map(|v| v.to_vec())
+            {
+                self.stats.record_l1_hit();
+                self.stats.record_ladder_hit(0, 0.0);
+                self.note_outcome(r, true);
+                self.grid.apply(cell, &unpack_value(&v));
+                continue;
+            }
+            let dcfg = self.dht.clone().expect("dht mode");
+            let sm = if dcfg.addressing.replicas() > 1 {
+                // degraded-read failover: skip ranks the fault
+                // plan has killed by `now`, fall through on miss
+                ReplSm::Read(ReplReadSm::new(&dcfg, None, &key, |t| {
+                    self.rank_dead(t, now)
+                }))
+            } else {
+                ReplSm::Op(DhtSm::read(dcfg.variant, &dcfg, &key))
+            };
+            self.lane_job[ctx] = LaneJob::Read { cell, key };
+            self.cur[r].reads_inflight += 1;
+            return WorkItem::Op(sm);
         }
 
         // no new cells: wait for in-flight work, or end the step
@@ -485,20 +722,64 @@ impl Workload for PoetWorkload {
                 self.cur[r].reads_inflight -= 1;
                 // failover/divergence bookkeeping + the plain record
                 self.stats.record_failover(&out);
-                let step = self.cur[r].step.min(self.step_hits.len() - 1);
                 match out.out.outcome {
                     DhtOutcome::ReadHit(v) => {
-                        self.hits += 1;
-                        self.step_hits[step].0 += 1;
+                        self.note_outcome(r, true);
+                        self.stats.record_ladder_hit(0, 0.0);
+                        if let Some(c) = self.l1[r].as_mut() {
+                            c.put(&key, &v); // read-through fill
+                        }
                         self.grid.apply(cell, &unpack_value(&v));
                     }
                     DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt => {
-                        self.misses += 1;
-                        self.step_hits[step].1 += 1;
-                        self.cur[r].compute_q.push_back((cell, key));
+                        // fine-level miss: try the coarser ladder levels
+                        // whose rounding stays inside the acceptance
+                        // tolerance before paying for chemistry
+                        let probes = if self.lcfg.levels > 0 {
+                            let row = self.grid.row(cell, self.cfg.dt);
+                            self.lcfg.probes(&row)
+                        } else {
+                            Vec::new()
+                        };
+                        if probes.is_empty() {
+                            self.note_outcome(r, false);
+                            self.cur[r]
+                                .compute_q
+                                .push_back((cell, Some(key)));
+                        } else {
+                            self.cur[r].ladder_pending.insert(
+                                cell,
+                                LadderPend {
+                                    fine_key: key,
+                                    outstanding: probes.len() as u32,
+                                    best: None,
+                                },
+                            );
+                            for (level, pkey, err) in probes {
+                                self.cur[r]
+                                    .ladder_q
+                                    .push_back((cell, level, pkey, err));
+                            }
+                        }
                     }
                     other => unreachable!("read completed with {other:?}"),
                 }
+            }
+            LaneJob::Ladder { cell, level, err, key } => {
+                self.cur[r].reads_inflight -= 1;
+                self.stats.record_failover(&out);
+                let hit = match out.out.outcome {
+                    DhtOutcome::ReadHit(v) => {
+                        // read-through fill at the probed coarse key,
+                        // like the threaded driver's read_batch
+                        if let Some(c) = self.l1[r].as_mut() {
+                            c.put(&key, &v);
+                        }
+                        Some(v)
+                    }
+                    _ => None,
+                };
+                self.ladder_probe_done(r, cell, level, err, hit);
             }
             LaneJob::Write { replica } => {
                 self.cur[r].writes_inflight -= 1;

@@ -12,14 +12,17 @@
 //! Worker threads own disjoint cell ranges ("ranks"); each holds its own
 //! [`Dht`] handle onto the shared shm cluster, mirroring MPI ranks.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::dht::{Dht, DhtStats, Variant};
 
-use super::chemistry::{Chemistry, N_OUT};
+use super::chemistry::{Chemistry, N_IN, N_OUT};
 use super::grid::GridState;
-use super::key::{cell_key, pack_row, unpack_value};
+use super::key::{
+    ladder_key, pack_row, row_is_finite, unpack_value, LadderCfg,
+};
 use super::transport;
 
 /// Configuration of a POET run.
@@ -36,6 +39,17 @@ pub struct PoetConfig {
     pub inj_rows: usize,
     /// Significant digits for surrogate keys (§5.4's accuracy knob).
     pub digits: u32,
+    /// Extra coarser key-ladder levels probed on a fine-level miss
+    /// (DESIGN.md §10; 0 = the paper's exact-match lookup).  Level `l`
+    /// re-rounds to `digits - l` significant digits; accepted hits
+    /// back-fill the fine level.
+    pub ladder: u32,
+    /// Max per-species relative deviation an accepted coarse-level hit
+    /// may introduce (the ladder's acceptance tolerance).
+    pub ladder_rel_tol: f64,
+    /// Rank-local L1 read-through cache budget per worker, bytes
+    /// (DESIGN.md §10; 0 = off).
+    pub l1_bytes: usize,
     /// Worker threads ("ranks").
     pub workers: usize,
     /// DHT window bytes per worker (when a DHT is used).
@@ -73,6 +87,9 @@ impl PoetConfig {
             cf: [0.4, 0.1],
             inj_rows: 5,
             digits: 4,
+            ladder: 0,
+            ladder_rel_tol: 5e-3,
+            l1_bytes: 0,
             workers: 2,
             win_bytes: 4 << 20,
             chem_repeat: 1,
@@ -172,6 +189,7 @@ impl PoetDriver {
         for h in &mut handles {
             h.set_pipeline(self.cfg.pipeline);
             h.set_replicas(self.cfg.replicas);
+            h.set_l1_bytes(self.cfg.l1_bytes);
         }
         self.run_inner(Some(handles))
     }
@@ -283,41 +301,138 @@ fn worker_chunk(
     hi: usize,
     cfg: &PoetConfig,
 ) -> WorkerOut {
-    let (dt, digits, chem_repeat) = (cfg.dt, cfg.digits, cfg.chem_repeat);
+    let (dt, chem_repeat) = (cfg.dt, cfg.chem_repeat);
+    let lcfg = LadderCfg {
+        digits: cfg.digits,
+        levels: cfg.ladder,
+        rel_tol: cfg.ladder_rel_tol,
+    };
     let mut out = WorkerOut {
         updates: Vec::with_capacity(hi - lo),
         hits: 0,
         misses: 0,
         chem_cells: 0,
     };
-    // batch of cells that must be simulated (misses / reference)
+    // batch of cells that must be simulated (misses / reference); the
+    // key is None for non-finite rows, which bypass the DHT entirely
+    // (simulated but never keyed or stored)
     let mut miss_cells: Vec<usize> = Vec::new();
-    let mut miss_keys: Vec<Vec<u8>> = Vec::new();
+    let mut miss_keys: Vec<Option<Vec<u8>>> = Vec::new();
     let mut miss_rows: Vec<f64> = Vec::new();
+    // accepted coarse-level hits back-fill the fine level (one write
+    // pass together with the post-chemistry stores)
+    let mut store_keys: Vec<Vec<u8>> = Vec::new();
+    let mut store_vals: Vec<Vec<u8>> = Vec::new();
 
     if let Some(d) = dht.as_deref_mut() {
         // ONE pipelined surrogate lookup for the whole cell range (the
         // paper's access pattern: every cell's state is keyed per round)
-        let mut keys: Vec<Vec<u8>> = Vec::with_capacity(hi - lo);
-        let mut rows = Vec::with_capacity(hi - lo);
+        let mut rows: Vec<[f64; N_IN]> = Vec::with_capacity(hi - lo);
+        let mut fine_cells: Vec<usize> = Vec::with_capacity(hi - lo);
+        let mut fine_keys: Vec<Vec<u8>> = Vec::with_capacity(hi - lo);
         for cell in lo..hi {
             let row = grid.row(cell, dt);
-            keys.push(cell_key(&row, digits));
             rows.push(row);
+            if row_is_finite(&row) {
+                fine_cells.push(cell);
+                fine_keys.push(ladder_key(&row, &lcfg, 0));
+            } else {
+                // no key is sound for a non-finite state: straight to
+                // chemistry, counted, never cached (DESIGN.md §10)
+                d.note_nonfinite_skip();
+                out.misses += 1;
+                miss_cells.push(cell);
+                miss_keys.push(None);
+                miss_rows.extend_from_slice(&row);
+            }
         }
-        let values = d.read_batch(&keys);
-        for (i, val) in values.into_iter().enumerate() {
-            let cell = lo + i;
+        let values = d.read_batch(&fine_keys);
+        // fine-level misses feed the ladder epoch (cell, fine key);
+        // coarse keys shared by several pending cells (the ladder's
+        // whole point: neighbors coarsen to the same cell) are probed
+        // once and fanned back out to every consumer
+        let mut pend_cells: Vec<usize> = Vec::new();
+        let mut pend_keys: Vec<Vec<u8>> = Vec::new();
+        let mut probe_keys: Vec<Vec<u8>> = Vec::new();
+        let mut probe_consumers: Vec<Vec<(usize, u32, f64)>> = Vec::new();
+        let mut probe_index: HashMap<Vec<u8>, usize> = HashMap::new();
+        for ((cell, key), val) in fine_cells
+            .into_iter()
+            .zip(fine_keys.into_iter())
+            .zip(values.into_iter())
+        {
             match val {
                 Some(v) => {
                     out.hits += 1;
+                    d.note_ladder_hit(0, 0.0);
                     out.updates.push((cell, unpack_value(&v)));
+                }
+                None if lcfg.levels == 0 => {
+                    out.misses += 1;
+                    miss_cells.push(cell);
+                    miss_rows.extend_from_slice(&rows[cell - lo]);
+                    miss_keys.push(Some(key));
+                }
+                None => {
+                    // ladder candidates: only levels whose rounding
+                    // stays inside the acceptance tolerance are probed
+                    let pi = pend_cells.len();
+                    for (level, pkey, err) in lcfg.probes(&rows[cell - lo]) {
+                        let slot = match probe_index.get(&pkey) {
+                            Some(&s) => s,
+                            None => {
+                                let s = probe_keys.len();
+                                probe_index.insert(pkey.clone(), s);
+                                probe_keys.push(pkey);
+                                probe_consumers.push(Vec::new());
+                                s
+                            }
+                        };
+                        probe_consumers[slot].push((pi, level, err));
+                    }
+                    pend_cells.push(cell);
+                    pend_keys.push(key);
+                }
+            }
+        }
+        // ONE extra batched epoch probes every acceptable ladder level
+        // of every fine-level miss (DESIGN.md §10)
+        let mut best: Vec<Option<(u32, f64, Vec<u8>)>> =
+            vec![None; pend_cells.len()];
+        if !probe_keys.is_empty() {
+            let got = d.read_batch(&probe_keys);
+            for (consumers, val) in
+                probe_consumers.into_iter().zip(got.into_iter())
+            {
+                if let Some(v) = val {
+                    for (pi, level, err) in consumers {
+                        let finer = matches!(&best[pi], Some((bl, _, _)) if *bl <= level);
+                        if !finer {
+                            best[pi] = Some((level, err, v.clone()));
+                        }
+                    }
+                }
+            }
+        }
+        for ((cell, key), hit) in pend_cells
+            .into_iter()
+            .zip(pend_keys.into_iter())
+            .zip(best.into_iter())
+        {
+            match hit {
+                Some((level, err, v)) => {
+                    out.hits += 1;
+                    d.note_ladder_hit(level as usize, err);
+                    out.updates.push((cell, unpack_value(&v)));
+                    // back-fill: next round's fine lookup hits directly
+                    store_keys.push(key);
+                    store_vals.push(v);
                 }
                 None => {
                     out.misses += 1;
                     miss_cells.push(cell);
-                    miss_keys.push(std::mem::take(&mut keys[i]));
-                    miss_rows.extend_from_slice(&rows[i]);
+                    miss_rows.extend_from_slice(&rows[cell - lo]);
+                    miss_keys.push(Some(key));
                 }
             }
         }
@@ -346,18 +461,47 @@ fn worker_chunk(
             }
         }
         out.chem_cells += n as u64;
-        let mut miss_vals: Vec<Vec<u8>> = Vec::with_capacity(n);
+        // neighbors coarsening to the same cell would store the same
+        // coarse key once per producer; one write per distinct key in
+        // this pass suffices (last-wins makes the rest pure overhead)
+        let mut stored_coarse: std::collections::HashSet<Vec<u8>> =
+            std::collections::HashSet::new();
         for (i, cell) in miss_cells.iter().enumerate() {
             let rec: [f64; N_OUT] =
                 res[i * N_OUT..(i + 1) * N_OUT].try_into().unwrap();
             if dht.is_some() {
-                miss_vals.push(pack_row(&rec));
+                if let Some(key) = miss_keys[i].take() {
+                    let val = pack_row(&rec);
+                    // store the acceptable coarser ladder levels too:
+                    // future near-misses can only hit a coarse cell
+                    // someone populated, and a producer outside the
+                    // tolerance of its own coarse representative must
+                    // not populate that cell (DESIGN.md §10).  probes()
+                    // is recomputed rather than carried from the lookup
+                    // phase: the clone/plumbing cost outweighs a few
+                    // round_sig calls on a path dominated by chemistry
+                    let row: [f64; N_IN] = miss_rows
+                        [i * N_IN..(i + 1) * N_IN]
+                        .try_into()
+                        .unwrap();
+                    for (_, ck, _) in lcfg.probes(&row) {
+                        if stored_coarse.insert(ck.clone()) {
+                            store_keys.push(ck);
+                            store_vals.push(val.clone());
+                        }
+                    }
+                    store_keys.push(key);
+                    store_vals.push(val);
+                }
             }
             out.updates.push((*cell, rec));
         }
-        if let Some(d) = dht.as_deref_mut() {
-            // ONE pipelined write pass for all misses after chemistry
-            d.write_batch(&miss_keys, &miss_vals);
+    }
+    if let Some(d) = dht.as_deref_mut() {
+        if !store_keys.is_empty() {
+            // ONE pipelined write pass: post-chemistry stores + ladder
+            // back-fill
+            d.write_batch(&store_keys, &store_vals);
         }
     }
     out
@@ -488,6 +632,41 @@ mod tests {
             stats.max_dolomite,
             ref_stats.max_dolomite
         );
+    }
+
+    #[test]
+    fn non_finite_states_bypass_the_dht() {
+        // regression: NaN species used to round to 0.0 and alias the
+        // all-zero state's key, so a corrupted state could return a
+        // bogus surrogate hit; now such rows skip the DHT entirely
+        let mut cfg = PoetConfig::small();
+        cfg.steps = 3;
+        cfg.workers = 2;
+        cfg.ny = 8;
+        cfg.nx = 12;
+        cfg.inj_rows = 2;
+        let (bg, inj, min0) = crate::poet::chemistry::default_waters();
+        let mut bad_bg = bg.clone();
+        bad_bg[0] = f64::NAN;
+        let mut d = PoetDriver::new(
+            cfg,
+            Arc::new(NativeChemistry),
+            &bad_bg,
+            &inj,
+            &min0,
+        );
+        let stats = d.run_with_dht(Variant::LockFree);
+        assert!(
+            stats.dht.nonfinite_skips > 0,
+            "NaN rows must bypass the DHT"
+        );
+        // bypassed rows still went through chemistry (counted as misses)
+        assert!(stats.chem_cells >= stats.dht.nonfinite_skips);
+        assert_eq!(stats.dht.mismatches, 0);
+        // a fully-finite run never trips the counter
+        let mut ok = small_driver(5, 1);
+        let s = ok.run_with_dht(Variant::LockFree);
+        assert_eq!(s.dht.nonfinite_skips, 0);
     }
 
     #[test]

@@ -14,24 +14,178 @@ use super::chemistry::{N_IN, N_OUT};
 /// Implemented through decimal (scientific) formatting, which is exact
 /// and idempotent — pure power-of-ten scaling suffers fp-boundary bugs
 /// (e.g. -1e9 at 10 digits rounding to -999999999.9999999).
+///
+/// Non-finite input propagates unchanged: NaN/±Inf must never alias the
+/// all-zero state's key (they used to round to `0.0`, so a non-finite
+/// chemistry state could return the zero state's cached result — the
+/// drivers additionally bypass the DHT entirely for such rows, see
+/// [`row_is_finite`]).
 #[inline]
 pub fn round_sig(v: f64, digits: u32) -> f64 {
-    if v == 0.0 || !v.is_finite() {
-        return 0.0;
+    if v == 0.0 {
+        return 0.0; // canonical zero (-0.0 keys identically to 0.0)
+    }
+    if !v.is_finite() {
+        return v;
     }
     let d = digits.max(1) as usize - 1;
     format!("{v:.d$e}").parse().expect("round_sig parse")
 }
 
+/// Whether every entry of a chemistry input row is finite.  Rows failing
+/// this must bypass the surrogate cache entirely (no key is sound for
+/// them); the drivers count them in [`crate::dht::DhtStats`]'s
+/// `nonfinite_skips`.
+#[inline]
+pub fn row_is_finite(row: &[f64; N_IN]) -> bool {
+    row.iter().all(|v| v.is_finite())
+}
+
+/// Pack an already-rounded species row plus the verbatim dt as the
+/// 80-byte little-endian key — the single definition of the key format
+/// shared by [`cell_key`], [`ladder_key`] and [`LadderCfg::probes`].
+fn pack_key(rounded: &[f64; N_IN], dt: f64) -> Vec<u8> {
+    let mut key = Vec::with_capacity(N_IN * 8);
+    for v in rounded.iter().take(N_IN - 1) {
+        key.extend_from_slice(&v.to_le_bytes());
+    }
+    key.extend_from_slice(&dt.to_le_bytes());
+    key
+}
+
 /// The DHT key for a chemistry input row: species rounded to `digits`
 /// significant digits, dt appended verbatim; packed little-endian.
 pub fn cell_key(row: &[f64; N_IN], digits: u32) -> Vec<u8> {
-    let mut key = Vec::with_capacity(N_IN * 8);
-    for v in row.iter().take(N_IN - 1) {
-        key.extend_from_slice(&round_sig(*v, digits).to_le_bytes());
+    let mut rounded = *row;
+    for v in rounded.iter_mut().take(N_IN - 1) {
+        *v = round_sig(*v, digits);
     }
-    key.extend_from_slice(&row[N_IN - 1].to_le_bytes());
-    key
+    pack_key(&rounded, row[N_IN - 1])
+}
+
+/// Multi-resolution key ladder configuration (DESIGN.md §10): level 0 is
+/// the exact-match key at `digits` significant digits; levels `1..=levels`
+/// re-round the *level-0 rounded* state to `digits-1, digits-2, …`
+/// significant digits.  Deriving each level from the previous one (not
+/// from the raw state) makes the ladder monotone by construction: states
+/// sharing a fine-level key share every coarser-level key, so a coarse
+/// entry written by one state is findable by every state that would have
+/// matched it at the fine level.
+///
+/// A coarse-level hit is only *accepted* when the relative distance
+/// between the raw state and its level-rounded state is within `rel_tol`
+/// (per species, max over the row) — the accuracy knob of the
+/// approximate lookup path.
+#[derive(Clone, Copy, Debug)]
+pub struct LadderCfg {
+    /// Significant digits of the fine (level-0) key (§5.4's knob).
+    pub digits: u32,
+    /// Extra coarser levels to probe on a fine-level miss (0 = the
+    /// paper's exact-match behaviour).
+    pub levels: u32,
+    /// Max per-species relative deviation an accepted coarse hit may
+    /// introduce.
+    pub rel_tol: f64,
+}
+
+impl LadderCfg {
+    /// Exact-match configuration (no ladder).
+    pub fn exact(digits: u32) -> Self {
+        Self { digits, levels: 0, rel_tol: 0.0 }
+    }
+
+    /// Significant digits used at ladder `level` (floored at 1).
+    pub fn digits_at(&self, level: u32) -> u32 {
+        self.digits.saturating_sub(level).max(1)
+    }
+
+    /// All *acceptable* coarse levels of `row` as `(level, key,
+    /// rel_err)`, finest first — the unit both drivers probe on a
+    /// fine-level miss and store after chemistry (DESIGN.md §10).
+    ///
+    /// One incremental pass: level `l`'s rounded row derives from level
+    /// `l-1`'s (this is also what [`ladder_key`] computes, just without
+    /// re-deriving every prefix per level).  Over-tolerance levels are
+    /// *filtered*, not a stop condition: progressive double-rounding
+    /// can overshoot and come back (1.049 at 3 digits → 1.05 → 1.1 →
+    /// 1.0), so the error is not monotone in the level near half-way
+    /// boundaries.  The scan does end as soon as a level's digit count
+    /// stops decreasing (the 1-digit floor, or `digits == 1` from the
+    /// start) — rounding is idempotent there, so every further level
+    /// would repeat an already-emitted (or the fine) key byte for byte.
+    pub fn probes(&self, row: &[f64; N_IN]) -> Vec<(u32, Vec<u8>, f64)> {
+        let mut out = Vec::new();
+        let mut rounded = *row;
+        for v in rounded.iter_mut().take(N_IN - 1) {
+            *v = round_sig(*v, self.digits);
+        }
+        let mut prev_k = self.digits.max(1);
+        for level in 1..=self.levels {
+            let k = self.digits_at(level);
+            if k == prev_k {
+                break; // idempotent re-round: the key would repeat
+            }
+            prev_k = k;
+            let mut err = 0.0f64;
+            let mut changed = false;
+            for (r, v) in rounded.iter_mut().zip(row.iter()).take(N_IN - 1) {
+                let nr = round_sig(*r, k);
+                if nr != *r {
+                    changed = true;
+                    *r = nr;
+                }
+                if *v != 0.0 {
+                    err = err.max((*r - v).abs() / v.abs());
+                }
+            }
+            // a level that moved no species repeats the previous (or
+            // fine) key byte for byte: probing it would be a
+            // guaranteed re-miss and storing it a duplicate write
+            if changed && err <= self.rel_tol {
+                out.push((level, pack_key(&rounded, row[N_IN - 1]), err));
+            }
+        }
+        out
+    }
+}
+
+/// The species of `row` rounded for ladder `level`: progressive
+/// re-rounding of the level-0 rounded values (see [`LadderCfg`]).
+/// Entry `N_IN-1` (dt) is carried verbatim, like [`cell_key`].
+pub fn ladder_row(row: &[f64; N_IN], cfg: &LadderCfg, level: u32) -> [f64; N_IN] {
+    let mut out = *row;
+    for v in out.iter_mut().take(N_IN - 1) {
+        *v = round_sig(*v, cfg.digits);
+    }
+    for l in 1..=level {
+        for v in out.iter_mut().take(N_IN - 1) {
+            *v = round_sig(*v, cfg.digits_at(l));
+        }
+    }
+    out
+}
+
+/// The DHT key of `row` at ladder `level` (level 0 == `cell_key`).
+pub fn ladder_key(row: &[f64; N_IN], cfg: &LadderCfg, level: u32) -> Vec<u8> {
+    pack_key(&ladder_row(row, cfg, level), row[N_IN - 1])
+}
+
+/// Max per-species relative deviation the `level`-rounded state
+/// introduces over the raw state — the quantity the ladder's acceptance
+/// test compares against [`LadderCfg::rel_tol`], and what feeds the
+/// `max_rel_err` accounting channel in [`crate::dht::DhtStats`].
+pub fn ladder_rel_err(row: &[f64; N_IN], cfg: &LadderCfg, level: u32) -> f64 {
+    let rounded = ladder_row(row, cfg, level);
+    let mut err = 0.0f64;
+    for (v, r) in row.iter().zip(rounded.iter()).take(N_IN - 1) {
+        if *v == 0.0 {
+            // round_sig keeps zeros exact; any nonzero r would be a bug
+            debug_assert_eq!(*r, 0.0);
+            continue;
+        }
+        err = err.max((r - v).abs() / v.abs());
+    }
+    err
 }
 
 /// Pack a 13-double output record as the 104-byte DHT value.
@@ -113,6 +267,130 @@ mod tests {
         a[9] = 500.0;
         b[9] = 500.0001; // tiny dt change must change the key
         assert_ne!(cell_key(&a, 3), cell_key(&b, 3));
+    }
+
+    #[test]
+    fn non_finite_never_aliases_zero() {
+        // regression: NaN/±Inf used to round to 0.0, so a non-finite
+        // state keyed identically to the all-zero state and could return
+        // its cached chemistry result
+        assert!(round_sig(f64::NAN, 5).is_nan());
+        assert_eq!(round_sig(f64::INFINITY, 5), f64::INFINITY);
+        assert_eq!(round_sig(f64::NEG_INFINITY, 3), f64::NEG_INFINITY);
+        let zero = [0.0; N_IN];
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut row = zero;
+            row[2] = bad;
+            assert_ne!(cell_key(&row, 6), cell_key(&zero, 6), "{bad}");
+        }
+        // -0.0 still keys like +0.0 (canonical zero preserved)
+        let mut neg = zero;
+        neg[0] = -0.0;
+        assert_eq!(cell_key(&neg, 6), cell_key(&zero, 6));
+    }
+
+    #[test]
+    fn row_finiteness_check() {
+        let mut row = [1.0; N_IN];
+        assert!(row_is_finite(&row));
+        row[7] = f64::NAN;
+        assert!(!row_is_finite(&row));
+        row[7] = f64::INFINITY;
+        assert!(!row_is_finite(&row));
+    }
+
+    #[test]
+    fn ladder_level0_is_cell_key() {
+        let cfg = LadderCfg { digits: 4, levels: 2, rel_tol: 1e-2 };
+        let row = [5.1234e-4, 1e-6, 1e-3, 1e-5, 8.0, 4.0, 2.5e-4, 2e-4,
+                   0.0, 500.0];
+        assert_eq!(ladder_key(&row, &cfg, 0), cell_key(&row, 4));
+    }
+
+    #[test]
+    fn ladder_is_monotone_even_near_rounding_boundaries() {
+        // 1.2451 and 1.2549 both round to 1.25 at 3 digits but to 1.2
+        // and 1.3 at 2 digits — the classic double-rounding trap.  The
+        // ladder re-rounds the *rounded* value, so fine-key-equal states
+        // stay coarse-key-equal.
+        let cfg = LadderCfg { digits: 3, levels: 1, rel_tol: 1.0 };
+        let mut a = [1.0; N_IN];
+        let mut b = [1.0; N_IN];
+        a[0] = 1.2451;
+        b[0] = 1.2549;
+        assert_eq!(ladder_key(&a, &cfg, 0), ladder_key(&b, &cfg, 0));
+        assert_eq!(ladder_key(&a, &cfg, 1), ladder_key(&b, &cfg, 1));
+    }
+
+    #[test]
+    fn ladder_rel_err_grows_with_level_and_is_bounded() {
+        let cfg = LadderCfg { digits: 5, levels: 2, rel_tol: 1e-2 };
+        let row = [5.12345e-4, 1.23456e-6, 1e-3, 1e-5, 8.1234, 4.0,
+                   2.5e-4, 2.34567e-4, 0.0, 500.0];
+        let e0 = ladder_rel_err(&row, &cfg, 0);
+        let e1 = ladder_rel_err(&row, &cfg, 1);
+        let e2 = ladder_rel_err(&row, &cfg, 2);
+        assert!(e0 <= e1 && e1 <= e2, "{e0} {e1} {e2}");
+        // k significant digits bound the relative error by 0.5*10^(1-k);
+        // progressive re-rounding compounds by < 12% of the last step
+        for (level, e) in [(0u32, e0), (1, e1), (2, e2)] {
+            let k = cfg.digits_at(level);
+            let bound = 0.56 * 10f64.powi(1 - k as i32);
+            assert!(e <= bound, "level {level}: {e} > {bound}");
+        }
+        assert!(e2 > 0.0, "coarse rounding moved something");
+    }
+
+    #[test]
+    fn probes_match_per_level_functions_and_filter() {
+        let cfg = LadderCfg { digits: 5, levels: 3, rel_tol: 1e-2 };
+        let row = [5.12345e-4, 1.23456e-6, 1e-3, 1e-5, 8.1234, 4.0,
+                   2.5e-4, 2.34567e-4, 0.0, 500.0];
+        let probes = cfg.probes(&row);
+        assert!(!probes.is_empty());
+        let mut prev = 0u32;
+        for (level, key, err) in &probes {
+            assert!(*level > prev, "finest first, strictly increasing");
+            prev = *level;
+            assert_eq!(key, &ladder_key(&row, &cfg, *level));
+            assert_eq!(*err, ladder_rel_err(&row, &cfg, *level));
+            assert!(*err <= cfg.rel_tol);
+        }
+        // a zero tolerance rejects every (error-introducing) level
+        let tight = LadderCfg { rel_tol: 0.0, ..cfg };
+        assert!(tight.probes(&row).is_empty());
+        // no ladder, no probes
+        assert!(LadderCfg::exact(5).probes(&row).is_empty());
+        // over-tolerance levels are filtered, not a stop condition:
+        // progressive double-rounding overshoots at 1.049 (3 digits ->
+        // 1.05 -> 1.1, err 4.86e-2) and comes back at 1 digit (-> 1.0,
+        // err 4.67e-2), so a tol between the two keeps only level 2
+        let mut edge = [1.0f64; N_IN];
+        edge[0] = 1.049;
+        let ecfg = LadderCfg { digits: 3, levels: 2, rel_tol: 0.047 };
+        let ep = ecfg.probes(&edge);
+        assert_eq!(ep.len(), 1, "{ep:?}");
+        assert_eq!(ep[0].0, 2, "the deeper acceptable level survives");
+        // the digit floor deduplicates: levels whose digit count stops
+        // decreasing repeat an earlier key and are not emitted
+        let floor = LadderCfg { digits: 2, levels: 5, rel_tol: 1.0 };
+        let fp = floor.probes(&row);
+        assert_eq!(fp.len(), 1, "only the k=1 level once: {fp:?}");
+        assert_eq!(fp[0].0, 1);
+        // digits == 1: level 1 would be byte-identical to the fine key
+        // itself (a guaranteed-miss re-probe), so nothing is emitted
+        let one = LadderCfg { digits: 1, levels: 2, rel_tol: 1.0 };
+        assert!(one.probes(&row).is_empty());
+    }
+
+    #[test]
+    fn ladder_keeps_dt_verbatim() {
+        let cfg = LadderCfg { digits: 3, levels: 2, rel_tol: 1.0 };
+        let mut a = [1.0; N_IN];
+        let mut b = [1.0; N_IN];
+        a[9] = 500.0;
+        b[9] = 500.0001;
+        assert_ne!(ladder_key(&a, &cfg, 2), ladder_key(&b, &cfg, 2));
     }
 
     #[test]

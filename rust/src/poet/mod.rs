@@ -28,4 +28,7 @@ pub mod transport;
 pub use chemistry::{ChemCost, Chemistry, NativeChemistry, PjrtChemistry};
 pub use driver::{PoetConfig, PoetDriver, PoetRunStats};
 pub use grid::GridState;
-pub use key::{cell_key, pack_row, round_sig, unpack_value};
+pub use key::{
+    cell_key, ladder_key, ladder_rel_err, pack_row, round_sig,
+    row_is_finite, unpack_value, LadderCfg,
+};

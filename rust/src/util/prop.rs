@@ -119,7 +119,8 @@ macro_rules! prop_assert {
     };
 }
 
-/// Equality assert with value context.
+/// Equality assert with value context (optionally with a formatted
+/// message appended, like [`prop_assert!`]).
 #[macro_export]
 macro_rules! prop_assert_eq {
     ($a:expr, $b:expr) => {{
@@ -131,6 +132,19 @@ macro_rules! prop_assert_eq {
                 stringify!($b),
                 a,
                 b
+            ));
+        }
+    }};
+    ($a:expr, $b:expr, $($fmt:tt)+) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?}): {}",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b,
+                format!($($fmt)+)
             ));
         }
     }};

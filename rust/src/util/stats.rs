@@ -31,8 +31,12 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Coefficient of variation in percent (the paper quotes max 3.8 %).
+///
+/// Defined on the magnitude of the mean (`100·σ/|μ|`), so a
+/// negative-mean sample reports the same (non-negative) dispersion as
+/// its mirrored positive sample.
 pub fn cv_percent(xs: &[f64]) -> f64 {
-    let m = mean(xs);
+    let m = mean(xs).abs();
     if m == 0.0 {
         0.0
     } else {
@@ -40,13 +44,23 @@ pub fn cv_percent(xs: &[f64]) -> f64 {
     }
 }
 
-/// p-th percentile (0..=100), nearest-rank on a sorted copy.
+/// p-th percentile (0..=100), true nearest-rank on a sorted copy:
+/// the `ceil(p/100 · n)`-th smallest element (1-based), clamped to the
+/// sample.  (This used to round a linear-interpolation index over
+/// `n-1`, which is a different estimator and wrong for small benchmark
+/// samples — e.g. p50 of 4 elements returned the 3rd, not the 2nd.)
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    // the *relative* epsilon guards exact integer ranks against fp
+    // round-up at any sample size: (7.0/100.0)*100.0 evaluates to
+    // 7.0000000000000009, whose ceil would otherwise select the 8th
+    // element instead of the 7th (an absolute epsilon would stop
+    // covering the representation error once n reaches ~1e8)
+    let rank =
+        ((p / 100.0) * v.len() as f64 * (1.0 - 1e-12)).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
 }
 
 #[cfg(test)]
@@ -72,12 +86,49 @@ mod tests {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
-        let p50 = percentile(&xs, 50.0);
-        assert!((50.0..=51.0).contains(&p50));
+        assert_eq!(percentile(&xs, 50.0), 50.0); // ceil(0.5*100) = rank 50
+        assert_eq!(percentile(&xs, 50.5), 51.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        // exact integer ranks whose fp product rounds up (7/100*100 is
+        // 7.0000000000000009) must not slip to the next element
+        for p in [7.0, 14.0, 28.0, 55.0, 56.0] {
+            assert_eq!(percentile(&xs, p), p, "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank_small_samples() {
+        // regression: the old rounded-interpolation index gave p50 of
+        // [1,2,3,4] as 3.0 (rank 1.5 rounded to 2 over n-1); true
+        // nearest-rank is ceil(0.5*4) = the 2nd smallest
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 25.0), 1.0);
+        assert_eq!(percentile(&xs, 75.0), 3.0);
+        assert_eq!(percentile(&xs, 75.1), 4.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        // singleton: every percentile is the element
+        assert_eq!(percentile(&[7.0], 0.0), 7.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert_eq!(percentile(&[7.0], 100.0), 7.0);
+        // 5 elements, p30: ceil(1.5) = 2nd smallest
+        let ys = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&ys, 30.0), 20.0);
     }
 
     #[test]
     fn cv_of_constant_is_zero() {
         assert_eq!(cv_percent(&[3.0, 3.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn cv_is_nonnegative_for_negative_means() {
+        // regression: 100·σ/μ with μ<0 reported a negative CV
+        let pos = [2.0, 4.0, 6.0];
+        let neg = [-2.0, -4.0, -6.0];
+        let cv_neg = cv_percent(&neg);
+        assert!(cv_neg > 0.0, "negative-mean CV must be positive: {cv_neg}");
+        assert!((cv_neg - cv_percent(&pos)).abs() < 1e-12);
+        assert_eq!(cv_percent(&[-1.0, 1.0]), 0.0); // zero mean stays 0
     }
 }

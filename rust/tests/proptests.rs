@@ -357,3 +357,115 @@ fn prop_histogram_monotone() {
         Ok(())
     });
 }
+
+/// Key-ladder monotonicity (DESIGN.md §10): states sharing the
+/// fine-level key share *every* coarser-level key (the property that
+/// makes coarse back-fill sound), and the relative error any level
+/// introduces is bounded by its significant-digit budget.
+#[test]
+fn prop_ladder_monotone_and_bounded() {
+    use mpi_dht::poet::key::{ladder_key, ladder_rel_err, LadderCfg};
+    prop_check("ladder-monotone", 300, |g: &mut G| {
+        let digits = g.u64_in(2..8) as u32;
+        let levels = g.u64_in(1..4) as u32;
+        let cfg = LadderCfg { digits, levels, rel_tol: 1.0 };
+        let mut row = [0.0f64; 10];
+        for v in row.iter_mut() {
+            *v = g.f64_in(1e-8..1e-2);
+        }
+        row[9] = g.f64_in(1.0..1e4);
+        // perturb one species near (and sometimes across) the fine
+        // level's rounding resolution, so both key-equal and key-unequal
+        // siblings are generated — including boundary cases where direct
+        // re-rounding of the raw value would break monotonicity
+        let mut near = row;
+        let i = g.usize_in(0..9);
+        let scale = match g.u64_in(0..3) {
+            0 => 1e-12,
+            1 => 10f64.powi(-(digits as i32)),
+            _ => 10f64.powi(-(digits as i32) + 1),
+        };
+        near[i] *= 1.0 + g.f64_in(-1.0..1.0) * scale;
+        if ladder_key(&near, &cfg, 0) == ladder_key(&row, &cfg, 0) {
+            for level in 1..=levels {
+                prop_assert_eq!(
+                    ladder_key(&near, &cfg, level),
+                    ladder_key(&row, &cfg, level),
+                    "fine-equal states diverged at level {level} \
+                     (digits {digits}, species {i})"
+                );
+            }
+        }
+        for level in 0..=levels {
+            let k = digits.saturating_sub(level).max(1);
+            let e = ladder_rel_err(&row, &cfg, level);
+            let bound = 0.57 * 10f64.powi(1 - k as i32);
+            prop_assert!(
+                e <= bound,
+                "level {level} err {e} above bound {bound}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The rank-local L1 never serves a stale value across a resize epoch,
+/// and composes with replica failover (DESIGN.md §10): after another
+/// handle updates a key and the table resizes, a reader whose L1 cached
+/// the old value must observe the update; with the primary rank masked
+/// failed, reads still return the correct value.
+#[test]
+fn prop_l1_fresh_across_resize_and_failover() {
+    prop_check("l1-resize-failover", 25, |g: &mut G| {
+        let nranks = g.u64_in(2..5) as u32;
+        let mut h = Dht::create(Variant::LockFree, nranks, 64 * 1024, 8, 8);
+        for hh in h.iter_mut() {
+            hh.set_replicas(2);
+            hh.set_l1_bytes(16 * 1024);
+        }
+        let reader = g.u64_in(1..nranks as u64) as usize;
+        let key = g.bytes(8);
+        let v1 = g.bytes(8);
+        h[0].write(&key, &v1);
+        prop_assert_eq!(h[reader].read(&key), Some(v1.clone()));
+        prop_assert!(
+            h[reader].l1_stats().unwrap().fills >= 1,
+            "reader's L1 cached the value"
+        );
+        // another handle updates the key, then the table resizes
+        let mut v2 = g.bytes(8);
+        while v2 == v1 {
+            v2 = g.bytes(8);
+        }
+        h[0].write(&key, &v2);
+        let cur = h[0].buckets_per_rank();
+        h[0].resize(cur * 2).unwrap();
+        h[0].drain_migration();
+        // the reader's next lookup crosses the resize epoch: its L1 copy
+        // of v1 must be dropped, not served
+        prop_assert_eq!(
+            h[reader].read(&key),
+            Some(v2.clone()),
+            "stale L1 value served across a resize epoch"
+        );
+        prop_assert!(
+            h[reader].l1_stats().unwrap().invalidations >= 1,
+            "epoch change must have invalidated the reader's L1"
+        );
+        // replica failover composes: mask the primary — the warm reader
+        // serves from its L1; a forked handle (same budget, empty L1)
+        // must go remote, fail over, and still return the fresh value
+        let hash = h[reader].cfg().addressing.hash(&key);
+        let primary = h[reader].cfg().addressing.replica_target(hash, 0);
+        h[reader].set_rank_failed(primary, true);
+        prop_assert_eq!(h[reader].read(&key), Some(v2.clone()));
+        let mut cold = h[reader].fork();
+        prop_assert_eq!(cold.read(&key), Some(v2.clone()));
+        prop_assert!(
+            cold.stats().failover_reads >= 1,
+            "cold read past a failed primary must fail over"
+        );
+        h[reader].set_rank_failed(primary, false);
+        Ok(())
+    });
+}
