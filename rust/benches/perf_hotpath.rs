@@ -18,8 +18,12 @@ use mpi_dht::util::rng::Rng;
 use mpi_dht::util::zipf::Zipf;
 
 fn bench<F: FnMut() -> u64>(name: &str, unit: &str, mut f: F) -> f64 {
-    // warm-up
-    f();
+    // warm-up runs are timed separately and excluded from the reported
+    // iteration count and throughput
+    let warm = Instant::now();
+    while warm.elapsed().as_secs_f64() < 0.1 {
+        f();
+    }
     let t0 = Instant::now();
     let mut units = 0u64;
     let mut iters = 0u64;
@@ -27,8 +31,13 @@ fn bench<F: FnMut() -> u64>(name: &str, unit: &str, mut f: F) -> f64 {
         units += f();
         iters += 1;
     }
-    let per_s = units as f64 / t0.elapsed().as_secs_f64();
-    println!("{name:<38} {per_s:>14.0} {unit}/s  ({iters} iters)");
+    let elapsed = t0.elapsed().as_secs_f64();
+    let per_s = units as f64 / elapsed;
+    let ns_op = if units > 0 { elapsed * 1e9 / units as f64 } else { 0.0 };
+    println!(
+        "{name:<38} {per_s:>14.0} {unit}/s  {ns_op:>9.1} ns/{unit}  \
+         ({iters} iters)"
+    );
     per_s
 }
 

@@ -1,0 +1,260 @@
+//! record — runs the pinned trajectory scenarios and writes a
+//! `BENCH_<date>.json` point (EXPERIMENTS.md §Perf, "trajectory").
+//!
+//! The scenarios are frozen (fixed seeds, fixed geometries) so that two
+//! points are comparable: the hot-path microbenchmarks and the threaded
+//! zipfian read/write at pipeline depth 16 from `perf_hotpath`, the
+//! depth-1/depth-16 DES sweeps from `pipeline_depth`, and the key-ladder
+//! POET run from `approx_lookup`.  `sim` scenarios report *simulated*
+//! throughput — deterministic and machine-independent; `wall` scenarios
+//! report wall-clock throughput on this machine.  `mpi-dht bench-compare
+//! old.json new.json` diffs two points and flags regressions.
+//!
+//! Run: `cargo bench --bench record` (add `smoke` for the seconds-scale
+//! CI configuration; `--out FILE` and `--label NAME` tag the point).
+
+use std::time::Instant;
+
+use mpi_dht::bench::keys::{value_for, KeyCorpus};
+use mpi_dht::bench::traj::{self, Kind, Scenario, Trajectory};
+use mpi_dht::bench::{run_kv, Dist, KvCfg, Mode};
+use mpi_dht::cli::Args;
+use mpi_dht::dht::{BucketLayout, Dht, Variant};
+use mpi_dht::net::NetConfig;
+use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
+use mpi_dht::util::hash::key_hash;
+use mpi_dht::util::rng::Rng;
+use mpi_dht::util::stats;
+use mpi_dht::util::zipf::Zipf;
+
+/// Pinned workload seed: every scenario derives from it.
+const SEED: u64 = 0xBEAC_0BE;
+
+/// Wall-clock scenario runner: warm-up excluded, per-call per-op
+/// latencies feed the p50/p99 fields.
+fn wall<F: FnMut() -> u64>(name: &str, secs: f64, mut f: F) -> Scenario {
+    let warm = Instant::now();
+    while warm.elapsed().as_secs_f64() < secs * 0.2 {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut ops = 0u64;
+    let mut per_op_ns: Vec<f64> = Vec::new();
+    while t0.elapsed().as_secs_f64() < secs {
+        let c0 = Instant::now();
+        let n = f();
+        let dt = c0.elapsed().as_nanos() as f64;
+        ops += n;
+        if n > 0 {
+            per_op_ns.push(dt / n as f64);
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let s = Scenario {
+        name: name.to_string(),
+        kind: Kind::Wall,
+        ops,
+        ops_per_s: ops as f64 / elapsed,
+        p50_ns: stats::percentile(&per_op_ns, 50.0) as u64,
+        p99_ns: stats::percentile(&per_op_ns, 99.0) as u64,
+    };
+    report(&s);
+    s
+}
+
+fn report(s: &Scenario) {
+    println!(
+        "{:<28} {:>5} {:>14.0} ops/s  p50 {:>8} ns  p99 {:>8} ns",
+        s.name,
+        s.kind.as_str(),
+        s.ops_per_s,
+        s.p50_ns,
+        s.p99_ns
+    );
+}
+
+/// The depth-16 zipfian batches: a pinned id sequence, pre-sampled so the
+/// timed loop measures the DHT and not the zipf sampler.
+fn zipf_ids(n: u64, count: usize) -> Vec<u64> {
+    let zipf = Zipf::new(n, 0.99);
+    let mut rng = Rng::new(SEED);
+    (0..count).map(|_| zipf.sample(&mut rng)).collect()
+}
+
+fn sim_kv(name: &str, nranks: u32, ops: u64, depth: u32) -> Scenario {
+    let mut cfg = KvCfg::new(nranks, ops, Dist::Zipfian, Mode::WriteThenRead);
+    cfg.pipeline = depth;
+    cfg.seed = SEED;
+    let res = run_kv(Variant::LockFree, NetConfig::pik_ndr(), cfg);
+    let s = Scenario {
+        name: name.to_string(),
+        kind: Kind::Sim,
+        ops: nranks as u64 * ops,
+        ops_per_s: res.read_mops * 1e6,
+        p50_ns: res.read_lat_p50,
+        p99_ns: res.sim.latency.percentile(99.0),
+    };
+    report(&s);
+    s
+}
+
+fn sim_approx(smoke: bool) -> Scenario {
+    // the approx_lookup bench's ladder=2 + 1 MiB L1 configuration
+    let mut c = PoetDesCfg::scaled(8, Some(Variant::LockFree));
+    if smoke {
+        c.ny = 12;
+        c.nx = 24;
+        c.steps = 10;
+        c.inj_rows = 3;
+    } else {
+        c.ny = 24;
+        c.nx = 72;
+        c.steps = 60;
+        c.inj_rows = 5;
+    }
+    c.cf = [0.4, 0.1];
+    c.digits = 6;
+    c.ladder = 2;
+    c.ladder_rel_tol = 1e-2;
+    c.l1_bytes = 1 << 20;
+    c.pipeline = 8;
+    let res = run_poet_des(c, NetConfig::pik_ndr());
+    let s = Scenario {
+        name: "sim_approx_poet_ladder2".to_string(),
+        kind: Kind::Sim,
+        ops: res.chem_cells,
+        // simulated chemistry cells per simulated second: the surrogate's
+        // whole point is pushing this up by avoiding chemistry calls
+        ops_per_s: res.chem_cells as f64 / res.runtime_s.max(1e-9),
+        p50_ns: 0,
+        p99_ns: 0,
+    };
+    report(&s);
+    s
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).expect("args");
+    let smoke = args.positional.iter().any(|a| a == "smoke");
+    let label = args.str_or("--label", if smoke { "smoke" } else { "dev" });
+    println!(
+        "record — pinned trajectory scenarios ({})\n",
+        if smoke { "smoke scale" } else { "default scale" }
+    );
+    let secs = if smoke { 0.05 } else { 0.3 };
+    let mut scenarios = Vec::new();
+
+    // --- wall micro: the request-path building blocks -----------------
+    let layout = BucketLayout::new(Variant::LockFree, 80, 104);
+    let corpus_n: u64 = if smoke { 4_096 } else { 65_536 };
+    let corpus = KeyCorpus::build(corpus_n, 80).expect("corpus under cap");
+    let val = value_for(7, 104);
+
+    let key80: &[u8] = corpus.key(7);
+    scenarios.push(wall("xxhash64_80b_key", secs, || {
+        let mut acc = 0u64;
+        for _ in 0..10_000u64 {
+            acc ^= key_hash(std::hint::black_box(key80));
+        }
+        std::hint::black_box(acc);
+        10_000
+    }));
+
+    let mut scratch = Vec::new();
+    scenarios.push(wall("encode_into_80x104", secs, || {
+        for i in 0..1_000u64 {
+            layout.encode_into(corpus.key(i % corpus_n), &val, &mut scratch);
+            std::hint::black_box(scratch.len());
+        }
+        1_000
+    }));
+
+    let mut batch: Vec<Vec<u8>> = (0..64u64)
+        .map(|i| {
+            let mut r = Vec::new();
+            layout.encode_into_nocrc(corpus.key(i), &val, &mut r);
+            r
+        })
+        .collect();
+    scenarios.push(wall("crc_batch_fill_64rec", secs, || {
+        for _ in 0..16 {
+            layout.fill_crc_batch(&mut batch);
+        }
+        16 * 64
+    }));
+
+    // --- wall: threaded lock-free zipfian read/write, depth 16 --------
+    // (the trajectory's headline scenario — the acceptance gate)
+    let mut h = Dht::create_poet(Variant::LockFree, 4, 32 << 20).remove(0);
+    let vals: Vec<Vec<u8>> =
+        (0..corpus_n).map(|id| value_for(id, 104)).collect();
+    for id in 0..corpus_n {
+        h.write(corpus.key(id), &vals[id as usize]);
+    }
+    let ids = zipf_ids(corpus_n, 1 << 16);
+    let mut at = 0usize;
+    scenarios.push(wall("lockfree_zipf_read_d16", secs, || {
+        let mut done = 0u64;
+        for _ in 0..64 {
+            let chunk: Vec<&[u8]> = ids[at..at + 16]
+                .iter()
+                .map(|&id| corpus.key(id))
+                .collect();
+            at = (at + 16) % (ids.len() - 16);
+            std::hint::black_box(h.read_batch(&chunk));
+            done += 16;
+        }
+        done
+    }));
+    at = 0;
+    scenarios.push(wall("lockfree_zipf_write_d16", secs, || {
+        let mut done = 0u64;
+        for _ in 0..64 {
+            let slice = &ids[at..at + 16];
+            let keys: Vec<&[u8]> =
+                slice.iter().map(|&id| corpus.key(id)).collect();
+            let values: Vec<&[u8]> =
+                slice.iter().map(|&id| &vals[id as usize][..]).collect();
+            at = (at + 16) % (ids.len() - 16);
+            std::hint::black_box(h.write_batch(&keys, &values));
+            done += 16;
+        }
+        done
+    }));
+
+    // --- sim: deterministic DES scenarios (machine-independent) -------
+    let (nranks, ops) = if smoke { (32, 400) } else { (128, 5_000) };
+    let d1 = sim_kv("sim_lockfree_zipf_read_d1", nranks, ops, 1);
+    let d16 = sim_kv("sim_lockfree_zipf_read_d16", nranks, ops, 16);
+    scenarios.push(sim_approx(smoke));
+
+    // live relative gate (also enforced by the CI perf-smoke job): the
+    // pipelined depth-16 read throughput must beat blocking depth 1 —
+    // simulated numbers, so this holds on any machine or none
+    assert!(
+        d16.ops_per_s > d1.ops_per_s,
+        "pipeline depth 16 ({:.0} ops/s) must out-run depth 1 ({:.0} ops/s)",
+        d16.ops_per_s,
+        d1.ops_per_s
+    );
+    scenarios.push(d1);
+    scenarios.push(d16);
+
+    let date = traj::today_utc();
+    let t = Trajectory {
+        date: date.clone(),
+        label: label.to_string(),
+        runner: format!(
+            "cargo bench --bench record{}",
+            if smoke { " -- smoke" } else { "" }
+        ),
+        machine: traj::machine_string(),
+        scenarios,
+    };
+    let out = args
+        .get("--out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("BENCH_{date}.json"));
+    std::fs::write(&out, t.to_json()).expect("write trajectory point");
+    println!("\nwrote {out} (label {label:?}; compare with `mpi-dht bench-compare old.json {out}`)");
+}

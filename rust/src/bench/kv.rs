@@ -24,7 +24,7 @@ use crate::sim::Time;
 use crate::util::rng::Rng;
 use crate::util::zipf::Zipf;
 
-use super::keys::{key_for, value_for};
+use super::keys::{key_for, value_for, KeyCorpus};
 
 /// Key-id distribution (§5.2: uniform or zipfian with skew 0.99).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -154,6 +154,10 @@ struct KvWorkload {
     cfg: KvCfg,
     dht: DhtConfig,
     zipf: Option<Zipf>,
+    /// Precomputed keys for the bounded zipfian id range, so the
+    /// measured loop indexes a slice instead of allocating and deriving
+    /// a key per op (uniform ids span all of u64 and keep [`key_for`]).
+    corpus: Option<KeyCorpus>,
     ranks: Vec<RankCtx>,
     stats: DhtStats,
     read_lat: Histogram,
@@ -166,6 +170,13 @@ impl KvWorkload {
         let zipf = match cfg.dist {
             Dist::Uniform => None,
             Dist::Zipfian => Some(Zipf::new(cfg.zipf_range_effective(), cfg.theta)),
+        };
+        let corpus = match cfg.dist {
+            Dist::Uniform => None,
+            // zipf ids are drawn from [0, range)
+            Dist::Zipfian => {
+                KeyCorpus::build(cfg.zipf_range_effective(), cfg.key_len)
+            }
         };
         let ranks = (0..cfg.nranks)
             .map(|r| RankCtx {
@@ -183,6 +194,7 @@ impl KvWorkload {
             cfg,
             dht,
             zipf,
+            corpus,
             ranks,
             stats: DhtStats::default(),
             read_lat: Histogram::new(),
@@ -195,6 +207,23 @@ impl KvWorkload {
         match zipf {
             None => rng.next_u64(),
             Some(z) => z.sample(rng),
+        }
+    }
+
+    /// The key for `id`: a corpus slice when precomputed (bounded ids),
+    /// else derived on the spot.
+    fn key_bytes<'a>(
+        corpus: &'a Option<KeyCorpus>,
+        id: u64,
+        key_len: usize,
+        scratch: &'a mut Vec<u8>,
+    ) -> &'a [u8] {
+        match corpus {
+            Some(c) => c.key(id),
+            None => {
+                *scratch = key_for(id, key_len);
+                scratch
+            }
         }
     }
 }
@@ -213,11 +242,14 @@ impl Workload for KvWorkload {
                     if r.ops_done < cfg_ops {
                         r.ops_done += 1;
                         let id = Self::draw_id(&self.zipf, &mut r.rng);
-                        let key = key_for(id, key_len);
+                        let mut scratch = Vec::new();
+                        let key = Self::key_bytes(
+                            &self.corpus, id, key_len, &mut scratch,
+                        );
                         let val = value_for(r.vrng.next_u64(), val_len);
                         r.issued_read = false;
                         return WorkItem::Op(DhtSm::write(
-                            variant, &self.dht, &key, &val,
+                            variant, &self.dht, key, &val,
                         ));
                     }
                     if !r.at_barrier {
@@ -232,9 +264,11 @@ impl Workload for KvWorkload {
                     r.ops_done += 1;
                     // read back exactly the ids written in phase 0 (§5.2)
                     let id = Self::draw_id(&self.zipf, &mut r.replay);
-                    let key = key_for(id, key_len);
+                    let mut scratch = Vec::new();
+                    let key =
+                        Self::key_bytes(&self.corpus, id, key_len, &mut scratch);
                     r.issued_read = true;
-                    return WorkItem::Op(DhtSm::read(variant, &self.dht, &key));
+                    return WorkItem::Op(DhtSm::read(variant, &self.dht, key));
                 }
                 WorkItem::Finished
             }
@@ -244,14 +278,16 @@ impl Workload for KvWorkload {
                 }
                 r.ops_done += 1;
                 let id = Self::draw_id(&self.zipf, &mut r.rng);
-                let key = key_for(id, key_len);
+                let mut scratch = Vec::new();
+                let key =
+                    Self::key_bytes(&self.corpus, id, key_len, &mut scratch);
                 if r.rng.below(100) < read_percent as u64 {
                     r.issued_read = true;
-                    WorkItem::Op(DhtSm::read(variant, &self.dht, &key))
+                    WorkItem::Op(DhtSm::read(variant, &self.dht, key))
                 } else {
                     let val = value_for(r.vrng.next_u64(), val_len);
                     r.issued_read = false;
-                    WorkItem::Op(DhtSm::write(variant, &self.dht, &key, &val))
+                    WorkItem::Op(DhtSm::write(variant, &self.dht, key, &val))
                 }
             }
         }

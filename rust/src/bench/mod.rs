@@ -6,9 +6,12 @@
 //!   mixed 95/5 (Fig. 6, Tab. 2), over uniform or zipfian ids; plus the
 //!   same workload against the server-based DAOS baseline (Fig. 3)
 //! * [`table`] — plain-text table formatting for bench outputs
+//! * [`traj`]  — `BENCH_<date>.json` trajectory files: schema, reader,
+//!   writer, and the regression-gating comparator behind `bench-compare`
 
 pub mod keys;
 pub mod kv;
 pub mod table;
+pub mod traj;
 
 pub use kv::{run_daos, run_kv, Dist, KvCfg, KvResult, Mode};

@@ -1,0 +1,696 @@
+//! Benchmark trajectory files (`BENCH_<date>.json`): the committed,
+//! machine-readable perf history of this repo.
+//!
+//! Every point in the trajectory is one run of the pinned scenarios in
+//! `benches/record.rs` (fixed seeds, fixed geometries).  Scenarios carry
+//! a `kind`: `sim` numbers are *simulated* throughput from the DES
+//! backend — deterministic, machine-independent, comparable across
+//! commits and CI runners — while `wall` numbers are wall-clock
+//! micro/threaded measurements that only compare meaningfully on the
+//! same machine.  [`compare`] therefore gates regressions on `sim`
+//! scenarios by default and reports `wall` ones informationally
+//! (`--wall` opts them in, for same-machine before/after runs).
+//!
+//! The format is a small fixed-schema JSON document; the writer and the
+//! recursive-descent reader below are hand-rolled (the repo vendors no
+//! serde) and round-trip each other exactly.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Schema tag of the trajectory format this module reads and writes.
+pub const SCHEMA: &str = "mpi-dht-bench-trajectory/v1";
+
+/// Which clock a scenario's numbers came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Deterministic simulated time (DES backend): comparable anywhere.
+    Sim,
+    /// Wall-clock time: comparable only on the same machine.
+    Wall,
+}
+
+impl Kind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Sim => "sim",
+            Kind::Wall => "wall",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "sim" => Some(Kind::Sim),
+            "wall" => Some(Kind::Wall),
+            _ => None,
+        }
+    }
+}
+
+/// One pinned scenario's measurements.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Stable scenario id, e.g. `lockfree_zipf_read_d16`.
+    pub name: String,
+    pub kind: Kind,
+    /// Operations the measured phase performed.
+    pub ops: u64,
+    /// Throughput of the measured phase.
+    pub ops_per_s: f64,
+    /// Median per-op latency in nanoseconds (0 = not measured).
+    pub p50_ns: u64,
+    /// 99th-percentile per-op latency in nanoseconds (0 = not measured).
+    pub p99_ns: u64,
+}
+
+/// One trajectory point: a dated set of scenario measurements.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    /// ISO date of the run (also the file name's `<date>`).
+    pub date: String,
+    /// Free-form point label, e.g. `before-hotpath-pass`.
+    pub label: String,
+    /// What produced the numbers (binary + flags, or a mirror harness).
+    pub runner: String,
+    /// Machine identification (arch/os + hostname when known).
+    pub machine: String,
+    pub scenarios: Vec<Scenario>,
+}
+
+impl Trajectory {
+    /// Look up a scenario by name.
+    pub fn scenario(&self, name: &str) -> Option<&Scenario> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    /// Serialize to the committed JSON format.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": {},\n", quote(SCHEMA)));
+        out.push_str(&format!("  \"date\": {},\n", quote(&self.date)));
+        out.push_str(&format!("  \"label\": {},\n", quote(&self.label)));
+        out.push_str(&format!("  \"runner\": {},\n", quote(&self.runner)));
+        out.push_str(&format!("  \"machine\": {},\n", quote(&self.machine)));
+        out.push_str("  \"scenarios\": [\n");
+        for (i, s) in self.scenarios.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"kind\": {}, \"ops\": {}, \
+                 \"ops_per_s\": {}, \"p50_ns\": {}, \"p99_ns\": {}}}{}\n",
+                quote(&s.name),
+                quote(s.kind.as_str()),
+                s.ops,
+                fmt_f64(s.ops_per_s),
+                s.p50_ns,
+                s.p99_ns,
+                if i + 1 == self.scenarios.len() { "" } else { "," },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse a trajectory document (rejects unknown schema tags).
+    pub fn from_json(text: &str) -> Result<Trajectory> {
+        let v = Json::parse(text)?;
+        let schema = v.str_field("schema")?;
+        if schema != SCHEMA {
+            bail!("unknown trajectory schema {schema:?} (expected {SCHEMA:?})");
+        }
+        let mut scenarios = Vec::new();
+        for sv in v.array_field("scenarios")? {
+            let kind_s = sv.str_field("kind")?;
+            let kind = Kind::parse(kind_s)
+                .ok_or_else(|| anyhow!("bad scenario kind {kind_s:?}"))?;
+            scenarios.push(Scenario {
+                name: sv.str_field("name")?.to_string(),
+                kind,
+                ops: sv.num_field("ops")? as u64,
+                ops_per_s: sv.num_field("ops_per_s")?,
+                p50_ns: sv.num_field("p50_ns")? as u64,
+                p99_ns: sv.num_field("p99_ns")? as u64,
+            });
+        }
+        Ok(Trajectory {
+            date: v.str_field("date")?.to_string(),
+            label: v.str_field("label")?.to_string(),
+            runner: v.str_field("runner")?.to_string(),
+            machine: v.str_field("machine")?.to_string(),
+            scenarios,
+        })
+    }
+}
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// f64 with enough digits to round-trip throughputs, without the noise
+/// of full shortest-repr output for integral values.
+fn fmt_f64(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{:.1}", x)
+    } else {
+        format!("{}", x)
+    }
+}
+
+/// Machine identification string for trajectory files.
+pub fn machine_string() -> String {
+    let host = std::env::var("HOSTNAME")
+        .ok()
+        .filter(|h| !h.is_empty())
+        .or_else(|| {
+            std::fs::read_to_string("/etc/hostname")
+                .ok()
+                .map(|h| h.trim().to_string())
+                .filter(|h| !h.is_empty())
+        })
+        .unwrap_or_else(|| "unknown-host".to_string());
+    format!(
+        "{}-{} {}",
+        std::env::consts::ARCH,
+        std::env::consts::OS,
+        host
+    )
+}
+
+/// Today's UTC date as `YYYY-MM-DD` (civil-from-days, proleptic
+/// Gregorian — the classic Hinnant algorithm).
+pub fn today_utc() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let days = (secs / 86_400) as i64;
+    let (y, m, d) = civil_from_days(days);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+// ------------------------------------------------------------------ compare
+
+/// One scenario's old-vs-new delta.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub name: String,
+    pub kind: Kind,
+    pub old_ops_per_s: f64,
+    pub new_ops_per_s: f64,
+    /// Throughput change in percent (positive = faster).
+    pub percent: f64,
+    /// Whether this delta participates in the pass/fail gate.
+    pub gating: bool,
+}
+
+/// Result of diffing two trajectory points.
+#[derive(Clone, Debug, Default)]
+pub struct CompareReport {
+    pub deltas: Vec<Delta>,
+    /// Gating scenarios slower by more than the tolerance.
+    pub regressions: Vec<String>,
+    /// Scenario names present in only one of the two files.
+    pub only_old: Vec<String>,
+    pub only_new: Vec<String>,
+}
+
+impl CompareReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    /// Human-readable diff table (the `bench-compare` CLI output).
+    pub fn render(&self, tol_percent: f64) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<28} {:>5} {:>14} {:>14} {:>9}\n",
+            "scenario", "kind", "old ops/s", "new ops/s", "delta"
+        ));
+        for d in &self.deltas {
+            let flag = if d.gating && d.percent < -tol_percent {
+                "  REGRESSION"
+            } else if !d.gating {
+                "  (info)"
+            } else {
+                ""
+            };
+            out.push_str(&format!(
+                "{:<28} {:>5} {:>14.0} {:>14.0} {:>+8.1}%{}\n",
+                d.name, d.kind.as_str(), d.old_ops_per_s, d.new_ops_per_s,
+                d.percent, flag
+            ));
+        }
+        for n in &self.only_old {
+            out.push_str(&format!("{n:<28} only in old file\n"));
+        }
+        for n in &self.only_new {
+            out.push_str(&format!("{n:<28} only in new file\n"));
+        }
+        out
+    }
+}
+
+/// Diff `new` against `old`, flagging every *gating* scenario whose
+/// throughput dropped more than `tol_percent`.  `sim` scenarios always
+/// gate; `wall` scenarios gate only when `gate_wall` is set (same-machine
+/// runs).  Scenarios appearing in only one file are reported, never
+/// failed — the trajectory is allowed to grow.
+pub fn compare(
+    old: &Trajectory,
+    new: &Trajectory,
+    tol_percent: f64,
+    gate_wall: bool,
+) -> CompareReport {
+    let mut report = CompareReport::default();
+    for os in &old.scenarios {
+        let Some(ns) = new.scenario(&os.name) else {
+            report.only_old.push(os.name.clone());
+            continue;
+        };
+        let percent = if os.ops_per_s > 0.0 {
+            (ns.ops_per_s - os.ops_per_s) / os.ops_per_s * 100.0
+        } else {
+            0.0
+        };
+        let gating = match os.kind {
+            Kind::Sim => true,
+            Kind::Wall => gate_wall,
+        };
+        if gating && percent < -tol_percent {
+            report.regressions.push(os.name.clone());
+        }
+        report.deltas.push(Delta {
+            name: os.name.clone(),
+            kind: os.kind,
+            old_ops_per_s: os.ops_per_s,
+            new_ops_per_s: ns.ops_per_s,
+            percent,
+            gating,
+        });
+    }
+    for ns in &new.scenarios {
+        if old.scenario(&ns.name).is_none() {
+            report.only_new.push(ns.name.clone());
+        }
+    }
+    report
+}
+
+// -------------------------------------------------------------- JSON reader
+
+/// Minimal JSON value — just enough to read trajectory documents.
+#[derive(Clone, Debug)]
+enum Json {
+    Object(Vec<(String, Json)>),
+    Array(Vec<Json>),
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl Json {
+    fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            bail!("trailing bytes after JSON document at offset {}", p.i);
+        }
+        Ok(v)
+    }
+
+    fn field(&self, name: &str) -> Result<&Json> {
+        match self {
+            Json::Object(fields) => fields
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| v)
+                .ok_or_else(|| anyhow!("missing field {name:?}")),
+            _ => bail!("expected object while reading field {name:?}"),
+        }
+    }
+
+    fn str_field(&self, name: &str) -> Result<&str> {
+        match self.field(name)? {
+            Json::Str(s) => Ok(s),
+            other => bail!("field {name:?}: expected string, got {other:?}"),
+        }
+    }
+
+    fn num_field(&self, name: &str) -> Result<f64> {
+        match self.field(name)? {
+            Json::Num(n) => Ok(*n),
+            other => bail!("field {name:?}: expected number, got {other:?}"),
+        }
+    }
+
+    fn array_field(&self, name: &str) -> Result<&[Json]> {
+        match self.field(name)? {
+            Json::Array(items) => Ok(items),
+            other => bail!("field {name:?}: expected array, got {other:?}"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of JSON at offset {}", self.i))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != c {
+            bail!(
+                "expected {:?} at offset {}, got {:?}",
+                c as char,
+                self.i,
+                got as char
+            );
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        self.skip_ws();
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at offset {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Object(fields));
+        }
+        loop {
+            let key = self.string()?;
+            self.eat(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Object(fields));
+                }
+                c => bail!(
+                    "expected ',' or '}}' at offset {}, got {:?}",
+                    self.i,
+                    c as char
+                ),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Array(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Array(items));
+                }
+                c => bail!(
+                    "expected ',' or ']' at offset {}, got {:?}",
+                    self.i,
+                    c as char
+                ),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self
+                .b
+                .get(self.i)
+                .ok_or_else(|| anyhow!("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self
+                        .b
+                        .get(self.i)
+                        .ok_or_else(|| anyhow!("unterminated escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or_else(|| anyhow!("short \\u escape"))?;
+                            self.i += 4;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex)
+                                    .context("non-utf8 \\u escape")?,
+                                16,
+                            )
+                            .context("bad \\u escape")?;
+                            // surrogate pairs are not produced by our
+                            // writer; map them to the replacement char
+                            out.push(
+                                char::from_u32(code).unwrap_or('\u{fffd}'),
+                            );
+                        }
+                        _ => bail!("bad escape \\{}", e as char),
+                    }
+                }
+                _ => {
+                    // re-sync to char boundary for multi-byte UTF-8
+                    let start = self.i - 1;
+                    while self.i < self.b.len()
+                        && !matches!(self.b[self.i], b'"' | b'\\')
+                        && self.b[self.i] >= 0x80
+                    {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .context("non-utf8 string content")?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i],
+                b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii");
+        let n: f64 = s
+            .parse()
+            .with_context(|| format!("bad number {s:?} at offset {start}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(label: &str, scenarios: Vec<Scenario>) -> Trajectory {
+        Trajectory {
+            date: "2026-08-07".into(),
+            label: label.into(),
+            runner: "unit-test".into(),
+            machine: "x86_64-linux testhost".into(),
+            scenarios,
+        }
+    }
+
+    fn scen(name: &str, kind: Kind, ops_per_s: f64) -> Scenario {
+        Scenario {
+            name: name.into(),
+            kind,
+            ops: 1000,
+            ops_per_s,
+            p50_ns: 120,
+            p99_ns: 900,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let t = point(
+            "before \"quoted\"\n",
+            vec![
+                scen("lockfree_zipf_read_d16", Kind::Sim, 1.25e6),
+                scen("encode_into", Kind::Wall, 98_765_432.0),
+            ],
+        );
+        let back = Trajectory::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.date, t.date);
+        assert_eq!(back.label, t.label);
+        assert_eq!(back.runner, t.runner);
+        assert_eq!(back.machine, t.machine);
+        assert_eq!(back.scenarios.len(), 2);
+        for (a, b) in t.scenarios.iter().zip(back.scenarios.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.ops, b.ops);
+            assert_eq!(a.ops_per_s, b.ops_per_s);
+            assert_eq!(a.p50_ns, b.p50_ns);
+            assert_eq!(a.p99_ns, b.p99_ns);
+        }
+    }
+
+    #[test]
+    fn unknown_schema_rejected() {
+        let text = point("x", vec![])
+            .to_json()
+            .replace(SCHEMA, "mpi-dht-bench-trajectory/v999");
+        assert!(Trajectory::from_json(&text).is_err());
+    }
+
+    #[test]
+    fn malformed_documents_rejected() {
+        for bad in [
+            "",
+            "{",
+            "[1,2",
+            "{\"schema\": \"x\"}",
+            "{\"a\": 1} trailing",
+            "{\"a\": \"unterminated",
+        ] {
+            assert!(Trajectory::from_json(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn compare_flags_sim_regressions_only() {
+        let old = point(
+            "before",
+            vec![
+                scen("read_sim", Kind::Sim, 1000.0),
+                scen("read_wall", Kind::Wall, 1000.0),
+                scen("gone", Kind::Sim, 5.0),
+            ],
+        );
+        let new = point(
+            "after",
+            vec![
+                scen("read_sim", Kind::Sim, 700.0),  // -30%: regression
+                scen("read_wall", Kind::Wall, 10.0), // wall: info only
+                scen("fresh", Kind::Sim, 7.0),
+            ],
+        );
+        let r = compare(&old, &new, 15.0, false);
+        assert_eq!(r.regressions, vec!["read_sim".to_string()]);
+        assert!(!r.passed());
+        assert_eq!(r.only_old, vec!["gone".to_string()]);
+        assert_eq!(r.only_new, vec!["fresh".to_string()]);
+        let text = r.render(15.0);
+        assert!(text.contains("REGRESSION"), "{text}");
+        assert!(text.contains("(info)"), "{text}");
+        // gating wall scenarios flags the wall drop too
+        let r = compare(&old, &new, 15.0, true);
+        assert_eq!(r.regressions.len(), 2);
+    }
+
+    #[test]
+    fn compare_within_tolerance_passes() {
+        let old = point("b", vec![scen("s", Kind::Sim, 1000.0)]);
+        let new = point("a", vec![scen("s", Kind::Sim, 900.0)]);
+        assert!(compare(&old, &new, 15.0, false).passed());
+        assert!(!compare(&old, &new, 5.0, false).passed());
+    }
+
+    #[test]
+    fn civil_date_conversion() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_359), (2023, 1, 2));
+        // 2026-08-07 (this PR's trajectory points)
+        assert_eq!(civil_from_days(20_672), (2026, 8, 7));
+        assert_eq!(civil_from_days(-1), (1969, 12, 31));
+        let today = today_utc();
+        assert_eq!(today.len(), 10);
+        assert_eq!(&today[4..5], "-");
+    }
+}

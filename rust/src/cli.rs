@@ -25,6 +25,7 @@ const VALUED: &[&str] = &[
     "--zipf-range", "--theta", "--grid", "--pipeline",
     "--resize-at-iter", "--resize-factor", "--replicas", "--kill-rank",
     "--kill-rank-at", "--digits-ladder", "--ladder-tol", "--l1-bytes",
+    "--tol", "--label",
 ];
 
 impl Args {

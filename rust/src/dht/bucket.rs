@@ -131,6 +131,92 @@ impl BucketLayout {
         rec
     }
 
+    /// Encode the full bucket record into `buf`, reusing its capacity:
+    /// `buf` is cleared and regrown in place, so after the first call
+    /// per geometry no call allocates — the scratch-buffer reuse the
+    /// allocation-free request path depends on.  Byte-identical to
+    /// [`Self::encode_record`] (pinned by a property test).
+    pub fn encode_into(&self, key: &[u8], value: &[u8], buf: &mut Vec<u8>) {
+        self.encode_into_nocrc(key, value, buf);
+        if self.variant == Variant::LockFree {
+            self.fill_crc(buf);
+        }
+    }
+
+    /// [`Self::encode_into`] with the CRC word left zeroed (lock-free):
+    /// callers encoding a whole batch defer the checksum to one
+    /// [`Self::fill_crc_batch`] pass.  For the other variants this IS
+    /// the complete record.
+    pub fn encode_into_nocrc(&self, key: &[u8], value: &[u8], buf: &mut Vec<u8>) {
+        assert_eq!(key.len(), self.key_len);
+        assert_eq!(value.len(), self.val_len);
+        buf.clear();
+        buf.resize(self.size() - self.meta_off(), 0);
+        buf[..8].copy_from_slice(&Meta::OCCUPIED.to_le_bytes());
+        let k0 = self.key_off() - self.meta_off();
+        buf[k0..k0 + key.len()].copy_from_slice(key);
+        let v0 = self.val_off() - self.meta_off();
+        buf[v0..v0 + value.len()].copy_from_slice(value);
+    }
+
+    /// Recompute and store the CRC word of an encoded record (lock-free).
+    pub fn fill_crc(&self, rec: &mut [u8]) {
+        let crc = record_crc(self.key_of(rec), self.val_of(rec)) as u64;
+        let c0 = self.crc_off() - self.meta_off();
+        rec[c0..c0 + 8].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    /// Fill the CRC word of every encoded record in one pass (a no-op
+    /// for the non-checksummed variants).  Hardware-CRC32C feature
+    /// detection is hoisted out of the loop — one check per batch
+    /// instead of one per record — and the whole loop runs inside one
+    /// `#[target_feature]` region, so the compiler schedules the crc
+    /// chains across records instead of re-entering the detected path
+    /// per call.
+    pub fn fill_crc_batch(&self, recs: &mut [Vec<u8>]) {
+        if self.variant != Variant::LockFree {
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("sse4.2") {
+                // SAFETY: feature checked above
+                unsafe { self.fill_crc_batch_sse42(recs) };
+                return;
+            }
+        }
+        for rec in recs.iter_mut() {
+            self.fill_crc(rec);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "sse4.2")]
+    unsafe fn fill_crc_batch_sse42(&self, recs: &mut [Vec<u8>]) {
+        let c0 = self.crc_off() - self.meta_off();
+        for rec in recs.iter_mut() {
+            let crc = crc32c_hw(self.key_of(rec), self.val_of(rec)) as u64;
+            rec[c0..c0 + 8].copy_from_slice(&crc.to_le_bytes());
+        }
+    }
+
+    /// Classify a probe (meta word + key prefix) against `key` without
+    /// data-dependent branching in the compare: the meta flags and the
+    /// whole key fold are evaluated unconditionally ([`keys_equal`])
+    /// and combined once at the end, instead of short-circuiting
+    /// byte-by-byte mid-probe.
+    #[inline]
+    pub fn classify_probe(&self, probe: &[u8], key: &[u8]) -> ProbeHit {
+        let meta = self.meta_of(probe);
+        let eq = keys_equal(self.key_of(probe), key);
+        match (meta.occupied(), meta.invalid(), eq) {
+            (false, _, _) => ProbeHit::Empty,
+            (true, true, _) => ProbeHit::Invalid,
+            (true, false, true) => ProbeHit::Match,
+            (true, false, false) => ProbeHit::Other,
+        }
+    }
+
     /// Parse the meta word from a probe/record slice starting at meta.
     pub fn meta_of(&self, rec: &[u8]) -> Meta {
         Meta(u64::from_le_bytes(rec[..8].try_into().unwrap()))
@@ -158,6 +244,42 @@ impl BucketLayout {
     pub fn crc_ok(&self, rec: &[u8]) -> bool {
         record_crc(self.key_of(rec), self.val_of(rec)) == self.crc_of(rec)
     }
+}
+
+/// What a probed bucket means for a given key
+/// ([`BucketLayout::classify_probe`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeHit {
+    /// Bucket empty: the key is absent here; a write may claim it.
+    Empty,
+    /// Bucket holds this key.
+    Match,
+    /// Bucket holds a different key.
+    Other,
+    /// Bucket is marked invalid (lock-free, §4.2).
+    Invalid,
+}
+
+/// Word-wise equal-length byte comparison: an XOR-OR fold with no early
+/// exit.  On the 80-byte POET key the ten unconditional word ops beat a
+/// short-circuiting compare — mismatches are random in the probe loop,
+/// so its branches are unpredictable.
+#[inline]
+pub fn keys_equal(a: &[u8], b: &[u8]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u64;
+    let mut i = 0usize;
+    while i + 8 <= a.len() {
+        let x = u64::from_le_bytes(a[i..i + 8].try_into().unwrap());
+        let y = u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+        acc |= x ^ y;
+        i += 8;
+    }
+    while i < a.len() {
+        acc |= (a[i] ^ b[i]) as u64;
+        i += 1;
+    }
+    acc == 0
 }
 
 /// CRC32 over key || value — the lock-free bucket's self-verification.
@@ -249,6 +371,88 @@ mod tests {
             assert_eq!(l.val_of(&rec), &val[..]);
             if v == Variant::LockFree {
                 assert!(l.crc_ok(&rec));
+            }
+        }
+    }
+
+    #[test]
+    fn encode_into_reuses_scratch_without_allocating() {
+        // the request path's zero-allocation claim: after the first
+        // encode per geometry, re-encoding into the same scratch buffer
+        // never reallocates — pointer and capacity stay put
+        for v in Variant::ALL {
+            let l = BucketLayout::new(v, K, V);
+            let mut buf = Vec::new();
+            l.encode_into(&[0u8; K], &[0u8; V], &mut buf);
+            let ptr = buf.as_ptr();
+            let cap = buf.capacity();
+            for i in 0..1000usize {
+                let key = vec![(i % 251) as u8; K];
+                let val = vec![(i % 249) as u8; V];
+                l.encode_into(&key, &val, &mut buf);
+                assert_eq!(buf.as_ptr(), ptr, "scratch reallocated at {i}");
+                assert_eq!(buf.capacity(), cap, "scratch regrew at {i}");
+                assert_eq!(buf, l.encode_record(&key, &val), "encode {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn crc_batch_fill_matches_per_record_path() {
+        let l = BucketLayout::new(Variant::LockFree, 13, 7);
+        let mut recs: Vec<Vec<u8>> = (0..33u8)
+            .map(|i| {
+                let mut buf = Vec::new();
+                l.encode_into_nocrc(&[i; 13], &[i ^ 0x5A; 7], &mut buf);
+                buf
+            })
+            .collect();
+        l.fill_crc_batch(&mut recs);
+        for (i, rec) in recs.iter().enumerate() {
+            let i = i as u8;
+            assert!(l.crc_ok(rec), "record {i}");
+            assert_eq!(l.crc_of(rec), record_crc(&[i; 13], &[i ^ 0x5A; 7]));
+            assert_eq!(*rec, l.encode_record(&[i; 13], &[i ^ 0x5A; 7]));
+        }
+        // a no-op (and no panic) for the non-checksummed variants
+        for v in [Variant::Coarse, Variant::Fine] {
+            let l = BucketLayout::new(v, 13, 7);
+            let mut recs = vec![l.encode_record(&[1; 13], &[2; 7])];
+            let before = recs[0].clone();
+            l.fill_crc_batch(&mut recs);
+            assert_eq!(recs[0], before);
+        }
+    }
+
+    #[test]
+    fn probe_classification() {
+        for v in Variant::ALL {
+            let l = BucketLayout::new(v, K, V);
+            let key = vec![0xAB; K];
+            let other = vec![0xAC; K];
+            let rec = l.encode_record(&key, &[0xCD; V]);
+            let probe = &rec[..l.probe_len()];
+            assert_eq!(l.classify_probe(probe, &key), ProbeHit::Match);
+            assert_eq!(l.classify_probe(probe, &other), ProbeHit::Other);
+            let empty = vec![0u8; l.probe_len()];
+            assert_eq!(l.classify_probe(&empty, &key), ProbeHit::Empty);
+            let mut inv = rec.clone();
+            inv[..8].copy_from_slice(&(Meta::OCCUPIED | Meta::INVALID).to_le_bytes());
+            assert_eq!(l.classify_probe(&inv[..l.probe_len()], &key), ProbeHit::Invalid);
+        }
+    }
+
+    #[test]
+    fn keys_equal_all_lengths() {
+        for len in [1usize, 7, 8, 9, 16, 80, 81] {
+            let a = vec![0x3Cu8; len];
+            assert!(keys_equal(&a, &a.clone()));
+            for flip in [0, len / 2, len - 1] {
+                for bit in [0x01u8, 0x80] {
+                    let mut b = a.clone();
+                    b[flip] ^= bit;
+                    assert!(!keys_equal(&a, &b), "len {len} flip {flip}");
+                }
             }
         }
     }

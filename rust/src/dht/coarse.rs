@@ -14,17 +14,22 @@
 
 use crate::rma::{Req, Resp, SmStep};
 
-use super::bucket::BucketLayout;
+use super::bucket::{BucketLayout, ProbeHit};
 use super::{DhtConfig, DhtOutcome, OpOut};
 
 /// Probe plan shared by the protocol SMs of all variants: target rank,
 /// candidate indices, layout, and request builders.  `base` locates the
 /// table's window segment (0 until an elastic resize re-homes the table —
 /// DESIGN.md §8), so one plan type serves every table epoch.
+///
+/// The candidate indices live in a fixed-width array — the sliding-window
+/// derivation yields at most 8 of them (`8 - n + 1`, paper Fig. 2) — so
+/// building a plan allocates nothing.
 #[derive(Clone, Debug)]
 pub(crate) struct Plan {
     pub target: u32,
-    pub indices: Vec<u64>,
+    indices: [u64; 8],
+    n_idx: u8,
     pub layout: BucketLayout,
     pub base: u64,
 }
@@ -38,13 +43,37 @@ impl Plan {
     /// replica's rank, with the *same* candidate bucket indices — index
     /// derivation depends only on the hash, not the rank.
     pub fn replica(cfg: &DhtConfig, key: &[u8], r: u32) -> Self {
-        let hash = cfg.addressing.hash(key);
+        Self::replica_from_hash(cfg, cfg.addressing.hash(key), r)
+    }
+
+    /// Plan from a precomputed key hash (primary replica): the batch
+    /// write path hashes each key exactly once and reuses the hash for
+    /// routing and record preparation.
+    pub fn from_hash(cfg: &DhtConfig, hash: u64) -> Self {
+        Self::replica_from_hash(cfg, hash, 0)
+    }
+
+    /// [`Self::replica`] from a precomputed key hash.
+    pub fn replica_from_hash(cfg: &DhtConfig, hash: u64, r: u32) -> Self {
+        let a = &cfg.addressing;
+        let n = a.num_indices() as usize;
+        let mut indices = [0u64; 8];
+        for (i, slot) in indices.iter_mut().enumerate().take(n) {
+            *slot = a.index(hash, i as u32);
+        }
         Self {
-            target: cfg.addressing.replica_target(hash, r),
-            indices: cfg.addressing.indices(hash),
+            target: a.replica_target(hash, r),
+            indices,
+            n_idx: n as u8,
             layout: cfg.layout,
             base: cfg.base,
         }
+    }
+
+    /// The i-th candidate bucket index (i < [`Self::n`]).
+    pub fn idx(&self, i: usize) -> u64 {
+        debug_assert!(i < self.n());
+        self.indices[i]
     }
 
     fn rec_off(&self, i: usize) -> u64 {
@@ -94,7 +123,7 @@ impl Plan {
     }
 
     pub fn n(&self) -> usize {
-        self.indices.len()
+        self.n_idx as usize
     }
 }
 
@@ -130,8 +159,14 @@ impl ReadSm {
 
     /// Read probing the key's `r`-th replica (DESIGN.md §9).
     pub fn new_at(cfg: &DhtConfig, key: &[u8], r: u32) -> Self {
+        Self::with_hash_at(cfg, cfg.addressing.hash(key), key, r)
+    }
+
+    /// Read from a precomputed key hash — replica failover and dual
+    /// lookups hash the key once and route every slot from it.
+    pub fn with_hash_at(cfg: &DhtConfig, hash: u64, key: &[u8], r: u32) -> Self {
         Self {
-            plan: Plan::replica(cfg, key, r),
+            plan: Plan::replica_from_hash(cfg, hash, r),
             key: key.to_vec(),
             state: RState::Init,
             probes: 0,
@@ -144,8 +179,6 @@ impl ReadSm {
         self.state = RState::AwaitUnlock;
         SmStep::Issue(Req::UnlockWin { target: self.plan.target, exclusive: false })
     }
-
-
 }
 
 impl crate::rma::OpSm for ReadSm {
@@ -167,20 +200,25 @@ impl crate::rma::OpSm for ReadSm {
             RState::AwaitBucket(i) => {
                 let data = data_of(resp);
                 let l = &self.plan.layout;
-                let meta = l.meta_of(&data);
-                if !meta.occupied() {
-                    return self.finish(DhtOutcome::ReadMiss);
+                // branchless probe decode: the meta flags and the whole
+                // key compare are folded in one pass (INVALID is never
+                // set under coarse locking, so it probes like a foreign
+                // key)
+                match l.classify_probe(&data, &self.key) {
+                    ProbeHit::Empty => self.finish(DhtOutcome::ReadMiss),
+                    ProbeHit::Match => {
+                        let v = l.val_of(&data).to_vec();
+                        self.finish(DhtOutcome::ReadHit(v))
+                    }
+                    _ if i + 1 == self.plan.n() => {
+                        self.finish(DhtOutcome::ReadMiss)
+                    }
+                    _ => {
+                        self.state = RState::AwaitBucket(i + 1);
+                        self.probes += 1;
+                        SmStep::Issue(self.plan.get_record(i + 1))
+                    }
                 }
-                if l.key_of(&data) == &self.key[..] {
-                    let v = l.val_of(&data).to_vec();
-                    return self.finish(DhtOutcome::ReadHit(v));
-                }
-                if i + 1 == self.plan.n() {
-                    return self.finish(DhtOutcome::ReadMiss);
-                }
-                self.state = RState::AwaitBucket(i + 1);
-                self.probes += 1;
-                SmStep::Issue(self.plan.get_record(i + 1))
             }
             RState::AwaitUnlock => SmStep::Done(OpOut {
                 outcome: self.pending.take().expect("outcome set"),
@@ -189,7 +227,8 @@ impl crate::rma::OpSm for ReadSm {
                 lock_retries: 0,
             }),
         }
-    }}
+    }
+}
 
 // --------------------------------------------------------------------- write
 
@@ -202,9 +241,13 @@ enum WState {
 }
 
 /// `DHT_write` under coarse-grained locking.
+///
+/// The key is not stored separately: probes compare against the key
+/// bytes embedded in the encoded record, so a write op owns exactly one
+/// buffer, which the final put consumes (`mem::take`) instead of
+/// cloning.
 pub struct WriteSm {
     plan: Plan,
-    key: Vec<u8>,
     record: Vec<u8>,
     state: WState,
     probes: u32,
@@ -218,11 +261,29 @@ impl WriteSm {
 
     /// Write storing into the key's `r`-th replica (DESIGN.md §9).
     pub fn new_at(cfg: &DhtConfig, key: &[u8], value: &[u8], r: u32) -> Self {
-        let plan = Plan::replica(cfg, key, r);
-        let record = plan.layout.encode_record(key, value);
+        let hash = cfg.addressing.hash(key);
+        Self::with_record_at(cfg, hash, cfg.layout.encode_record(key, value), r)
+    }
+
+    /// Write over a pre-encoded record (primary replica) — see
+    /// [`Self::with_record_at`].
+    pub fn with_record(cfg: &DhtConfig, hash: u64, record: Vec<u8>) -> Self {
+        Self::with_record_at(cfg, hash, record, 0)
+    }
+
+    /// Write over a record the caller already encoded (scratch-encoded
+    /// via [`BucketLayout::encode_into`], checksummed where the layout
+    /// has a CRC word) plus its precomputed key hash — the batch path
+    /// that encodes and checksums a whole epoch up front.
+    pub fn with_record_at(
+        cfg: &DhtConfig,
+        hash: u64,
+        record: Vec<u8>,
+        r: u32,
+    ) -> Self {
+        debug_assert_eq!(record.len(), cfg.layout.size() - cfg.layout.meta_off());
         Self {
-            plan,
-            key: key.to_vec(),
+            plan: Plan::replica_from_hash(cfg, hash, r),
             record,
             state: WState::Init,
             probes: 0,
@@ -250,23 +311,22 @@ impl crate::rma::OpSm for WriteSm {
             WState::AwaitProbe(i) => {
                 let data = data_of(resp);
                 let l = &self.plan.layout;
-                let meta = l.meta_of(&data);
-                let outcome = if !meta.occupied() {
-                    Some(DhtOutcome::WriteFresh)
-                } else if l.key_of(&data) == &self.key[..] {
-                    Some(DhtOutcome::WriteUpdate)
-                } else if i + 1 == self.plan.n() {
+                let outcome = match l.classify_probe(&data, l.key_of(&self.record)) {
+                    ProbeHit::Empty => Some(DhtOutcome::WriteFresh),
+                    ProbeHit::Match => Some(DhtOutcome::WriteUpdate),
                     // all candidates taken by other keys: overwrite the
                     // last index (cache semantics, §3.1)
-                    Some(DhtOutcome::WriteEvict)
-                } else {
-                    None
+                    _ if i + 1 == self.plan.n() => Some(DhtOutcome::WriteEvict),
+                    _ => None,
                 };
                 match outcome {
                     Some(out) => {
                         self.pending = Some(out);
                         self.state = WState::AwaitPut;
-                        SmStep::Issue(self.plan.put_record(i, self.record.clone()))
+                        // the put consumes the record — a write puts
+                        // exactly once, so no clone is needed
+                        let record = std::mem::take(&mut self.record);
+                        SmStep::Issue(self.plan.put_record(i, record))
                     }
                     None => {
                         self.state = WState::AwaitProbe(i + 1);
@@ -290,7 +350,8 @@ impl crate::rma::OpSm for WriteSm {
                 lock_retries: 0,
             }),
         }
-    }}
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -323,6 +384,24 @@ mod tests {
         let out = rma.exec(&mut ReadSm::new(&cfg, &[9u8; 80]));
         assert_eq!(out.outcome, DhtOutcome::ReadMiss);
         assert_eq!(out.probes, 1); // empty first bucket stops the probe
+    }
+
+    #[test]
+    fn prepared_record_write_equals_plain_write() {
+        // the batch path: caller hashes once, scratch-encodes, then
+        // hands the ready record to the SM
+        let cfg = cfg(4);
+        let cluster = ShmCluster::new(4, 64 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![7u8; 80];
+        let val = vec![8u8; 104];
+        let hash = cfg.addressing.hash(&key);
+        let mut rec = Vec::new();
+        cfg.layout.encode_into(&key, &val, &mut rec);
+        let out = rma.exec(&mut WriteSm::with_record(&cfg, hash, rec));
+        assert_eq!(out.outcome, DhtOutcome::WriteFresh);
+        let out = rma.exec(&mut ReadSm::new(&cfg, &key));
+        assert_eq!(out.outcome, DhtOutcome::ReadHit(val));
     }
 
     #[test]

@@ -20,6 +20,7 @@
 
 use crate::rma::{Req, Resp, SmStep, EXCLUSIVE_LOCK};
 
+use super::bucket::ProbeHit;
 use super::coarse::Plan;
 use super::{DhtConfig, DhtOutcome, OpOut};
 
@@ -70,8 +71,14 @@ impl ReadSm {
 
     /// Read probing the key's `r`-th replica (DESIGN.md §9).
     pub fn new_at(cfg: &DhtConfig, key: &[u8], r: u32) -> Self {
+        Self::with_hash_at(cfg, cfg.addressing.hash(key), key, r)
+    }
+
+    /// Read from a precomputed key hash — replica failover and dual
+    /// lookups hash the key once and route every slot from it.
+    pub fn with_hash_at(cfg: &DhtConfig, hash: u64, key: &[u8], r: u32) -> Self {
         Self {
-            plan: Plan::replica(cfg, key, r),
+            plan: Plan::replica_from_hash(cfg, hash, r),
             key: key.to_vec(),
             state: RState::Init,
             probes: 0,
@@ -98,8 +105,6 @@ impl ReadSm {
             add: -1,
         })
     }
-
-
 }
 
 impl crate::rma::OpSm for ReadSm {
@@ -131,25 +136,28 @@ impl crate::rma::OpSm for ReadSm {
             RState::AwaitBucket(i) => {
                 let data = data_of(resp);
                 let l = &self.plan.layout;
-                let meta = l.meta_of(&data);
-                if !meta.occupied() {
-                    return self.release(i, DhtOutcome::ReadMiss);
+                // branchless probe decode (INVALID is never set under
+                // fine-grained locking, so it probes like a foreign key)
+                match l.classify_probe(&data, &self.key) {
+                    ProbeHit::Empty => self.release(i, DhtOutcome::ReadMiss),
+                    ProbeHit::Match => {
+                        let v = l.val_of(&data).to_vec();
+                        self.release(i, DhtOutcome::ReadHit(v))
+                    }
+                    _ if i + 1 == self.plan.n() => {
+                        self.release(i, DhtOutcome::ReadMiss)
+                    }
+                    _ => {
+                        // unlock this bucket, move on to the next candidate
+                        self.probes += 1;
+                        self.state = RState::AwaitMoveOn(i);
+                        SmStep::Issue(Req::Fao {
+                            target: self.plan.target,
+                            offset: self.plan.lock_off(i),
+                            add: -1,
+                        })
+                    }
                 }
-                if l.key_of(&data) == &self.key[..] {
-                    let v = l.val_of(&data).to_vec();
-                    return self.release(i, DhtOutcome::ReadHit(v));
-                }
-                if i + 1 == self.plan.n() {
-                    return self.release(i, DhtOutcome::ReadMiss);
-                }
-                // unlock this bucket, move on to the next candidate
-                self.probes += 1;
-                self.state = RState::AwaitMoveOn(i);
-                SmStep::Issue(Req::Fao {
-                    target: self.plan.target,
-                    offset: self.plan.lock_off(i),
-                    add: -1,
-                })
             }
             RState::AwaitMoveOn(i) => self.incr(i + 1),
             RState::AwaitRelease => SmStep::Done(OpOut {
@@ -159,7 +167,8 @@ impl crate::rma::OpSm for ReadSm {
                 lock_retries: self.lock_retries,
             }),
         }
-    }}
+    }
+}
 
 // --------------------------------------------------------------------- write
 
@@ -178,9 +187,11 @@ enum WState {
 }
 
 /// `DHT_write` under fine-grained (per-bucket) locking.
+///
+/// As in the coarse variant, the key lives only inside the encoded
+/// record and the final put consumes that one buffer (`mem::take`).
 pub struct WriteSm {
     plan: Plan,
-    key: Vec<u8>,
     record: Vec<u8>,
     state: WState,
     probes: u32,
@@ -195,11 +206,28 @@ impl WriteSm {
 
     /// Write storing into the key's `r`-th replica (DESIGN.md §9).
     pub fn new_at(cfg: &DhtConfig, key: &[u8], value: &[u8], r: u32) -> Self {
-        let plan = Plan::replica(cfg, key, r);
-        let record = plan.layout.encode_record(key, value);
+        let hash = cfg.addressing.hash(key);
+        Self::with_record_at(cfg, hash, cfg.layout.encode_record(key, value), r)
+    }
+
+    /// Write over a pre-encoded record (primary replica) — see
+    /// [`Self::with_record_at`].
+    pub fn with_record(cfg: &DhtConfig, hash: u64, record: Vec<u8>) -> Self {
+        Self::with_record_at(cfg, hash, record, 0)
+    }
+
+    /// Write over a record the caller already encoded, plus its
+    /// precomputed key hash (the batched, allocation-free write path —
+    /// see [`super::coarse::WriteSm::with_record_at`]).
+    pub fn with_record_at(
+        cfg: &DhtConfig,
+        hash: u64,
+        record: Vec<u8>,
+        r: u32,
+    ) -> Self {
+        debug_assert_eq!(record.len(), cfg.layout.size() - cfg.layout.meta_off());
         Self {
-            plan,
-            key: key.to_vec(),
+            plan: Plan::replica_from_hash(cfg, hash, r),
             record,
             state: WState::Init,
             probes: 0,
@@ -217,8 +245,6 @@ impl WriteSm {
             desired: EXCLUSIVE_LOCK,
         })
     }
-
-
 }
 
 impl crate::rma::OpSm for WriteSm {
@@ -242,21 +268,19 @@ impl crate::rma::OpSm for WriteSm {
             WState::AwaitProbe(i) => {
                 let data = data_of(resp);
                 let l = &self.plan.layout;
-                let meta = l.meta_of(&data);
-                let outcome = if !meta.occupied() {
-                    Some(DhtOutcome::WriteFresh)
-                } else if l.key_of(&data) == &self.key[..] {
-                    Some(DhtOutcome::WriteUpdate)
-                } else if i + 1 == self.plan.n() {
-                    Some(DhtOutcome::WriteEvict)
-                } else {
-                    None
+                let outcome = match l.classify_probe(&data, l.key_of(&self.record)) {
+                    ProbeHit::Empty => Some(DhtOutcome::WriteFresh),
+                    ProbeHit::Match => Some(DhtOutcome::WriteUpdate),
+                    _ if i + 1 == self.plan.n() => Some(DhtOutcome::WriteEvict),
+                    _ => None,
                 };
                 match outcome {
                     Some(out) => {
                         self.pending = Some(out);
                         self.state = WState::AwaitPut(i);
-                        SmStep::Issue(self.plan.put_record(i, self.record.clone()))
+                        // a write puts exactly once: move, don't clone
+                        let record = std::mem::take(&mut self.record);
+                        SmStep::Issue(self.plan.put_record(i, record))
                     }
                     None => {
                         // this bucket belongs to another key: unlock it
@@ -290,7 +314,8 @@ impl crate::rma::OpSm for WriteSm {
                 lock_retries: self.lock_retries,
             }),
         }
-    }}
+    }
+}
 
 #[cfg(test)]
 mod tests {

@@ -905,23 +905,48 @@ impl<B: RmaBackend> Dht<B> {
                 self.l1_put(k.as_ref(), v.as_ref());
             }
         }
+        // Prepare the whole epoch up front (the raw-speed write path):
+        // hash each key exactly once, encode each record into its lane's
+        // buffer, then checksum every pending record in one batched
+        // hardware-CRC pass (a no-op for layouts without a CRC word) —
+        // instead of a hash + alloc + per-record-detected CRC inside
+        // every state machine.
+        let layout = self.cfg.layout;
+        let mut hashes: Vec<u64> = Vec::with_capacity(keys.len());
+        let mut records: Vec<Vec<u8>> = Vec::with_capacity(keys.len());
+        for (key, val) in keys.iter().zip(values.iter()) {
+            let (key, val) = (key.as_ref(), val.as_ref());
+            assert_eq!(key.len(), layout.key_len());
+            assert_eq!(val.len(), layout.val_len());
+            hashes.push(self.cfg.addressing.hash(key));
+            let mut rec = Vec::new();
+            layout.encode_into_nocrc(key, val, &mut rec);
+            records.push(rec);
+        }
+        layout.fill_crc_batch(&mut records);
         let k = self.cfg.addressing.replicas();
         if k > 1 {
             let mut sms: Vec<DhtSm> =
                 Vec::with_capacity(keys.len() * k as usize);
-            for (key, val) in keys.iter().zip(values.iter()) {
-                let (key, val) = (key.as_ref(), val.as_ref());
-                assert_eq!(key.len(), self.cfg.layout.key_len());
-                assert_eq!(val.len(), self.cfg.layout.val_len());
-                for r in 0..k {
-                    sms.push(DhtSm::write_at(
+            for (hash, record) in hashes.into_iter().zip(records) {
+                // the first k-1 replica SMs clone the prepared record
+                // (encode + CRC ran once per key); the last takes it
+                for r in 0..k - 1 {
+                    sms.push(DhtSm::write_prepared_at(
                         self.cfg.variant,
                         &self.cfg,
-                        key,
-                        val,
+                        hash,
+                        record.clone(),
                         r,
                     ));
                 }
+                sms.push(DhtSm::write_prepared_at(
+                    self.cfg.variant,
+                    &self.cfg,
+                    hash,
+                    record,
+                    k - 1,
+                ));
             }
             let depth = self.pipeline;
             let outs = self.rma.exec_batch(sms, depth);
@@ -936,14 +961,11 @@ impl<B: RmaBackend> Dht<B> {
             }
             return res;
         }
-        let sms: Vec<DhtSm> = keys
-            .iter()
-            .zip(values.iter())
-            .map(|(k, v)| {
-                let (k, v) = (k.as_ref(), v.as_ref());
-                assert_eq!(k.len(), self.cfg.layout.key_len());
-                assert_eq!(v.len(), self.cfg.layout.val_len());
-                DhtSm::write(self.cfg.variant, &self.cfg, k, v)
+        let sms: Vec<DhtSm> = hashes
+            .into_iter()
+            .zip(records)
+            .map(|(hash, record)| {
+                DhtSm::write_prepared(self.cfg.variant, &self.cfg, hash, record)
             })
             .collect();
         let depth = self.pipeline;

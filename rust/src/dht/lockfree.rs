@@ -18,7 +18,7 @@
 
 use crate::rma::{Resp, SmStep};
 
-use super::bucket::Meta;
+use super::bucket::{Meta, ProbeHit};
 use super::coarse::Plan;
 use super::{DhtConfig, DhtOutcome, OpOut};
 
@@ -57,8 +57,14 @@ impl ReadSm {
 
     /// Read probing the key's `r`-th replica (DESIGN.md §9).
     pub fn new_at(cfg: &DhtConfig, key: &[u8], r: u32) -> Self {
+        Self::with_hash_at(cfg, cfg.addressing.hash(key), key, r)
+    }
+
+    /// Read from a precomputed key hash — replica failover and dual
+    /// lookups hash the key once and route every slot from it.
+    pub fn with_hash_at(cfg: &DhtConfig, hash: u64, key: &[u8], r: u32) -> Self {
         Self {
-            plan: Plan::replica(cfg, key, r),
+            plan: Plan::replica_from_hash(cfg, hash, r),
             key: key.to_vec(),
             max_retries: cfg.crc_retries,
             state: RState::Init,
@@ -75,8 +81,6 @@ impl ReadSm {
             lock_retries: 0,
         })
     }
-
-
 }
 
 impl crate::rma::OpSm for ReadSm {
@@ -91,10 +95,6 @@ impl crate::rma::OpSm for ReadSm {
             RState::AwaitBucket { i, attempt } => {
                 let data = data_of(resp);
                 let l = &self.plan.layout;
-                let meta = l.meta_of(&data);
-                if !meta.occupied() {
-                    return self.done(DhtOutcome::ReadMiss);
-                }
                 let next = |sm: &mut Self| {
                     if i + 1 == sm.plan.n() {
                         sm.done(DhtOutcome::ReadMiss)
@@ -104,13 +104,13 @@ impl crate::rma::OpSm for ReadSm {
                         SmStep::Issue(sm.plan.get_record(i + 1))
                     }
                 };
-                if meta.invalid() {
+                match l.classify_probe(&data, &self.key) {
+                    ProbeHit::Empty => return self.done(DhtOutcome::ReadMiss),
                     // corrupt bucket: its key bytes are untrustworthy, so
                     // keep probing the remaining candidates
-                    return next(self);
-                }
-                if l.key_of(&data) != &self.key[..] {
-                    return next(self);
+                    ProbeHit::Invalid => return next(self),
+                    ProbeHit::Other => return next(self),
+                    ProbeHit::Match => {}
                 }
                 if l.crc_ok(&data) {
                     return self.done(DhtOutcome::ReadHit(l.val_of(&data).to_vec()));
@@ -132,7 +132,8 @@ impl crate::rma::OpSm for ReadSm {
                 self.done(DhtOutcome::ReadCorrupt)
             }
         }
-    }}
+    }
+}
 
 // --------------------------------------------------------------------- write
 
@@ -143,9 +144,14 @@ enum WState {
 }
 
 /// `DHT_write`, lock-free: probe candidates, put record with checksum.
+///
+/// Holds no separate key copy: the key is read zero-copy out of the
+/// encoded record via [`BucketLayout::key_of`], and the record itself is
+/// moved into the final Put (a write puts exactly once).
+///
+/// [`BucketLayout::key_of`]: super::bucket::BucketLayout::key_of
 pub struct WriteSm {
     plan: Plan,
-    key: Vec<u8>,
     record: Vec<u8>,
     state: WState,
     probes: u32,
@@ -159,11 +165,22 @@ impl WriteSm {
 
     /// Write storing into the key's `r`-th replica (DESIGN.md §9).
     pub fn new_at(cfg: &DhtConfig, key: &[u8], value: &[u8], r: u32) -> Self {
-        let plan = Plan::replica(cfg, key, r);
-        let record = plan.layout.encode_record(key, value);
+        let hash = cfg.addressing.hash(key);
+        Self::with_record_at(cfg, hash, cfg.layout.encode_record(key, value), r)
+    }
+
+    /// Write from a pre-encoded record (CRC word already filled) and its
+    /// precomputed key hash — the batched front-end path, where records
+    /// are encoded into scratch buffers and checksummed per epoch.
+    pub fn with_record(cfg: &DhtConfig, hash: u64, record: Vec<u8>) -> Self {
+        Self::with_record_at(cfg, hash, record, 0)
+    }
+
+    /// [`Self::with_record`] targeting the `r`-th replica.
+    pub fn with_record_at(cfg: &DhtConfig, hash: u64, record: Vec<u8>, r: u32) -> Self {
+        debug_assert_eq!(record.len(), cfg.layout.size() - cfg.layout.meta_off());
         Self {
-            plan,
-            key: key.to_vec(),
+            plan: Plan::replica_from_hash(cfg, hash, r),
             record,
             state: WState::Init,
             probes: 0,
@@ -184,24 +201,21 @@ impl crate::rma::OpSm for WriteSm {
             WState::AwaitProbe(i) => {
                 let data = data_of(resp);
                 let l = &self.plan.layout;
-                let meta = l.meta_of(&data);
-                let outcome = if !meta.occupied() {
-                    Some(DhtOutcome::WriteFresh)
-                } else if meta.invalid() {
+                let outcome = match l.classify_probe(&data, l.key_of(&self.record)) {
+                    ProbeHit::Empty => Some(DhtOutcome::WriteFresh),
                     // invalid buckets may be overwritten (§4.2)
-                    Some(DhtOutcome::WriteFresh)
-                } else if l.key_of(&data) == &self.key[..] {
-                    Some(DhtOutcome::WriteUpdate)
-                } else if i + 1 == self.plan.n() {
-                    Some(DhtOutcome::WriteEvict)
-                } else {
-                    None
+                    ProbeHit::Invalid => Some(DhtOutcome::WriteFresh),
+                    ProbeHit::Match => Some(DhtOutcome::WriteUpdate),
+                    ProbeHit::Other if i + 1 == self.plan.n() => Some(DhtOutcome::WriteEvict),
+                    ProbeHit::Other => None,
                 };
                 match outcome {
                     Some(out) => {
                         self.pending = Some(out);
                         self.state = WState::AwaitPut;
-                        SmStep::Issue(self.plan.put_record(i, self.record.clone()))
+                        // a write puts exactly once: move, don't clone
+                        let record = std::mem::take(&mut self.record);
+                        SmStep::Issue(self.plan.put_record(i, record))
                     }
                     None => {
                         self.probes += 1;
@@ -220,7 +234,8 @@ impl crate::rma::OpSm for WriteSm {
                 })
             }
         }
-    }}
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -273,7 +288,7 @@ mod tests {
         // corrupt one value byte behind the DHT's back
         let plan = Plan::new(&cfg, &key);
         let l = &cfg.layout;
-        let off = l.bucket_off(plan.indices[0]) + l.val_off() as u64;
+        let off = l.bucket_off(plan.idx(0)) + l.val_off() as u64;
         let mut word = rma.get(plan.target, off, 8);
         word[0] ^= 0xFF;
         rma.exec(&mut OneShot(Some(Req::Put {
@@ -303,6 +318,26 @@ mod tests {
                 None => SmStep::Done(()),
             }
         }
+    }
+
+    #[test]
+    fn prepared_record_write_equals_plain_write() {
+        // the batched front-end path: hash once, encode into a scratch
+        // buffer (CRC filled), move the record into the state machine
+        let cfg = cfg(2);
+        let cluster = ShmCluster::new(2, 64 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![0x5A; 80];
+        let val = vec![0xA5; 104];
+        let hash = cfg.addressing.hash(&key);
+        let mut scratch = Vec::new();
+        cfg.layout.encode_into(&key, &val, &mut scratch);
+        let out = rma.exec(&mut WriteSm::with_record(&cfg, hash, scratch));
+        assert_eq!(out.outcome, DhtOutcome::WriteFresh);
+        assert_eq!(
+            run_read(&rma, &cfg, &key).outcome,
+            DhtOutcome::ReadHit(val)
+        );
     }
 
     #[test]

@@ -268,9 +268,22 @@ impl DualReadSm {
         key: &[u8],
         r: u32,
     ) -> Self {
+        Self::with_hash_at(cur_cfg, old_cfg, cur_cfg.addressing.hash(key), key, r)
+    }
+
+    /// Dual lookup from a precomputed key hash: the hash depends only on
+    /// the key bytes (not the table epoch), so one hash routes both the
+    /// current and the retiring lookup.
+    pub fn with_hash_at(
+        cur_cfg: &DhtConfig,
+        old_cfg: &DhtConfig,
+        hash: u64,
+        key: &[u8],
+        r: u32,
+    ) -> Self {
         Self {
-            cur: DhtSm::read_at(cur_cfg.variant, cur_cfg, key, r),
-            old: Some(DhtSm::read_at(old_cfg.variant, old_cfg, key, r)),
+            cur: DhtSm::read_hashed_at(cur_cfg.variant, cur_cfg, hash, key, r),
+            old: Some(DhtSm::read_hashed_at(old_cfg.variant, old_cfg, hash, key, r)),
             fell_back: false,
             primary_corrupt: false,
             probes: 0,
@@ -604,11 +617,11 @@ impl OpSm for MigrateSm {
                     || (self.variant == Variant::LockFree && meta.invalid());
                 if free {
                     self.state = MState::AwaitPut(i);
-                    return SmStep::Issue(
-                        self.plan().put_record(i, self.record.clone()),
-                    );
+                    // the record is put exactly once: move, don't clone
+                    let record = std::mem::take(&mut self.record);
+                    return SmStep::Issue(self.plan().put_record(i, record));
                 }
-                if l.key_of(&data) == l.key_of(&self.record) {
+                if super::bucket::keys_equal(l.key_of(&data), l.key_of(&self.record)) {
                     // a concurrent write already stored this key: newer
                     // data wins, the old record is superseded
                     self.result = Some(MigrateResult::SkippedPresent);
@@ -805,7 +818,7 @@ mod tests {
         write(&rma, &old, &key, &[3u8; VAL]);
         // corrupt a value byte behind the DHT's back (simulated tear)
         let plan = Plan::new(&old, &key);
-        let off = plan.layout.bucket_off(plan.indices[0])
+        let off = plan.layout.bucket_off(plan.idx(0))
             + plan.layout.val_off() as u64;
         let mut word = rma.get(0, off, 8);
         word[0] ^= 0xFF;
@@ -871,7 +884,7 @@ mod tests {
         let key = vec![5u8; KEY];
         write(&rma, &old, &key, &[5u8; VAL]);
         let plan = Plan::new(&old, &key);
-        let off = plan.layout.bucket_off(plan.indices[0])
+        let off = plan.layout.bucket_off(plan.idx(0))
             + plan.layout.key_off() as u64;
         let mut word = rma.get(0, off, 8);
         word[0] ^= 0xA5; // torn key byte: CRC can no longer match
@@ -889,7 +902,7 @@ mod tests {
             &cur,
             &old,
             0,
-            plan.indices[0],
+            plan.idx(0),
         ));
         assert_eq!(out.result, MigrateResult::SkippedEmpty);
     }

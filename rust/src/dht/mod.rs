@@ -140,6 +140,28 @@ impl DhtSm {
         }
     }
 
+    /// Build the read SM from a precomputed key hash — replica failover
+    /// and dual lookups hash the key once and route every slot from it.
+    pub fn read_hashed_at(
+        variant: Variant,
+        cfg: &DhtConfig,
+        hash: u64,
+        key: &[u8],
+        r: u32,
+    ) -> DhtSm {
+        match variant {
+            Variant::Coarse => {
+                DhtSm::CoarseRead(coarse::ReadSm::with_hash_at(cfg, hash, key, r))
+            }
+            Variant::Fine => {
+                DhtSm::FineRead(fine::ReadSm::with_hash_at(cfg, hash, key, r))
+            }
+            Variant::LockFree => {
+                DhtSm::LockFreeRead(lockfree::ReadSm::with_hash_at(cfg, hash, key, r))
+            }
+        }
+    }
+
     /// Build the write SM for `variant` (primary replica).
     pub fn write(
         variant: Variant,
@@ -169,6 +191,43 @@ impl DhtSm {
             Variant::LockFree => DhtSm::LockFreeWrite(
                 lockfree::WriteSm::new_at(cfg, key, value, r),
             ),
+        }
+    }
+
+    /// Build the write SM from a pre-encoded record and its precomputed
+    /// key hash (primary replica) — see [`Self::write_prepared_at`].
+    pub fn write_prepared(
+        variant: Variant,
+        cfg: &DhtConfig,
+        hash: u64,
+        record: Vec<u8>,
+    ) -> DhtSm {
+        Self::write_prepared_at(variant, cfg, hash, record, 0)
+    }
+
+    /// Build the write SM over a record the caller already encoded
+    /// (scratch-encoded via [`BucketLayout::encode_into`], CRC filled
+    /// where the layout has one) plus its precomputed key hash — the
+    /// batched front-end path: hash each key once, encode the epoch's
+    /// records into reusable scratch buffers, checksum them in one
+    /// hardware-CRC pass, then move each record into its SM.
+    pub fn write_prepared_at(
+        variant: Variant,
+        cfg: &DhtConfig,
+        hash: u64,
+        record: Vec<u8>,
+        r: u32,
+    ) -> DhtSm {
+        match variant {
+            Variant::Coarse => {
+                DhtSm::CoarseWrite(coarse::WriteSm::with_record_at(cfg, hash, record, r))
+            }
+            Variant::Fine => {
+                DhtSm::FineWrite(fine::WriteSm::with_record_at(cfg, hash, record, r))
+            }
+            Variant::LockFree => {
+                DhtSm::LockFreeWrite(lockfree::WriteSm::with_record_at(cfg, hash, record, r))
+            }
         }
     }
 }

@@ -74,6 +74,9 @@ pub struct ReplReadSm {
     cur: DhtConfig,
     old: Option<DhtConfig>,
     key: Vec<u8>,
+    /// Key hash, computed once at build time and reused to route every
+    /// replica slot (and both tables of a dual lookup).
+    hash: u64,
     /// Per-replica-slot skip flags resolved against the failure detector
     /// at build time (detector lag is the real-world semantics: an op
     /// already issued at a dying rank still executes in degraded mode).
@@ -113,7 +116,7 @@ impl ReplReadSm {
             failovers += 1;
         }
         let inner = if (r as usize) < skip.len() {
-            Some(Self::inner_for(cur, old, key, r))
+            Some(Self::inner_for(cur, old, hash, key, r))
         } else {
             None
         };
@@ -121,6 +124,7 @@ impl ReplReadSm {
             cur: cur.clone(),
             old: old.cloned(),
             key: key.to_vec(),
+            hash,
             skip,
             r,
             inner,
@@ -137,12 +141,13 @@ impl ReplReadSm {
     fn inner_for(
         cur: &DhtConfig,
         old: Option<&DhtConfig>,
+        hash: u64,
         key: &[u8],
         r: u32,
     ) -> Inner {
         match old {
-            Some(o) => Inner::Dual(DualReadSm::new_at(cur, o, key, r)),
-            None => Inner::Plain(DhtSm::read_at(cur.variant, cur, key, r)),
+            Some(o) => Inner::Dual(DualReadSm::with_hash_at(cur, o, hash, key, r)),
+            None => Inner::Plain(DhtSm::read_hashed_at(cur.variant, cur, hash, key, r)),
         }
     }
 
@@ -223,8 +228,13 @@ impl OpSm for ReplReadSm {
             }
             self.failovers += 1 + skipped;
             self.r = next;
-            self.inner =
-                Some(Self::inner_for(&self.cur, self.old.as_ref(), &self.key, next));
+            self.inner = Some(Self::inner_for(
+                &self.cur,
+                self.old.as_ref(),
+                self.hash,
+                &self.key,
+                next,
+            ));
             resp = Resp::Start;
         }
     }
@@ -380,7 +390,7 @@ mod tests {
         write_at(&rma, &cfg, &key, &[8u8; VAL], 1);
         // tear the primary copy behind the DHT's back
         let plan = crate::dht::coarse::Plan::replica(&cfg, &key, 0);
-        let off = cfg.layout.bucket_off(plan.indices[0])
+        let off = cfg.layout.bucket_off(plan.idx(0))
             + cfg.layout.val_off() as u64;
         let mut word = rma.get(plan.target, off, 8);
         word[0] ^= 0xFF;

@@ -4,6 +4,7 @@
 //! mpi-dht info
 //! mpi-dht bench-kv   --variant lockfree --dist zipfian --ranks 128..640:128
 //! mpi-dht bench-daos --clients 12..72:12 --ops 20000
+//! mpi-dht bench-compare BENCH_old.json BENCH_new.json --tol 15
 //! mpi-dht poet-des   --ranks 128,640 --variant lockfree
 //! mpi-dht poet       --ny 24 --nx 72 --steps 100 --workers 2 --engine pjrt
 //! ```
@@ -14,6 +15,7 @@
 use anyhow::{anyhow, Result};
 
 use mpi_dht::bench::table::{mops, us, Table};
+use mpi_dht::bench::traj::{self, Trajectory};
 use mpi_dht::bench::{run_daos, run_kv, Dist, KvCfg, Mode};
 use mpi_dht::cli::Args;
 use mpi_dht::config::Config;
@@ -37,6 +39,7 @@ fn main() {
         "info" => cmd_info(),
         "bench-kv" => cmd_bench_kv(&args),
         "bench-daos" => cmd_bench_daos(&args),
+        "bench-compare" => cmd_bench_compare(&args),
         "poet-des" => cmd_poet_des(&args),
         "poet" => cmd_poet(&args),
         "help" | "--help" | "-h" => {
@@ -64,6 +67,12 @@ COMMANDS:
                  --pipeline D (in-flight ops per rank, default 1)
   bench-daos   server-based baseline vs coarse DHT (paper Fig. 3)
                  --clients 12..72:12  --ops N
+  bench-compare  diff two BENCH_*.json trajectory points and flag
+                 regressions (EXPERIMENTS.md §Perf "trajectory")
+                 mpi-dht bench-compare OLD.json NEW.json [--tol 15]
+                 [--wall]  (--tol: allowed ops/s drop in percent;
+                 --wall: also gate wall-clock scenarios — only
+                 meaningful when both points ran on one machine)
   poet-des     POET in the DES cluster (paper Fig. 7)
                  --ranks list  --variant none|coarse|fine|lockfree
                  --ny N --nx N --steps N --digits D --pipeline D
@@ -177,6 +186,46 @@ fn cmd_bench_kv(args: &Args) -> Result<()> {
         variant.name()
     );
     print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    let (old_path, new_path) = match args.positional.as_slice() {
+        [_, a, b] => (a, b),
+        _ => {
+            return Err(anyhow!(
+                "usage: mpi-dht bench-compare OLD.json NEW.json \
+                 [--tol PERCENT] [--wall]"
+            ))
+        }
+    };
+    let load = |p: &str| -> Result<Trajectory> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow!("reading {p}: {e}"))?;
+        Trajectory::from_json(&text).map_err(|e| anyhow!("parsing {p}: {e}"))
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    let tol = args.f64_or("--tol", 15.0)?;
+    let gate_wall = args.has("--wall");
+    println!(
+        "# bench-compare {} ({}) -> {} ({}), tol {tol}%{}",
+        old_path,
+        old.label,
+        new_path,
+        new.label,
+        if gate_wall { ", gating wall scenarios" } else { "" }
+    );
+    let report = traj::compare(&old, &new, tol, gate_wall);
+    print!("{}", report.render(tol));
+    if !report.passed() {
+        return Err(anyhow!(
+            "{} scenario(s) regressed more than {tol}%: {}",
+            report.regressions.len(),
+            report.regressions.join(", ")
+        ));
+    }
+    println!("# no gated regressions beyond {tol}%");
     Ok(())
 }
 

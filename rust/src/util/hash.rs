@@ -95,9 +95,60 @@ pub fn xxhash64(data: &[u8], seed: u64) -> u64 {
     h
 }
 
-/// Convenience: xxHash64 with seed 0 (the DHT default).
+/// xxHash64 of exactly 80 bytes — the POET key width (9 species + dt as
+/// LE doubles, `poet::key`).  Byte-identical to [`xxhash64`], but with
+/// every loop unrolled at its fixed trip count: two 32-byte stripes and
+/// two 8-byte tail rounds, no 4- or 1-byte tails and no length branches.
+/// The compiler keeps `v1..v4` in registers and schedules the ten loads
+/// up front, which the generic loop's variable trip counts prevent.
+pub fn xxhash64_80(data: &[u8; 80], seed: u64) -> u64 {
+    #[inline(always)]
+    fn w(data: &[u8; 80], i: usize) -> u64 {
+        u64::from_le_bytes(data[i..i + 8].try_into().unwrap())
+    }
+    let mut v1 = seed.wrapping_add(PRIME64_1).wrapping_add(PRIME64_2);
+    let mut v2 = seed.wrapping_add(PRIME64_2);
+    let mut v3 = seed;
+    let mut v4 = seed.wrapping_sub(PRIME64_1);
+    v1 = round(v1, w(data, 0));
+    v2 = round(v2, w(data, 8));
+    v3 = round(v3, w(data, 16));
+    v4 = round(v4, w(data, 24));
+    v1 = round(v1, w(data, 32));
+    v2 = round(v2, w(data, 40));
+    v3 = round(v3, w(data, 48));
+    v4 = round(v4, w(data, 56));
+    let mut h = v1
+        .rotate_left(1)
+        .wrapping_add(v2.rotate_left(7))
+        .wrapping_add(v3.rotate_left(12))
+        .wrapping_add(v4.rotate_left(18));
+    h = merge_round(h, v1);
+    h = merge_round(h, v2);
+    h = merge_round(h, v3);
+    h = merge_round(h, v4);
+    h = h.wrapping_add(80);
+    h ^= round(0, w(data, 64));
+    h = h.rotate_left(27).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4);
+    h ^= round(0, w(data, 72));
+    h = h.rotate_left(27).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4);
+    h ^= h >> 33;
+    h = h.wrapping_mul(PRIME64_2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(PRIME64_3);
+    h ^= h >> 32;
+    h
+}
+
+/// Convenience: xxHash64 with seed 0 (the DHT default).  The 80-byte
+/// POET key dispatches to the unrolled [`xxhash64_80`] fast path; the
+/// length test is one compare against a constant, hoisted out of
+/// batches by inlining.
 #[inline]
 pub fn key_hash(key: &[u8]) -> u64 {
+    if let Ok(fixed) = <&[u8; 80]>::try_from(key) {
+        return xxhash64_80(fixed, 0);
+    }
     xxhash64(key, 0)
 }
 
@@ -144,6 +195,29 @@ mod tests {
     }
 
     #[test]
+    fn fixed_width_fast_path_matches_generic() {
+        // the unrolled 80-byte path must be byte-identical to the
+        // generic loop for any content and seed
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            state
+        };
+        for seed in [0u64, 1, 20141025, u64::MAX] {
+            for _ in 0..64 {
+                let mut key = [0u8; 80];
+                for chunk in key.chunks_exact_mut(8) {
+                    chunk.copy_from_slice(&next().to_le_bytes());
+                }
+                assert_eq!(xxhash64_80(&key, seed), xxhash64(&key, seed));
+                assert_eq!(key_hash(&key), xxhash64(&key, 0));
+            }
+        }
+        // non-80-byte keys still take the generic path
+        assert_eq!(key_hash(b"abc"), xxhash64(b"abc", 0));
+    }
+
+    #[test]
     fn rank_distribution_uniform() {
         // hashing sequential 80-byte keys spreads evenly over 640 ranks
         let ranks = 640u64;
@@ -157,6 +231,43 @@ mod tests {
         let expect = n as f64 / ranks as f64;
         for &c in &counts {
             assert!((c as f64) > expect * 0.5 && (c as f64) < expect * 1.5);
+        }
+    }
+
+    #[test]
+    fn ladder_coarsened_keys_spread_uniformly() {
+        // Hash-quality regression for the approximate-lookup path: keys
+        // coarsened by the ladder's `round_sig` re-rounding are mostly
+        // zero bytes (2-digit mantissas, six all-zero species, verbatim
+        // dt), i.e. the near-degenerate inputs a weak hash mixes worst.
+        // 64k distinct coarse keys must still spread over 640 ranks as
+        // evenly as the sequential fine keys above do.
+        use crate::poet::key::cell_key;
+        let ranks = 640u64;
+        let mut counts = vec![0u32; ranks as usize];
+        let mut n = 0usize;
+        for a in 0..40u32 {
+            for b in 0..40u32 {
+                for c in 0..40u32 {
+                    // 2-significant-digit lattice values: mantissa
+                    // 1.0..4.9 at three different decades per species
+                    let mut row = [0.0f64; 10];
+                    row[0] = (1.0 + 0.1 * a as f64) * 1e-4;
+                    row[1] = (1.0 + 0.1 * b as f64) * 1e-6;
+                    row[2] = (1.0 + 0.1 * c as f64) * 1e-3;
+                    row[9] = 500.0; // dt, packed verbatim
+                    let key = cell_key(&row, 2);
+                    counts[(key_hash(&key) % ranks) as usize] += 1;
+                    n += 1;
+                }
+            }
+        }
+        let expect = n as f64 / ranks as f64;
+        for (r, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > expect * 0.5 && (c as f64) < expect * 1.5,
+                "rank {r}: {c} vs expected {expect:.1}"
+            );
         }
     }
 }

@@ -247,6 +247,43 @@ fn prop_crc_detects_bit_flips() {
     });
 }
 
+/// The allocation-free `encode_into` path is byte-identical to the
+/// original `encode_record` for every variant and (key,val) geometry —
+/// including the CRC word — and the zero-copy accessors decode it.
+#[test]
+fn prop_encode_into_matches_encode_record() {
+    prop_check("encode-into-equivalence", 300, |g: &mut G| {
+        let variant = *g.pick(&Variant::ALL);
+        let klen = g.usize_in(1..200);
+        let vlen = g.usize_in(1..300);
+        let l = BucketLayout::new(variant, klen, vlen);
+        let mut scratch = Vec::new();
+        // reuse the scratch across records: stale bytes from a previous
+        // encoding must never leak into the next one
+        for _ in 0..g.usize_in(1..4) {
+            let key = g.bytes(klen);
+            let val = g.bytes(vlen);
+            let reference = l.encode_record(&key, &val);
+            l.encode_into(&key, &val, &mut scratch);
+            prop_assert_eq!(&scratch, &reference);
+            // deferred-CRC + batch-fill path agrees byte for byte too
+            let mut nocrc = Vec::new();
+            l.encode_into_nocrc(&key, &val, &mut nocrc);
+            let mut batch = vec![nocrc];
+            l.fill_crc_batch(&mut batch);
+            prop_assert_eq!(&batch[0], &reference);
+            // zero-copy decode round-trips (incl. the CRC word)
+            prop_assert_eq!(l.key_of(&scratch), &key[..]);
+            prop_assert_eq!(l.val_of(&scratch), &val[..]);
+            if variant == Variant::LockFree {
+                prop_assert!(l.crc_ok(&scratch));
+                prop_assert_eq!(l.crc_of(&scratch), record_crc(&key, &val));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Significant-digit rounding: idempotent, monotone in digits, magnitude
 /// preserving, and sign preserving.
 #[test]

@@ -1,0 +1,680 @@
+/* bench_mirror.c — C mirror of the `record` bench's wall-clock scenarios.
+ *
+ * The repo's growth environment has no Rust toolchain, so the two
+ * committed trajectory points of the hot-path raw-speed pass
+ * (BENCH_2026-08-07-before.json / -after.json) are measured with this
+ * mirror instead of `cargo bench --bench record`.  It reimplements, in
+ * C, the exact op compositions the pass changed:
+ *
+ *   before: per-op key derivation into a fresh heap buffer (the old
+ *           `key_for` -> Vec), byte-generic xxHash64, early-exit memcmp
+ *           key compare, per-record CRC32C with a per-call feature
+ *           check, per-record heap-allocated encode.
+ *   after:  precomputed key corpus (one slab, indexed), the unrolled
+ *           fixed-80-byte xxHash64 fast path, branchless u64-fold key
+ *           compare, CRC32C batched over 16-record epochs with one
+ *           hoisted feature check, encode into one reused scratch.
+ *
+ * Scenario names and the JSON schema match `rust/src/bench/traj.rs`
+ * exactly, and the provenance is recorded in each file's "runner"
+ * field: these are honest wall-clock measurements of the mirrored
+ * loops, not of the Rust binary.  `sim` scenarios are absent — the
+ * mirror cannot run the DES, and simulated throughput is unaffected by
+ * host-side CPU work anyway.
+ *
+ * build: gcc -O2 -o /tmp/bench_mirror tools/bench_mirror.c -lm
+ * run:   /tmp/bench_mirror [outdir]
+ */
+
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+#include <unistd.h>
+#include <sys/utsname.h>
+
+#define KEY_LEN 80
+#define VAL_LEN 104
+/* lock-free record: [meta u64][key][val][crc u64] */
+#define REC_LEN (8 + KEY_LEN + VAL_LEN + 8)
+#define CORPUS_N 65536
+#define IDS_N (1 << 16)
+#define DEPTH 16
+
+/* ------------------------------------------------------------- splitmix */
+
+static uint64_t splitmix_next(uint64_t *s) {
+    uint64_t z = (*s += 0x9E3779B97F4A7C15ULL);
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ULL;
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EBULL;
+    return z ^ (z >> 31);
+}
+
+/* mirrors bench::keys::fill_from_id (tag-separated splitmix stream) */
+static void fill_from_id(uint64_t id, uint64_t tag, uint8_t *out, size_t n) {
+    uint64_t s = id ^ (tag * 0xA5A5A5A55A5A5A5AULL);
+    for (size_t i = 0; i < n; i += 8) {
+        uint64_t w = splitmix_next(&s);
+        size_t c = n - i < 8 ? n - i : 8;
+        memcpy(out + i, &w, c);
+    }
+}
+
+/* -------------------------------------------------------------- xxhash64 */
+
+#define P1 0x9E3779B185EBCA87ULL
+#define P2 0xC2B2AE3D27D4EB4FULL
+#define P3 0x165667B19E3779F9ULL
+#define P4 0x85EBCA77C2B2AE63ULL
+#define P5 0x27D4EB2F165667C5ULL
+
+static inline uint64_t rotl(uint64_t x, int r) {
+    return (x << r) | (x >> (64 - r));
+}
+
+static inline uint64_t xxh_round(uint64_t acc, uint64_t input) {
+    acc += input * P2;
+    acc = rotl(acc, 31);
+    return acc * P1;
+}
+
+static inline uint64_t xxh_merge(uint64_t acc, uint64_t val) {
+    acc ^= xxh_round(0, val);
+    return acc * P1 + P4;
+}
+
+static inline uint64_t rd64(const uint8_t *p) {
+    uint64_t v;
+    memcpy(&v, p, 8);
+    return v;
+}
+
+static inline uint64_t rd32(const uint8_t *p) {
+    uint32_t v;
+    memcpy(&v, p, 4);
+    return v;
+}
+
+/* the generic length-branching implementation (the "before" hash) */
+static uint64_t xxhash64(const uint8_t *data, size_t len, uint64_t seed) {
+    const uint8_t *p = data, *end = data + len;
+    uint64_t h;
+    if (len >= 32) {
+        uint64_t v1 = seed + P1 + P2, v2 = seed + P2, v3 = seed,
+                 v4 = seed - P1;
+        do {
+            v1 = xxh_round(v1, rd64(p)); p += 8;
+            v2 = xxh_round(v2, rd64(p)); p += 8;
+            v3 = xxh_round(v3, rd64(p)); p += 8;
+            v4 = xxh_round(v4, rd64(p)); p += 8;
+        } while (p + 32 <= end);
+        h = rotl(v1, 1) + rotl(v2, 7) + rotl(v3, 12) + rotl(v4, 18);
+        h = xxh_merge(h, v1);
+        h = xxh_merge(h, v2);
+        h = xxh_merge(h, v3);
+        h = xxh_merge(h, v4);
+    } else {
+        h = seed + P5;
+    }
+    h += (uint64_t)len;
+    while (p + 8 <= end) {
+        h ^= xxh_round(0, rd64(p));
+        h = rotl(h, 27) * P1 + P4;
+        p += 8;
+    }
+    if (p + 4 <= end) {
+        h ^= rd32(p) * P1;
+        h = rotl(h, 23) * P2 + P3;
+        p += 4;
+    }
+    while (p < end) {
+        h ^= (*p++) * P5;
+        h = rotl(h, 11) * P1;
+    }
+    h ^= h >> 33;
+    h *= P2;
+    h ^= h >> 29;
+    h *= P3;
+    h ^= h >> 32;
+    return h;
+}
+
+/* the fully unrolled fixed-80-byte fast path (the "after" hash) */
+static uint64_t xxhash64_80(const uint8_t *d, uint64_t seed) {
+    uint64_t v1 = seed + P1 + P2, v2 = seed + P2, v3 = seed, v4 = seed - P1;
+    v1 = xxh_round(v1, rd64(d + 0));
+    v2 = xxh_round(v2, rd64(d + 8));
+    v3 = xxh_round(v3, rd64(d + 16));
+    v4 = xxh_round(v4, rd64(d + 24));
+    v1 = xxh_round(v1, rd64(d + 32));
+    v2 = xxh_round(v2, rd64(d + 40));
+    v3 = xxh_round(v3, rd64(d + 48));
+    v4 = xxh_round(v4, rd64(d + 56));
+    uint64_t h = rotl(v1, 1) + rotl(v2, 7) + rotl(v3, 12) + rotl(v4, 18);
+    h = xxh_merge(h, v1);
+    h = xxh_merge(h, v2);
+    h = xxh_merge(h, v3);
+    h = xxh_merge(h, v4);
+    h += 80;
+    h ^= xxh_round(0, rd64(d + 64));
+    h = rotl(h, 27) * P1 + P4;
+    h ^= xxh_round(0, rd64(d + 72));
+    h = rotl(h, 27) * P1 + P4;
+    h ^= h >> 33;
+    h *= P2;
+    h ^= h >> 29;
+    h *= P3;
+    h ^= h >> 32;
+    return h;
+}
+
+/* --------------------------------------------------------------- crc32c */
+
+static uint32_t crc_table[256];
+
+static void crc_init(void) {
+    for (uint32_t i = 0; i < 256; i++) {
+        uint32_t c = i;
+        for (int k = 0; k < 8; k++)
+            c = (c >> 1) ^ (0x82F63B78U & (0U - (c & 1)));
+        crc_table[i] = c;
+    }
+}
+
+static uint32_t crc32c_sw(uint32_t crc, const uint8_t *p, size_t n) {
+    crc = ~crc;
+    while (n--)
+        crc = crc_table[(crc ^ *p++) & 0xFF] ^ (crc >> 8);
+    return ~crc;
+}
+
+#if defined(__x86_64__)
+__attribute__((target("sse4.2")))
+static uint32_t crc32c_hw(uint32_t crc, const uint8_t *p, size_t n) {
+    crc = ~crc;
+    while (n >= 8) {
+        crc = (uint32_t)__builtin_ia32_crc32di(crc, rd64(p));
+        p += 8;
+        n -= 8;
+    }
+    while (n--)
+        crc = __builtin_ia32_crc32qi(crc, *p++);
+    return ~crc;
+}
+#endif
+
+static int have_sse42(void) {
+#if defined(__x86_64__)
+    return __builtin_cpu_supports("sse4.2");
+#else
+    return 0;
+#endif
+}
+
+/* "before": the runtime dispatch (is_x86_feature_detected!) per call */
+static uint32_t crc_record_detect(const uint8_t *p, size_t n) {
+#if defined(__x86_64__)
+    if (have_sse42())
+        return crc32c_hw(0, p, n);
+#endif
+    return crc32c_sw(0, p, n);
+}
+
+/* -------------------------------------------------------- key compares */
+
+/* "before": early-exit memcmp */
+static int keys_equal_memcmp(const uint8_t *a, const uint8_t *b) {
+    return memcmp(a, b, KEY_LEN) == 0;
+}
+
+/* "after": branchless u64 XOR-OR fold, no early exit */
+static int keys_equal_fold(const uint8_t *a, const uint8_t *b) {
+    uint64_t acc = 0;
+    for (int i = 0; i < KEY_LEN; i += 8)
+        acc |= rd64(a + i) ^ rd64(b + i);
+    return acc == 0;
+}
+
+/* ------------------------------------------------------------ harness */
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + (double)ts.tv_nsec * 1e-9;
+}
+
+typedef struct {
+    const char *name;
+    uint64_t ops;
+    double ops_per_s;
+    uint64_t p50_ns;
+    uint64_t p99_ns;
+} scenario_t;
+
+static int cmp_dbl(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+/* warm-up excluded; per-call per-op latencies give p50/p99 — the same
+ * shape as record.rs's wall() runner */
+static scenario_t run_wall(const char *name, uint64_t (*f)(void *),
+                           void *ctx) {
+    double warm = now_s();
+    while (now_s() - warm < 0.06)
+        f(ctx);
+    enum { MAXS = 200000 };
+    static double samples[MAXS];
+    size_t nsamples = 0;
+    uint64_t ops = 0;
+    double t0 = now_s(), el;
+    do {
+        double c0 = now_s();
+        uint64_t n = f(ctx);
+        double dt = now_s() - c0;
+        ops += n;
+        if (n > 0 && nsamples < MAXS)
+            samples[nsamples++] = dt * 1e9 / (double)n;
+        el = now_s() - t0;
+    } while (el < 0.3);
+    qsort(samples, nsamples, sizeof(double), cmp_dbl);
+    scenario_t s;
+    s.name = name;
+    s.ops = ops;
+    s.ops_per_s = (double)ops / el;
+    s.p50_ns = nsamples ? (uint64_t)samples[nsamples / 2] : 0;
+    s.p99_ns = nsamples ? (uint64_t)samples[(size_t)((double)(nsamples - 1) * 0.99)] : 0;
+    fprintf(stderr, "%-28s %14.0f ops/s  p50 %6lu ns  p99 %6lu ns\n",
+            s.name, s.ops_per_s, (unsigned long)s.p50_ns,
+            (unsigned long)s.p99_ns);
+    return s;
+}
+
+/* ------------------------------------------------------- shared corpus */
+
+static uint8_t *corpus;           /* CORPUS_N x KEY_LEN slab */
+static uint8_t *vals;             /* CORPUS_N x VAL_LEN slab */
+static uint32_t *ids;             /* pinned zipfian id sequence */
+static uint8_t *buckets;          /* CORPUS_N x REC_LEN table */
+static volatile uint64_t sink;    /* optimizer barrier */
+
+static void build_corpus(void) {
+    corpus = malloc((size_t)CORPUS_N * KEY_LEN);
+    vals = malloc((size_t)CORPUS_N * VAL_LEN);
+    for (uint64_t i = 0; i < CORPUS_N; i++) {
+        fill_from_id(i, 0x4B4559ULL, corpus + i * KEY_LEN, KEY_LEN);
+        fill_from_id(i, 0x56414CULL, vals + i * VAL_LEN, VAL_LEN);
+    }
+    /* zipfian(0.99) ids over [0, CORPUS_N) by inverse CDF, seed-pinned */
+    double *cdf = malloc(sizeof(double) * CORPUS_N);
+    double z = 0;
+    for (uint64_t i = 0; i < CORPUS_N; i++) {
+        z += 1.0 / __builtin_pow((double)(i + 1), 0.99);
+        cdf[i] = z;
+    }
+    ids = malloc(sizeof(uint32_t) * IDS_N);
+    uint64_t s = 0xBEAC0BEULL;
+    for (size_t i = 0; i < IDS_N; i++) {
+        double u = (double)(splitmix_next(&s) >> 11) / 9007199254740992.0 * z;
+        uint32_t lo = 0, hi = CORPUS_N - 1;
+        while (lo < hi) {
+            uint32_t mid = (lo + hi) / 2;
+            if (cdf[mid] < u)
+                lo = mid + 1;
+            else
+                hi = mid;
+        }
+        ids[i] = lo;
+    }
+    free(cdf);
+    /* the lock-free table, one direct-mapped bucket per corpus key
+     * (meta | key | val | crc) — reads always find their record, like
+     * the warmed shm table in record.rs */
+    buckets = malloc((size_t)CORPUS_N * REC_LEN);
+    for (uint64_t i = 0; i < CORPUS_N; i++) {
+        uint8_t *r = buckets + i * REC_LEN;
+        uint64_t meta = 1; /* OCCUPIED */
+        memcpy(r, &meta, 8);
+        memcpy(r + 8, corpus + i * KEY_LEN, KEY_LEN);
+        memcpy(r + 8 + KEY_LEN, vals + i * VAL_LEN, VAL_LEN);
+        uint64_t crc = crc_record_detect(r + 8, KEY_LEN + VAL_LEN);
+        memcpy(r + 8 + KEY_LEN + VAL_LEN, &crc, 8);
+    }
+}
+
+/* --------------------------------------------------- micro: hash 80 B */
+
+/* a different corpus key each iteration keeps the compiler from
+ * hoisting the (pure) hash out of the loop */
+static uint64_t micro_hash_before(void *ctx) {
+    (void)ctx;
+    uint64_t acc = 0;
+    for (uint64_t i = 0; i < 10000; i++)
+        acc ^= xxhash64(corpus + (i & 0xFFF) * KEY_LEN, KEY_LEN, 0);
+    sink = acc;
+    return 10000;
+}
+
+static uint64_t micro_hash_after(void *ctx) {
+    (void)ctx;
+    uint64_t acc = 0;
+    for (uint64_t i = 0; i < 10000; i++)
+        acc ^= xxhash64_80(corpus + (i & 0xFFF) * KEY_LEN, 0);
+    sink = acc;
+    return 10000;
+}
+
+/* ---------------------------------------------------- micro: encode */
+
+/* before: encode_record — fresh heap buffer per record + per-call CRC
+ * dispatch (the old per-write Vec) */
+static uint64_t micro_encode_before(void *ctx) {
+    (void)ctx;
+    for (uint64_t i = 0; i < 1000; i++) {
+        const uint8_t *key = corpus + (i % CORPUS_N) * KEY_LEN;
+        uint8_t *rec = malloc(REC_LEN);
+        sink = (uint64_t)(uintptr_t)rec; /* escape: keep the malloc */
+        uint64_t meta = 1;
+        memcpy(rec, &meta, 8);
+        memcpy(rec + 8, key, KEY_LEN);
+        memcpy(rec + 8 + KEY_LEN, vals + 7 * VAL_LEN, VAL_LEN);
+        uint64_t crc = crc_record_detect(rec + 8, KEY_LEN + VAL_LEN);
+        memcpy(rec + 8 + KEY_LEN + VAL_LEN, &crc, 8);
+        sink = rec[8];
+        free(rec);
+    }
+    return 1000;
+}
+
+/* after: encode_into — one reused scratch, CRC still per record here
+ * (batching is its own scenario below) */
+static uint64_t micro_encode_after(void *ctx) {
+    uint8_t *scratch = ctx;
+    for (uint64_t i = 0; i < 1000; i++) {
+        const uint8_t *key = corpus + (i % CORPUS_N) * KEY_LEN;
+        uint64_t meta = 1;
+        memcpy(scratch, &meta, 8);
+        memcpy(scratch + 8, key, KEY_LEN);
+        memcpy(scratch + 8 + KEY_LEN, vals + 7 * VAL_LEN, VAL_LEN);
+        uint64_t crc = crc_record_detect(scratch + 8, KEY_LEN + VAL_LEN);
+        memcpy(scratch + 8 + KEY_LEN + VAL_LEN, &crc, 8);
+        sink = scratch[8];
+    }
+    return 1000;
+}
+
+/* ------------------------------------------------- micro: CRC batching */
+
+static uint8_t crc_batch[64][REC_LEN];
+
+static uint64_t micro_crc_before(void *ctx) {
+    (void)ctx;
+    for (int r = 0; r < 16; r++)
+        for (int i = 0; i < 64; i++) {
+            /* per-record runtime dispatch, like record_crc() */
+            uint64_t crc =
+                crc_record_detect(crc_batch[i] + 8, KEY_LEN + VAL_LEN);
+            memcpy(crc_batch[i] + 8 + KEY_LEN + VAL_LEN, &crc, 8);
+        }
+    sink = crc_batch[0][REC_LEN - 1];
+    return 16 * 64;
+}
+
+static uint64_t micro_crc_after(void *ctx) {
+    (void)ctx;
+    for (int r = 0; r < 16; r++) {
+        /* one hoisted feature check per batch, like fill_crc_batch() */
+#if defined(__x86_64__)
+        if (have_sse42()) {
+            for (int i = 0; i < 64; i++) {
+                uint64_t crc =
+                    crc32c_hw(0, crc_batch[i] + 8, KEY_LEN + VAL_LEN);
+                memcpy(crc_batch[i] + 8 + KEY_LEN + VAL_LEN, &crc, 8);
+            }
+            continue;
+        }
+#endif
+        for (int i = 0; i < 64; i++) {
+            uint64_t crc =
+                crc32c_sw(0, crc_batch[i] + 8, KEY_LEN + VAL_LEN);
+            memcpy(crc_batch[i] + 8 + KEY_LEN + VAL_LEN, &crc, 8);
+        }
+    }
+    sink = crc_batch[0][REC_LEN - 1];
+    return 16 * 64;
+}
+
+/* ------------------------------------- zipfian read, 16-deep batches */
+
+typedef struct {
+    size_t at;
+} cursor_t;
+
+/* before: derive the key into a fresh heap buffer per op (the old
+ * key_for Vec in the bench loop), generic hash, memcmp probe, per-call
+ * CRC dispatch, heap-allocated value copy (Resp::Data Vec) */
+static uint64_t read_before(void *ctx) {
+    cursor_t *c = ctx;
+    uint64_t done = 0;
+    for (int b = 0; b < 64; b++) {
+        for (int l = 0; l < DEPTH; l++) {
+            uint32_t id = ids[c->at + l];
+            uint8_t *key = malloc(KEY_LEN);
+            sink = (uint64_t)(uintptr_t)key; /* escape: keep the malloc */
+            fill_from_id(id, 0x4B4559ULL, key, KEY_LEN);
+            uint64_t h = xxhash64(key, KEY_LEN, 0);
+            const uint8_t *rec = buckets + (uint64_t)id * REC_LEN;
+            sink = h;
+            uint64_t meta;
+            memcpy(&meta, rec, 8);
+            if ((meta & 1) && keys_equal_memcmp(rec + 8, key)) {
+                if (crc_record_detect(rec + 8, KEY_LEN + VAL_LEN)) {
+                    uint8_t *out = malloc(VAL_LEN);
+                    sink = (uint64_t)(uintptr_t)out;
+                    memcpy(out, rec + 8 + KEY_LEN, VAL_LEN);
+                    sink = out[0];
+                    free(out);
+                }
+            }
+            free(key);
+        }
+        c->at = (c->at + DEPTH) % (IDS_N - DEPTH);
+        done += DEPTH;
+    }
+    return done;
+}
+
+/* after: corpus slice, unrolled hash, branchless fold compare, CRC with
+ * the check hoisted out of the epoch, value copied into a reused lane
+ * buffer */
+static uint8_t read_lane[VAL_LEN];
+
+static uint64_t read_after(void *ctx) {
+    cursor_t *c = ctx;
+    uint64_t done = 0;
+    int hw = have_sse42();
+    for (int b = 0; b < 64; b++) {
+        for (int l = 0; l < DEPTH; l++) {
+            uint32_t id = ids[c->at + l];
+            const uint8_t *key = corpus + (uint64_t)id * KEY_LEN;
+            uint64_t h = xxhash64_80(key, 0);
+            const uint8_t *rec = buckets + (uint64_t)id * REC_LEN;
+            sink = h;
+            uint64_t meta;
+            memcpy(&meta, rec, 8);
+            if ((meta & 1) && keys_equal_fold(rec + 8, key)) {
+                uint32_t crc;
+#if defined(__x86_64__)
+                if (hw)
+                    crc = crc32c_hw(0, rec + 8, KEY_LEN + VAL_LEN);
+                else
+#endif
+                    crc = crc32c_sw(0, rec + 8, KEY_LEN + VAL_LEN);
+                if (crc) {
+                    memcpy(read_lane, rec + 8 + KEY_LEN, VAL_LEN);
+                    sink = read_lane[0];
+                }
+            }
+        }
+        c->at = (c->at + DEPTH) % (IDS_N - DEPTH);
+        done += DEPTH;
+    }
+    return done;
+}
+
+/* ------------------------------------ zipfian write, 16-deep batches */
+
+/* before: per-record heap encode + per-record CRC dispatch, then the
+ * bucket store */
+static uint64_t write_before(void *ctx) {
+    cursor_t *c = ctx;
+    uint64_t done = 0;
+    for (int b = 0; b < 64; b++) {
+        for (int l = 0; l < DEPTH; l++) {
+            uint32_t id = ids[c->at + l];
+            uint8_t *key = malloc(KEY_LEN);
+            sink = (uint64_t)(uintptr_t)key; /* escape: keep the malloc */
+            fill_from_id(id, 0x4B4559ULL, key, KEY_LEN);
+            uint64_t h = xxhash64(key, KEY_LEN, 0);
+            sink = h;
+            uint8_t *rec = malloc(REC_LEN);
+            sink = (uint64_t)(uintptr_t)rec;
+            uint64_t meta = 1;
+            memcpy(rec, &meta, 8);
+            memcpy(rec + 8, key, KEY_LEN);
+            memcpy(rec + 8 + KEY_LEN, vals + (uint64_t)id * VAL_LEN,
+                   VAL_LEN);
+            uint64_t crc = crc_record_detect(rec + 8, KEY_LEN + VAL_LEN);
+            memcpy(rec + 8 + KEY_LEN + VAL_LEN, &crc, 8);
+            memcpy(buckets + (uint64_t)id * REC_LEN, rec, REC_LEN);
+            free(rec);
+            free(key);
+        }
+        c->at = (c->at + DEPTH) % (IDS_N - DEPTH);
+        done += DEPTH;
+    }
+    return done;
+}
+
+/* after: 16 reused lane scratches, one hoisted CRC pass per epoch */
+static uint8_t write_lanes[DEPTH][REC_LEN];
+
+static uint64_t write_after(void *ctx) {
+    cursor_t *c = ctx;
+    uint64_t done = 0;
+    int hw = have_sse42();
+    for (int b = 0; b < 64; b++) {
+        for (int l = 0; l < DEPTH; l++) {
+            uint32_t id = ids[c->at + l];
+            const uint8_t *key = corpus + (uint64_t)id * KEY_LEN;
+            uint64_t h = xxhash64_80(key, 0);
+            sink = h;
+            uint8_t *rec = write_lanes[l];
+            uint64_t meta = 1;
+            memcpy(rec, &meta, 8);
+            memcpy(rec + 8, key, KEY_LEN);
+            memcpy(rec + 8 + KEY_LEN, vals + (uint64_t)id * VAL_LEN,
+                   VAL_LEN);
+        }
+        /* fill_crc_batch over the epoch's pending records */
+#if defined(__x86_64__)
+        if (hw) {
+            for (int l = 0; l < DEPTH; l++) {
+                uint64_t crc =
+                    crc32c_hw(0, write_lanes[l] + 8, KEY_LEN + VAL_LEN);
+                memcpy(write_lanes[l] + 8 + KEY_LEN + VAL_LEN, &crc, 8);
+            }
+        } else
+#endif
+        {
+            for (int l = 0; l < DEPTH; l++) {
+                uint64_t crc =
+                    crc32c_sw(0, write_lanes[l] + 8, KEY_LEN + VAL_LEN);
+                memcpy(write_lanes[l] + 8 + KEY_LEN + VAL_LEN, &crc, 8);
+            }
+        }
+        for (int l = 0; l < DEPTH; l++) {
+            uint32_t id = ids[c->at + l];
+            memcpy(buckets + (uint64_t)id * REC_LEN, write_lanes[l],
+                   REC_LEN);
+        }
+        c->at = (c->at + DEPTH) % (IDS_N - DEPTH);
+        done += DEPTH;
+    }
+    return done;
+}
+
+/* -------------------------------------------------------------- output */
+
+static void write_point(const char *path, const char *label,
+                        const scenario_t *s, size_t n) {
+    FILE *f = fopen(path, "w");
+    if (!f) {
+        perror(path);
+        exit(1);
+    }
+    struct utsname u;
+    uname(&u);
+    char host[256] = "unknown-host";
+    gethostname(host, sizeof(host) - 1);
+    fprintf(f, "{\n");
+    fprintf(f, "  \"schema\": \"mpi-dht-bench-trajectory/v1\",\n");
+    fprintf(f, "  \"date\": \"2026-08-07\",\n");
+    fprintf(f, "  \"label\": \"%s\",\n", label);
+    fprintf(f,
+            "  \"runner\": \"tools/bench_mirror.c (gcc -O2) — C mirror "
+            "of the %s hot loop; wall scenarios only, no Rust toolchain "
+            "in the measurement environment\",\n",
+            label);
+    fprintf(f, "  \"machine\": \"%s-%s %s\",\n", u.machine, u.sysname,
+            host);
+    fprintf(f, "  \"scenarios\": [\n");
+    for (size_t i = 0; i < n; i++)
+        fprintf(f,
+                "    {\"name\": \"%s\", \"kind\": \"wall\", \"ops\": %lu, "
+                "\"ops_per_s\": %.1f, \"p50_ns\": %lu, \"p99_ns\": %lu}%s\n",
+                s[i].name, (unsigned long)s[i].ops, s[i].ops_per_s,
+                (unsigned long)s[i].p50_ns, (unsigned long)s[i].p99_ns,
+                i + 1 == n ? "" : ",");
+    fprintf(f, "  ]\n}\n");
+    fclose(f);
+    fprintf(stderr, "wrote %s\n", path);
+}
+
+int main(int argc, char **argv) {
+    const char *outdir = argc > 1 ? argv[1] : ".";
+    crc_init();
+    build_corpus();
+    memset(crc_batch, 0x5A, sizeof(crc_batch));
+    char path[512];
+    scenario_t s[8];
+    size_t n;
+    cursor_t cur;
+    uint8_t scratch[REC_LEN];
+
+    fprintf(stderr, "== before (pre-pass op composition) ==\n");
+    n = 0;
+    s[n++] = run_wall("xxhash64_80b_key", micro_hash_before, NULL);
+    s[n++] = run_wall("encode_into_80x104", micro_encode_before, NULL);
+    s[n++] = run_wall("crc_batch_fill_64rec", micro_crc_before, NULL);
+    cur.at = 0;
+    s[n++] = run_wall("lockfree_zipf_read_d16", read_before, &cur);
+    cur.at = 0;
+    s[n++] = run_wall("lockfree_zipf_write_d16", write_before, &cur);
+    snprintf(path, sizeof(path), "%s/BENCH_2026-08-07-before.json", outdir);
+    write_point(path, "before-hotpath-pass", s, n);
+
+    fprintf(stderr, "== after (raw-speed pass op composition) ==\n");
+    n = 0;
+    s[n++] = run_wall("xxhash64_80b_key", micro_hash_after, NULL);
+    s[n++] = run_wall("encode_into_80x104", micro_encode_after, scratch);
+    s[n++] = run_wall("crc_batch_fill_64rec", micro_crc_after, NULL);
+    cur.at = 0;
+    s[n++] = run_wall("lockfree_zipf_read_d16", read_after, &cur);
+    cur.at = 0;
+    s[n++] = run_wall("lockfree_zipf_write_d16", write_after, &cur);
+    snprintf(path, sizeof(path), "%s/BENCH_2026-08-07-after.json", outdir);
+    write_point(path, "after-hotpath-pass", s, n);
+    return 0;
+}
