@@ -675,6 +675,28 @@ mod tests {
     }
 
     #[test]
+    fn trajectory_growth_never_gates() {
+        // scenarios added by later PRs (e.g. the chaos/repair soaks)
+        // must never fail an old-vs-new comparison: growth is reported,
+        // not gated — in either direction
+        let old = point("before", vec![scen("read_sim", Kind::Sim, 1000.0)]);
+        let new = point(
+            "after",
+            vec![
+                scen("read_sim", Kind::Sim, 1000.0),
+                scen("chaos_kill_repair_soak", Kind::Sim, 1.0),
+                scen("repair_quantum_wall", Kind::Wall, 2.0),
+            ],
+        );
+        let r = compare(&old, &new, 15.0, true);
+        assert!(r.passed(), "growth must never gate: {:?}", r.regressions);
+        assert_eq!(r.only_new.len(), 2);
+        let r = compare(&new, &old, 15.0, true);
+        assert!(r.passed(), "shrink reports, never fails");
+        assert_eq!(r.only_old.len(), 2);
+    }
+
+    #[test]
     fn compare_within_tolerance_passes() {
         let old = point("b", vec![scen("s", Kind::Sim, 1000.0)]);
         let new = point("a", vec![scen("s", Kind::Sim, 900.0)]);

@@ -25,7 +25,9 @@ const VALUED: &[&str] = &[
     "--zipf-range", "--theta", "--grid", "--pipeline",
     "--resize-at-iter", "--resize-factor", "--replicas", "--kill-rank",
     "--kill-rank-at", "--digits-ladder", "--ladder-tol", "--l1-bytes",
-    "--tol", "--label",
+    "--tol", "--label", "--revive-rank-at", "--retry-budget",
+    "--backoff-base-us", "--kill-at-iter", "--kill-worker",
+    "--revive-at-iter",
 ];
 
 impl Args {
@@ -177,6 +179,20 @@ mod tests {
         assert_eq!(a.u64_or("--digits-ladder", 0).unwrap(), 2);
         assert_eq!(a.f64_or("--ladder-tol", 0.0).unwrap(), 5e-3);
         assert_eq!(a.usize_or("--l1-bytes", 0).unwrap(), 1048576);
+    }
+
+    #[test]
+    fn chaos_flags_take_values_and_repair_is_a_switch() {
+        let a = parse(&[
+            "poet-des", "--kill-rank", "3", "--kill-rank-at", "0.4",
+            "--revive-rank-at", "0.8", "--retry-budget", "5",
+            "--backoff-base-us", "20", "--repair",
+        ]);
+        assert_eq!(a.u64_or("--kill-rank", 0).unwrap(), 3);
+        assert_eq!(a.f64_or("--revive-rank-at", 0.0).unwrap(), 0.8);
+        assert_eq!(a.u64_or("--retry-budget", 0).unwrap(), 5);
+        assert_eq!(a.f64_or("--backoff-base-us", 0.0).unwrap(), 20.0);
+        assert!(a.has("--repair"));
     }
 
     #[test]

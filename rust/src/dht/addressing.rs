@@ -99,14 +99,58 @@ impl Addressing {
     /// Rank holding the `r`-th replica of a key hash (`r = 0` is the
     /// primary, identical to [`Self::target`]).  Successive replicas sit
     /// on successive ranks, so the k replicas are always distinct.
+    ///
+    /// `r` is really a *successor offset*, and is allowed past the
+    /// replication factor (up to `nranks`): the self-healing layer
+    /// (DESIGN.md §11) routes copies to the key's first k **live**
+    /// successors, which may sit beyond offset `k - 1` when ranks in
+    /// between are dead.
     pub fn replica_target(&self, hash: u64, r: u32) -> u32 {
-        debug_assert!(r < self.replicas, "replica index within factor");
+        debug_assert!(r < self.nranks, "successor offset within the ring");
         ((self.target(hash) as u64 + r as u64) % self.nranks as u64) as u32
     }
 
     /// All k replica ranks of a key hash, primary first.
     pub fn replica_targets(&self, hash: u64) -> Vec<u32> {
         (0..self.replicas).map(|r| self.replica_target(hash, r)).collect()
+    }
+
+    /// Successor offsets of the key's first k **live** ranks: walk the
+    /// ring from `hash % nranks`, skip ranks where `is_dead`, and stop
+    /// after k offsets (or after the whole ring when fewer than k ranks
+    /// are live — the *degraded-k* case the caller must report).  With
+    /// nothing dead this is exactly `[0, 1, .., k-1]`, the plain
+    /// placement.  Offsets (not ranks) are returned because every
+    /// per-replica state machine takes the successor offset `r` and
+    /// resolves it through [`Self::replica_target`].
+    pub fn live_successor_offsets(
+        &self,
+        hash: u64,
+        is_dead: impl Fn(u32) -> bool,
+    ) -> Vec<u32> {
+        let mut offsets = Vec::with_capacity(self.replicas as usize);
+        for r in 0..self.nranks {
+            if !is_dead(self.replica_target(hash, r)) {
+                offsets.push(r);
+                if offsets.len() == self.replicas as usize {
+                    break;
+                }
+            }
+        }
+        offsets
+    }
+
+    /// The ranks behind [`Self::live_successor_offsets`] — the key's
+    /// current live homes, primary-most first (DESIGN.md §11).
+    pub fn live_replica_targets(
+        &self,
+        hash: u64,
+        is_dead: impl Fn(u32) -> bool,
+    ) -> Vec<u32> {
+        self.live_successor_offsets(hash, is_dead)
+            .into_iter()
+            .map(|r| self.replica_target(hash, r))
+            .collect()
     }
 
     /// The i-th candidate bucket index for a key hash (i < num_indices()).
@@ -210,6 +254,30 @@ mod tests {
         assert_eq!(Addressing::new(4, 10).with_replicas(99).replicas(), 4);
         assert_eq!(Addressing::new(4, 10).with_replicas(0).replicas(), 1);
         assert_eq!(Addressing::new(1, 10).with_replicas(2).replicas(), 1);
+    }
+
+    #[test]
+    fn live_successors_skip_dead_ranks_and_degrade() {
+        let a = Addressing::new(6, 1000).with_replicas(2);
+        let h = 12u64; // target rank 0, plain homes {0, 1}
+        assert_eq!(a.target(h), 0);
+        // nothing dead: the plain placement
+        assert_eq!(a.live_successor_offsets(h, |_| false), vec![0, 1]);
+        assert_eq!(a.live_replica_targets(h, |_| false), vec![0, 1]);
+        // the secondary home is dead: its copy slides to the next rank
+        assert_eq!(a.live_replica_targets(h, |r| r == 1), vec![0, 2]);
+        assert_eq!(a.live_successor_offsets(h, |r| r == 1), vec![0, 2]);
+        // a dead run straddling the primary: both homes slide
+        let dead = |r: u32| r == 0 || r == 1 || r == 3;
+        assert_eq!(a.live_replica_targets(h, dead), vec![2, 4]);
+        // fewer than k live ranks: degraded to what is achievable
+        let one_live = |r: u32| r != 5;
+        assert_eq!(a.live_replica_targets(h, one_live), vec![5]);
+        assert_eq!(a.live_replica_targets(h, |_| true), Vec::<u32>::new());
+        // the walk wraps the ring: target 4 with rank 5 dead wraps to 0
+        let h4 = 4u64;
+        assert_eq!(a.target(h4), 4);
+        assert_eq!(a.live_replica_targets(h4, |r| r == 5), vec![4, 0]);
     }
 
     #[test]

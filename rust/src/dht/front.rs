@@ -26,6 +26,7 @@ use crate::sim::Time;
 
 use super::l1::L1Cache;
 use super::migrate::{self, DualReadSm, MigrateSm, OneReq};
+use super::repair::RepairSm;
 use super::replica::ReplReadSm;
 use super::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
 
@@ -38,6 +39,11 @@ pub const DEFAULT_PIPELINE: usize = 16;
 /// read/write/batch call during a migration epoch claims this many from
 /// its rank's cursor — DESIGN.md §8; tune with `Dht::set_migrate_quantum`).
 pub const DEFAULT_MIGRATE_QUANTUM: u64 = 32;
+
+/// Local buckets a handle re-examines per piggybacked *repair* quantum
+/// once the failure detector's generation moves (DESIGN.md §11; tune with
+/// `Dht::set_repair_quantum`).
+pub const DEFAULT_REPAIR_QUANTUM: u64 = 32;
 
 /// A per-rank handle to a shared DHT (`DHT_create` returns one per rank).
 pub struct Dht<B: RmaBackend = ShmRma> {
@@ -56,6 +62,20 @@ pub struct Dht<B: RmaBackend = ShmRma> {
     /// Configured L1 budget (kept so [`Self::fork`] can hand the new
     /// thread its own private cache of the same size).
     l1_bytes: usize,
+    /// Whether the self-healing repair scan is enabled (DESIGN.md §11).
+    repair_on: bool,
+    /// Failure-detector generation this handle last armed a repair pass
+    /// against.
+    repair_gen: u64,
+    /// Next local bucket of the in-flight repair pass; `u64::MAX` = no
+    /// pass in flight (the idle sentinel, so enabling repair on a
+    /// healthy cluster never triggers a pointless full scan).
+    repair_cursor: u64,
+    /// Buckets re-examined per piggybacked repair quantum.
+    repair_quantum: u64,
+    /// Backend retry counters already folded into `stats` (delta base,
+    /// so `take_stats` never double-counts a retry across pulls).
+    retries_pulled: (u64, u64),
 }
 
 impl Dht<ShmRma> {
@@ -81,6 +101,11 @@ impl Dht<ShmRma> {
                 migrate_quantum: DEFAULT_MIGRATE_QUANTUM,
                 l1: None,
                 l1_bytes: 0,
+                repair_on: false,
+                repair_gen: 0,
+                repair_cursor: u64::MAX,
+                repair_quantum: DEFAULT_REPAIR_QUANTUM,
+                retries_pulled: (0, 0),
             })
             .collect()
     }
@@ -137,6 +162,11 @@ impl Dht<SimRma> {
                 migrate_quantum: DEFAULT_MIGRATE_QUANTUM,
                 l1: None,
                 l1_bytes: 0,
+                repair_on: false,
+                repair_gen: 0,
+                repair_cursor: u64::MAX,
+                repair_quantum: DEFAULT_REPAIR_QUANTUM,
+                retries_pulled: (0, 0),
             })
             .collect()
     }
@@ -178,6 +208,14 @@ impl<B: RmaBackend> Dht<B> {
             migrate_quantum: self.migrate_quantum,
             l1: None,
             l1_bytes: 0,
+            repair_on: self.repair_on,
+            // the fork arms against the detector's current generation
+            // itself (a shared-rank clone must not re-scan the shard the
+            // parent already repaired for generations it never saw)
+            repair_gen: self.repair_gen,
+            repair_cursor: u64::MAX,
+            repair_quantum: self.repair_quantum,
+            retries_pulled: self.rma.origin_retries(),
         };
         // each thread gets its own private cache (same budget, empty)
         h.set_l1_bytes(self.l1_bytes);
@@ -673,6 +711,93 @@ impl<B: RmaBackend> Dht<B> {
         }
     }
 
+    // ------------------------------------------------------------- repair
+
+    /// Enable (or disable) the self-healing repair scan (DESIGN.md §11):
+    /// whenever the failure detector's generation moves — a rank was
+    /// declared dead, or a dead rank revived — this handle re-walks its
+    /// *own* shard one quantum per DHT call, re-homing every record
+    /// whose k live replica homes lost a copy onto the key's next live
+    /// successors (write-if-absent, CRC-guarded; see `dht::repair`).
+    /// Per-handle state like `set_pipeline`: enable it on every handle
+    /// that should contribute repair work — each rank can only heal the
+    /// records its own window still holds.
+    pub fn set_repair(&mut self, on: bool) {
+        self.repair_on = on;
+    }
+
+    /// Buckets re-examined per piggybacked repair quantum (min 1).
+    pub fn set_repair_quantum(&mut self, quantum: u64) {
+        self.repair_quantum = quantum.max(1);
+    }
+
+    /// Whether a repair pass over this handle's shard is in flight.
+    pub fn repairing(&self) -> bool {
+        self.repair_cursor != u64::MAX
+    }
+
+    /// Piggybacked cooperative repair: advance this handle's shard scan
+    /// by one quantum (no-op unless repair is enabled and the failure
+    /// detector's generation has moved since the last completed pass).
+    fn repair_step(&mut self) {
+        if !self.repair_on || self.old_cfg.is_some() {
+            // during a migration epoch records are mid-flight between
+            // tables; repair resumes when the epoch closes (the detector
+            // generation it armed against is remembered, nothing is lost)
+            return;
+        }
+        let gen = self.rma.health_generation();
+        if gen != self.repair_gen {
+            // deaths/revivals since the last pass: restart the scan
+            self.repair_gen = gen;
+            self.repair_cursor = 0;
+        }
+        if self.repair_cursor == u64::MAX {
+            return;
+        }
+        let rank = self.rma.rank();
+        let nranks = self.rma.nranks();
+        // one liveness snapshot per quantum, via the side-effect-free
+        // query (never arms or consumes a revival probe)
+        let dead: Vec<bool> =
+            (0..nranks).map(|r| self.rma.rank_dead(r)).collect();
+        if dead[rank as usize] {
+            // a dead rank's window has nothing trustworthy to offer:
+            // abandon the pass (the revival bumps the generation and
+            // re-arms it, so nothing is lost)
+            self.repair_cursor = u64::MAX;
+            return;
+        }
+        let buckets = self.cfg.addressing.buckets();
+        let end = (self.repair_cursor + self.repair_quantum).min(buckets);
+        let sms: Vec<RepairSm> = (self.repair_cursor..end)
+            .map(|b| RepairSm::new(&self.cfg, rank, b, &dead))
+            .collect();
+        let depth = self.pipeline;
+        for out in self.rma.exec_batch(sms, depth) {
+            self.stats.record_repair(&out);
+        }
+        self.repair_cursor = if end >= buckets { u64::MAX } else { end };
+    }
+
+    /// Drive this handle's repair scan to completion — tests, drivers
+    /// and checkpoints that want a bounded repair window instead of the
+    /// piggybacked quanta.  Returns once no pass is armed or in flight.
+    pub fn drain_repair(&mut self) {
+        loop {
+            self.sync_epoch();
+            if !self.repair_on || self.old_cfg.is_some() {
+                return;
+            }
+            if self.rma.health_generation() == self.repair_gen
+                && self.repair_cursor == u64::MAX
+            {
+                return;
+            }
+            self.repair_step();
+        }
+    }
+
     // ---------------------------------------------------------------- ops
 
     /// `DHT_read`: returns the cached value, or `None` on miss/corruption.
@@ -696,11 +821,13 @@ impl<B: RmaBackend> Dht<B> {
     pub fn read(&mut self, key: &[u8]) -> Option<Vec<u8>> {
         assert_eq!(key.len(), self.cfg.layout.key_len());
         self.sync_epoch();
-        // piggybacked migration quantum BEFORE the L1 fast path (no-op
-        // outside a migration epoch): a read-mostly workload whose hot
-        // set fits in the L1 must still drive its shard's migration
-        // forward, or a resize epoch could stall indefinitely
+        // piggybacked migration/repair quanta BEFORE the L1 fast path
+        // (no-ops outside a migration epoch / armed repair pass): a
+        // read-mostly workload whose hot set fits in the L1 must still
+        // drive its shard's migration and repair forward, or an epoch
+        // could stall indefinitely
         self.migrate_step();
+        self.repair_step();
         self.l1_sync();
         if let Some(v) = self.l1_get(key) {
             self.stats.record_l1_hit();
@@ -744,6 +871,7 @@ impl<B: RmaBackend> Dht<B> {
                 .expect("one outcome");
         }
         self.migrate_step();
+        self.repair_step();
         self.l1_sync();
         self.l1_put(key, value); // write-through
         let sm = DhtSm::write(self.cfg.variant, &self.cfg, key, value);
@@ -763,6 +891,7 @@ impl<B: RmaBackend> Dht<B> {
     ) -> Vec<Option<Vec<u8>>> {
         self.sync_epoch();
         self.migrate_step();
+        self.repair_step();
         self.l1_sync();
         if self.l1.is_none() {
             let refs: Vec<&[u8]> = keys.iter().map(|k| k.as_ref()).collect();
@@ -898,6 +1027,7 @@ impl<B: RmaBackend> Dht<B> {
         assert_eq!(keys.len(), values.len(), "one value per key");
         self.sync_epoch();
         self.migrate_step();
+        self.repair_step();
         self.l1_sync();
         if self.l1.is_some() {
             // write-through: this rank just produced these values
@@ -926,6 +1056,66 @@ impl<B: RmaBackend> Dht<B> {
         layout.fill_crc_batch(&mut records);
         let k = self.cfg.addressing.replicas();
         if k > 1 {
+            let nranks = self.rma.nranks();
+            if (0..nranks).any(|r| self.rma.rank_dead(r)) {
+                // degraded fan-out (DESIGN.md §11): skip dead successors
+                // at placement time so every copy lands on a live rank.
+                // Fewer than k live ranks degrades to the achievable
+                // replication and reports the worst deficit as a gauge.
+                // The healthy path below stays byte-identical: this
+                // branch only exists while the detector holds deaths.
+                let mut sms: Vec<DhtSm> =
+                    Vec::with_capacity(keys.len() * k as usize);
+                let mut group_sizes: Vec<usize> =
+                    Vec::with_capacity(keys.len());
+                for (hash, record) in hashes.into_iter().zip(records) {
+                    let rma = &self.rma;
+                    let mut offsets = self
+                        .cfg
+                        .addressing
+                        .live_successor_offsets(hash, |r| rma.rank_dead(r));
+                    if offsets.is_empty() {
+                        // every rank is dead: keep the primary SM so the
+                        // per-key outcome channel stays intact (the put
+                        // completes in degraded mode and is dropped)
+                        offsets.push(0);
+                    }
+                    if (offsets.len() as u32) < k {
+                        self.stats.record_degraded(k - offsets.len() as u32);
+                    }
+                    let last = *offsets.last().expect("at least one home");
+                    for &r in &offsets[..offsets.len() - 1] {
+                        sms.push(DhtSm::write_prepared_at(
+                            self.cfg.variant,
+                            &self.cfg,
+                            hash,
+                            record.clone(),
+                            r,
+                        ));
+                    }
+                    sms.push(DhtSm::write_prepared_at(
+                        self.cfg.variant,
+                        &self.cfg,
+                        hash,
+                        record,
+                        last,
+                    ));
+                    group_sizes.push(offsets.len());
+                }
+                let depth = self.pipeline;
+                let mut outs = self.rma.exec_batch(sms, depth).into_iter();
+                let mut res = Vec::with_capacity(group_sizes.len());
+                for n in group_sizes {
+                    let first = outs.next().expect("one outcome per home");
+                    self.stats.record(&first);
+                    res.push(first.outcome);
+                    for _ in 1..n {
+                        let out = outs.next().expect("one outcome per home");
+                        self.stats.record_replica_write(&out);
+                    }
+                }
+                return res;
+            }
             let mut sms: Vec<DhtSm> =
                 Vec::with_capacity(keys.len() * k as usize);
             for (hash, record) in hashes.into_iter().zip(records) {
@@ -1000,7 +1190,22 @@ impl<B: RmaBackend> Dht<B> {
     }
 
     pub fn take_stats(&mut self) -> DhtStats {
+        self.pull_backend_stats();
         std::mem::take(&mut self.stats)
+    }
+
+    /// Fold the backend's retry/health accounting into this handle's
+    /// stats: retries and backoff are pulled as *deltas* against the
+    /// last pull (the counters are per-origin, so per-rank merges stay
+    /// additive and nothing is double-counted); the dead-rank count is
+    /// a gauge snapshot merged by max, like `degraded_k`.
+    fn pull_backend_stats(&mut self) {
+        let (retries, backoff) = self.rma.origin_retries();
+        self.stats.retries += retries - self.retries_pulled.0;
+        self.stats.backoff_ns += backoff - self.retries_pulled.1;
+        self.retries_pulled = (retries, backoff);
+        self.stats.ranks_dead =
+            self.stats.ranks_dead.max(self.rma.ranks_dead());
     }
 }
 
@@ -1528,6 +1733,120 @@ mod tests {
         }
         assert!(handles[3].sim_time() > t_after_writes);
         assert_eq!(handles[3].stats().read_hits, 32);
+    }
+
+    /// Peek-scan `rank`'s shard (current table) for a live record of
+    /// `key` — the placement oracle of the self-healing tests.
+    fn holds_copy<B: RmaBackend>(h: &Dht<B>, rank: u32, key: &[u8]) -> bool {
+        let cfg = &h.cfg;
+        let l = cfg.layout;
+        let rec_len = (l.size() - l.meta_off()) as u32;
+        for b in 0..cfg.addressing.buckets() {
+            let off = cfg.base + l.bucket_off(b) + l.meta_off() as u64;
+            let rec = h.rma.peek(rank, off, rec_len);
+            let meta = l.meta_of(&rec);
+            if !meta.occupied() || meta.invalid() {
+                continue;
+            }
+            if cfg.variant == Variant::LockFree && !l.crc_ok(&rec) {
+                continue;
+            }
+            if l.key_of(&rec) == key {
+                return true;
+            }
+        }
+        false
+    }
+
+    #[test]
+    fn repair_rehomes_lost_copies_after_a_kill() {
+        for variant in Variant::ALL {
+            let mut h = Dht::create_poet(variant, 4, 256 * 1024);
+            for hh in h.iter_mut() {
+                hh.set_replicas(2);
+                hh.set_repair(true);
+            }
+            let keys: Vec<Vec<u8>> = (0..24u8).map(|i| vec![i; 80]).collect();
+            let vals: Vec<Vec<u8>> =
+                (0..24u8).map(|i| vec![i ^ 3; 104]).collect();
+            h[0].write_batch(&keys, &vals);
+            let dead = 1u32;
+            h[0].set_rank_failed(dead, true);
+            // every live handle heals its own shard (a rank can only
+            // push the records its own window still holds)
+            for r in [0usize, 2, 3] {
+                h[r].drain_repair();
+            }
+            let repaired: u64 = [0usize, 2, 3]
+                .iter()
+                .map(|&r| h[r].stats().repaired)
+                .sum();
+            assert!(repaired > 0, "{variant:?}: the kill lost copies");
+            // k-distinct-LIVE-ranks placement is restored for every key,
+            // and every value still reads back with the rank down
+            let addr = h[0].cfg().addressing.clone();
+            for (key, val) in keys.iter().zip(vals.iter()) {
+                let hash = addr.hash(key);
+                let targets = addr.live_replica_targets(hash, |r| r == dead);
+                assert_eq!(targets.len(), 2, "{variant:?}: k live homes");
+                for t in targets {
+                    assert!(
+                        holds_copy(&h[0], t, key),
+                        "{variant:?}: rank {t} misses a copy"
+                    );
+                }
+                assert_eq!(h[3].read(key), Some(val.clone()), "{variant:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_writes_land_on_live_successors() {
+        let mut h = Dht::create_poet(Variant::Fine, 4, 256 * 1024);
+        for hh in h.iter_mut() {
+            hh.set_replicas(2);
+        }
+        let dead = 2u32;
+        h[0].set_rank_failed(dead, true);
+        let keys: Vec<Vec<u8>> = (0..24u8).map(|i| vec![i; 80]).collect();
+        let vals: Vec<Vec<u8>> =
+            (0..24u8).map(|i| vec![i | 128; 104]).collect();
+        h[0].write_batch(&keys, &vals);
+        // with 3 live ranks, k=2 stays achievable: no deficit reported
+        assert_eq!(h[0].stats().degraded_k, 0);
+        let addr = h[0].cfg().addressing.clone();
+        for (key, val) in keys.iter().zip(vals.iter()) {
+            let hash = addr.hash(key);
+            for t in addr.live_replica_targets(hash, |r| r == dead) {
+                assert!(holds_copy(&h[0], t, key), "copy at live rank {t}");
+            }
+            assert!(!holds_copy(&h[0], dead, key), "dead rank got a copy");
+            assert_eq!(h[1].read(key), Some(val.clone()));
+        }
+    }
+
+    #[test]
+    fn writes_degrade_to_achievable_replication() {
+        let mut h = Dht::create_poet(Variant::LockFree, 2, 128 * 1024);
+        for hh in h.iter_mut() {
+            hh.set_replicas(2);
+        }
+        h[0].set_rank_failed(1, true);
+        let key = vec![7u8; 80];
+        let val = vec![9u8; 104];
+        assert_eq!(h[0].write(&key, &val), DhtOutcome::WriteFresh);
+        // the single live copy serves reads
+        assert_eq!(h[0].read(&key), Some(val.clone()));
+        let s = h[0].take_stats();
+        assert_eq!(s.degraded_k, 1, "one copy short of k=2");
+        assert_eq!(s.ranks_dead, 1, "gauge pulled at take_stats");
+        // recovery: revive and write again — the healthy fan-out returns
+        h[0].set_rank_failed(1, false);
+        h[0].write(&key, &val);
+        let s = h[0].take_stats();
+        assert_eq!(s.degraded_k, 0);
+        assert_eq!(s.replica_writes, 1);
+        assert_eq!(s.ranks_dead, 0);
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Per-rank failure detector: the suspected → dead state machine
+//! (DESIGN.md §11).
+//!
+//! The health view is fed by *op outcomes*, not by a heartbeat plane:
+//! whenever the executor exhausts a message's retry budget against a
+//! rank it calls [`HealthView::note_exhausted`], and whenever a message
+//! to a marked rank is delivered it calls [`HealthView::note_ok`].
+//! A rank accumulates **strikes** while suspected; only
+//! [`HealthConfig::dead_after`] *consecutive* exhausted budgets declare
+//! it dead.  Any successful delivery in between resets the rank to
+//! alive, so a transient delay/drop window that a bounded retry ladder
+//! can ride out never produces a false-permanent mark — the acceptance
+//! bar for the chaos suite.
+//!
+//! Dead is not forever.  Traffic to a dead rank is normally skipped
+//! without wire time (degraded mode), but [`HealthView::check`] lets one
+//! op *probe* the rank every [`HealthConfig::probe_interval_ns`]: the
+//! probe either pays a full retry ladder and re-strikes the rank back to
+//! dead, or it is delivered — the rank rejoined — and `note_ok` revives
+//! it.  Every death and revival bumps [`HealthView::generation`], the
+//! signal the repair scan (DESIGN.md §11, `dht/repair.rs`) watches to
+//! restart its cursor.
+//!
+//! The view is deliberately *local state with interior-mutability-free
+//! methods*: the DES cluster owns one behind an `Rc<RefCell<_>>` shared
+//! with its workload, and the threaded shm backend can own one per rank.
+//! Determinism: all timing comes from the caller's simulated clock and
+//! all jitter from [`backoff_ns`]'s splitmix64 hash — no wall clock, no
+//! global RNG.
+
+use crate::sim::Time;
+
+/// Detector tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// Consecutive exhausted retry budgets that declare a rank dead.
+    /// The default 3 means one unlucky message is a suspicion, not a
+    /// death sentence.
+    pub dead_after: u32,
+    /// Minimum simulated time between probes of a dead rank.  Each
+    /// probe lets exactly one op through to test for a rejoin.
+    pub probe_interval_ns: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self { dead_after: 3, probe_interval_ns: 2_000_000 }
+    }
+}
+
+/// Per-rank detector state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RankState {
+    Alive,
+    /// `strikes` consecutive exhausted budgets so far (1..dead_after).
+    Suspected { strikes: u32 },
+    Dead,
+    /// Dead, but one probe op is currently allowed through.
+    Probing,
+}
+
+/// The per-rank health view (one per observer; views are local and may
+/// transiently disagree across ranks, exactly like real SWIM-style
+/// detectors).
+#[derive(Clone, Debug)]
+pub struct HealthView {
+    cfg: HealthConfig,
+    states: Vec<RankState>,
+    /// Next simulated instant a probe of rank `r` is allowed.
+    next_probe: Vec<Time>,
+    /// Bumped on every death and every revival; repair watches this.
+    generation: u64,
+    deaths: u64,
+    revivals: u64,
+}
+
+impl HealthView {
+    pub fn new(nranks: u32, cfg: HealthConfig) -> Self {
+        Self {
+            cfg,
+            states: vec![RankState::Alive; nranks as usize],
+            next_probe: vec![0; nranks as usize],
+            generation: 0,
+            deaths: 0,
+            revivals: 0,
+        }
+    }
+
+    pub fn nranks(&self) -> u32 {
+        self.states.len() as u32
+    }
+
+    /// Rank is declared dead (pure query — a probing rank is *not*
+    /// reported dead, its probe op is in flight).
+    pub fn is_dead(&self, rank: u32) -> bool {
+        self.states[rank as usize] == RankState::Dead
+    }
+
+    /// Rank is anything but confidently alive (dead, probing, or
+    /// suspected).  Used to gate the cheap `note_ok` call on delivery.
+    pub fn is_marked(&self, rank: u32) -> bool {
+        self.states[rank as usize] != RankState::Alive
+    }
+
+    /// Should an op to `rank` issued at `now` be *skipped* in degraded
+    /// mode?  Alive/suspected ranks are never skipped.  A dead rank is
+    /// skipped — except once per probe interval, when one op is let
+    /// through as a probe (flipping the state to `Probing` so
+    /// concurrent lanes keep skipping until the probe resolves).
+    pub fn check(&mut self, rank: u32, now: Time) -> bool {
+        let r = rank as usize;
+        match self.states[r] {
+            RankState::Dead => {
+                if now >= self.next_probe[r] {
+                    self.states[r] = RankState::Probing;
+                    self.next_probe[r] = now + self.cfg.probe_interval_ns;
+                    false // this op is the probe
+                } else {
+                    true
+                }
+            }
+            RankState::Probing => true,
+            _ => false,
+        }
+    }
+
+    /// A message to `rank` was delivered.  Clears suspicion; revives a
+    /// dead/probing rank (counted, generation bumped).
+    pub fn note_ok(&mut self, rank: u32) {
+        let r = rank as usize;
+        match self.states[r] {
+            RankState::Alive => {}
+            RankState::Suspected { .. } => self.states[r] = RankState::Alive,
+            RankState::Dead | RankState::Probing => {
+                self.states[r] = RankState::Alive;
+                self.revivals += 1;
+                self.generation += 1;
+            }
+        }
+    }
+
+    /// A message to `rank` exhausted its retry budget.  Returns `true`
+    /// when this strike *transitions* the rank to dead (so the caller
+    /// can log/report the instant once).
+    pub fn note_exhausted(&mut self, rank: u32) -> bool {
+        let r = rank as usize;
+        match self.states[r] {
+            RankState::Alive => {
+                self.states[r] = if self.cfg.dead_after <= 1 {
+                    self.deaths += 1;
+                    self.generation += 1;
+                    RankState::Dead
+                } else {
+                    RankState::Suspected { strikes: 1 }
+                };
+                self.states[r] == RankState::Dead
+            }
+            RankState::Suspected { strikes } => {
+                let strikes = strikes + 1;
+                if strikes >= self.cfg.dead_after {
+                    self.states[r] = RankState::Dead;
+                    self.deaths += 1;
+                    self.generation += 1;
+                    true
+                } else {
+                    self.states[r] = RankState::Suspected { strikes };
+                    false
+                }
+            }
+            // a failed probe falls straight back to dead — the death was
+            // already counted when the rank first transitioned
+            RankState::Probing => {
+                self.states[r] = RankState::Dead;
+                false
+            }
+            RankState::Dead => false,
+        }
+    }
+
+    /// Monotone counter bumped on every death and revival.  Repair
+    /// compares it against the generation it last scanned at.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn deaths(&self) -> u64 {
+        self.deaths
+    }
+
+    pub fn revivals(&self) -> u64 {
+        self.revivals
+    }
+
+    /// Ranks currently declared dead (probing counts as dead here: the
+    /// rank has not been cleared yet).
+    pub fn dead_count(&self) -> u32 {
+        self.states
+            .iter()
+            .filter(|s| matches!(s, RankState::Dead | RankState::Probing))
+            .count() as u32
+    }
+
+    pub fn live_count(&self) -> u32 {
+        self.nranks() - self.dead_count()
+    }
+}
+
+/// splitmix64 — the standard 64-bit finalizer, used for deterministic
+/// backoff jitter (same mixer as `util::prop`'s case-seed derivation).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Backoff before retry attempt `attempt` (0-based): exponential in the
+/// attempt number with deterministic jitter in `[0, base)` derived from
+/// `seed` — full determinism is what lets the chaos suite pin seeds.
+/// The shift saturates at 10 (1024× base) so a large budget cannot
+/// overflow simulated time.
+pub fn backoff_ns(base: u64, attempt: u32, seed: u64) -> u64 {
+    let base = base.max(1);
+    (base << attempt.min(10)) + splitmix64(seed) % base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(dead_after: u32) -> HealthView {
+        HealthView::new(
+            4,
+            HealthConfig { dead_after, probe_interval_ns: 1_000 },
+        )
+    }
+
+    #[test]
+    fn consecutive_exhaustions_declare_dead() {
+        let mut h = view(3);
+        assert!(!h.note_exhausted(2));
+        assert!(!h.note_exhausted(2));
+        assert!(!h.is_dead(2), "two strikes is suspicion, not death");
+        assert!(h.note_exhausted(2), "third strike transitions");
+        assert!(h.is_dead(2));
+        assert_eq!(h.deaths(), 1);
+        assert_eq!(h.generation(), 1);
+        assert_eq!(h.dead_count(), 1);
+        assert_eq!(h.live_count(), 3);
+        // further strikes at a dead rank change nothing
+        assert!(!h.note_exhausted(2));
+        assert_eq!(h.deaths(), 1);
+    }
+
+    #[test]
+    fn a_delivery_resets_suspicion_no_false_permanent_marks() {
+        let mut h = view(3);
+        h.note_exhausted(1);
+        h.note_exhausted(1);
+        h.note_ok(1); // transient window ended
+        assert!(!h.is_marked(1));
+        // the strike count restarted: two more strikes still only suspect
+        h.note_exhausted(1);
+        h.note_exhausted(1);
+        assert!(!h.is_dead(1));
+        assert_eq!(h.deaths(), 0);
+        assert_eq!(h.generation(), 0, "no death/revival ever happened");
+    }
+
+    #[test]
+    fn dead_rank_is_skipped_except_one_probe_per_interval() {
+        let mut h = view(1);
+        h.note_exhausted(3);
+        assert!(h.is_dead(3));
+        // first check at t=0: probe allowed (next_probe starts at 0)
+        assert!(!h.check(3, 0), "the probe op goes through");
+        // concurrent lanes keep skipping while the probe is in flight
+        assert!(h.check(3, 0), "second lane skips during the probe");
+        assert!(!h.is_dead(3), "probing rank is not reported dead");
+        assert!(h.is_marked(3));
+        // the probe fails: straight back to dead, no double-counted death
+        h.note_exhausted(3);
+        assert!(h.is_dead(3));
+        assert_eq!(h.deaths(), 1);
+        assert!(h.check(3, 500), "within the interval: skip");
+        assert!(!h.check(3, 1_000), "interval elapsed: next probe");
+        // this probe is delivered: the rank rejoined
+        h.note_ok(3);
+        assert!(!h.is_marked(3));
+        assert_eq!(h.revivals(), 1);
+        assert_eq!(h.generation(), 2, "death + revival each bump");
+    }
+
+    #[test]
+    fn alive_ranks_are_never_skipped() {
+        let mut h = view(3);
+        h.note_exhausted(0); // suspected
+        assert!(!h.check(0, 0));
+        assert!(!h.check(1, u64::MAX));
+    }
+
+    #[test]
+    fn dead_after_one_skips_the_suspected_state() {
+        let mut h = view(1);
+        assert!(h.note_exhausted(2));
+        assert!(h.is_dead(2));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_with_bounded_jitter() {
+        let base = 1_000u64;
+        for attempt in 0..8 {
+            let b = backoff_ns(base, attempt, 42);
+            assert!(b >= base << attempt);
+            assert!(b < (base << attempt) + base, "jitter bounded by base");
+        }
+        // deterministic: same seed, same jitter
+        assert_eq!(backoff_ns(base, 3, 7), backoff_ns(base, 3, 7));
+        // different seeds decorrelate retries (overwhelmingly likely to
+        // differ for these fixed inputs)
+        assert_ne!(backoff_ns(base, 3, 7), backoff_ns(base, 3, 8));
+        // shift saturates instead of overflowing
+        let big = backoff_ns(u64::MAX / 2048, 63, 1);
+        assert!(big >= (u64::MAX / 2048) << 10);
+        // base 0 clamps to 1
+        assert!(backoff_ns(0, 0, 0) >= 1);
+    }
+}

@@ -23,9 +23,11 @@ pub mod bucket;
 pub mod coarse;
 pub mod fine;
 pub mod front;
+pub mod health;
 pub mod l1;
 pub mod lockfree;
 pub mod migrate;
+pub mod repair;
 pub mod replica;
 pub mod stats;
 
@@ -34,8 +36,10 @@ use crate::rma::{OpSm, Resp, SmStep};
 pub use addressing::Addressing;
 pub use bucket::{BucketLayout, Meta};
 pub use front::{Dht, DhtCheckpoint};
+pub use health::{backoff_ns, HealthConfig, HealthView};
 pub use l1::{L1Cache, L1Stats};
 pub use migrate::{DualOut, MigrateOut, MigrateResult};
+pub use repair::{RepairOut, RepairResult, RepairSm};
 pub use replica::{ReplOut, ReplReadSm, ReplSm};
 pub use stats::DhtStats;
 

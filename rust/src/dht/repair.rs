@@ -1,0 +1,682 @@
+//! Online replica repair: re-home lost copies after a rank death
+//! (DESIGN.md §11).
+//!
+//! With k-way replication (DESIGN.md §9) a key's copies live on the
+//! first k *successor* ranks of `hash % nranks`.  When the failure
+//! detector ([`crate::dht::health`]) declares a rank dead, every key
+//! with a copy on that rank has lost redundancy; this module restores
+//! the **k-distinct-live-ranks placement invariant** without pausing
+//! traffic, using the same cooperative-quantum pattern as the elastic
+//! resize's [`super::migrate::MigrateSm`]:
+//!
+//! * repair is **rank-local to the surviving copy**: each live rank
+//!   scans *its own shard* (one [`RepairSm`] per bucket, batched into
+//!   pipelined quanta piggybacked on normal `exec_batch` calls), so no
+//!   cross-rank coordination words are needed — the trigger is the
+//!   health view's generation counter, the cursor is per-handle;
+//! * for each valid record the SM computes the key's **live successor
+//!   set** (first k live ranks walking from `hash % nranks`, skipping
+//!   dead ones — [`super::Addressing::live_replica_targets`]) and
+//!   pushes a **write-if-absent** copy to every live home it is not
+//!   already on.  The probe/put sequence per destination is exactly
+//!   `MigrateSm`'s (fine: CAS bucket lock held probe→put; coarse:
+//!   window lock; lock-free: plain probe+put, last-write-wins);
+//! * the push is **CRC-guarded**: a checksum-torn source record is
+//!   skipped, never propagated ([`RepairResult::SkippedEmpty`]) — the
+//!   surviving *good* copy on another rank repairs that key instead.
+//!
+//! The same scan handles **revival**: after a dead rank rejoins (kill
+//! window closed, probe delivered), the generation bumps again and the
+//! next pass write-if-absent re-homes copies back onto their plain
+//! replica set — overflow copies parked on far successors while the
+//! rank was dead become the source that repopulates it lazily.
+//!
+//! Invariants mirror migration's: repair never overwrites a *present*
+//! key (write-if-absent — [`RepairResult::SkippedPresent`] when the
+//! destination already holds it), and it may *drop* a push when every
+//! candidate bucket at the destination is taken by foreign keys
+//! (cache semantics, counted in `DhtStats::repair_dropped`).  On the
+//! locking variants the probe+put holds the bucket/window lock so
+//! if-absent is absolute; on the lock-free path a push racing a
+//! concurrent same-key write is last-write-wins (§4.2's contract) —
+//! values are deterministic functions of their key, so harmless.  A
+//! same-key copy whose *value* was torn at the destination is left to
+//! the read path's CRC invalidation; the invalidated bucket reads as
+//! free and the following pass repairs it from the good copy.
+
+use crate::rma::{OpSm, Req, Resp, SmStep, EXCLUSIVE_LOCK};
+
+use super::bucket::keys_equal;
+use super::coarse::Plan;
+use super::{BucketLayout, DhtConfig, Variant};
+
+/// What one scanned bucket needed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RepairResult {
+    /// At least one missing copy was written to a live home.
+    Repaired,
+    /// The record's live homes all held a copy already — or this rank
+    /// holds the only configured copy (k = 1 healthy placement).
+    SkippedHealthy,
+    /// Copies were probed but every missing home already held the key
+    /// (another surviving replica repaired it first).
+    SkippedPresent,
+    /// Nothing to repair: empty, invalidated, or checksum-torn bucket
+    /// (a torn record is never propagated).
+    SkippedEmpty,
+    /// At least one push was dropped — all candidate buckets at a
+    /// destination were taken by foreign keys (cache semantics).
+    Dropped,
+}
+
+/// Output of one [`RepairSm`] (recorded via `DhtStats::record_repair`).
+#[derive(Clone, Debug)]
+pub struct RepairOut {
+    pub result: RepairResult,
+    /// Copies written to live homes that were missing them.
+    pub pushed: u32,
+    /// Destinations that already held the key.
+    pub present: u32,
+    /// Destinations where every candidate bucket was foreign-taken.
+    pub dropped: u32,
+    /// Destination candidate buckets probed.
+    pub probes: u32,
+    /// Bucket-lock retries (fine-grained only).
+    pub lock_retries: u32,
+}
+
+fn data_of(resp: Resp) -> Vec<u8> {
+    match resp {
+        Resp::Data(d) => d,
+        other => panic!("protocol error: expected Data, got {other:?}"),
+    }
+}
+
+fn word_of(resp: Resp) -> u64 {
+    match resp {
+        Resp::Word(w) => w,
+        other => panic!("protocol error: expected Word, got {other:?}"),
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum RState {
+    Init,
+    /// Coarse: own window locked for the source read.
+    AwaitSrcLock,
+    /// Fine: shared-increment the source bucket's lock word.
+    AwaitSrcIncr,
+    /// Fine: back off a writer-held source bucket.
+    AwaitSrcRevoke,
+    /// The source record `Get` is in flight.
+    AwaitSrcRecord,
+    /// Fine decrement / coarse unlock after the source read.
+    AwaitSrcRelease,
+    /// Coarse: destination `d`'s window lock.
+    AwaitDstLock(usize),
+    /// Fine: CAS on destination `d`'s candidate `i` lock word.
+    AwaitDstCas(usize, usize),
+    /// Probe of destination `d`'s candidate `i`.
+    AwaitDstProbe(usize, usize),
+    /// Fine: release candidate `i` before moving to `i + 1`.
+    AwaitDstMoveOn(usize, usize),
+    /// The write-if-absent `Put` at destination `d`, candidate `i`.
+    AwaitDstPut(usize, usize),
+    /// Fine FAO-release / coarse unlock, then the next destination.
+    AwaitDstRelease(usize),
+}
+
+/// Repair one bucket of the scanning rank's own shard: read the record
+/// under the variant's source protection, compute its live successor
+/// set against a dead-rank snapshot, and write-if-absent a copy to
+/// every live home other than this rank.  Source and destination locks
+/// are never held simultaneously (the source is released before the
+/// first push), so repair cannot deadlock with concurrent traffic or
+/// with another rank's repair quanta.
+pub struct RepairSm {
+    variant: Variant,
+    layout: BucketLayout,
+    /// The scanning rank (owner of the source bucket).
+    rank: u32,
+    src_rec_off: u64,
+    src_lock_off: u64,
+    cfg: DhtConfig,
+    /// Dead-rank snapshot resolved at build time (detector lag is the
+    /// real-world semantics, exactly like `ReplReadSm`'s skip flags).
+    dead: Vec<bool>,
+    /// Key hash, computed once the source record is read.
+    hash: u64,
+    record: Vec<u8>,
+    /// Probe plan into the active destination's table.
+    plan: Option<Plan>,
+    /// Live homes missing-copy pushes go to (this rank excluded).
+    dests: Vec<u32>,
+    state: RState,
+    probes: u32,
+    lock_retries: u32,
+    pushed: u32,
+    present: u32,
+    dropped: u32,
+    empty: bool,
+}
+
+impl RepairSm {
+    /// `bucket` indexes `rank`'s shard of the *current* table view
+    /// (repair defers to migration during a resize epoch, so there is
+    /// never an old table to scan); `dead[r]` is the caller's health
+    /// snapshot for rank `r`.
+    pub fn new(cfg: &DhtConfig, rank: u32, bucket: u64, dead: &[bool]) -> Self {
+        debug_assert!(bucket < cfg.addressing.buckets());
+        debug_assert_eq!(dead.len(), cfg.addressing.nranks() as usize);
+        debug_assert!(!dead[rank as usize], "a dead rank cannot scan");
+        let l = cfg.layout;
+        let bucket_base = cfg.base + l.bucket_off(bucket);
+        Self {
+            variant: cfg.variant,
+            layout: l,
+            rank,
+            src_rec_off: bucket_base + l.meta_off() as u64,
+            src_lock_off: bucket_base,
+            cfg: cfg.clone(),
+            dead: dead.to_vec(),
+            hash: 0,
+            record: Vec::new(),
+            plan: None,
+            dests: Vec::new(),
+            state: RState::Init,
+            probes: 0,
+            lock_retries: 0,
+            pushed: 0,
+            present: 0,
+            dropped: 0,
+            empty: false,
+        }
+    }
+
+    fn plan(&self) -> &Plan {
+        self.plan.as_ref().expect("plan built per destination")
+    }
+
+    fn get_src(&self) -> Req {
+        Req::Get {
+            target: self.rank,
+            offset: self.src_rec_off,
+            len: (self.layout.size() - self.layout.meta_off()) as u32,
+        }
+    }
+
+    fn done(&mut self) -> SmStep<RepairOut> {
+        let result = if self.empty {
+            RepairResult::SkippedEmpty
+        } else if self.pushed > 0 {
+            RepairResult::Repaired
+        } else if self.dropped > 0 {
+            RepairResult::Dropped
+        } else if self.dests.is_empty() {
+            RepairResult::SkippedHealthy
+        } else {
+            RepairResult::SkippedPresent
+        };
+        SmStep::Done(RepairOut {
+            result,
+            pushed: self.pushed,
+            present: self.present,
+            dropped: self.dropped,
+            probes: self.probes,
+            lock_retries: self.lock_retries,
+        })
+    }
+
+    /// Begin pushing to destination `d` (variant-specific entry).
+    fn start_dest(&mut self, d: usize) -> SmStep<RepairOut> {
+        let mut plan = Plan::from_hash(&self.cfg, self.hash);
+        plan.target = self.dests[d];
+        self.plan = Some(plan);
+        if self.variant == Variant::Coarse {
+            self.state = RState::AwaitDstLock(d);
+            SmStep::Issue(Req::LockWin {
+                target: self.dests[d],
+                exclusive: true,
+            })
+        } else {
+            self.start_dst_probe(d, 0)
+        }
+    }
+
+    /// Begin probing destination `d`'s candidate `i`.
+    fn start_dst_probe(&mut self, d: usize, i: usize) -> SmStep<RepairOut> {
+        self.probes += 1;
+        if self.variant == Variant::Fine {
+            self.state = RState::AwaitDstCas(d, i);
+            SmStep::Issue(Req::Cas {
+                target: self.dests[d],
+                offset: self.plan().lock_off(i),
+                expected: 0,
+                desired: EXCLUSIVE_LOCK,
+            })
+        } else {
+            self.state = RState::AwaitDstProbe(d, i);
+            SmStep::Issue(self.plan().get_probe(i))
+        }
+    }
+
+    /// Release whatever is held at destination `d` after its probe/put
+    /// of candidate `i`, then move to the next destination.
+    fn finish_dest(&mut self, d: usize, i: usize) -> SmStep<RepairOut> {
+        match self.variant {
+            Variant::Fine => {
+                self.state = RState::AwaitDstRelease(d);
+                SmStep::Issue(Req::Fao {
+                    target: self.dests[d],
+                    offset: self.plan().lock_off(i),
+                    add: -(EXCLUSIVE_LOCK as i64),
+                })
+            }
+            Variant::Coarse => {
+                self.state = RState::AwaitDstRelease(d);
+                SmStep::Issue(Req::UnlockWin {
+                    target: self.dests[d],
+                    exclusive: true,
+                })
+            }
+            Variant::LockFree => self.next_dest(d),
+        }
+    }
+
+    fn next_dest(&mut self, d: usize) -> SmStep<RepairOut> {
+        if d + 1 < self.dests.len() {
+            self.start_dest(d + 1)
+        } else {
+            self.done()
+        }
+    }
+
+    /// Source record read: decide the push set, then release the
+    /// source protection (before any destination lock is taken).
+    fn after_src_record(&mut self, data: Vec<u8>) -> SmStep<RepairOut> {
+        let l = &self.layout;
+        let meta = l.meta_of(&data);
+        self.empty = !meta.occupied()
+            || meta.invalid()
+            || (self.variant == Variant::LockFree && !l.crc_ok(&data));
+        if !self.empty {
+            self.hash = self.cfg.addressing.hash(l.key_of(&data));
+            let rank = self.rank;
+            let dead = &self.dead;
+            self.dests = self
+                .cfg
+                .addressing
+                .live_replica_targets(self.hash, |r| dead[r as usize])
+                .into_iter()
+                .filter(|&t| t != rank)
+                .collect();
+            self.record = data;
+        }
+        match self.variant {
+            Variant::Fine => {
+                self.state = RState::AwaitSrcRelease;
+                SmStep::Issue(Req::Fao {
+                    target: self.rank,
+                    offset: self.src_lock_off,
+                    add: -1,
+                })
+            }
+            Variant::Coarse => {
+                self.state = RState::AwaitSrcRelease;
+                SmStep::Issue(Req::UnlockWin {
+                    target: self.rank,
+                    exclusive: true,
+                })
+            }
+            Variant::LockFree => self.after_src_release(),
+        }
+    }
+
+    fn after_src_release(&mut self) -> SmStep<RepairOut> {
+        if self.empty || self.dests.is_empty() {
+            self.done()
+        } else {
+            self.start_dest(0)
+        }
+    }
+}
+
+impl OpSm for RepairSm {
+    type Out = RepairOut;
+    fn step(&mut self, resp: Resp) -> SmStep<RepairOut> {
+        match self.state {
+            RState::Init => match self.variant {
+                Variant::Coarse => {
+                    self.state = RState::AwaitSrcLock;
+                    SmStep::Issue(Req::LockWin {
+                        target: self.rank,
+                        exclusive: true,
+                    })
+                }
+                Variant::Fine => {
+                    self.state = RState::AwaitSrcIncr;
+                    SmStep::Issue(Req::Fao {
+                        target: self.rank,
+                        offset: self.src_lock_off,
+                        add: 1,
+                    })
+                }
+                Variant::LockFree => {
+                    self.state = RState::AwaitSrcRecord;
+                    SmStep::Issue(self.get_src())
+                }
+            },
+            RState::AwaitSrcLock => {
+                debug_assert!(matches!(resp, Resp::Ack));
+                self.state = RState::AwaitSrcRecord;
+                SmStep::Issue(self.get_src())
+            }
+            RState::AwaitSrcIncr => {
+                let prev = word_of(resp);
+                if prev < EXCLUSIVE_LOCK {
+                    self.state = RState::AwaitSrcRecord;
+                    SmStep::Issue(self.get_src())
+                } else {
+                    // a writer holds the source bucket: back off, retry
+                    self.lock_retries += 1;
+                    self.state = RState::AwaitSrcRevoke;
+                    SmStep::Issue(Req::Fao {
+                        target: self.rank,
+                        offset: self.src_lock_off,
+                        add: -1,
+                    })
+                }
+            }
+            RState::AwaitSrcRevoke => {
+                let _ = word_of(resp);
+                self.state = RState::AwaitSrcIncr;
+                SmStep::Issue(Req::Fao {
+                    target: self.rank,
+                    offset: self.src_lock_off,
+                    add: 1,
+                })
+            }
+            RState::AwaitSrcRecord => self.after_src_record(data_of(resp)),
+            RState::AwaitSrcRelease => {
+                // fine: the decrement's previous value; coarse: Ack
+                self.after_src_release()
+            }
+            RState::AwaitDstLock(d) => {
+                debug_assert!(matches!(resp, Resp::Ack));
+                self.start_dst_probe(d, 0)
+            }
+            RState::AwaitDstCas(d, i) => {
+                let prev = word_of(resp);
+                if prev == 0 {
+                    self.state = RState::AwaitDstProbe(d, i);
+                    SmStep::Issue(self.plan().get_probe(i))
+                } else {
+                    // termination against a dying destination is the
+                    // health view's job: a dead rank's CAS completes
+                    // vacuously, and the front-end only pushes to
+                    // ranks its dead-snapshot considered live
+                    self.lock_retries += 1;
+                    SmStep::Issue(Req::Cas {
+                        target: self.dests[d],
+                        offset: self.plan().lock_off(i),
+                        expected: 0,
+                        desired: EXCLUSIVE_LOCK,
+                    })
+                }
+            }
+            RState::AwaitDstProbe(d, i) => {
+                let data = data_of(resp);
+                let l = &self.layout;
+                let meta = l.meta_of(&data);
+                let free = !meta.occupied()
+                    || (self.variant == Variant::LockFree && meta.invalid());
+                if free {
+                    self.state = RState::AwaitDstPut(d, i);
+                    return SmStep::Issue(
+                        self.plan().put_record(i, self.record.clone()),
+                    );
+                }
+                if keys_equal(l.key_of(&data), l.key_of(&self.record)) {
+                    // this home already holds the key (concurrent
+                    // write, or another survivor repaired it first)
+                    self.present += 1;
+                    return self.finish_dest(d, i);
+                }
+                if i + 1 == self.plan().n() {
+                    self.dropped += 1;
+                    return self.finish_dest(d, i);
+                }
+                if self.variant == Variant::Fine {
+                    self.state = RState::AwaitDstMoveOn(d, i);
+                    SmStep::Issue(Req::Fao {
+                        target: self.dests[d],
+                        offset: self.plan().lock_off(i),
+                        add: -(EXCLUSIVE_LOCK as i64),
+                    })
+                } else {
+                    self.start_dst_probe(d, i + 1)
+                }
+            }
+            RState::AwaitDstMoveOn(d, i) => {
+                let _ = word_of(resp);
+                self.start_dst_probe(d, i + 1)
+            }
+            RState::AwaitDstPut(d, i) => {
+                debug_assert!(matches!(resp, Resp::Ack));
+                self.pushed += 1;
+                self.finish_dest(d, i)
+            }
+            RState::AwaitDstRelease(d) => {
+                // fine: the release FAO's previous value; coarse: Ack
+                self.next_dest(d)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::{coarse, fine, lockfree, DhtOutcome, DhtSm};
+    use crate::rma::shm::ShmCluster;
+
+    const KEY: usize = 16;
+    const VAL: usize = 24;
+
+    fn cfg_for(variant: Variant, k: u32) -> DhtConfig {
+        DhtConfig::new(variant, 4, 16 * 1024, KEY, VAL).with_replicas(k)
+    }
+
+    fn write_at(
+        rma: &crate::rma::shm::ShmRma,
+        cfg: &DhtConfig,
+        key: &[u8],
+        val: &[u8],
+        r: u32,
+    ) {
+        match cfg.variant {
+            Variant::Coarse => {
+                rma.exec(&mut coarse::WriteSm::new_at(cfg, key, val, r));
+            }
+            Variant::Fine => {
+                rma.exec(&mut fine::WriteSm::new_at(cfg, key, val, r));
+            }
+            Variant::LockFree => {
+                rma.exec(&mut lockfree::WriteSm::new_at(cfg, key, val, r));
+            }
+        }
+    }
+
+    fn read_at(
+        rma: &crate::rma::shm::ShmRma,
+        cfg: &DhtConfig,
+        key: &[u8],
+        r: u32,
+    ) -> DhtOutcome {
+        let hash = cfg.addressing.hash(key);
+        let mut sm = DhtSm::read_hashed_at(cfg.variant, cfg, hash, key, r);
+        rma.exec(&mut sm).outcome
+    }
+
+    /// Run a full repair pass of `rank`'s shard; returns the summed
+    /// (pushed, present, dropped).
+    fn sweep(
+        rma: &crate::rma::shm::ShmRma,
+        cfg: &DhtConfig,
+        rank: u32,
+        dead: &[bool],
+    ) -> (u32, u32, u32) {
+        let (mut pushed, mut present, mut dropped) = (0, 0, 0);
+        for b in 0..cfg.addressing.buckets() {
+            let mut sm = RepairSm::new(cfg, rank, b, dead);
+            let out = rma.exec(&mut sm);
+            pushed += out.pushed;
+            present += out.present;
+            dropped += out.dropped;
+        }
+        (pushed, present, dropped)
+    }
+
+    #[test]
+    fn dead_primary_copy_rehomed_to_next_live_successor() {
+        for variant in Variant::ALL {
+            let cfg = cfg_for(variant, 2);
+            let cluster = ShmCluster::new(4, 16 * 1024);
+            let key = vec![3u8; KEY];
+            let val = vec![9u8; VAL];
+            let hash = cfg.addressing.hash(&key);
+            let primary = cfg.addressing.replica_target(hash, 0);
+            let second = cfg.addressing.replica_target(hash, 1);
+            let rma = cluster.rma(second);
+            // both plain homes hold the key, then the primary dies
+            write_at(&rma, &cfg, &key, &val, 0);
+            write_at(&rma, &cfg, &key, &val, 1);
+            let mut dead = vec![false; 4];
+            dead[primary as usize] = true;
+            // the surviving copy holder scans its shard
+            let (pushed, present, dropped) =
+                sweep(&rma, &cfg, second, &dead);
+            assert_eq!(pushed, 1, "{variant:?}: one copy re-homed");
+            assert_eq!(present, 0, "{variant:?}");
+            assert_eq!(dropped, 0, "{variant:?}");
+            // the new home is the next live successor (offset 2)
+            assert_eq!(
+                read_at(&rma, &cfg, &key, 2),
+                DhtOutcome::ReadHit(val.clone()),
+                "{variant:?}"
+            );
+            // a second pass finds the copy present: repair converges
+            let (pushed, present, _) = sweep(&rma, &cfg, second, &dead);
+            assert_eq!(pushed, 0, "{variant:?}: idempotent");
+            assert_eq!(present, 1, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn healthy_placement_pushes_nothing() {
+        for variant in Variant::ALL {
+            let cfg = cfg_for(variant, 2);
+            let cluster = ShmCluster::new(4, 16 * 1024);
+            let rma = cluster.rma(0);
+            let key = vec![5u8; KEY];
+            write_at(&rma, &cfg, &key, &[1u8; VAL], 0);
+            write_at(&rma, &cfg, &key, &[1u8; VAL], 1);
+            let dead = vec![false; 4];
+            for rank in 0..4 {
+                let (pushed, _, dropped) =
+                    sweep(&cluster.rma(rank), &cfg, rank, &dead);
+                assert_eq!(pushed, 0, "{variant:?} rank {rank}");
+                assert_eq!(dropped, 0, "{variant:?} rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn revival_rehomes_overflow_copy_back_to_plain_homes() {
+        for variant in Variant::ALL {
+            let cfg = cfg_for(variant, 2);
+            let cluster = ShmCluster::new(4, 16 * 1024);
+            let key = vec![7u8; KEY];
+            let val = vec![4u8; VAL];
+            let hash = cfg.addressing.hash(&key);
+            // only an overflow home (successor offset 2) holds the key
+            // — the state repair leaves when both plain homes were dead
+            let overflow = cfg.addressing.replica_target(hash, 2);
+            let rma = cluster.rma(overflow);
+            write_at(&rma, &cfg, &key, &val, 2);
+            // everyone is live again: the overflow holder repopulates
+            // both plain homes write-if-absent
+            let dead = vec![false; 4];
+            let (pushed, _, dropped) = sweep(&rma, &cfg, overflow, &dead);
+            assert_eq!(pushed, 2, "{variant:?}: both plain homes refilled");
+            assert_eq!(dropped, 0, "{variant:?}");
+            for r in 0..2 {
+                assert_eq!(
+                    read_at(&rma, &cfg, &key, r),
+                    DhtOutcome::ReadHit(val.clone()),
+                    "{variant:?} offset {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn torn_source_record_is_never_propagated() {
+        use crate::rma::Req;
+        struct OneShot(Option<Req>);
+        impl OpSm for OneShot {
+            type Out = ();
+            fn step(&mut self, _resp: Resp) -> SmStep<()> {
+                match self.0.take() {
+                    Some(r) => SmStep::Issue(r),
+                    None => SmStep::Done(()),
+                }
+            }
+        }
+        let cfg = cfg_for(Variant::LockFree, 2);
+        let cluster = ShmCluster::new(4, 16 * 1024);
+        let key = vec![8u8; KEY];
+        let hash = cfg.addressing.hash(&key);
+        let primary = cfg.addressing.replica_target(hash, 0);
+        let second = cfg.addressing.replica_target(hash, 1);
+        let rma = cluster.rma(second);
+        write_at(&rma, &cfg, &key, &[6u8; VAL], 1);
+        // tear the surviving copy's value behind the DHT's back
+        let plan = Plan::replica(&cfg, &key, 1);
+        let off =
+            cfg.layout.bucket_off(plan.idx(0)) + cfg.layout.val_off() as u64;
+        let mut word = rma.get(plan.target, off, 8);
+        word[0] ^= 0xFF;
+        rma.exec(&mut OneShot(Some(Req::Put {
+            target: plan.target,
+            offset: off,
+            data: word,
+        })));
+        let mut dead = vec![false; 4];
+        dead[primary as usize] = true;
+        let (pushed, _, _) = sweep(&rma, &cfg, second, &dead);
+        assert_eq!(pushed, 0, "a checksum-torn record is not pushed");
+        // no copy appeared at the would-be new home
+        assert_eq!(read_at(&rma, &cfg, &key, 2), DhtOutcome::ReadMiss);
+    }
+
+    #[test]
+    fn k1_shard_is_healthy_without_pushes() {
+        // unreplicated placement: every record's only live home is the
+        // scanning rank itself — repair must be a no-op
+        let cfg = cfg_for(Variant::Fine, 1);
+        let cluster = ShmCluster::new(4, 16 * 1024);
+        let rma = cluster.rma(0);
+        for i in 0..8u8 {
+            let mut sm =
+                fine::WriteSm::new(&cfg, &[i; KEY], &[i; VAL]);
+            rma.exec(&mut sm);
+        }
+        let dead = vec![false; 4];
+        for rank in 0..4 {
+            let (pushed, present, dropped) =
+                sweep(&cluster.rma(rank), &cfg, rank, &dead);
+            assert_eq!((pushed, present, dropped), (0, 0, 0), "rank {rank}");
+        }
+    }
+}

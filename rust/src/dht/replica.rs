@@ -66,10 +66,15 @@ enum Inner {
 
 /// `DHT_read` with degraded-read failover over the key's k replicas.
 ///
-/// Probes the primary first (skipping it without traffic if the failure
-/// detector marks its rank failed), then falls through replica-by-replica
-/// on miss/corrupt.  The final outcome is the first hit, or the last
-/// replica's miss.
+/// The read follows the key's **live successor set** — the first k
+/// successor offsets whose ranks the failure detector considers live
+/// ([`Addressing::live_successor_offsets`], resolved at build time).
+/// With nothing dead that is exactly the plain replica slots `0..k`;
+/// with dead ranks in the walk it extends past offset `k - 1` to where
+/// the self-healing pass re-homes copies (DESIGN.md §11), so reads find
+/// repaired data without any extra routing state.  Probing falls through
+/// slot-by-slot on miss/corrupt; the final outcome is the first hit, or
+/// the last live slot's miss.
 pub struct ReplReadSm {
     cur: DhtConfig,
     old: Option<DhtConfig>,
@@ -77,14 +82,14 @@ pub struct ReplReadSm {
     /// Key hash, computed once at build time and reused to route every
     /// replica slot (and both tables of a dual lookup).
     hash: u64,
-    /// Per-replica-slot skip flags resolved against the failure detector
-    /// at build time (detector lag is the real-world semantics: an op
+    /// Live successor offsets resolved against the failure detector at
+    /// build time (detector lag is the real-world semantics: an op
     /// already issued at a dying rank still executes in degraded mode).
-    skip: Vec<bool>,
-    /// Replica slot the active inner SM probes.
-    r: u32,
+    slots: Vec<u32>,
+    /// Position in `slots` the active inner SM probes.
+    idx: usize,
     inner: Option<Inner>,
-    /// The primary was actually probed and missed.
+    /// The primary (successor offset 0) was actually probed and missed.
     primary_missed: bool,
     failovers: u32,
     probes: u32,
@@ -106,27 +111,21 @@ impl ReplReadSm {
     ) -> Self {
         let k = cur.addressing.replicas();
         let hash = cur.addressing.hash(key);
-        let skip: Vec<bool> = (0..k)
-            .map(|r| failed(cur.addressing.replica_target(hash, r)))
-            .collect();
-        let mut r = 0u32;
-        let mut failovers = 0u32;
-        while (r as usize) < skip.len() && skip[r as usize] {
-            r += 1;
-            failovers += 1;
-        }
-        let inner = if (r as usize) < skip.len() {
-            Some(Self::inner_for(cur, old, hash, key, r))
-        } else {
-            None
-        };
+        let slots = cur.addressing.live_successor_offsets(hash, &failed);
+        // dead ranks routed around before the first probe; an empty live
+        // set (every rank failed) degrades to a traffic-free miss that
+        // still reports all k slots as routed around
+        let failovers = slots.first().copied().unwrap_or(k);
+        let inner = slots
+            .first()
+            .map(|&r| Self::inner_for(cur, old, hash, key, r));
         Self {
             cur: cur.clone(),
             old: old.cloned(),
             key: key.to_vec(),
             hash,
-            skip,
-            r,
+            slots,
+            idx: 0,
             inner,
             primary_missed: false,
             failovers,
@@ -203,18 +202,10 @@ impl OpSm for ReplReadSm {
                 let done = self.finish(out.outcome, diverged);
                 return SmStep::Done(done);
             }
-            if self.r == 0 {
+            if self.slots[self.idx] == 0 {
                 self.primary_missed = true;
             }
-            // advance to the next live replica slot
-            let mut next = self.r + 1;
-            let mut skipped = 0u32;
-            while (next as usize) < self.skip.len() && self.skip[next as usize]
-            {
-                next += 1;
-                skipped += 1;
-            }
-            if (next as usize) >= self.skip.len() {
+            if self.idx + 1 >= self.slots.len() {
                 // exhausted: the last replica's miss/corrupt stands
                 // (a final ReadCorrupt is counted by `record` itself)
                 let done = self.finish(out.outcome, false);
@@ -226,14 +217,16 @@ impl OpSm for ReplReadSm {
                 // it; flag it for the stats like the dual path does
                 self.primary_corrupt = true;
             }
-            self.failovers += 1 + skipped;
-            self.r = next;
+            // advance to the next live slot; the offset gap counts the
+            // dead ranks routed around in between
+            self.failovers += self.slots[self.idx + 1] - self.slots[self.idx];
+            self.idx += 1;
             self.inner = Some(Self::inner_for(
                 &self.cur,
                 self.old.as_ref(),
                 self.hash,
                 &self.key,
-                next,
+                self.slots[self.idx],
             ));
             resp = Resp::Start;
         }
@@ -407,6 +400,31 @@ mod tests {
         assert!(out.primary_corrupt, "superseded invalidation flagged");
         assert!(out.out.crc_retries > 0, "the tear was detected by CRC");
         assert_eq!(out.failovers, 1);
+    }
+
+    #[test]
+    fn read_follows_repaired_copy_past_the_replica_factor() {
+        // with the primary dead the live successor set is {1, 2}: a
+        // copy the self-healing pass re-homed onto offset 2 is found
+        // even though the configured factor is k = 2
+        let cfg = DhtConfig::new(Variant::Fine, 4, 16 * 1024, KEY, VAL)
+            .with_replicas(2);
+        let cluster = ShmCluster::new(4, 16 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![11u8; KEY];
+        let hash = cfg.addressing.hash(&key);
+        let primary = cfg.addressing.replica_target(hash, 0);
+        // only the re-homed copy exists (offset 1 lags: its write was
+        // lost with the dying rank's in-flight traffic)
+        write_at(&rma, &cfg, &key, &[3u8; VAL], 2);
+        let out = exec_repl(
+            &rma,
+            ReplReadSm::new(&cfg, None, &key, |t| t == primary),
+        );
+        assert_eq!(out.out.outcome, DhtOutcome::ReadHit(vec![3u8; VAL]));
+        // routed around the dead primary and the lagging offset-1 copy
+        assert_eq!(out.failovers, 2);
+        assert!(!out.diverged, "the primary was never probed");
     }
 
     #[test]

@@ -59,6 +59,25 @@ pub struct DhtStats {
     /// non-finite value (no key is sound for such a state; the row goes
     /// straight to chemistry).
     pub nonfinite_skips: u64,
+    /// Retransmission attempts charged to this handle's ops by the
+    /// backend's retry ladder (DESIGN.md §11; pulled from
+    /// [`crate::rma::RmaBackend::origin_retries`] at `take_stats`).
+    pub retries: u64,
+    /// Simulated time spent backing off between those retransmissions.
+    pub backoff_ns: u64,
+    /// Copies the self-healing scan pushed to live homes that were
+    /// missing them ([`super::repair::RepairResult::Repaired`] pushes).
+    pub repaired: u64,
+    /// Repair pushes dropped because every candidate bucket at the
+    /// destination was foreign-taken (cache semantics, DESIGN.md §11).
+    pub repair_dropped: u64,
+    /// Ranks the local failure detector currently declares dead — a
+    /// gauge sampled at `take_stats`, merged with `max` across ranks.
+    pub ranks_dead: u32,
+    /// Largest replication deficit observed: configured k minus the live
+    /// homes actually reachable for some key's write (0 = placement was
+    /// never degraded).  Merged with `max`.
+    pub degraded_k: u32,
     /// Accepted surrogate hits per ladder level (`[0]` = exact fine-level
     /// match, `[l]` = hit at `digits - l` significant digits accepted by
     /// the relative-tolerance test; DESIGN.md §10).  Grows on demand.
@@ -166,6 +185,21 @@ impl DhtStats {
         }
     }
 
+    /// Classify one repair-bucket outcome (self-healing scan, DESIGN.md
+    /// §11).  Like migration, repair traffic stays out of the per-op
+    /// counters so it never skews the application metrics.
+    pub fn record_repair(&mut self, out: &super::repair::RepairOut) {
+        self.repaired += out.pushed as u64;
+        self.repair_dropped += out.dropped as u64;
+    }
+
+    /// Record the replication deficit of one write whose key had fewer
+    /// live homes than the configured factor (DESIGN.md §11's degraded-k
+    /// policy); the gauge keeps the worst case seen.
+    pub fn record_degraded(&mut self, deficit: u32) {
+        self.degraded_k = self.degraded_k.max(deficit);
+    }
+
     /// Classify one migration-bucket outcome (elastic resize).  Kept out
     /// of the per-op counters (`probes`, `reads`, ...) so migration never
     /// skews the paper's application metrics.
@@ -201,6 +235,12 @@ impl DhtStats {
         self.replica_divergence += o.replica_divergence;
         self.l1_hits += o.l1_hits;
         self.nonfinite_skips += o.nonfinite_skips;
+        self.retries += o.retries;
+        self.backoff_ns += o.backoff_ns;
+        self.repaired += o.repaired;
+        self.repair_dropped += o.repair_dropped;
+        self.ranks_dead = self.ranks_dead.max(o.ranks_dead);
+        self.degraded_k = self.degraded_k.max(o.degraded_k);
         if self.ladder_hits.len() < o.ladder_hits.len() {
             self.ladder_hits.resize(o.ladder_hits.len(), 0);
         }
@@ -296,7 +336,13 @@ mod tests {
             replica_divergence: seed + 20,
             l1_hits: seed + 21,
             nonfinite_skips: seed + 22,
-            ladder_hits: vec![seed + 23, seed + 24, seed + 25],
+            retries: seed + 23,
+            backoff_ns: seed + 24,
+            repaired: seed + 25,
+            repair_dropped: seed + 26,
+            ranks_dead: seed as u32 + 27,
+            degraded_k: seed as u32 + 28,
+            ladder_hits: vec![seed + 29, seed + 30, seed + 31],
             max_rel_err: seed as f64 * 1e-6,
         }
     }
@@ -333,10 +379,16 @@ mod tests {
         );
         assert_eq!(a.l1_hits, 2100 + 2 * off.l1_hits);
         assert_eq!(a.nonfinite_skips, 2100 + 2 * off.nonfinite_skips);
+        assert_eq!(a.retries, 2100 + 2 * off.retries);
+        assert_eq!(a.backoff_ns, 2100 + 2 * off.backoff_ns);
+        assert_eq!(a.repaired, 2100 + 2 * off.repaired);
+        assert_eq!(a.repair_dropped, 2100 + 2 * off.repair_dropped);
         for (i, v) in a.ladder_hits.iter().enumerate() {
             assert_eq!(*v, 2100 + 2 * off.ladder_hits[i], "ladder level {i}");
         }
-        // max-channel: merge takes the larger of the two
+        // max-channels (gauges): merge takes the larger of the two
+        assert_eq!(a.ranks_dead, 2000 + off.ranks_dead);
+        assert_eq!(a.degraded_k, 2000 + off.degraded_k);
         assert_eq!(a.max_rel_err, 2000.0 * 1e-6);
     }
 
@@ -433,6 +485,38 @@ mod tests {
         assert_eq!(s.replica_writes, 1);
         assert_eq!(s.writes, 0);
         assert_eq!(s.probes, 6);
+    }
+
+    #[test]
+    fn record_repair_counts_pushes_not_app_metrics() {
+        use crate::dht::repair::{RepairOut, RepairResult};
+        let mut s = DhtStats::default();
+        s.record_repair(&RepairOut {
+            result: RepairResult::Repaired,
+            pushed: 2,
+            present: 1,
+            dropped: 0,
+            probes: 5,
+            lock_retries: 1,
+        });
+        s.record_repair(&RepairOut {
+            result: RepairResult::Dropped,
+            pushed: 0,
+            present: 0,
+            dropped: 1,
+            probes: 6,
+            lock_retries: 0,
+        });
+        assert_eq!(s.repaired, 2);
+        assert_eq!(s.repair_dropped, 1);
+        // repair traffic never skews the application metrics
+        assert_eq!(s.probes, 0);
+        assert_eq!(s.writes, 0);
+        // the degraded-k gauge keeps the worst deficit
+        s.record_degraded(1);
+        s.record_degraded(3);
+        s.record_degraded(2);
+        assert_eq!(s.degraded_k, 3);
     }
 
     #[test]

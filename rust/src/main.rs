@@ -80,6 +80,12 @@ COMMANDS:
                  --kill-rank R --kill-rank-at SECONDS (chaos: kill a
                  rank's DHT shard at a simulated instant; with K >= 2
                  reads fail over and the hit rate survives)
+                 --revive-rank-at SECONDS (the killed rank rejoins cold)
+                 --repair (online replica repair: live ranks re-home the
+                 dead rank's copies, piggybacked on normal batches —
+                 DESIGN.md §11)
+                 --retry-budget N --backoff-base-us U (bounded retry
+                 with exponential backoff feeding failure detection)
                  --digits-ladder L --ladder-tol T --l1-bytes B
                  (approximate surrogate lookup: L coarser key levels
                  probed on a fine miss, accepted within relative
@@ -91,6 +97,10 @@ COMMANDS:
                  --replicas K (k-way DHT replication, DESIGN.md §9)
                  --resize-at-iter N --resize-factor F (online elastic
                  resize mid-run; hit rate recovers live, DESIGN.md §8)
+                 --kill-at-iter N --kill-worker R --revive-at-iter N
+                 --repair (chaos under real threads: fail a worker's
+                 shard mid-run, repair re-homes its copies, DESIGN.md
+                 §11)
                  --digits-ladder L --ladder-tol T --l1-bytes B
                  (approximate surrogate lookup, DESIGN.md §10)
 
@@ -276,6 +286,8 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         "max relerr", "mismatches", "chem cells", "failovers",
         "repl writes",
     ]);
+    // per-run DES/fault/health summary lines, printed below the table
+    let mut notes: Vec<String> = Vec::new();
     for n in ranks {
         let mut c = PoetDesCfg::scaled(n, variant);
         c.ny = args.usize_or("--ny", c.ny)?;
@@ -287,6 +299,13 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         c.l1_bytes = args.usize_or("--l1-bytes", c.l1_bytes)?;
         c.pipeline = args.u64_or("--pipeline", c.pipeline as u64)? as u32;
         c.replicas = args.u64_or("--replicas", c.replicas as u64)? as u32;
+        c.win_bytes = args.usize_or("--win-bytes", c.win_bytes)?;
+        c.repair = args.has("--repair");
+        c.retry_budget =
+            args.u64_or("--retry-budget", c.retry_budget as u64)? as u32;
+        c.backoff_base_ns = (args
+            .f64_or("--backoff-base-us", c.backoff_base_ns as f64 / 1e3)?
+            * 1e3) as u64;
         if args.get("--kill-rank-at").is_some() {
             let at_s = args.f64_or("--kill-rank-at", 0.0)?;
             let rank = args.u64_or("--kill-rank", 1)? as u32;
@@ -295,8 +314,32 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
                 "--kill-rank {rank} out of range for {n} ranks"
             );
             c.kill_rank_at = Some((rank, (at_s * 1e9) as u64));
+            if args.get("--revive-rank-at").is_some() {
+                let rv_s = args.f64_or("--revive-rank-at", 0.0)?;
+                anyhow::ensure!(
+                    rv_s > at_s,
+                    "--revive-rank-at must come after --kill-rank-at"
+                );
+                c.revive_rank_at = Some((rank, (rv_s * 1e9) as u64));
+            }
         }
+        let chaos = c.kill_rank_at.is_some();
         let res = run_poet_des(c, net.clone());
+        notes.push(format!("# ranks={n}: {}", res.sim.summary()));
+        if chaos || res.dht.ranks_dead > 0 {
+            let d = &res.dht;
+            notes.push(format!(
+                "# ranks={n}: health — {} dead, {} op retries \
+                 ({:.3} ms backoff), {} repaired / {} dropped, \
+                 degraded-k deficit {}",
+                d.ranks_dead,
+                d.retries,
+                d.backoff_ns as f64 / 1e6,
+                d.repaired,
+                d.repair_dropped,
+                d.degraded_k
+            ));
+        }
         // coarse-level (approximate) hits: everything above level 0
         let ladder_hits: u64 =
             res.dht.ladder_hits.iter().skip(1).sum();
@@ -318,6 +361,9 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         variant.map(|v| v.name()).unwrap_or("reference")
     );
     print!("{}", t.render());
+    for line in notes {
+        println!("{line}");
+    }
     Ok(())
 }
 
@@ -342,6 +388,20 @@ fn cmd_poet(args: &Args) -> Result<()> {
             Some(args.usize_or("--resize-at-iter", 0)?);
     }
     cfg.resize_factor = args.f64_or("--resize-factor", cfg.resize_factor)?;
+    cfg.repair = args.has("--repair");
+    if args.get("--kill-at-iter").is_some() {
+        let r = args.u64_or("--kill-worker", 1)? as u32;
+        anyhow::ensure!(
+            (r as usize) < cfg.workers,
+            "--kill-worker {r} out of range for {} workers",
+            cfg.workers
+        );
+        cfg.kill_at_step = Some((args.usize_or("--kill-at-iter", 0)?, r));
+        if args.get("--revive-at-iter").is_some() {
+            cfg.revive_at_step =
+                Some((args.usize_or("--revive-at-iter", 0)?, r));
+        }
+    }
     let variants: Vec<Option<Variant>> =
         match args.str_or("--variant", "lockfree") {
             "none" | "reference" => vec![None],
@@ -399,6 +459,33 @@ fn cmd_poet(args: &Args) -> Result<()> {
                 s.max_rel_err,
                 cfg.ladder_rel_tol,
                 s.nonfinite_skips
+            );
+        }
+    }
+    if let Some((at, rank)) = cfg.kill_at_step {
+        for r in &runs {
+            if r.label == "reference" {
+                continue;
+            }
+            let s = &r.stats.dht;
+            let post = r
+                .stats
+                .hit_rate_over(cfg.steps.saturating_sub(10), cfg.steps);
+            println!(
+                "# {}: killed worker {rank} at step {at}{} — {} dead at \
+                 exit, {} repaired / {} dropped, {} failover reads, \
+                 degraded-k deficit {}, final hit rate {:.3}",
+                r.label,
+                match cfg.revive_at_step {
+                    Some((rv, _)) => format!(", revived at step {rv}"),
+                    None => String::new(),
+                },
+                s.ranks_dead,
+                s.repaired,
+                s.repair_dropped,
+                s.failover_reads,
+                s.degraded_k,
+                post
             );
         }
     }

@@ -21,15 +21,19 @@
 //! runtimes therefore scale with the cell ratio, and the *relative* gains
 //! (Tab. 3) are the reproduction target.
 
+use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 
+use crate::dht::health::HealthView;
 use crate::dht::l1::L1Cache;
+use crate::dht::repair::{RepairOut, RepairSm};
 use crate::dht::replica::{ReplOut, ReplReadSm, ReplSm};
 use crate::dht::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
 use crate::net::{NetConfig, Network};
 use crate::rma::fault::FaultPlan;
 use crate::rma::sim::{SimCluster, SimReport};
-use crate::rma::{WorkItem, Workload};
+use crate::rma::{OpSm, Resp, SmStep, WorkItem, Workload};
 use crate::sim::Time;
 
 use super::chemistry::{integrate_cell, ChemCost, N_OUT};
@@ -91,6 +95,22 @@ pub struct PoetDesCfg {
     /// at the given simulated instant — the shard is lost, reads fail
     /// over to replicas, the compute plane keeps running.
     pub kill_rank_at: Option<(u32, u64)>,
+    /// Revive the killed rank at the given simulated instant (DESIGN.md
+    /// §11): its storage serves ops again, the detector's next probe
+    /// notices, and — with `repair` on — the plain placement is restored.
+    pub revive_rank_at: Option<(u32, u64)>,
+    /// Retransmission attempts per message before an op is charged as
+    /// exhausted (feeds the failure detector, DESIGN.md §11).
+    pub retry_budget: u32,
+    /// Base of the exponential retransmission backoff, ns.
+    pub backoff_base_ns: u64,
+    /// Self-healing repair (DESIGN.md §11): when the failure detector's
+    /// generation moves, every live rank re-walks its own shard on lane
+    /// 0 — one bucket per op, interleaved with application traffic on
+    /// the sibling lanes — re-homing records whose k live replica homes
+    /// lost a copy.  Prefer `pipeline >= 2` so the scan never starves
+    /// the application lanes.
+    pub repair: bool,
 }
 
 impl PoetDesCfg {
@@ -116,6 +136,10 @@ impl PoetDesCfg {
             pipeline: 1,
             replicas: 1,
             kill_rank_at: None,
+            revive_rank_at: None,
+            retry_budget: 5,
+            backoff_base_ns: 20_000,
+            repair: false,
         }
     }
 }
@@ -161,6 +185,37 @@ impl PoetDesResult {
     }
 }
 
+/// One unit of lane work: application traffic (surrogate reads/writes,
+/// possibly replicated) or a self-healing repair quantum (DESIGN.md §11).
+/// The wrapper lets repair ride the same DES lanes as the application
+/// ops — cooperative quanta, no paused traffic.
+pub enum JobSm {
+    App(ReplSm),
+    Repair(RepairSm),
+}
+
+/// Completion of a [`JobSm`].
+pub enum JobOut {
+    App(ReplOut),
+    Repair(RepairOut),
+}
+
+impl OpSm for JobSm {
+    type Out = JobOut;
+    fn step(&mut self, resp: Resp) -> SmStep<JobOut> {
+        match self {
+            JobSm::App(sm) => match sm.step(resp) {
+                SmStep::Issue(req) => SmStep::Issue(req),
+                SmStep::Done(out) => SmStep::Done(JobOut::App(out)),
+            },
+            JobSm::Repair(sm) => match sm.step(resp) {
+                SmStep::Issue(req) => SmStep::Issue(req),
+                SmStep::Done(out) => SmStep::Done(JobOut::Repair(out)),
+            },
+        }
+    }
+}
+
 /// What a (rank, lane) currently has in flight.
 enum LaneJob {
     Idle,
@@ -180,6 +235,8 @@ enum LaneJob {
     /// DHT write outstanding (`replica`: a non-primary fan-out copy —
     /// kept out of the application write metrics, DESIGN.md §9).
     Write { replica: bool },
+    /// Self-healing repair quantum outstanding (lane 0, DESIGN.md §11).
+    Repair,
 }
 
 /// Per-cell ladder state while its coarse probes are in flight.
@@ -265,6 +322,15 @@ struct PoetWorkload {
     poll_ns: Vec<u64>,
     /// Last step whose transport has been applied to the grid.
     transport_applied: i64,
+    /// Shared handle on the DES cluster's failure detector (installed by
+    /// `run_poet_des` after the cluster is built; `None` in bare
+    /// construction, e.g. the grid-equivalence test).
+    health: Option<Rc<RefCell<HealthView>>>,
+    /// Per rank: detector generation the last repair pass armed against.
+    repair_gen: Vec<u64>,
+    /// Per rank: next shard bucket of the in-flight repair pass
+    /// (`u64::MAX` = idle).
+    repair_cursor: Vec<u64>,
     stats: DhtStats,
     hits: u64,
     misses: u64,
@@ -323,6 +389,9 @@ impl PoetWorkload {
             lane_job: (0..n * lanes as usize).map(|_| LaneJob::Idle).collect(),
             poll_ns: vec![LANE_POLL_NS; n * lanes as usize],
             transport_applied: -1,
+            health: None,
+            repair_gen: vec![0; n],
+            repair_cursor: vec![u64::MAX; n],
             stats: DhtStats::default(),
             hits: 0,
             misses: 0,
@@ -332,12 +401,46 @@ impl PoetWorkload {
         }
     }
 
-    /// The deterministic failure detector: the workload knows the fault
-    /// plan, so a rank is "detected" failed from its kill instant on —
-    /// an oracle detector, which is exactly what a reproducible chaos
-    /// run wants (ops already in flight still execute in degraded mode).
+    /// Fault-plan half of the failure view: the workload knows the
+    /// schedule, so a killed rank is routed around from its kill instant
+    /// until its revival — deterministic, which is what a reproducible
+    /// chaos run wants (ops already in flight still execute in degraded
+    /// mode).
+    fn plan_dead(&self, target: u32, now: Time) -> bool {
+        let killed = matches!(
+            self.cfg.kill_rank_at, Some((r, at)) if r == target && now >= at
+        );
+        let revived = matches!(
+            self.cfg.revive_rank_at, Some((r, at)) if r == target && now >= at
+        );
+        killed && !revived
+    }
+
+    /// The routing failure view: plan-killed *or* declared dead by the
+    /// online detector (fed by op outcomes — retries exhausting their
+    /// budget, DESIGN.md §11).  Probe-aware: once per probe interval a
+    /// detector-dead rank reports live so exactly one op goes out to
+    /// test for a rejoin.
     fn rank_dead(&self, target: u32, now: Time) -> bool {
-        matches!(self.cfg.kill_rank_at, Some((r, at)) if r == target && now >= at)
+        if self.plan_dead(target, now) {
+            return true;
+        }
+        match &self.health {
+            Some(h) => h.borrow_mut().check(target, now),
+            None => false,
+        }
+    }
+
+    /// Side-effect-free liveness snapshot for placement decisions (never
+    /// arms or consumes a revival probe).
+    fn dead_snapshot(&self, now: Time) -> Vec<bool> {
+        let h = self.health.as_ref().map(|h| h.borrow());
+        (0..self.cfg.nranks)
+            .map(|t| {
+                self.plan_dead(t, now)
+                    || h.as_ref().is_some_and(|h| h.is_dead(t))
+            })
+            .collect()
     }
 
     #[inline]
@@ -362,15 +465,47 @@ impl PoetWorkload {
     }
 
     /// Idle poll with per-lane exponential backoff.
-    fn poll(&mut self, ctx: usize) -> WorkItem<ReplSm> {
+    fn poll(&mut self, ctx: usize) -> WorkItem<JobSm> {
         let ns = self.poll_ns[ctx];
         self.poll_ns[ctx] = (ns * 2).min(LANE_POLL_MAX_NS);
         WorkItem::Think(ns)
     }
 
+    /// Replica successor offsets for storing `key`: `[0..k)` while the
+    /// detector sees a healthy cluster; once it holds deaths, dead
+    /// successors are skipped at placement time, and fewer than k live
+    /// ranks degrades to the achievable replication (DESIGN.md §11).
+    /// Detector-driven on purpose: *pre-detection* writes still target
+    /// the killed rank, and their exhausted retries are exactly what
+    /// feeds the detection.
+    fn store_offsets(&mut self, dcfg: &DhtConfig, key: &[u8]) -> Vec<u32> {
+        let k = dcfg.addressing.replicas();
+        let mut offsets: Vec<u32> = match &self.health {
+            Some(h) => {
+                let hb = h.borrow();
+                if (0..self.cfg.nranks).any(|t| hb.is_dead(t)) {
+                    let hash = dcfg.addressing.hash(key);
+                    dcfg.addressing
+                        .live_successor_offsets(hash, |t| hb.is_dead(t))
+                } else {
+                    (0..k).collect()
+                }
+            }
+            None => (0..k).collect(),
+        };
+        if offsets.is_empty() {
+            offsets.push(0); // every rank dead: keep the outcome channel
+        }
+        if (offsets.len() as u32) < k {
+            self.stats.record_degraded(k - offsets.len() as u32);
+        }
+        offsets
+    }
+
     /// Queue a `key -> val` store on rank `r`'s write queue: the primary
-    /// write (unless the caller issues it on its own lane) plus the k-1
-    /// replica fan-out copies (DESIGN.md §9/§10).
+    /// write (unless the caller issues it on its own lane) plus the
+    /// replica fan-out copies, each at its live successor offset
+    /// (DESIGN.md §9/§10/§11).
     fn queue_store(
         &mut self,
         r: usize,
@@ -379,18 +514,48 @@ impl PoetWorkload {
         val: &[u8],
         queue_primary: bool,
     ) {
-        if queue_primary {
+        let offsets = self.store_offsets(dcfg, key);
+        for (j, &o) in offsets.iter().enumerate() {
+            if j == 0 && !queue_primary {
+                continue; // the caller issues the primary on its own lane
+            }
             self.cur[r].write_q.push_back((
-                DhtSm::write(dcfg.variant, dcfg, key, val),
-                false,
+                DhtSm::write_at(dcfg.variant, dcfg, key, val, o),
+                j > 0,
             ));
         }
-        for rep in 1..dcfg.addressing.replicas() {
-            self.cur[r].write_q.push_back((
-                DhtSm::write_at(dcfg.variant, dcfg, key, val, rep),
-                true,
-            ));
+    }
+
+    /// Next self-healing repair quantum for rank `r` (lane 0, DESIGN.md
+    /// §11): arms a fresh pass over the rank's own shard whenever the
+    /// detector's generation moves, then walks it one bucket per call.
+    fn next_repair(&mut self, r: usize, now: Time) -> Option<RepairSm> {
+        let dcfg = self.dht.as_ref()?;
+        if dcfg.addressing.replicas() <= 1 {
+            return None; // nothing to re-home without replication
         }
+        let gen = self.health.as_ref()?.borrow().generation();
+        if gen != self.repair_gen[r] {
+            self.repair_gen[r] = gen;
+            self.repair_cursor[r] = 0;
+        }
+        if self.repair_cursor[r] == u64::MAX {
+            return None;
+        }
+        let dead = self.dead_snapshot(now);
+        if dead[r] {
+            // a dead rank's window has nothing trustworthy to offer;
+            // its revival bumps the generation and re-arms the pass
+            self.repair_cursor[r] = u64::MAX;
+            return None;
+        }
+        let b = self.repair_cursor[r];
+        self.repair_cursor[r] = if b + 1 >= dcfg.addressing.buckets() {
+            u64::MAX
+        } else {
+            b + 1
+        };
+        Some(RepairSm::new(dcfg, r as u32, b, &dead))
     }
 
     /// Per-step application hit/miss accounting, shared by every
@@ -473,9 +638,9 @@ impl PoetWorkload {
 }
 
 impl Workload for PoetWorkload {
-    type Sm = ReplSm;
+    type Sm = JobSm;
 
-    fn next(&mut self, rank: u32, lane: u32, now: Time) -> WorkItem<ReplSm> {
+    fn next(&mut self, rank: u32, lane: u32, now: Time) -> WorkItem<JobSm> {
         let r = rank as usize;
         let ctx = self.ctx(rank, lane);
 
@@ -510,19 +675,27 @@ impl Workload for PoetWorkload {
                         self.queue_store(r, &dcfg, &ck, &val, true);
                     }
                     // fine-key replica copies; the primary write leaves
-                    // on this lane below
+                    // on this lane below, at its first live successor
                     self.queue_store(r, &dcfg, &key, &val, false);
-                    let sm = DhtSm::write(dcfg.variant, &dcfg, &key, &val);
+                    let primary = self.store_offsets(&dcfg, &key)[0];
+                    let sm = DhtSm::write_at(
+                        dcfg.variant,
+                        &dcfg,
+                        &key,
+                        &val,
+                        primary,
+                    );
                     self.lane_job[ctx] = LaneJob::Write { replica: false };
                     self.cur[r].writes_inflight += 1;
                     self.poll_ns[ctx] = LANE_POLL_NS;
-                    return WorkItem::Op(ReplSm::Op(sm));
+                    return WorkItem::Op(JobSm::App(ReplSm::Op(sm)));
                 }
             }
             LaneJob::Idle => {}
             LaneJob::Read { .. }
             | LaneJob::Ladder { .. }
-            | LaneJob::Write { .. } => {
+            | LaneJob::Write { .. }
+            | LaneJob::Repair => {
                 unreachable!("op jobs are cleared in on_complete")
             }
         }
@@ -564,6 +737,18 @@ impl Workload for PoetWorkload {
             );
         }
 
+        // self-healing repair quanta ride lane 0 (DESIGN.md §11): when
+        // the detector's generation moves, the rank re-walks its own
+        // shard one bucket per op while the sibling lanes keep the
+        // application traffic flowing — cooperative, never a pause
+        if lane == 0 && self.cfg.repair {
+            if let Some(sm) = self.next_repair(r, now) {
+                self.lane_job[ctx] = LaneJob::Repair;
+                self.poll_ns[ctx] = LANE_POLL_NS;
+                return WorkItem::Op(JobSm::Repair(sm));
+            }
+        }
+
         // queued writes first (they are paid-for results; draining them
         // promptly keeps replica copies close behind their primaries and
         // ladder back-fills visible for the next round)
@@ -571,7 +756,7 @@ impl Workload for PoetWorkload {
             self.cur[r].writes_inflight += 1;
             self.lane_job[ctx] = LaneJob::Write { replica };
             self.poll_ns[ctx] = LANE_POLL_NS;
-            return WorkItem::Op(ReplSm::Op(sm));
+            return WorkItem::Op(JobSm::App(ReplSm::Op(sm)));
         }
 
         // coarse ladder probes of fine-level misses next: resolving them
@@ -604,7 +789,7 @@ impl Workload for PoetWorkload {
             self.lane_job[ctx] = LaneJob::Ladder { cell, level, err, key };
             self.cur[r].reads_inflight += 1;
             self.poll_ns[ctx] = LANE_POLL_NS;
-            return WorkItem::Op(sm);
+            return WorkItem::Op(JobSm::App(sm));
         }
 
         // chemistry for queued misses (one CPU per rank: serialized)
@@ -695,7 +880,7 @@ impl Workload for PoetWorkload {
             };
             self.lane_job[ctx] = LaneJob::Read { cell, key };
             self.cur[r].reads_inflight += 1;
-            return WorkItem::Op(sm);
+            return WorkItem::Op(JobSm::App(sm));
         }
 
         // no new cells: wait for in-flight work, or end the step
@@ -713,11 +898,22 @@ impl Workload for PoetWorkload {
         lane: u32,
         _now: Time,
         _latency: Time,
-        out: ReplOut,
+        out: JobOut,
     ) {
         let r = rank as usize;
         let ctx = self.ctx(rank, lane);
-        match std::mem::replace(&mut self.lane_job[ctx], LaneJob::Idle) {
+        let job = std::mem::replace(&mut self.lane_job[ctx], LaneJob::Idle);
+        if matches!(job, LaneJob::Repair) {
+            let JobOut::Repair(rout) = out else {
+                unreachable!("repair job completed with an app result")
+            };
+            self.stats.record_repair(&rout);
+            return;
+        }
+        let JobOut::App(out) = out else {
+            unreachable!("app job completed with a repair result")
+        };
+        match job {
             LaneJob::Read { cell, key } => {
                 self.cur[r].reads_inflight -= 1;
                 // failover/divergence bookkeeping + the plain record
@@ -805,9 +1001,14 @@ pub fn run_poet_des(cfg: PoetDesCfg, net_cfg: NetConfig) -> PoetDesResult {
     let nranks = cfg.nranks;
     let win_bytes = cfg.win_bytes;
     let lanes = cfg.pipeline.max(1);
-    let fault = cfg
-        .kill_rank_at
-        .map(|(rank, at)| FaultPlan::default().kill_rank_at(rank, at));
+    let (budget, backoff_base) = (cfg.retry_budget, cfg.backoff_base_ns);
+    let fault = cfg.kill_rank_at.map(|(rank, at)| {
+        let plan = FaultPlan::default().kill_rank_at(rank, at);
+        match cfg.revive_rank_at {
+            Some((rr, rat)) => plan.revive_rank_at(rr, rat),
+            None => plan,
+        }
+    });
     let net = Network::new(net_cfg, nranks);
     let mut cluster = SimCluster::with_pipeline(
         PoetWorkload::new(cfg),
@@ -819,8 +1020,28 @@ pub fn run_poet_des(cfg: PoetDesCfg, net_cfg: NetConfig) -> PoetDesResult {
     if let Some(plan) = fault {
         cluster.set_fault_plan(plan);
     }
+    cluster.set_retry_policy(budget, backoff_base);
+    // hand the workload the cluster's failure detector: read routing,
+    // degraded store placement and repair arming all key off it
+    cluster.workload.health = Some(cluster.health());
     let sim = cluster.run();
+    // fold the transport-level retry cost and the detector's final view
+    // into the surrogate stats (DESIGN.md §11)
+    let (mut retries, mut backoff_ns) = (0u64, 0u64);
+    for r in 0..nranks {
+        let (a, b) = cluster.origin_retries(r);
+        retries += a;
+        backoff_ns += b;
+    }
+    let ranks_dead = {
+        let health = cluster.health();
+        let h = health.borrow();
+        (0..nranks).filter(|&r| h.is_dead(r)).count() as u32
+    };
     let w = &mut cluster.workload;
+    w.stats.retries += retries;
+    w.stats.backoff_ns += backoff_ns;
+    w.stats.ranks_dead = w.stats.ranks_dead.max(ranks_dead);
     PoetDesResult {
         runtime_s: sim.duration as f64 / 1e9,
         chem_cells: w.chem_cells,
@@ -954,6 +1175,28 @@ mod tests {
             .iter()
             .fold((0u64, 0u64), |(a, b), (x, y)| (a + x, b + y));
         assert_eq!((h, m), (d2.hits, d2.misses));
+    }
+
+    #[test]
+    fn killed_rank_is_detected_and_repaired() {
+        let mut c = tiny(8, Some(Variant::LockFree));
+        c.replicas = 2;
+        c.pipeline = 4;
+        c.repair = true;
+        c.win_bytes = 256 * 1024;
+        c.kill_rank_at = Some((3, 2_000_000)); // early in the run
+        let res = run_poet_des(c, NetConfig::pik_ndr());
+        // detection is fed by op outcomes: writes to the killed rank
+        // exhaust their retry budgets until the detector declares it dead
+        assert!(res.sim.faults.exhausted_msgs > 0, "retries exhausted");
+        assert!(res.dht.retries > 0, "retry cost surfaced in DhtStats");
+        assert!(res.dht.backoff_ns > 0, "backoff cost surfaced");
+        assert_eq!(res.dht.ranks_dead, 1, "the kill is held at exit");
+        // repair re-homed the surviving copies without pausing traffic
+        assert!(res.dht.repaired > 0, "repair pushed lost copies");
+        // the coupled run survives with a healthy surrogate
+        assert!(res.hit_rate() > 0.3, "hit rate {}", res.hit_rate());
+        assert!(res.max_dolomite > 0.0);
     }
 
     #[test]

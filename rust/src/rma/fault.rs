@@ -24,19 +24,32 @@
 //! exactly the failure a replicated surrogate cache must survive.
 //!
 //! Delay and drop windows perturb message *timing*: the modelled
-//! transport is reliable (InfiniBand-like), so a dropped message
-//! surfaces as a retransmission penalty rather than silent loss — true
-//! unreachability is what rank kills are for.  Torn-put injection
-//! truncates a chosen `Put`'s payload at a byte cut, the tear the
-//! lock-free variant's CRC guard (§4.2) must catch.
+//! transport is reliable (InfiniBand-like), so a dropped message is
+//! *retransmitted* — since the self-healing pass (DESIGN.md §11) the
+//! DES executor models each retransmission explicitly as a bounded
+//! retry with exponential backoff + deterministic jitter (counted in
+//! [`FaultStats::retries`] / [`FaultStats::backoff_ns`]) instead of a
+//! single flat penalty; a message whose retry budget runs out inside
+//! the window completes degraded and strikes the target in the health
+//! view ([`crate::dht::health`]) — true unreachability is what rank
+//! kills are for.  Torn-put injection truncates a chosen `Put`'s
+//! payload at a byte cut, the tear the lock-free variant's CRC guard
+//! (§4.2) must catch.
+//!
+//! Kills are *windows* too: [`FaultPlan::revive_rank_at`] closes an
+//! open-ended kill, modelling a rank that rejoins cold (ULFM-style
+//! respawn) — its window memory is zeroed state that the repair
+//! protocol (DESIGN.md §11) repopulates lazily.
 
 use crate::sim::Time;
 
-/// Kill `rank`'s storage plane at `at_ns` of simulated time.
+/// Kill `rank`'s storage plane at `at_ns`; it stays dead until
+/// `until_ns` (`u64::MAX` = forever) of simulated time.
 #[derive(Clone, Copy, Debug)]
 pub struct RankKill {
     pub rank: u32,
     pub at_ns: Time,
+    pub until_ns: Time,
 }
 
 /// Timing perturbation for messages *targeting* `target` that are issued
@@ -78,9 +91,25 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
-    /// Chainable builder: kill `rank` at `at_ns`.
+    /// Chainable builder: kill `rank` at `at_ns` (forever, unless a
+    /// later [`Self::revive_rank_at`] closes the window).
     pub fn kill_rank_at(mut self, rank: u32, at_ns: Time) -> Self {
-        self.kills.push(RankKill { rank, at_ns });
+        self.kills.push(RankKill { rank, at_ns, until_ns: u64::MAX });
+        self
+    }
+
+    /// Chainable builder: revive `rank` at `at_ns` — closes every
+    /// still-open kill of that rank that started before `at_ns`.  The
+    /// rank rejoins *cold*: its window memory is untouched by the plan
+    /// (the DES models the kill at the access layer), but callers are
+    /// expected to treat it as stale and let repair repopulate it
+    /// (DESIGN.md §11).
+    pub fn revive_rank_at(mut self, rank: u32, at_ns: Time) -> Self {
+        for k in &mut self.kills {
+            if k.rank == rank && k.at_ns < at_ns && k.until_ns == u64::MAX {
+                k.until_ns = at_ns;
+            }
+        }
         self
     }
 
@@ -131,7 +160,9 @@ impl FaultPlan {
 
     /// Whether `rank`'s storage is dead at simulated time `now`.
     pub fn is_failed(&self, rank: u32, now: Time) -> bool {
-        self.kills.iter().any(|k| k.rank == rank && now >= k.at_ns)
+        self.kills
+            .iter()
+            .any(|k| k.rank == rank && now >= k.at_ns && now < k.until_ns)
     }
 
     /// Extra latency (delay, drop-retransmission) for a message to
@@ -168,10 +199,43 @@ pub struct FaultStats {
     pub failed_ops: u64,
     /// Messages delayed by a delay window.
     pub delayed_msgs: u64,
-    /// Messages dropped (retransmission penalty applied).
+    /// Messages dropped (at least one retransmission attempt modelled).
     pub dropped_msgs: u64,
     /// Puts truncated by torn-write injection.
     pub torn_puts: u64,
+    /// Individual retransmission attempts across all dropped/unacked
+    /// messages (DESIGN.md §11: each costs wire time + backoff).
+    pub retries: u64,
+    /// Total simulated time spent backing off between retries.
+    pub backoff_ns: u64,
+    /// Messages whose retry budget ran out (completed degraded and
+    /// struck the target rank in the health view).
+    pub exhausted_msgs: u64,
+}
+
+impl FaultStats {
+    /// One-line summary for report/table footers ("-" when clean).
+    pub fn summary(&self) -> String {
+        if self.failed_ops == 0
+            && self.delayed_msgs == 0
+            && self.dropped_msgs == 0
+            && self.torn_puts == 0
+            && self.retries == 0
+        {
+            return "faults: none".to_string();
+        }
+        format!(
+            "faults: {} degraded ops, {} delayed, {} dropped, {} torn, \
+             {} retries ({} exhausted, {:.3} ms backoff)",
+            self.failed_ops,
+            self.delayed_msgs,
+            self.dropped_msgs,
+            self.torn_puts,
+            self.retries,
+            self.exhausted_msgs,
+            self.backoff_ns as f64 / 1e6,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -185,6 +249,27 @@ mod tests {
         assert!(p.is_failed(3, 1_000));
         assert!(p.is_failed(3, u64::MAX));
         assert!(!p.is_failed(2, u64::MAX));
+    }
+
+    #[test]
+    fn revive_closes_the_kill_window() {
+        let p = FaultPlan::default()
+            .kill_rank_at(3, 1_000)
+            .revive_rank_at(3, 5_000);
+        assert!(!p.is_failed(3, 999));
+        assert!(p.is_failed(3, 1_000));
+        assert!(p.is_failed(3, 4_999));
+        assert!(!p.is_failed(3, 5_000));
+        assert!(!p.is_failed(3, u64::MAX));
+        // a second kill after the revive opens a fresh window
+        let p = p.kill_rank_at(3, 9_000);
+        assert!(!p.is_failed(3, 8_999));
+        assert!(p.is_failed(3, 9_000));
+        // reviving an unrelated rank changes nothing
+        let q = FaultPlan::default()
+            .kill_rank_at(1, 100)
+            .revive_rank_at(2, 200);
+        assert!(q.is_failed(1, u64::MAX));
     }
 
     #[test]

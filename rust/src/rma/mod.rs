@@ -202,6 +202,40 @@ pub trait RmaBackend: Clone {
     fn rank_failed(&self, _target: u32) -> bool {
         false
     }
+
+    /// Retransmission cost charged so far to ops issued *by this rank*:
+    /// `(retries, backoff_ns)` (DESIGN.md §11).  Per-origin so per-rank
+    /// `DhtStats` merges stay additive.  Default: a backend without a
+    /// retry model reports zero.
+    fn origin_retries(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Ranks currently declared dead by the local failure detector
+    /// (DESIGN.md §11).  A gauge, not a counter — revivals decrease it.
+    /// Default: none.
+    fn ranks_dead(&self) -> u32 {
+        0
+    }
+
+    /// Pure query: is `target` currently declared *dead* by the local
+    /// failure detector (DESIGN.md §11)?  Unlike [`Self::rank_failed`]
+    /// this never has side effects — in particular it never arms or
+    /// consumes a revival probe — so repair and degraded-write snapshots
+    /// can poll it without perturbing the suspected → dead → probing
+    /// state machine.  Default: nothing is ever dead.
+    fn rank_dead(&self, _target: u32) -> bool {
+        false
+    }
+
+    /// The failure detector's generation counter: bumped on every death
+    /// and every revival (DESIGN.md §11).  The self-healing scan in the
+    /// DHT front-end compares it against the generation it last repaired
+    /// at to decide when a fresh pass over the local shard is due.
+    /// Default: constant 0 (no detector — repair never triggers).
+    fn health_generation(&self) -> u64 {
+        0
+    }
 }
 
 /// Work item a workload hands to the DES engine for a rank.

@@ -106,6 +106,10 @@ pub struct ShmCluster {
     /// puts are dropped, atomics fail safely, locks succeed vacuously —
     /// giving the shm backend the same degraded-mode trait surface.
     failed: Vec<AtomicBool>,
+    /// Bumped on every `set_failed` transition (kill or revival) — the
+    /// shm stand-in for the health view's generation counter, so the
+    /// front-end's repair scan (DESIGN.md §11) triggers here too.
+    health_gen: AtomicU64,
 }
 
 impl ShmCluster {
@@ -117,13 +121,24 @@ impl ShmCluster {
             win_bytes,
             next_seg: Mutex::new(2),
             failed: (0..nranks).map(|_| AtomicBool::new(false)).collect(),
+            health_gen: AtomicU64::new(0),
         })
     }
 
     /// Mark `rank`'s storage failed (or alive again) — the shm analogue
     /// of the DES backend's deterministic rank kill, for chaos tests.
+    /// Every actual transition bumps the health generation, which is
+    /// what arms the front-end's repair scan (DESIGN.md §11).
     pub fn set_failed(&self, rank: u32, failed: bool) {
-        self.failed[rank as usize].store(failed, Ordering::Release);
+        let prev = self.failed[rank as usize].swap(failed, Ordering::AcqRel);
+        if prev != failed {
+            self.health_gen.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Detector generation: transitions of the failed mask so far.
+    pub fn health_generation(&self) -> u64 {
+        self.health_gen.load(Ordering::Acquire)
     }
 
     /// Whether `rank` is currently masked failed.
@@ -493,6 +508,23 @@ impl RmaBackend for ShmRma {
 
     fn rank_failed(&self, target: u32) -> bool {
         self.cluster.is_failed(target)
+    }
+
+    fn rank_dead(&self, target: u32) -> bool {
+        // the shm mask has no suspected/probing states: failed IS dead
+        self.cluster.is_failed(target)
+    }
+
+    fn health_generation(&self) -> u64 {
+        self.cluster.health_generation()
+    }
+
+    fn ranks_dead(&self) -> u32 {
+        self.cluster
+            .failed
+            .iter()
+            .filter(|f| f.load(Ordering::Acquire))
+            .count() as u32
     }
 }
 

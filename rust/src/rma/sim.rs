@@ -41,6 +41,7 @@ use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::rc::Rc;
 
+use crate::dht::health::{backoff_ns, HealthConfig, HealthView};
 use crate::metrics::Histogram;
 use crate::net::{Network, OpKind, OpTiming};
 use crate::sim::{EventQueue, Resource, Time};
@@ -108,6 +109,11 @@ struct CtxState<S> {
     unlock_applied: bool,
     at_barrier: bool,
     finished: bool,
+    /// The lane's outstanding message exhausted its retry budget (or its
+    /// target is written off by the health view): the Exec phase must
+    /// complete the op in degraded mode.  Refreshed per message by
+    /// [`SimCluster::faulted`].
+    degraded: bool,
     op_start: Time,
     ops: u64,
 }
@@ -124,6 +130,7 @@ impl<S> CtxState<S> {
             unlock_applied: false,
             at_barrier: false,
             finished: false,
+            degraded: false,
             op_start: 0,
             ops: 0,
         }
@@ -156,6 +163,24 @@ pub struct SimReport {
     pub faults: FaultStats,
 }
 
+impl SimReport {
+    /// One-line run summary (engine totals + the fault/retry footer) —
+    /// printed under `poet-des` tables so retransmission cost is visible
+    /// without reading the struct.
+    pub fn summary(&self) -> String {
+        format!(
+            "sim: {} ops in {:.3} ms, {} events, {} msgs, \
+             {} lock retries | {}",
+            self.ops,
+            self.duration as f64 / 1e6,
+            self.events,
+            self.net_messages,
+            self.lock_retries,
+            self.faults.summary(),
+        )
+    }
+}
+
 /// The DES cluster executing a [`Workload`].
 pub struct SimCluster<W: Workload> {
     pub workload: W,
@@ -181,6 +206,19 @@ pub struct SimCluster<W: Workload> {
     rank_barrier: Vec<bool>,
     /// Deterministic fault schedule (chaos harness, DESIGN.md §9).
     fault: FaultPlan,
+    /// Per-rank failure detector fed by retry outcomes (DESIGN.md §11).
+    /// Shared (`Rc`) so workloads / front-ends can read the same view
+    /// the executor strikes.
+    health: Rc<RefCell<HealthView>>,
+    /// Max retransmission attempts per message before it completes
+    /// degraded and strikes the health view.
+    retry_budget: u32,
+    /// Base backoff between retransmissions (exponential + jitter).
+    backoff_base_ns: u64,
+    /// Per-origin-rank retry accounting (`DhtStats` pulls these through
+    /// [`RmaBackend::origin_retries`] so per-rank merges stay additive).
+    retries_by_origin: Vec<u64>,
+    backoff_by_origin: Vec<u64>,
     /// Puts applied per target rank (exec order) — the torn-put index.
     puts_applied: Vec<u64>,
     now: Time,
@@ -225,6 +263,14 @@ impl<W: Workload> SimCluster<W> {
             ctxs: (0..nctx).map(|_| CtxState::new()).collect(),
             rank_barrier: vec![false; nranks as usize],
             fault: FaultPlan::default(),
+            health: Rc::new(RefCell::new(HealthView::new(
+                nranks,
+                HealthConfig::default(),
+            ))),
+            retry_budget: 5,
+            backoff_base_ns: 20_000,
+            retries_by_origin: vec![0; nranks as usize],
+            backoff_by_origin: vec![0; nranks as usize],
             puts_applied: vec![0; nranks as usize],
             now: 0,
             report: SimReport::default(),
@@ -239,9 +285,40 @@ impl<W: Workload> SimCluster<W> {
     }
 
     /// Whether `rank`'s storage is dead at the current simulated time —
-    /// the cluster-side view behind [`RmaBackend::rank_failed`].
+    /// the fault-plan half of the failure view (the health-view half
+    /// lives in [`Self::rank_failed_probe`]).
     pub fn is_failed(&self, rank: u32) -> bool {
         self.fault.is_failed(rank, self.now)
+    }
+
+    /// The full [`RmaBackend::rank_failed`] view: plan-killed *or*
+    /// declared dead by the detector.  Probe-aware — once per probe
+    /// interval a dead-but-not-plan-killed rank reports live so exactly
+    /// one op goes out to test for a rejoin (DESIGN.md §11).
+    pub fn rank_failed_probe(&mut self, target: u32) -> bool {
+        self.fault.is_failed(target, self.now)
+            || self.health.borrow_mut().check(target, self.now)
+    }
+
+    /// Tune the retransmission model: `budget` attempts per message,
+    /// exponential backoff starting at `backoff_base_ns` (DESIGN.md §11).
+    pub fn set_retry_policy(&mut self, budget: u32, backoff_base_ns: u64) {
+        self.retry_budget = budget;
+        self.backoff_base_ns = backoff_base_ns.max(1);
+    }
+
+    /// Shared handle on the per-rank failure detector.
+    pub fn health(&self) -> Rc<RefCell<HealthView>> {
+        Rc::clone(&self.health)
+    }
+
+    /// Retransmissions charged to ops issued *by* `rank`:
+    /// `(retries, backoff_ns)`.
+    pub fn origin_retries(&self, rank: u32) -> (u64, u64) {
+        (
+            self.retries_by_origin[rank as usize],
+            self.backoff_by_origin[rank as usize],
+        )
     }
 
     pub fn nranks(&self) -> u32 {
@@ -366,6 +443,18 @@ impl<W: Workload> SimCluster<W> {
 
     // ---------------------------------------------------------------- exec
 
+    /// Whether the lane's outstanding op must complete in degraded mode:
+    /// the target is plan-killed, or the message's retry budget ran out
+    /// / its target is written off by the health view (the `degraded`
+    /// flag staged by [`Self::faulted`]).  The health-view half is what
+    /// lets CAS-acquire loops terminate against a rank that dies
+    /// mid-epoch without being plan-killed (DESIGN.md §11).
+    #[inline]
+    fn degraded_at(&self, ctx: u32, target: u32) -> bool {
+        self.ctxs[ctx as usize].degraded
+            || self.fault.is_failed(target, self.now)
+    }
+
     /// Apply the lane's outstanding request to target memory and stage the
     /// response for its Resume event.
     fn exec_phase(&mut self, ctx: u32) {
@@ -382,7 +471,7 @@ impl<W: Workload> SimCluster<W> {
         {
             if !self.ctxs[ctx as usize].unlock_applied {
                 self.ctxs[ctx as usize].unlock_applied = true;
-                if self.fault.is_failed(target, self.now) {
+                if self.degraded_at(ctx, target) {
                     // the lock word died with the rank; releasing lost
                     // memory is a no-op (see rma::fault)
                     self.report.faults.failed_ops += 1;
@@ -419,7 +508,7 @@ impl<W: Workload> SimCluster<W> {
         // empty, puts are dropped, atomics fail safely.
         let resp = match req {
             Req::Get { target, offset, len } => {
-                if self.fault.is_failed(target, self.now) {
+                if self.degraded_at(ctx, target) {
                     self.report.faults.failed_ops += 1;
                     Resp::Data(vec![0u8; len as usize])
                 } else {
@@ -428,7 +517,7 @@ impl<W: Workload> SimCluster<W> {
                 }
             }
             Req::Put { target, offset, data } => {
-                if self.fault.is_failed(target, self.now) {
+                if self.degraded_at(ctx, target) {
                     self.report.faults.failed_ops += 1;
                 } else {
                     self.apply_put(target, offset, data, timing);
@@ -436,7 +525,7 @@ impl<W: Workload> SimCluster<W> {
                 Resp::Ack
             }
             Req::Cas { target, offset, expected, desired } => {
-                if self.fault.is_failed(target, self.now) {
+                if self.degraded_at(ctx, target) {
                     self.report.faults.failed_ops += 1;
                     // vacuous success (returns `expected`), like the
                     // window locks: a failing CAS would trap every
@@ -444,9 +533,17 @@ impl<W: Workload> SimCluster<W> {
                     // unbounded retry against memory that no longer
                     // exists, while "success" lets the protocol proceed
                     // against a table that reads as empty and a put that
-                    // is dropped.  Epoch-tagged control words stay safe:
-                    // their guards re-validate via FAO reads, which
-                    // return 0 at a dead rank (tag mismatch -> abort).
+                    // is dropped.  Termination does NOT rely on the
+                    // plan alone: a rank that dies mid-epoch *without*
+                    // being plan-killed (e.g. an unbounded drop window)
+                    // is caught by the health view — each re-issued
+                    // attempt exhausts its retry budget, strikes the
+                    // detector, and once the rank is declared dead every
+                    // later attempt is staged degraded by `faulted` and
+                    // lands here (`degraded_at` checks the ctx flag).
+                    // Epoch-tagged control words stay safe: their guards
+                    // re-validate via FAO reads, which return 0 at a
+                    // dead rank (tag mismatch -> abort).
                     Resp::Word(expected)
                 } else {
                     let w = self.win_word(target, offset);
@@ -457,7 +554,7 @@ impl<W: Workload> SimCluster<W> {
                 }
             }
             Req::Fao { target, offset, add } => {
-                if self.fault.is_failed(target, self.now) {
+                if self.degraded_at(ctx, target) {
                     self.report.faults.failed_ops += 1;
                     Resp::Word(0)
                 } else {
@@ -471,7 +568,7 @@ impl<W: Workload> SimCluster<W> {
                 }
             }
             Req::Rpc { server, proc_ns: _, payload, .. } => {
-                if self.fault.is_failed(server, self.now) {
+                if self.degraded_at(ctx, server) {
                     self.report.faults.failed_ops += 1;
                     Resp::Rpc(match &payload {
                         RpcPayload::KvGet { .. } => RpcReply::Value(None),
@@ -496,10 +593,13 @@ impl<W: Workload> SimCluster<W> {
         let timing = self.ctxs[ctx as usize].pending_timing.unwrap();
         // a killed target's lock word is lost: acquisition succeeds
         // vacuously (degraded mode — mutual exclusion over memory that
-        // reads as empty is moot; see rma::fault)
+        // reads as empty is moot; see rma::fault).  The health view is
+        // consulted too so a busy-wait against a rank the detector wrote
+        // off mid-loop terminates (DESIGN.md §11).
         let dead = {
             let lw = self.ctxs[ctx as usize].lock_wait.as_ref().unwrap();
-            self.fault.is_failed(lw.target, self.now)
+            self.degraded_at(ctx, lw.target)
+                || self.health.borrow().is_dead(lw.target)
         };
         if dead {
             self.report.faults.failed_ops += 1;
@@ -651,18 +751,81 @@ impl<W: Workload> SimCluster<W> {
         }
     }
 
-    /// Apply the fault plan's delay/drop perturbation to a modelled op's
-    /// timing (windows match the op's *issue* instant; a drop is loss +
-    /// retransmission on the reliable transport — see `rma::fault`).
-    fn faulted(&mut self, target: u32, mut t: OpTiming) -> OpTiming {
-        let (delay, drop) = self.fault.perturb_ns(target, self.now);
-        if delay > 0 {
-            self.report.faults.delayed_msgs += 1;
+    /// Apply the fault plan to a message from `ctx` to `target`
+    /// (DESIGN.md §11).  Delay windows add latency at the delivery
+    /// instant.  A lost first transmission — a matching drop window, or
+    /// a plan-killed target whose acks never come — starts a bounded
+    /// retransmission ladder: each attempt pays the loss timeout plus an
+    /// exponentially growing, deterministically jittered backoff, and
+    /// re-samples the plan at its own simulated instant, so a transient
+    /// window is ridden out within the budget and never strikes the
+    /// detector.  A message whose budget runs out completes degraded
+    /// (ctx flag, consumed by [`Self::degraded_at`]) and strikes the
+    /// target in the health view; a delivery to a marked rank clears it.
+    fn faulted(&mut self, ctx: u32, target: u32, mut t: OpTiming) -> OpTiming {
+        self.ctxs[ctx as usize].degraded = false;
+        // fault-free fast path: no plan, no strikes, no health churn —
+        // zero cost and bit-identical timing for every clean run
+        if self.fault.is_empty() {
+            return t;
         }
-        if drop > 0 {
+        if self.health.borrow().is_dead(target) {
+            // written off by the detector: complete degraded without
+            // paying wire retries (the no-hang contract for busy loops)
+            self.ctxs[ctx as usize].degraded = true;
+            return t;
+        }
+        let origin = self.rank_of(ctx);
+        let issue = self.now;
+        let mut extra: u64 = 0;
+        let mut retries: u64 = 0;
+        let mut backoff_total: u64 = 0;
+        let (_, drop0) = self.fault.perturb_ns(target, issue);
+        let lost0 = drop0 > 0 || self.fault.is_failed(target, issue);
+        let mut delivered = !lost0;
+        if lost0 {
             self.report.faults.dropped_msgs += 1;
+            // timeout of the attempt just lost (a killed target has no
+            // window to charge, only backoff)
+            let mut pending_timeout = drop0;
+            for attempt in 0..self.retry_budget {
+                let seed = ((origin as u64) << 40)
+                    ^ ((target as u64) << 52)
+                    ^ ((attempt as u64) << 26)
+                    ^ issue;
+                let b = backoff_ns(self.backoff_base_ns, attempt, seed);
+                extra += pending_timeout + b;
+                retries += 1;
+                backoff_total += b;
+                let at = issue + extra;
+                let (_, d) = self.fault.perturb_ns(target, at);
+                if d == 0 && !self.fault.is_failed(target, at) {
+                    delivered = true;
+                    break;
+                }
+                pending_timeout = d;
+            }
         }
-        let extra = delay + drop;
+        if delivered {
+            let (delay, _) = self.fault.perturb_ns(target, issue + extra);
+            if delay > 0 {
+                self.report.faults.delayed_msgs += 1;
+                extra += delay;
+            }
+            if retries > 0 || self.health.borrow().is_marked(target) {
+                self.health.borrow_mut().note_ok(target);
+            }
+        } else {
+            self.report.faults.exhausted_msgs += 1;
+            self.ctxs[ctx as usize].degraded = true;
+            self.health.borrow_mut().note_exhausted(target);
+        }
+        if retries > 0 {
+            self.report.faults.retries += retries;
+            self.report.faults.backoff_ns += backoff_total;
+            self.retries_by_origin[origin as usize] += retries;
+            self.backoff_by_origin[origin as usize] += backoff_total;
+        }
         if extra > 0 {
             t.exec += extra;
             t.resume += extra;
@@ -698,7 +861,7 @@ impl<W: Workload> SimCluster<W> {
                     chain_left: n.saturating_sub(1),
                 });
                 let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
-                let t = self.faulted(target, t);
+                let t = self.faulted(ctx, target, t);
                 self.ctxs[ctx as usize].pending_timing = Some(t);
                 self.queue.push(t.exec, Ev::Exec { ctx });
             }
@@ -709,7 +872,7 @@ impl<W: Workload> SimCluster<W> {
                     1
                 };
                 let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
-                let t = self.faulted(target, t);
+                let t = self.faulted(ctx, target, t);
                 self.ctxs[ctx as usize].pending_req =
                     Some(Req::UnlockWin { target, exclusive });
                 // the release applies at the first atomic's exec — it must
@@ -726,7 +889,7 @@ impl<W: Workload> SimCluster<W> {
                 // the server process itself
                 let t_net =
                     self.net.rma(self.now, rank, server, OpKind::Put, req_bytes);
-                let t_net = self.faulted(server, t_net);
+                let t_net = self.faulted(ctx, server, t_net);
                 let srv = self.servers.entry(server).or_default();
                 let t_done = srv.acquire(t_net.exec, proc_ns);
                 let resume = t_done
@@ -746,7 +909,7 @@ impl<W: Workload> SimCluster<W> {
             Req::Get { target, offset, len } => {
                 debug_check_aligned(offset, len);
                 let t = self.net.rma(self.now, rank, target, OpKind::Get, len);
-                let t = self.faulted(target, t);
+                let t = self.faulted(ctx, target, t);
                 self.ctxs[ctx as usize].pending_req =
                     Some(Req::Get { target, offset, len });
                 self.ctxs[ctx as usize].pending_timing = Some(t);
@@ -761,7 +924,7 @@ impl<W: Workload> SimCluster<W> {
                     OpKind::Put,
                     data.len() as u32,
                 );
-                let t = self.faulted(target, t);
+                let t = self.faulted(ctx, target, t);
                 // register the DMA window NOW (a concurrent Get whose exec
                 // lands inside it is processed before this put's Exec
                 // event and must already see the new prefix)
@@ -782,7 +945,7 @@ impl<W: Workload> SimCluster<W> {
             }
             Req::Cas { target, offset, expected, desired } => {
                 let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
-                let t = self.faulted(target, t);
+                let t = self.faulted(ctx, target, t);
                 self.ctxs[ctx as usize].pending_req =
                     Some(Req::Cas { target, offset, expected, desired });
                 self.ctxs[ctx as usize].pending_timing = Some(t);
@@ -790,7 +953,7 @@ impl<W: Workload> SimCluster<W> {
             }
             Req::Fao { target, offset, add } => {
                 let t = self.net.rma(self.now, rank, target, OpKind::Atomic, 8);
-                let t = self.faulted(target, t);
+                let t = self.faulted(ctx, target, t);
                 self.ctxs[ctx as usize].pending_req =
                     Some(Req::Fao { target, offset, add });
                 self.ctxs[ctx as usize].pending_timing = Some(t);
@@ -1033,6 +1196,17 @@ impl SimRma {
         self.shared.borrow().report.faults.clone()
     }
 
+    /// Tune the retransmission model (budget, base backoff) on the
+    /// shared cluster (DESIGN.md §11).
+    pub fn set_retry_policy(&self, budget: u32, backoff_base_ns: u64) {
+        self.shared.borrow_mut().set_retry_policy(budget, backoff_base_ns);
+    }
+
+    /// Shared handle on the cluster's per-rank failure detector.
+    pub fn health(&self) -> Rc<RefCell<HealthView>> {
+        self.shared.borrow().health()
+    }
+
     /// Modelled network traffic so far: (messages, payload bytes).
     pub fn net_stats(&self) -> (u64, u128) {
         let c = self.shared.borrow();
@@ -1105,7 +1279,25 @@ impl RmaBackend for SimRma {
     }
 
     fn rank_failed(&self, target: u32) -> bool {
-        self.shared.borrow().is_failed(target)
+        self.shared.borrow_mut().rank_failed_probe(target)
+    }
+
+    fn origin_retries(&self) -> (u64, u64) {
+        self.shared.borrow().origin_retries(self.rank)
+    }
+
+    fn ranks_dead(&self) -> u32 {
+        self.shared.borrow().health().borrow().dead_count()
+    }
+
+    fn rank_dead(&self, target: u32) -> bool {
+        // pure query, unlike `rank_failed`: never arms a revival probe,
+        // so repair/degraded-write snapshots don't perturb the detector
+        self.shared.borrow().health.borrow().is_dead(target)
+    }
+
+    fn health_generation(&self) -> u64 {
+        self.shared.borrow().health.borrow().generation()
     }
 }
 
@@ -1628,20 +1820,126 @@ mod tests {
             for _ in 0..8 {
                 h.exec(FGetSm(Some((0, 8))));
             }
-            (h.now(), h.fault_stats())
+            (h.now(), h.fault_stats(), h.health().borrow().deaths())
         };
-        let (base, fs) = run(None);
+        let (base, fs, _) = run(None);
         assert_eq!(fs.delayed_msgs + fs.dropped_msgs, 0);
-        let (delayed, fs) = run(Some(
+        assert_eq!(fs.retries, 0, "clean run never retries");
+        let (delayed, fs, deaths) = run(Some(
             FaultPlan::default().delay_window(1, 0, u64::MAX, 10_000),
         ));
         assert!(delayed >= base + 8 * 10_000, "{delayed} vs {base}");
         assert_eq!(fs.delayed_msgs, 8);
-        let (dropped, fs) = run(Some(
+        assert_eq!(deaths, 0, "delays never strike the detector");
+        // an unbounded drop window: retries are *bounded*, so the first
+        // few messages exhaust their budgets, the detector declares the
+        // rank dead, and the rest complete degraded without wire time
+        let (dropped, fs, deaths) = run(Some(
             FaultPlan::default().drop_window(1, 0, u64::MAX, 50_000),
         ));
         assert!(dropped > delayed, "retransmission costs more than delay");
-        assert_eq!(fs.dropped_msgs, 8);
+        assert!(fs.dropped_msgs >= 1);
+        assert!(fs.retries > 0, "retransmissions were modelled");
+        assert!(fs.backoff_ns > 0, "backoff costs simulated time");
+        assert!(fs.exhausted_msgs >= 1, "budget ran out inside the window");
+        assert_eq!(deaths, 1, "unbounded loss declares the rank dead");
+        assert!(
+            fs.exhausted_msgs < 8,
+            "declared-dead fast path spares later messages the ladder"
+        );
+    }
+
+    #[test]
+    fn transient_drop_window_is_absorbed_without_declaring_dead() {
+        // window shorter than one retry ladder: the first retransmission
+        // wave rides it out, nothing exhausts, nobody is declared dead
+        let net = Network::new(NetConfig::pik_ndr(), 2);
+        let mut h = SimRma::create(net, 2, 1024, 1).remove(0);
+        h.set_retry_policy(6, 20_000);
+        h.set_fault_plan(
+            FaultPlan::default().drop_window(1, 0, 60_000, 30_000),
+        );
+        for _ in 0..8 {
+            h.exec(FGetSm(Some((0, 8))));
+        }
+        let fs = h.fault_stats();
+        assert!(fs.dropped_msgs >= 1, "the window was hit");
+        assert!(fs.retries > 0);
+        assert_eq!(fs.exhausted_msgs, 0, "budget rode out the window");
+        assert_eq!(h.health().borrow().deaths(), 0, "no false-dead marks");
+        assert!(!h.rank_failed(1));
+    }
+
+    /// CAS-acquire loop (the fine-variant bucket-lock shape): retries
+    /// until the word reads 0.  Against live memory holding nonzero it
+    /// spins forever — termination must come from the failure view.
+    struct CasLoopSm {
+        attempts: u32,
+        waiting: bool,
+    }
+    impl OpSm for CasLoopSm {
+        type Out = u32;
+        fn step(&mut self, resp: Resp) -> SmStep<u32> {
+            if self.waiting {
+                match resp {
+                    Resp::Word(0) => return SmStep::Done(self.attempts),
+                    Resp::Word(_) => {}
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            self.waiting = true;
+            self.attempts += 1;
+            assert!(
+                self.attempts < 10_000,
+                "CAS loop failed to terminate via the health view"
+            );
+            SmStep::Issue(Req::Cas {
+                target: 1,
+                offset: 0,
+                expected: 0,
+                desired: 7,
+            })
+        }
+    }
+
+    #[test]
+    fn cas_loop_terminates_when_rank_dies_mid_epoch() {
+        // rank 1's word is held nonzero, so the CAS never wins honestly;
+        // the rank "dies" mid-run through an unbounded drop window (NOT
+        // a plan kill), so only the health view can break the loop
+        let net = Network::new(NetConfig::pik_ndr(), 2);
+        let mut h = SimRma::create(net, 2, 256, 1).remove(0);
+        h.exec(FPutSm(Some((0, 5u64.to_le_bytes().to_vec()))));
+        let t_dead = h.now() + 200_000;
+        h.set_fault_plan(FaultPlan::default().drop_window(
+            1,
+            t_dead,
+            u64::MAX,
+            50_000,
+        ));
+        // each loop terminates when its message's budget runs out (the
+        // exhausted CAS completes with a vacuous success) and strikes
+        // the detector; the third consecutive strike declares death
+        let attempts = h.exec(CasLoopSm { attempts: 0, waiting: false });
+        assert!(attempts > 1, "spun honestly before the window opened");
+        let fs = h.fault_stats();
+        assert!(fs.retries > 0, "post-window attempts paid retry ladders");
+        assert!(fs.exhausted_msgs >= 1);
+        for _ in 0..2 {
+            let a = h.exec(CasLoopSm { attempts: 0, waiting: false });
+            assert_eq!(a, 1, "inside the window: degraded on first try");
+        }
+        assert_eq!(
+            h.health().borrow().deaths(),
+            1,
+            "repeated exhaustion declared the rank dead"
+        );
+        // a declared-dead rank stays cheap: one more op, no new retries
+        let before = h.fault_stats().retries;
+        h.exec(FGetSm(Some((0, 8))));
+        assert_eq!(h.fault_stats().retries, before, "fast degraded path");
+        // the held word was never overwritten by the vacuous success
+        assert_eq!(h.peek_word(1, 0), 5);
     }
 
     #[test]

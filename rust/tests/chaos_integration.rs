@@ -327,6 +327,108 @@ fn poet_kill_with_replication_recovers_hit_rate() {
     );
 }
 
+/// A transient drop window shorter than one retry ladder is absorbed:
+/// ops pay retries and backoff, but no budget exhausts and the failure
+/// detector records ZERO false dead marks (the acceptance criterion for
+/// detection robustness, DESIGN.md §11).
+#[test]
+fn transient_drop_window_absorbed_with_zero_false_deads() {
+    let mut h = sim_handles(Variant::LockFree, 4, 2);
+    let (keys, vals) = keyset();
+    let t0 = h[0].sim_time();
+    // all traffic into rank 1 is dropped for 150 µs — well inside the
+    // 5-attempt exponential ladder (~620 µs of backoff headroom)
+    h[0].set_fault_plan(
+        FaultPlan::default().drop_window(1, t0, t0 + 150_000, 20_000),
+    );
+    h[0].write_batch(&keys, &vals);
+    let got = h[3].read_batch(&keys);
+    for (v, g) in vals.iter().zip(got.iter()) {
+        assert_eq!(Some(v), g.as_ref(), "nothing lost to the window");
+    }
+    let fs = h[0].fault_stats();
+    assert!(fs.dropped_msgs > 0, "the window did bite");
+    assert!(fs.retries > 0, "dropped messages were retried");
+    assert_eq!(fs.exhausted_msgs, 0, "no retry budget exhausted");
+    let s = h[0].take_stats();
+    assert!(s.retries > 0, "retry cost surfaced in DhtStats");
+    assert!(s.backoff_ns > 0, "backoff cost surfaced in DhtStats");
+    assert_eq!(s.ranks_dead, 0, "zero false dead marks");
+}
+
+/// The tentpole headline (ISSUE acceptance): kill a rank mid-POET-run
+/// with k = 2 AND online repair — surviving ranks re-home the lost
+/// copies piggybacked on normal traffic, and the final-window hit rate
+/// comes back to within 2 points of the fault-free run.
+#[test]
+fn poet_kill_with_repair_restores_hit_rate_within_two_points() {
+    let mut base = chaos_cfg(2);
+    base.repair = true;
+    base.pipeline = 4;
+    // ~1.3k lock-free buckets/rank: a full repair scan finishes well
+    // inside the post-kill tail of the run
+    base.win_bytes = 256 * 1024;
+    let fault_free = run_poet_des(base.clone(), NetConfig::pik_ndr());
+    assert!(fault_free.hit_rate() > 0.5, "{}", fault_free.hit_rate());
+    assert_eq!(fault_free.dht.ranks_dead, 0, "fault-free stays clean");
+    let mut chaos = base.clone();
+    let kill_at = (fault_free.runtime_s * 0.4 * 1e9) as u64;
+    chaos.kill_rank_at = Some((3, kill_at));
+    let res = run_poet_des(chaos, NetConfig::pik_ndr());
+    // detection fed by op outcomes, not an oracle
+    assert!(res.sim.faults.exhausted_msgs > 0, "budgets exhausted");
+    assert!(res.dht.retries > 0, "retry cost in DhtStats");
+    assert_eq!(res.dht.ranks_dead, 1, "the kill is held at exit");
+    // online repair re-homed the surviving copies
+    assert!(res.dht.repaired > 0, "repair pushed lost copies");
+    let lo = base.steps * 3 / 4;
+    let ff = fault_free.hit_rate_over(lo, base.steps);
+    let ch = res.hit_rate_over(lo, base.steps);
+    assert!(
+        ch + 0.02 >= ff,
+        "final-window hit rate {ch:.3} must be within 2 points of the \
+         fault-free {ff:.3}"
+    );
+}
+
+/// Full self-healing cycle: kill -> detect -> repair -> revive.  The
+/// revived rank is re-discovered by a liveness probe, the detector ends
+/// the run with zero dead ranks, and the physics stays correct.
+#[test]
+fn poet_kill_repair_revive_soak() {
+    let mut base = chaos_cfg(2);
+    base.repair = true;
+    base.pipeline = 4;
+    base.win_bytes = 256 * 1024;
+    let fault_free = run_poet_des(base.clone(), NetConfig::pik_ndr());
+    let mut chaos = base.clone();
+    chaos.kill_rank_at =
+        Some((3, (fault_free.runtime_s * 0.3 * 1e9) as u64));
+    chaos.revive_rank_at =
+        Some((3, (fault_free.runtime_s * 0.6 * 1e9) as u64));
+    let res = run_poet_des(chaos, NetConfig::pik_ndr());
+    assert!(res.dht.repaired > 0, "repair ran while the rank was down");
+    assert_eq!(
+        res.dht.ranks_dead, 0,
+        "a probe must have revived the rank before the run ended"
+    );
+    assert!(res.hit_rate() > 0.4, "hit rate {}", res.hit_rate());
+    // the healed cache must not corrupt the physics
+    let mut refc = PoetDesCfg::scaled(8, None);
+    refc.ny = 12;
+    refc.nx = 24;
+    refc.steps = 16;
+    refc.inj_rows = 3;
+    let refr = run_poet_des(refc, NetConfig::pik_ndr());
+    let d = (res.max_dolomite - refr.max_dolomite).abs();
+    assert!(
+        d <= 0.35 * refr.max_dolomite.max(1e-12),
+        "dolomite {} vs reference {}",
+        res.max_dolomite,
+        refr.max_dolomite
+    );
+}
+
 /// The same kill without replication: the run still completes with
 /// correct physics, but the lost shard costs misses for the rest of the
 /// run — the gap replication closes.

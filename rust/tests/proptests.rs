@@ -446,6 +446,95 @@ fn prop_ladder_monotone_and_bounded() {
     });
 }
 
+/// Self-healing invariant (DESIGN.md §11): after ANY schedule of kills
+/// and revives that never exceeds k-1 simultaneous deaths and drains
+/// repair between transitions (so every shard always keeps a live
+/// copy), every key ends with copies on ALL of its k distinct live
+/// successor ranks — verified by isolating each claimed holder and
+/// reading through it alone.  Values are never foreign, even through
+/// stale-but-valid copies on revived ranks.
+#[test]
+fn prop_repair_restores_k_live_replicas() {
+    use mpi_dht::bench::keys::{key_for, value_for};
+    prop_check("repair-k-live-replicas", 15, |g: &mut G| {
+        let nranks = g.u64_in(3..6) as u32;
+        let k = 2u32;
+        let mut h = Dht::create(Variant::LockFree, nranks, 64 * 1024, 16, 32);
+        for hh in h.iter_mut() {
+            hh.set_replicas(k);
+            hh.set_repair(true);
+        }
+        let nkeys = g.u64_in(40..120);
+        let keys: Vec<Vec<u8>> =
+            (0..nkeys).map(|i| key_for(i, 16)).collect();
+        let vals: Vec<Vec<u8>> =
+            (0..nkeys).map(|i| value_for(i * 7, 32)).collect();
+        h[0].write_batch(&keys, &vals);
+        let mut dead = vec![false; nranks as usize];
+        for _ in 0..g.usize_in(1..6) {
+            // maybe revive the currently-dead rank
+            if let Some(d) = dead.iter().position(|&x| x) {
+                if g.bool() {
+                    h[0].set_rank_failed(d as u32, false);
+                    dead[d] = false;
+                }
+            }
+            // maybe kill one rank (never more than k-1 = 1 at a time)
+            if !dead.iter().any(|&x| x) && g.chance(0.8) {
+                let r = g.u64_in(0..nranks as u64) as usize;
+                h[0].set_rank_failed(r as u32, true);
+                dead[r] = true;
+            }
+            // drain the armed repair pass on every live handle before
+            // the next transition — the invariant's precondition
+            for (r, hh) in h.iter_mut().enumerate() {
+                if !dead[r] {
+                    hh.drain_repair();
+                    prop_assert!(!hh.repairing(), "pass must complete");
+                }
+            }
+        }
+        // freeze: no piggybacked repair during verification reads
+        for hh in h.iter_mut() {
+            hh.set_repair(false);
+        }
+        let placements: Vec<Vec<u32>> = {
+            let a = &h[0].cfg().addressing;
+            keys.iter()
+                .map(|key| {
+                    a.live_replica_targets(a.hash(key), |r| {
+                        dead[r as usize]
+                    })
+                })
+                .collect()
+        };
+        for ((key, val), targets) in
+            keys.iter().zip(vals.iter()).zip(placements.iter())
+        {
+            prop_assert_eq!(
+                targets.len(),
+                k as usize,
+                "enough live ranks for full replication"
+            );
+            for &t in targets {
+                // isolate rank t: only it can serve this read
+                for r in 0..nranks {
+                    h[0].set_rank_failed(r, r != t);
+                }
+                prop_assert_eq!(
+                    h[t as usize].read(key).as_ref(),
+                    Some(val),
+                    "rank {t} must hold a correct copy after repair"
+                );
+            }
+        }
+        for r in 0..nranks {
+            h[0].set_rank_failed(r, dead[r as usize]);
+        }
+        Ok(())
+    });
+}
+
 /// The rank-local L1 never serves a stale value across a resize epoch,
 /// and composes with replica failover (DESIGN.md §10): after another
 /// handle updates a key and the table resizes, a reader whose L1 cached

@@ -245,6 +245,65 @@ fn replicated_cluster_resizes_without_losing_failover() {
     assert!(hits >= 118, "post-epoch hits {hits}/120");
 }
 
+/// Online repair composes with the elastic resize (DESIGN.md §11 x §8):
+/// repair defers while a migration epoch is open (records are mid-flight
+/// between tables), resumes once the epoch closes, and the two
+/// subsystems together lose nothing — every surviving key keeps k
+/// distinct live copies and reads stay correct throughout.
+#[test]
+fn repair_defers_during_resize_and_completes_after() {
+    let mut h = Dht::create(Variant::LockFree, 4, 64 * 1024, KEY, VAL);
+    for hh in h.iter_mut() {
+        hh.set_replicas(2);
+        hh.set_repair(true);
+    }
+    let keys: Vec<Vec<u8>> = (0..120u64).map(|i| key_for(i, KEY)).collect();
+    let vals: Vec<Vec<u8>> =
+        (0..120u64).map(|i| value_for(i * 5, VAL)).collect();
+    h[0].write_batch(&keys, &vals);
+    let old = h[0].buckets_per_rank();
+    h[0].resize(old * 2).expect("resize");
+    assert!(h[1].migrating());
+    // rank 1 dies mid-epoch: repair must NOT touch the moving tables
+    h[2].set_rank_failed(1, true);
+    h[2].drain_repair();
+    assert_eq!(
+        h[2].stats().repaired,
+        0,
+        "repair defers while the epoch is open"
+    );
+    // reads still work mid-epoch through dual lookup + failover
+    let got = h[2].read_batch(&keys);
+    let hits = got
+        .iter()
+        .zip(vals.iter())
+        .filter(|(g, v)| g.as_ref() == Some(*v))
+        .count();
+    assert!(hits >= 118, "mid-epoch masked hits {hits}/120");
+    // close the epoch, then drain the deferred repair pass everywhere
+    h[3].drain_migration();
+    let mut repaired = 0u64;
+    for r in [0usize, 2, 3] {
+        h[r].drain_repair();
+        assert!(!h[r].repairing(), "pass must complete");
+        repaired += h[r].stats().repaired;
+    }
+    assert!(repaired > 0, "deferred repair ran after the epoch closed");
+    // after repair every key is served without touching the dead rank
+    let got = h[3].read_batch(&keys);
+    let hits = got
+        .iter()
+        .zip(vals.iter())
+        .filter(|(g, v)| g.as_ref() == Some(*v))
+        .count();
+    assert!(hits >= 118, "post-repair hits {hits}/120");
+    assert_eq!(
+        h[3].stats().mismatches,
+        0,
+        "no corruption across resize x repair"
+    );
+}
+
 /// Back-to-back epochs: grow, then grow again — each resize allocates a
 /// fresh window segment and the chain of epochs stays consistent.
 #[test]
