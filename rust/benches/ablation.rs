@@ -5,7 +5,11 @@
 //! 2. checksum re-read budget (lock-free `crc_retries`);
 //! 3. Open MPI's multi-atomic window-lock sequence (§3.5) — what happens
 //!    to the coarse variant if locks were single-atomic;
-//! 4. PJRT chemistry batch size — the L2 batching choice.
+//! 4. PJRT chemistry batch size — the L2 batching choice;
+//! 5. delegation vs lock-free across key skew (DESIGN.md §12) — where
+//!    does owner-compute delegation overtake direct RMA?
+//!
+//! Pass `smoke` (the CI job does) for a seconds-scale run of [5].
 
 mod common;
 
@@ -18,6 +22,7 @@ use mpi_dht::net::NetConfig;
 
 fn main() {
     banner("Ablations — design-choice sensitivity", "DESIGN.md §5");
+    let smoke = std::env::args().any(|a| a == "smoke");
 
     // ------------------------------------------------ 1. load factor
     println!("\n[1] load factor vs probes/evictions (lock-free, shm)");
@@ -115,6 +120,46 @@ fn main() {
         }
         print!("{}", t.render());
     }
+
+    // ------------------------------------------------ 5. delegation skew
+    println!(
+        "\n[5] delegation vs lock-free across key skew \
+         (mixed 95/5, {} ranks, DES)",
+        if smoke { 64 } else { 256 }
+    );
+    let mut t = Table::new(vec![
+        "distribution", "lock-free Mops", "delegated Mops", "del/lf",
+        "lf wlat p95 µs", "del wlat p95 µs",
+    ]);
+    let (nranks, ops) = if smoke { (64, 1_000) } else { (256, 4_000) };
+    let dists: [(&str, Dist, f64); 4] = [
+        ("uniform", Dist::Uniform, 0.99),
+        ("zipfian 0.99", Dist::Zipfian, 0.99),
+        ("zipfian 1.20", Dist::Zipfian, 1.20),
+        ("hotkey 20%", Dist::HotKey, 0.99),
+    ];
+    for (label, dist, theta) in dists {
+        let mut cfg =
+            KvCfg::new(nranks, ops, dist, Mode::Mixed { read_percent: 95 });
+        cfg.theta = theta;
+        let lf = run_kv(Variant::LockFree, NetConfig::pik_ndr(), cfg.clone());
+        let del = run_kv(Variant::Delegated, NetConfig::pik_ndr(), cfg);
+        t.row(vec![
+            label.to_string(),
+            mops(lf.mixed_mops),
+            mops(del.mixed_mops),
+            format!("{:.2}", del.mixed_mops / lf.mixed_mops),
+            format!("{:.1}", lf.write_lat_p95 as f64 / 1e3),
+            format!("{:.1}", del.write_lat_p95 as f64 / 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "(crossover: delegation wins once one mailbox round trip beats \
+         the probe+put RMA sequence and the hottest owner's serialized \
+         service time stays below lock/CRC contention — DESIGN.md §12, \
+         EXPERIMENTS.md)"
+    );
 }
 
 /// Run the mixed workload with a custom checksum-retry budget.

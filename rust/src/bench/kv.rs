@@ -26,11 +26,15 @@ use crate::util::zipf::Zipf;
 
 use super::keys::{key_for, value_for, KeyCorpus};
 
-/// Key-id distribution (§5.2: uniform or zipfian with skew 0.99).
+/// Key-id distribution (§5.2: uniform or zipfian with skew 0.99;
+/// hotkey is the adversarial extreme for the delegation ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dist {
     Uniform,
     Zipfian,
+    /// 20 % of draws hit one hot id, the rest are uniform over the
+    /// zipf range — a single contended bucket (DESIGN.md §12).
+    HotKey,
 }
 
 impl Dist {
@@ -38,7 +42,44 @@ impl Dist {
         match s {
             "uniform" => Some(Dist::Uniform),
             "zipfian" | "zipf" => Some(Dist::Zipfian),
+            "hotkey" | "hot-key" | "hot" => Some(Dist::HotKey),
             _ => None,
+        }
+    }
+}
+
+/// Id sampler instantiated from [`Dist`].
+enum Sampler {
+    Uniform,
+    Zipf(Zipf),
+    HotKey { range: u64, hot_percent: u64 },
+}
+
+impl Sampler {
+    fn new(cfg: &KvCfg) -> Sampler {
+        match cfg.dist {
+            Dist::Uniform => Sampler::Uniform,
+            Dist::Zipfian => {
+                Sampler::Zipf(Zipf::new(cfg.zipf_range_effective(), cfg.theta))
+            }
+            Dist::HotKey => Sampler::HotKey {
+                range: cfg.zipf_range_effective(),
+                hot_percent: 20,
+            },
+        }
+    }
+
+    fn draw(&self, rng: &mut Rng) -> u64 {
+        match self {
+            Sampler::Uniform => rng.next_u64(),
+            Sampler::Zipf(z) => z.sample(rng),
+            Sampler::HotKey { range, hot_percent } => {
+                if rng.below(100) < *hot_percent {
+                    0
+                } else {
+                    1 + rng.below(range.saturating_sub(1).max(1))
+                }
+            }
         }
     }
 }
@@ -153,8 +194,8 @@ struct RankCtx {
 struct KvWorkload {
     cfg: KvCfg,
     dht: DhtConfig,
-    zipf: Option<Zipf>,
-    /// Precomputed keys for the bounded zipfian id range, so the
+    sampler: Sampler,
+    /// Precomputed keys for bounded id ranges (zipfian/hotkey), so the
     /// measured loop indexes a slice instead of allocating and deriving
     /// a key per op (uniform ids span all of u64 and keep [`key_for`]).
     corpus: Option<KeyCorpus>,
@@ -167,14 +208,11 @@ struct KvWorkload {
 
 impl KvWorkload {
     fn new(cfg: KvCfg, dht: DhtConfig) -> Self {
-        let zipf = match cfg.dist {
-            Dist::Uniform => None,
-            Dist::Zipfian => Some(Zipf::new(cfg.zipf_range_effective(), cfg.theta)),
-        };
+        let sampler = Sampler::new(&cfg);
         let corpus = match cfg.dist {
             Dist::Uniform => None,
-            // zipf ids are drawn from [0, range)
-            Dist::Zipfian => {
+            // zipf/hotkey ids are drawn from [0, range)
+            Dist::Zipfian | Dist::HotKey => {
                 KeyCorpus::build(cfg.zipf_range_effective(), cfg.key_len)
             }
         };
@@ -193,7 +231,7 @@ impl KvWorkload {
         Self {
             cfg,
             dht,
-            zipf,
+            sampler,
             corpus,
             ranks,
             stats: DhtStats::default(),
@@ -203,11 +241,8 @@ impl KvWorkload {
         }
     }
 
-    fn draw_id(zipf: &Option<Zipf>, rng: &mut Rng) -> u64 {
-        match zipf {
-            None => rng.next_u64(),
-            Some(z) => z.sample(rng),
-        }
+    fn draw_id(sampler: &Sampler, rng: &mut Rng) -> u64 {
+        sampler.draw(rng)
     }
 
     /// The key for `id`: a corpus slice when precomputed (bounded ids),
@@ -241,7 +276,7 @@ impl Workload for KvWorkload {
                 if r.phase == 0 {
                     if r.ops_done < cfg_ops {
                         r.ops_done += 1;
-                        let id = Self::draw_id(&self.zipf, &mut r.rng);
+                        let id = Self::draw_id(&self.sampler, &mut r.rng);
                         let mut scratch = Vec::new();
                         let key = Self::key_bytes(
                             &self.corpus, id, key_len, &mut scratch,
@@ -263,7 +298,7 @@ impl Workload for KvWorkload {
                 if r.ops_done < cfg_ops {
                     r.ops_done += 1;
                     // read back exactly the ids written in phase 0 (§5.2)
-                    let id = Self::draw_id(&self.zipf, &mut r.replay);
+                    let id = Self::draw_id(&self.sampler, &mut r.replay);
                     let mut scratch = Vec::new();
                     let key =
                         Self::key_bytes(&self.corpus, id, key_len, &mut scratch);
@@ -277,7 +312,7 @@ impl Workload for KvWorkload {
                     return WorkItem::Finished;
                 }
                 r.ops_done += 1;
-                let id = Self::draw_id(&self.zipf, &mut r.rng);
+                let id = Self::draw_id(&self.sampler, &mut r.rng);
                 let mut scratch = Vec::new();
                 let key =
                     Self::key_bytes(&self.corpus, id, key_len, &mut scratch);
@@ -384,7 +419,7 @@ struct DaosWorkload {
     daos: DaosConfig,
     server: DaosServer,
     ranks: Vec<RankCtx>,
-    zipf: Option<Zipf>,
+    sampler: Sampler,
     read_lat: Histogram,
     write_lat: Histogram,
     phase_ops: [u64; 2],
@@ -401,7 +436,7 @@ impl Workload for DaosWorkload {
         if r.phase == 0 {
             if r.ops_done < cfg_ops {
                 r.ops_done += 1;
-                let id = KvWorkload::draw_id(&self.zipf, &mut r.rng);
+                let id = KvWorkload::draw_id(&self.sampler, &mut r.rng);
                 return WorkItem::Op(DaosSm::put(
                     &self.daos,
                     key_for(id, key_len),
@@ -417,7 +452,7 @@ impl Workload for DaosWorkload {
         }
         if r.ops_done < cfg_ops {
             r.ops_done += 1;
-            let id = KvWorkload::draw_id(&self.zipf, &mut r.replay);
+            let id = KvWorkload::draw_id(&self.sampler, &mut r.replay);
             return WorkItem::Op(DaosSm::get(&self.daos, key_for(id, key_len)));
         }
         WorkItem::Finished
@@ -451,10 +486,7 @@ impl Workload for DaosWorkload {
 /// Run the write-then-read benchmark against the DAOS baseline.
 pub fn run_daos(net_cfg: NetConfig, daos: DaosConfig, cfg: KvCfg) -> KvResult {
     assert_eq!(cfg.mode, Mode::WriteThenRead, "Fig. 3 uses experiment 1");
-    let zipf = match cfg.dist {
-        Dist::Uniform => None,
-        Dist::Zipfian => Some(Zipf::new(cfg.zipf_range_effective(), cfg.theta)),
-    };
+    let sampler = Sampler::new(&cfg);
     let ranks = (0..cfg.nranks)
         .map(|r| RankCtx {
             rng: Rng::new(cfg.seed ^ (r as u64) << 20),
@@ -471,7 +503,7 @@ pub fn run_daos(net_cfg: NetConfig, daos: DaosConfig, cfg: KvCfg) -> KvResult {
         daos,
         server: DaosServer::new(),
         ranks,
-        zipf,
+        sampler,
         read_lat: Histogram::new(),
         write_lat: Histogram::new(),
         phase_ops: [0, 0],
@@ -555,6 +587,23 @@ mod tests {
         // ~95/5 split
         let read_frac = res.stats.reads as f64 / total as f64;
         assert!((0.9..0.99).contains(&read_frac), "read frac {read_frac}");
+    }
+
+    #[test]
+    fn hotkey_mixed_runs_delegated_counts_mailbox_traffic() {
+        let res = run_kv(
+            Variant::Delegated,
+            NetConfig::pik_ndr(),
+            small_cfg(16, Dist::HotKey, Mode::Mixed { read_percent: 80 }),
+        );
+        assert!(res.mixed_mops > 0.0);
+        let total = res.stats.reads + res.stats.writes;
+        assert_eq!(total, 16 * 200);
+        // every op is exactly one mailbox round trip
+        assert_eq!(res.stats.mailbox_ops, total);
+        assert!(res.stats.mailbox_bytes > 0);
+        // the hot id is rewritten constantly, so reads of it hit
+        assert!(res.stats.hit_rate() > 0.15, "{}", res.stats.hit_rate());
     }
 
     #[test]

@@ -142,12 +142,14 @@ mod tests {
         let runs = compare_poet(
             &cfg,
             EngineKind::Native,
-            &[None, Some(Variant::LockFree)],
+            &[None, Some(Variant::LockFree), Some(Variant::Delegated)],
         )
         .unwrap();
-        assert_eq!(runs.len(), 2);
+        assert_eq!(runs.len(), 3);
         assert_eq!(runs[0].label, "reference");
         assert!(runs[1].stats.hit_rate() > 0.0);
+        assert!(runs[2].stats.hit_rate() > 0.0);
+        assert!(runs[2].stats.mailbox_ops > 0);
     }
 
     #[test]

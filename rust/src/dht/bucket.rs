@@ -11,7 +11,14 @@
 //! coarse:    [ meta u64 ][ key .. ][ value .. ]
 //! fine:      [ lock u64 ][ meta u64 ][ key .. ][ value .. ]
 //! lock-free: [ meta u64 ][ key .. ][ value .. ][ crc u64 ]
+//! delegated: [ meta u64 ][ key .. ][ value .. ][ crc u64 ]
 //! ```
+//!
+//! The delegated variant (DESIGN.md §12) reuses the lock-free bucket
+//! byte-for-byte: the CRC word lets control-plane traffic (migration,
+//! repair, checkpoints) that bypasses the owner mailbox keep its
+//! torn-record detection, and makes the two variants' tables
+//! interchangeable on disk and over the wire.
 //!
 //! `meta` flags: bit 0 = occupied, bit 1 = invalid (lock-free, §4.2).
 
@@ -82,18 +89,25 @@ impl BucketLayout {
         self.key_off() + pad8(self.key_len)
     }
 
-    /// Offset of the CRC word (lock-free only).
+    /// Whether this layout carries a trailing CRC word (lock-free and
+    /// delegated buckets are self-verifying; coarse/fine rely on locks).
+    pub fn has_crc(&self) -> bool {
+        self.variant.has_crc()
+    }
+
+    /// Offset of the CRC word (CRC-carrying layouts only).
     pub fn crc_off(&self) -> usize {
-        assert_eq!(self.variant, Variant::LockFree);
+        assert!(self.variant.has_crc());
         self.val_off() + pad8(self.val_len)
     }
 
     /// Total bucket size in bytes (8-aligned).
     pub fn size(&self) -> usize {
         let base = self.val_off() + pad8(self.val_len);
-        match self.variant {
-            Variant::LockFree => base + 8,
-            _ => base,
+        if self.variant.has_crc() {
+            base + 8
+        } else {
+            base
         }
     }
 
@@ -123,7 +137,7 @@ impl BucketLayout {
         rec[k0..k0 + key.len()].copy_from_slice(key);
         let v0 = self.val_off() - self.meta_off();
         rec[v0..v0 + value.len()].copy_from_slice(value);
-        if self.variant == Variant::LockFree {
+        if self.variant.has_crc() {
             let crc = record_crc(key, value);
             let c0 = self.crc_off() - self.meta_off();
             rec[c0..c0 + 8].copy_from_slice(&(crc as u64).to_le_bytes());
@@ -138,7 +152,7 @@ impl BucketLayout {
     /// [`Self::encode_record`] (pinned by a property test).
     pub fn encode_into(&self, key: &[u8], value: &[u8], buf: &mut Vec<u8>) {
         self.encode_into_nocrc(key, value, buf);
-        if self.variant == Variant::LockFree {
+        if self.variant.has_crc() {
             self.fill_crc(buf);
         }
     }
@@ -174,7 +188,7 @@ impl BucketLayout {
     /// chains across records instead of re-entering the detected path
     /// per call.
     pub fn fill_crc_batch(&self, recs: &mut [Vec<u8>]) {
-        if self.variant != Variant::LockFree {
+        if !self.variant.has_crc() {
             return;
         }
         #[cfg(target_arch = "x86_64")]
@@ -338,6 +352,10 @@ mod tests {
         // lock-free: + checksum word (paper: +4, we word-align)
         let l = BucketLayout::new(Variant::LockFree, K, V);
         assert_eq!(l.size(), 8 + 80 + 104 + 8);
+        // delegated: byte-identical to lock-free (DESIGN.md §12)
+        let d = BucketLayout::new(Variant::Delegated, K, V);
+        assert_eq!(d.size(), l.size());
+        assert_eq!(d.crc_off(), l.crc_off());
     }
 
     #[test]
@@ -350,7 +368,7 @@ mod tests {
                 assert_eq!(l.val_off() % 8, 0);
                 assert_eq!(l.size() % 8, 0);
                 assert!(l.probe_len() % 8 == 0);
-                if v == Variant::LockFree {
+                if l.has_crc() {
                     assert_eq!(l.crc_off() % 8, 0);
                 }
             }
@@ -369,7 +387,7 @@ mod tests {
             assert!(!l.meta_of(&rec).invalid());
             assert_eq!(l.key_of(&rec), &key[..]);
             assert_eq!(l.val_of(&rec), &val[..]);
-            if v == Variant::LockFree {
+            if l.has_crc() {
                 assert!(l.crc_ok(&rec));
             }
         }

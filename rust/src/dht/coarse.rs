@@ -76,7 +76,10 @@ impl Plan {
         self.indices[i]
     }
 
-    fn rec_off(&self, i: usize) -> u64 {
+    /// Absolute window offset of the record region (meta..end) at probe
+    /// `i` — the slot address a delegated mailbox op ships to its owner
+    /// (DESIGN.md §12).
+    pub fn rec_off(&self, i: usize) -> u64 {
         self.base
             + self.layout.bucket_off(self.indices[i])
             + self.layout.meta_off() as u64
@@ -225,6 +228,8 @@ impl crate::rma::OpSm for ReadSm {
                 probes: self.probes,
                 crc_retries: 0,
                 lock_retries: 0,
+                mailbox_ops: 0,
+                mailbox_bytes: 0,
             }),
         }
     }
@@ -348,6 +353,8 @@ impl crate::rma::OpSm for WriteSm {
                 probes: self.probes,
                 crc_retries: 0,
                 lock_retries: 0,
+                mailbox_ops: 0,
+                mailbox_bytes: 0,
             }),
         }
     }

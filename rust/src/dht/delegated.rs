@@ -1,0 +1,501 @@
+//! Delegated (owner-compute) MPI-DHT variant — DESIGN.md §12.
+//!
+//! The paper's three designs all ship *synchronization* to the data:
+//! window locks (§3.1), bucket locks (§4.1) or optimistic CRC retries
+//! (§4.2).  The delegation literature (Maier et al., *Concurrent Hash
+//! Tables: Fast and General?(!)*) argues the inverse: under contention,
+//! ship the *operation* to the rank that owns the shard and apply it
+//! there serially.  This module is that fourth design:
+//!
+//! * Clients build a [`MailboxOp`] — the key/record plus the absolute
+//!   window offsets of the candidate buckets (the same probe plan every
+//!   other variant uses) — and issue it as one `Req::Mailbox` through
+//!   the ordinary pipelined epoch, so delegation composes with batching,
+//!   replication, dual reads and repair exactly like the other variants.
+//! * The owning rank executes [`serve_mailbox`] against its shard
+//!   memory.  The backend guarantees per-owner *serialization* (a DES
+//!   `Resource` on the sim backend, a flat-combining per-rank ring on
+//!   shm), so owner-side probes never race other mailbox ops: no lock
+//!   words, no CRC re-read loop, exactly one round trip per op.
+//!
+//! Buckets reuse the lock-free self-verifying layout (CRC word,
+//! [`super::bucket`]): control-plane traffic — migration, repair,
+//! checkpoint scans — still bypasses the mailbox with raw RMA, and the
+//! CRC is what keeps those paths safe against records torn by faults.
+//! A CRC mismatch observed *inside* `serve_mailbox` cannot be a racing
+//! mailbox write (ops are serialized), so the server invalidates the
+//! bucket immediately instead of re-reading.
+//!
+//! Failure semantics match the other variants' degraded mode: a mailbox
+//! op addressed to a rank the failure detector holds dead completes
+//! degraded at the backend — gets miss, puts are dropped with a vacuous
+//! success — and the replicated read path fails over around it.
+
+use crate::rma::{Req, Resp, SmStep};
+
+use super::bucket::{BucketLayout, Meta, ProbeHit};
+use super::coarse::Plan;
+use super::{DhtConfig, DhtOutcome, OpOut};
+
+/// Modelled fixed per-message mailbox overhead (op tag, slot count,
+/// lengths), added to both request and response payloads.
+pub const MAILBOX_HEADER_BYTES: u32 = 16;
+
+/// One operation shipped to its owning rank.  `slots` are the absolute
+/// window offsets of the candidate buckets' record regions (meta..end),
+/// in probe order — clients compute them from the shared probe plan, so
+/// the server needs no addressing state, only its window memory.
+#[derive(Clone, Debug)]
+pub enum MailboxOp {
+    /// Probe `slots` for `key`; return the value on a verified hit.
+    Get {
+        /// Bucket geometry of the table the slots point into.
+        layout: BucketLayout,
+        /// Absolute record-region offsets, probe order.
+        slots: Vec<u64>,
+        /// The key being looked up.
+        key: Vec<u8>,
+    },
+    /// Store the pre-encoded `record` (CRC word filled) into the first
+    /// claimable slot, with the paper's cache semantics (§3.1): fresh on
+    /// empty/invalid, update on match, evict at the last candidate.
+    Put {
+        /// Bucket geometry of the table the slots point into.
+        layout: BucketLayout,
+        /// Absolute record-region offsets, probe order.
+        slots: Vec<u64>,
+        /// Complete record bytes starting at the meta word.
+        record: Vec<u8>,
+    },
+}
+
+impl MailboxOp {
+    /// Modelled request payload bytes of this op on the wire.
+    pub fn req_bytes(&self) -> u32 {
+        let body = match self {
+            MailboxOp::Get { slots, key, .. } => 8 * slots.len() + key.len(),
+            MailboxOp::Put { slots, record, .. } => {
+                8 * slots.len() + record.len()
+            }
+        };
+        MAILBOX_HEADER_BYTES + body as u32
+    }
+
+    /// Modelled response payload bytes (documented upper bound: a get
+    /// reply carries at most one value, a put reply only the outcome).
+    pub fn resp_bytes(&self) -> u32 {
+        match self {
+            MailboxOp::Get { layout, .. } => {
+                MAILBOX_HEADER_BYTES + layout.val_len() as u32
+            }
+            MailboxOp::Put { .. } => MAILBOX_HEADER_BYTES,
+        }
+    }
+}
+
+/// What the owning rank sends back for one [`MailboxOp`].
+#[derive(Clone, Debug)]
+pub struct MailboxReply {
+    /// The op's outcome, in the same vocabulary as every other variant.
+    pub outcome: DhtOutcome,
+    /// Buckets the owner probed while serving.
+    pub probes: u32,
+}
+
+/// The shard memory [`serve_mailbox`] executes against — implemented by
+/// each backend over its own window representation (byte vectors on the
+/// DES cluster, atomic words on shm).  Offsets are absolute window
+/// offsets, exactly as carried in [`MailboxOp::Get::slots`].
+pub trait MailboxWindow {
+    /// Read `buf.len()` bytes at `offset` into `buf`.
+    fn read(&mut self, offset: u64, buf: &mut [u8]);
+    /// Write `data` at `offset`.
+    fn write(&mut self, offset: u64, data: &[u8]);
+}
+
+/// Execute one mailbox op against the owner's shard memory.  Pure
+/// protocol logic shared by both backends; the caller provides the
+/// per-owner serialization this function's correctness relies on.
+pub fn serve_mailbox(
+    op: &MailboxOp,
+    mem: &mut impl MailboxWindow,
+) -> MailboxReply {
+    match op {
+        MailboxOp::Get { layout, slots, key } => {
+            let mut rec = vec![0u8; layout.size() - layout.meta_off()];
+            for (p, &slot) in slots.iter().enumerate() {
+                mem.read(slot, &mut rec);
+                match layout.classify_probe(&rec, key) {
+                    ProbeHit::Empty => {
+                        return MailboxReply {
+                            outcome: DhtOutcome::ReadMiss,
+                            probes: p as u32 + 1,
+                        }
+                    }
+                    // corrupt/foreign buckets: keep probing (the same
+                    // candidate walk as the lock-free reader)
+                    ProbeHit::Invalid | ProbeHit::Other => continue,
+                    ProbeHit::Match => {
+                        if layout.crc_ok(&rec) {
+                            return MailboxReply {
+                                outcome: DhtOutcome::ReadHit(
+                                    layout.val_of(&rec).to_vec(),
+                                ),
+                                probes: p as u32 + 1,
+                            };
+                        }
+                        // Serialized ops cannot race each other, so this
+                        // mismatch is a genuinely torn/corrupt record (a
+                        // faulted control-plane put): re-reading would
+                        // see the same bytes — invalidate immediately.
+                        mem.write(
+                            slot,
+                            &(Meta::OCCUPIED | Meta::INVALID).to_le_bytes(),
+                        );
+                        return MailboxReply {
+                            outcome: DhtOutcome::ReadCorrupt,
+                            probes: p as u32 + 1,
+                        };
+                    }
+                }
+            }
+            MailboxReply {
+                outcome: DhtOutcome::ReadMiss,
+                probes: slots.len() as u32,
+            }
+        }
+        MailboxOp::Put { layout, slots, record } => {
+            let mut probe = vec![0u8; layout.probe_len()];
+            let key = layout.key_of(record);
+            for (p, &slot) in slots.iter().enumerate() {
+                mem.read(slot, &mut probe);
+                let outcome = match layout.classify_probe(&probe, key) {
+                    // invalid buckets may be reclaimed, like §4.2
+                    ProbeHit::Empty | ProbeHit::Invalid => {
+                        Some(DhtOutcome::WriteFresh)
+                    }
+                    ProbeHit::Match => Some(DhtOutcome::WriteUpdate),
+                    ProbeHit::Other if p + 1 == slots.len() => {
+                        Some(DhtOutcome::WriteEvict)
+                    }
+                    ProbeHit::Other => None,
+                };
+                if let Some(outcome) = outcome {
+                    mem.write(slot, record);
+                    return MailboxReply { outcome, probes: p as u32 + 1 };
+                }
+            }
+            unreachable!("the last candidate always claims (cache semantics)")
+        }
+    }
+}
+
+/// Degraded-mode reply for an op addressed to a dead rank (DESIGN.md
+/// §11): gets miss, puts report a vacuous fresh success and are dropped
+/// — byte-for-byte the semantics the other variants get from degraded
+/// Get/Put primitives.
+pub fn degraded_reply(op: &MailboxOp) -> MailboxReply {
+    MailboxReply {
+        outcome: match op {
+            MailboxOp::Get { .. } => DhtOutcome::ReadMiss,
+            MailboxOp::Put { .. } => DhtOutcome::WriteFresh,
+        },
+        probes: 0,
+    }
+}
+
+fn reply_of(resp: Resp) -> MailboxReply {
+    match resp {
+        Resp::Mailbox(r) => r,
+        other => panic!("protocol error: expected Mailbox, got {other:?}"),
+    }
+}
+
+fn plan_slots(plan: &Plan) -> Vec<u64> {
+    (0..plan.n()).map(|i| plan.rec_off(i)).collect()
+}
+
+// --------------------------------------------------------------------- read
+
+/// `DHT_read`, delegated: one mailbox round trip to the owner.
+pub struct ReadSm {
+    req: Option<Req>,
+    mailbox_bytes: u64,
+}
+
+impl ReadSm {
+    pub fn new(cfg: &DhtConfig, key: &[u8]) -> Self {
+        Self::new_at(cfg, key, 0)
+    }
+
+    /// Read probing the key's `r`-th replica (DESIGN.md §9).
+    pub fn new_at(cfg: &DhtConfig, key: &[u8], r: u32) -> Self {
+        Self::with_hash_at(cfg, cfg.addressing.hash(key), key, r)
+    }
+
+    /// Read from a precomputed key hash — replica failover and dual
+    /// lookups hash the key once and route every slot from it.
+    pub fn with_hash_at(cfg: &DhtConfig, hash: u64, key: &[u8], r: u32) -> Self {
+        let plan = Plan::replica_from_hash(cfg, hash, r);
+        let op = MailboxOp::Get {
+            layout: cfg.layout,
+            slots: plan_slots(&plan),
+            key: key.to_vec(),
+        };
+        let (req_bytes, resp_bytes) = (op.req_bytes(), op.resp_bytes());
+        Self {
+            req: Some(Req::Mailbox {
+                target: plan.target,
+                op,
+                req_bytes,
+                resp_bytes,
+            }),
+            mailbox_bytes: req_bytes as u64 + resp_bytes as u64,
+        }
+    }
+}
+
+impl crate::rma::OpSm for ReadSm {
+    type Out = OpOut;
+    fn step(&mut self, resp: Resp) -> SmStep<OpOut> {
+        match self.req.take() {
+            Some(req) => SmStep::Issue(req),
+            None => {
+                let reply = reply_of(resp);
+                SmStep::Done(OpOut {
+                    outcome: reply.outcome,
+                    probes: reply.probes,
+                    crc_retries: 0,
+                    lock_retries: 0,
+                    mailbox_ops: 1,
+                    mailbox_bytes: self.mailbox_bytes,
+                })
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------- write
+
+/// `DHT_write`, delegated: one mailbox round trip shipping the encoded
+/// record to the owner.
+pub struct WriteSm {
+    req: Option<Req>,
+    mailbox_bytes: u64,
+}
+
+impl WriteSm {
+    pub fn new(cfg: &DhtConfig, key: &[u8], value: &[u8]) -> Self {
+        Self::new_at(cfg, key, value, 0)
+    }
+
+    /// Write storing into the key's `r`-th replica (DESIGN.md §9).
+    pub fn new_at(cfg: &DhtConfig, key: &[u8], value: &[u8], r: u32) -> Self {
+        let hash = cfg.addressing.hash(key);
+        Self::with_record_at(cfg, hash, cfg.layout.encode_record(key, value), r)
+    }
+
+    /// Write from a pre-encoded record (CRC word already filled) and its
+    /// precomputed key hash (primary replica) — the batched front-end
+    /// path.
+    pub fn with_record(cfg: &DhtConfig, hash: u64, record: Vec<u8>) -> Self {
+        Self::with_record_at(cfg, hash, record, 0)
+    }
+
+    /// [`Self::with_record`] targeting the `r`-th replica.
+    pub fn with_record_at(
+        cfg: &DhtConfig,
+        hash: u64,
+        record: Vec<u8>,
+        r: u32,
+    ) -> Self {
+        debug_assert_eq!(
+            record.len(),
+            cfg.layout.size() - cfg.layout.meta_off()
+        );
+        let plan = Plan::replica_from_hash(cfg, hash, r);
+        let op = MailboxOp::Put {
+            layout: cfg.layout,
+            slots: plan_slots(&plan),
+            record,
+        };
+        let (req_bytes, resp_bytes) = (op.req_bytes(), op.resp_bytes());
+        Self {
+            req: Some(Req::Mailbox {
+                target: plan.target,
+                op,
+                req_bytes,
+                resp_bytes,
+            }),
+            mailbox_bytes: req_bytes as u64 + resp_bytes as u64,
+        }
+    }
+}
+
+impl crate::rma::OpSm for WriteSm {
+    type Out = OpOut;
+    fn step(&mut self, resp: Resp) -> SmStep<OpOut> {
+        match self.req.take() {
+            Some(req) => SmStep::Issue(req),
+            None => {
+                let reply = reply_of(resp);
+                SmStep::Done(OpOut {
+                    outcome: reply.outcome,
+                    probes: reply.probes,
+                    crc_retries: 0,
+                    lock_retries: 0,
+                    mailbox_ops: 1,
+                    mailbox_bytes: self.mailbox_bytes,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dht::Variant;
+    use crate::rma::shm::ShmCluster;
+
+    fn cfg(nranks: u32) -> DhtConfig {
+        DhtConfig::poet(Variant::Delegated, nranks, 64 * 1024)
+    }
+
+    /// A plain byte-vector shard for exercising `serve_mailbox` without
+    /// a backend.
+    struct VecMem(Vec<u8>);
+    impl MailboxWindow for VecMem {
+        fn read(&mut self, offset: u64, buf: &mut [u8]) {
+            let o = offset as usize;
+            buf.copy_from_slice(&self.0[o..o + buf.len()]);
+        }
+        fn write(&mut self, offset: u64, data: &[u8]) {
+            let o = offset as usize;
+            self.0[o..o + data.len()].copy_from_slice(data);
+        }
+    }
+
+    #[test]
+    fn serve_put_then_get_roundtrip() {
+        let l = BucketLayout::new(Variant::Delegated, 8, 8);
+        let mut mem = VecMem(vec![0u8; 4 * l.size()]);
+        let slots: Vec<u64> = (0..3).map(|i| l.bucket_off(i)).collect();
+        let key = [7u8; 8];
+        let rec = l.encode_record(&key, &[9u8; 8]);
+        let put = MailboxOp::Put {
+            layout: l,
+            slots: slots.clone(),
+            record: rec,
+        };
+        let r = serve_mailbox(&put, &mut mem);
+        assert_eq!(r.outcome, DhtOutcome::WriteFresh);
+        assert_eq!(r.probes, 1);
+        let get = MailboxOp::Get { layout: l, slots, key: key.to_vec() };
+        let r = serve_mailbox(&get, &mut mem);
+        assert_eq!(r.outcome, DhtOutcome::ReadHit(vec![9u8; 8]));
+    }
+
+    #[test]
+    fn serve_get_invalidates_torn_record() {
+        let l = BucketLayout::new(Variant::Delegated, 8, 8);
+        let mut mem = VecMem(vec![0u8; 2 * l.size()]);
+        let key = [3u8; 8];
+        let mut rec = l.encode_record(&key, &[4u8; 8]);
+        let v0 = l.val_off() - l.meta_off();
+        rec[v0] ^= 0xFF; // torn behind the CRC's back
+        mem.write(0, &rec);
+        let get = MailboxOp::Get {
+            layout: l,
+            slots: vec![0],
+            key: key.to_vec(),
+        };
+        let r = serve_mailbox(&get, &mut mem);
+        assert_eq!(r.outcome, DhtOutcome::ReadCorrupt);
+        // the bucket is now invalid: a re-get keeps probing past it
+        let r = serve_mailbox(&get, &mut mem);
+        assert_eq!(r.outcome, DhtOutcome::ReadMiss);
+        // and a put reclaims it as fresh
+        let put = MailboxOp::Put {
+            layout: l,
+            slots: vec![0],
+            record: l.encode_record(&key, &[5u8; 8]),
+        };
+        assert_eq!(
+            serve_mailbox(&put, &mut mem).outcome,
+            DhtOutcome::WriteFresh
+        );
+    }
+
+    #[test]
+    fn serve_put_evicts_at_last_candidate() {
+        let l = BucketLayout::new(Variant::Delegated, 8, 8);
+        let mut mem = VecMem(vec![0u8; 2 * l.size()]);
+        let slots = vec![0u64, l.size() as u64];
+        for i in 0..2u8 {
+            let put = MailboxOp::Put {
+                layout: l,
+                slots: slots.clone(),
+                record: l.encode_record(&[i; 8], &[i; 8]),
+            };
+            assert_eq!(
+                serve_mailbox(&put, &mut mem).outcome,
+                DhtOutcome::WriteFresh
+            );
+        }
+        let put = MailboxOp::Put {
+            layout: l,
+            slots: slots.clone(),
+            record: l.encode_record(&[9u8; 8], &[9u8; 8]),
+        };
+        let r = serve_mailbox(&put, &mut mem);
+        assert_eq!(r.outcome, DhtOutcome::WriteEvict);
+        assert_eq!(r.probes, 2);
+    }
+
+    #[test]
+    fn degraded_replies_match_other_variants() {
+        let l = BucketLayout::new(Variant::Delegated, 8, 8);
+        let get = MailboxOp::Get { layout: l, slots: vec![0], key: vec![0; 8] };
+        assert_eq!(degraded_reply(&get).outcome, DhtOutcome::ReadMiss);
+        let put = MailboxOp::Put {
+            layout: l,
+            slots: vec![0],
+            record: l.encode_record(&[0; 8], &[0; 8]),
+        };
+        assert_eq!(degraded_reply(&put).outcome, DhtOutcome::WriteFresh);
+    }
+
+    #[test]
+    fn shm_write_then_read_roundtrip() {
+        let cfg = cfg(4);
+        let cluster = ShmCluster::new(4, 64 * 1024);
+        let rma = cluster.rma(3);
+        let key = vec![0x11; 80];
+        let val = vec![0x22; 104];
+        let out = rma.exec(&mut WriteSm::new(&cfg, &key, &val));
+        assert_eq!(out.outcome, DhtOutcome::WriteFresh);
+        assert!(out.mailbox_ops == 1 && out.mailbox_bytes > 0);
+        let out = rma.exec(&mut ReadSm::new(&cfg, &key));
+        assert_eq!(out.outcome, DhtOutcome::ReadHit(val));
+        assert_eq!(out.mailbox_ops, 1);
+    }
+
+    #[test]
+    fn prepared_record_write_equals_plain_write() {
+        let cfg = cfg(2);
+        let cluster = ShmCluster::new(2, 64 * 1024);
+        let rma = cluster.rma(0);
+        let key = vec![0x5A; 80];
+        let val = vec![0xA5; 104];
+        let hash = cfg.addressing.hash(&key);
+        let mut scratch = Vec::new();
+        cfg.layout.encode_into(&key, &val, &mut scratch);
+        let out = rma.exec(&mut WriteSm::with_record(&cfg, hash, scratch));
+        assert_eq!(out.outcome, DhtOutcome::WriteFresh);
+        assert_eq!(
+            rma.exec(&mut ReadSm::new(&cfg, &key)).outcome,
+            DhtOutcome::ReadHit(val)
+        );
+    }
+}

@@ -165,6 +165,8 @@ impl crate::rma::OpSm for ReadSm {
                 probes: self.probes,
                 crc_retries: 0,
                 lock_retries: self.lock_retries,
+                mailbox_ops: 0,
+                mailbox_bytes: 0,
             }),
         }
     }
@@ -312,6 +314,8 @@ impl crate::rma::OpSm for WriteSm {
                 probes: self.probes,
                 crc_retries: 0,
                 lock_retries: self.lock_retries,
+                mailbox_ops: 0,
+                mailbox_bytes: 0,
             }),
         }
     }

@@ -1269,7 +1269,7 @@ impl DhtCheckpoint {
                     if !meta.occupied() || meta.invalid() {
                         continue;
                     }
-                    if cfg.variant == Variant::LockFree && !l.crc_ok(&rec) {
+                    if l.has_crc() && !l.crc_ok(&rec) {
                         continue; // torn write caught mid-checkpoint: skip
                     }
                     let key = l.key_of(&rec).to_vec();
@@ -1298,6 +1298,7 @@ impl DhtCheckpoint {
             Variant::Coarse => 0,
             Variant::Fine => 1,
             Variant::LockFree => 2,
+            Variant::Delegated => 3,
         });
         out.extend_from_slice(&(self.key_len as u32).to_le_bytes());
         out.extend_from_slice(&(self.val_len as u32).to_le_bytes());
@@ -1329,6 +1330,7 @@ impl DhtCheckpoint {
             0 => Variant::Coarse,
             1 => Variant::Fine,
             2 => Variant::LockFree,
+            3 => Variant::Delegated,
             _ => return None,
         };
         let key_len =

@@ -79,6 +79,8 @@ impl ReadSm {
             probes: self.probes,
             crc_retries: self.crc_retries,
             lock_retries: 0,
+            mailbox_ops: 0,
+            mailbox_bytes: 0,
         })
     }
 }
@@ -231,6 +233,8 @@ impl crate::rma::OpSm for WriteSm {
                     probes: self.probes,
                     crc_retries: 0,
                     lock_retries: 0,
+                    mailbox_ops: 0,
+                    mailbox_bytes: 0,
                 })
             }
         }

@@ -252,6 +252,8 @@ pub struct DualReadSm {
     probes: u32,
     crc_retries: u32,
     lock_retries: u32,
+    mailbox_ops: u32,
+    mailbox_bytes: u64,
 }
 
 impl DualReadSm {
@@ -289,6 +291,8 @@ impl DualReadSm {
             probes: 0,
             crc_retries: 0,
             lock_retries: 0,
+            mailbox_ops: 0,
+            mailbox_bytes: 0,
         }
     }
 }
@@ -314,6 +318,8 @@ impl OpSm for DualReadSm {
                             self.probes = out.probes;
                             self.crc_retries = out.crc_retries;
                             self.lock_retries = out.lock_retries;
+                            self.mailbox_ops = out.mailbox_ops;
+                            self.mailbox_bytes = out.mailbox_bytes;
                             self.cur = old;
                             resp = Resp::Start;
                             continue;
@@ -324,6 +330,8 @@ impl OpSm for DualReadSm {
                         probes: out.probes + self.probes,
                         crc_retries: out.crc_retries + self.crc_retries,
                         lock_retries: out.lock_retries + self.lock_retries,
+                        mailbox_ops: out.mailbox_ops + self.mailbox_ops,
+                        mailbox_bytes: out.mailbox_bytes + self.mailbox_bytes,
                     };
                     return SmStep::Done(DualOut {
                         out: merged,
@@ -474,7 +482,10 @@ impl MigrateSm {
                     exclusive: true,
                 })
             }
-            Variant::LockFree => self.done(),
+            // lock-free and delegated hold nothing: delegation only
+            // serializes the *mailbox* data plane, and migration is
+            // control-plane raw RMA guarded by the CRC layout
+            Variant::LockFree | Variant::Delegated => self.done(),
         }
     }
 }
@@ -499,7 +510,7 @@ impl OpSm for MigrateSm {
                         add: 1,
                     })
                 }
-                Variant::LockFree => {
+                Variant::LockFree | Variant::Delegated => {
                     self.state = MState::AwaitOldRecord;
                     SmStep::Issue(self.get_old())
                 }
@@ -540,7 +551,7 @@ impl OpSm for MigrateSm {
                 let meta = l.meta_of(&data);
                 let dead = !meta.occupied()
                     || meta.invalid()
-                    || (self.variant == Variant::LockFree && !l.crc_ok(&data));
+                    || (l.has_crc() && !l.crc_ok(&data));
                 if dead {
                     self.result = Some(MigrateResult::SkippedEmpty);
                 } else {
@@ -577,7 +588,7 @@ impl OpSm for MigrateSm {
                             self.start_probe(0)
                         }
                     }
-                    Variant::LockFree => {
+                    Variant::LockFree | Variant::Delegated => {
                         if self.result.is_some() {
                             self.done()
                         } else {
@@ -614,7 +625,7 @@ impl OpSm for MigrateSm {
                 let l = &self.layout;
                 let meta = l.meta_of(&data);
                 let free = !meta.occupied()
-                    || (self.variant == Variant::LockFree && meta.invalid());
+                    || (self.layout.has_crc() && meta.invalid());
                 if free {
                     self.state = MState::AwaitPut(i);
                     // the record is put exactly once: move, don't clone
@@ -662,7 +673,7 @@ impl OpSm for MigrateSm {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dht::{coarse, fine, lockfree};
+    use crate::dht::{coarse, delegated, fine, lockfree};
     use crate::rma::shm::ShmCluster;
 
     const KEY: usize = 16;
@@ -682,6 +693,9 @@ mod tests {
             Variant::LockFree => {
                 rma.exec(&mut lockfree::WriteSm::new(cfg, key, val))
             }
+            Variant::Delegated => {
+                rma.exec(&mut delegated::WriteSm::new(cfg, key, val))
+            }
         }
     }
 
@@ -697,6 +711,9 @@ mod tests {
             Variant::Fine => rma.exec(&mut fine::ReadSm::new(cfg, key)).outcome,
             Variant::LockFree => {
                 rma.exec(&mut lockfree::ReadSm::new(cfg, key)).outcome
+            }
+            Variant::Delegated => {
+                rma.exec(&mut delegated::ReadSm::new(cfg, key)).outcome
             }
         }
     }

@@ -14,6 +14,12 @@
 //! | [`coarse`] | 3.1  | `MPI_Win_lock/unlock` on the whole target window |
 //! | [`fine`]   | 4.1  | per-bucket 8-byte reader/writer lock (CAS/FAO)  |
 //! | [`lockfree`]| 4.2 | no locks; per-bucket CRC32 + retry + invalidate |
+//! | [`delegated`]| D12 | owner-compute: ops ship to per-rank mailboxes  |
+//!
+//! The fourth variant is this repo's extension (DESIGN.md §12, after
+//! Maier et al.'s delegation argument): instead of shipping locks or
+//! optimistic retries to the data, the *operation* is shipped to the
+//! owning rank, which applies it against its own shard serially.
 //!
 //! Protocols are written as [`crate::rma::OpSm`] state machines and run
 //! unchanged on both the threaded shm backend and the DES cluster.
@@ -21,6 +27,7 @@
 pub mod addressing;
 pub mod bucket;
 pub mod coarse;
+pub mod delegated;
 pub mod fine;
 pub mod front;
 pub mod health;
@@ -35,6 +42,7 @@ use crate::rma::{OpSm, Resp, SmStep};
 
 pub use addressing::Addressing;
 pub use bucket::{BucketLayout, Meta};
+pub use delegated::{serve_mailbox, MailboxOp, MailboxReply, MailboxWindow};
 pub use front::{Dht, DhtCheckpoint};
 pub use health::{backoff_ns, HealthConfig, HealthView};
 pub use l1::{L1Cache, L1Stats};
@@ -52,29 +60,46 @@ pub enum Variant {
     Fine,
     /// Lock-free with checksum validation (§4.2).
     LockFree,
+    /// Owner-compute delegation: ops ride per-rank mailboxes and are
+    /// applied serially by the owning rank (DESIGN.md §12).
+    Delegated,
 }
 
 impl Variant {
-    pub const ALL: [Variant; 3] =
-        [Variant::Coarse, Variant::Fine, Variant::LockFree];
+    pub const ALL: [Variant; 4] = [
+        Variant::Coarse,
+        Variant::Fine,
+        Variant::LockFree,
+        Variant::Delegated,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
             Variant::Coarse => "coarse-grained",
             Variant::Fine => "fine-grained",
             Variant::LockFree => "lock-free",
+            Variant::Delegated => "delegated",
         }
     }
 
+    /// Whether this variant's buckets carry a trailing CRC word.
+    /// Delegated shares the lock-free self-verifying layout so that
+    /// migration, repair and checkpointing compose across the two
+    /// (DESIGN.md §12).
+    pub fn has_crc(&self) -> bool {
+        matches!(self, Variant::LockFree | Variant::Delegated)
+    }
+
     /// The names [`Self::parse`] accepts (for CLI error messages).
-    pub const ACCEPTED: &'static str =
-        "coarse, coarse-grained, fine, fine-grained, lockfree, lock-free";
+    pub const ACCEPTED: &'static str = "coarse, coarse-grained, fine, \
+         fine-grained, lockfree, lock-free, delegated";
 
     pub fn parse(s: &str) -> Option<Variant> {
         match s {
             "coarse" | "coarse-grained" => Some(Variant::Coarse),
             "fine" | "fine-grained" => Some(Variant::Fine),
             "lockfree" | "lock-free" => Some(Variant::LockFree),
+            "delegated" => Some(Variant::Delegated),
             _ => None,
         }
     }
@@ -108,6 +133,11 @@ pub struct OpOut {
     /// Protocol-level lock retries (fine-grained only; coarse retries
     /// happen inside the backend's `MPI_Win_lock` busy loop).
     pub lock_retries: u32,
+    /// Mailbox round trips this op rode (delegated only; composed ops
+    /// like dual reads may ride several).
+    pub mailbox_ops: u32,
+    /// Request + response payload bytes of those mailbox round trips.
+    pub mailbox_bytes: u64,
 }
 
 /// A DHT operation state machine — one of the six protocol SMs.
@@ -118,6 +148,8 @@ pub enum DhtSm {
     FineWrite(fine::WriteSm),
     LockFreeRead(lockfree::ReadSm),
     LockFreeWrite(lockfree::WriteSm),
+    DelegatedRead(delegated::ReadSm),
+    DelegatedWrite(delegated::WriteSm),
 }
 
 impl DhtSm {
@@ -141,6 +173,9 @@ impl DhtSm {
             Variant::LockFree => {
                 DhtSm::LockFreeRead(lockfree::ReadSm::new_at(cfg, key, r))
             }
+            Variant::Delegated => {
+                DhtSm::DelegatedRead(delegated::ReadSm::new_at(cfg, key, r))
+            }
         }
     }
 
@@ -163,6 +198,9 @@ impl DhtSm {
             Variant::LockFree => {
                 DhtSm::LockFreeRead(lockfree::ReadSm::with_hash_at(cfg, hash, key, r))
             }
+            Variant::Delegated => DhtSm::DelegatedRead(
+                delegated::ReadSm::with_hash_at(cfg, hash, key, r),
+            ),
         }
     }
 
@@ -194,6 +232,9 @@ impl DhtSm {
             }
             Variant::LockFree => DhtSm::LockFreeWrite(
                 lockfree::WriteSm::new_at(cfg, key, value, r),
+            ),
+            Variant::Delegated => DhtSm::DelegatedWrite(
+                delegated::WriteSm::new_at(cfg, key, value, r),
             ),
         }
     }
@@ -232,6 +273,9 @@ impl DhtSm {
             Variant::LockFree => {
                 DhtSm::LockFreeWrite(lockfree::WriteSm::with_record_at(cfg, hash, record, r))
             }
+            Variant::Delegated => DhtSm::DelegatedWrite(
+                delegated::WriteSm::with_record_at(cfg, hash, record, r),
+            ),
         }
     }
 }
@@ -246,6 +290,8 @@ impl OpSm for DhtSm {
             DhtSm::FineWrite(sm) => sm.step(resp),
             DhtSm::LockFreeRead(sm) => sm.step(resp),
             DhtSm::LockFreeWrite(sm) => sm.step(resp),
+            DhtSm::DelegatedRead(sm) => sm.step(resp),
+            DhtSm::DelegatedWrite(sm) => sm.step(resp),
         }
     }
 }

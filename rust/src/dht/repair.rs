@@ -279,7 +279,10 @@ impl RepairSm {
                     exclusive: true,
                 })
             }
-            Variant::LockFree => self.next_dest(d),
+            // lock-free and delegated repair is raw CRC-guarded RMA:
+            // nothing is held (delegation serializes only the mailbox
+            // data plane, and repair is control-plane traffic)
+            Variant::LockFree | Variant::Delegated => self.next_dest(d),
         }
     }
 
@@ -298,7 +301,7 @@ impl RepairSm {
         let meta = l.meta_of(&data);
         self.empty = !meta.occupied()
             || meta.invalid()
-            || (self.variant == Variant::LockFree && !l.crc_ok(&data));
+            || (l.has_crc() && !l.crc_ok(&data));
         if !self.empty {
             self.hash = self.cfg.addressing.hash(l.key_of(&data));
             let rank = self.rank;
@@ -328,7 +331,7 @@ impl RepairSm {
                     exclusive: true,
                 })
             }
-            Variant::LockFree => self.after_src_release(),
+            Variant::LockFree | Variant::Delegated => self.after_src_release(),
         }
     }
 
@@ -361,7 +364,7 @@ impl OpSm for RepairSm {
                         add: 1,
                     })
                 }
-                Variant::LockFree => {
+                Variant::LockFree | Variant::Delegated => {
                     self.state = RState::AwaitSrcRecord;
                     SmStep::Issue(self.get_src())
                 }
@@ -429,7 +432,7 @@ impl OpSm for RepairSm {
                 let l = &self.layout;
                 let meta = l.meta_of(&data);
                 let free = !meta.occupied()
-                    || (self.variant == Variant::LockFree && meta.invalid());
+                    || (self.layout.has_crc() && meta.invalid());
                 if free {
                     self.state = RState::AwaitDstPut(d, i);
                     return SmStep::Issue(
@@ -477,7 +480,7 @@ impl OpSm for RepairSm {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dht::{coarse, fine, lockfree, DhtOutcome, DhtSm};
+    use crate::dht::{coarse, delegated, fine, lockfree, DhtOutcome, DhtSm};
     use crate::rma::shm::ShmCluster;
 
     const KEY: usize = 16;
@@ -503,6 +506,9 @@ mod tests {
             }
             Variant::LockFree => {
                 rma.exec(&mut lockfree::WriteSm::new_at(cfg, key, val, r));
+            }
+            Variant::Delegated => {
+                rma.exec(&mut delegated::WriteSm::new_at(cfg, key, val, r));
             }
         }
     }

@@ -95,6 +95,8 @@ pub struct ReplReadSm {
     probes: u32,
     crc_retries: u32,
     lock_retries: u32,
+    mailbox_ops: u32,
+    mailbox_bytes: u64,
     fell_back: bool,
     primary_corrupt: bool,
 }
@@ -132,6 +134,8 @@ impl ReplReadSm {
             probes: 0,
             crc_retries: 0,
             lock_retries: 0,
+            mailbox_ops: 0,
+            mailbox_bytes: 0,
             fell_back: false,
             primary_corrupt: false,
         }
@@ -157,6 +161,8 @@ impl ReplReadSm {
                 probes: self.probes,
                 crc_retries: self.crc_retries,
                 lock_retries: self.lock_retries,
+                mailbox_ops: self.mailbox_ops,
+                mailbox_bytes: self.mailbox_bytes,
             },
             failovers: self.failovers,
             diverged,
@@ -191,6 +197,8 @@ impl OpSm for ReplReadSm {
             self.probes += out.probes;
             self.crc_retries += out.crc_retries;
             self.lock_retries += out.lock_retries;
+            self.mailbox_ops += out.mailbox_ops;
+            self.mailbox_bytes += out.mailbox_bytes;
             self.fell_back |= fell_back;
             self.primary_corrupt |= corrupt;
             let miss = matches!(

@@ -78,6 +78,12 @@ pub struct DhtStats {
     /// homes actually reachable for some key's write (0 = placement was
     /// never degraded).  Merged with `max`.
     pub degraded_k: u32,
+    /// Delegated-variant mailbox round trips ridden by this handle's ops
+    /// (DESIGN.md §12; composed ops like dual reads may ride several per
+    /// call).  Zero for every other variant.
+    pub mailbox_ops: u64,
+    /// Request + response payload bytes of those mailbox round trips.
+    pub mailbox_bytes: u64,
     /// Accepted surrogate hits per ladder level (`[0]` = exact fine-level
     /// match, `[l]` = hit at `digits - l` significant digits accepted by
     /// the relative-tolerance test; DESIGN.md §10).  Grows on demand.
@@ -93,6 +99,8 @@ impl DhtStats {
         self.probes += out.probes as u64;
         self.crc_retries += out.crc_retries as u64;
         self.lock_retries += out.lock_retries as u64;
+        self.mailbox_ops += out.mailbox_ops as u64;
+        self.mailbox_bytes += out.mailbox_bytes;
         let is_read = matches!(
             out.outcome,
             DhtOutcome::ReadHit(_) | DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt
@@ -239,6 +247,8 @@ impl DhtStats {
         self.backoff_ns += o.backoff_ns;
         self.repaired += o.repaired;
         self.repair_dropped += o.repair_dropped;
+        self.mailbox_ops += o.mailbox_ops;
+        self.mailbox_bytes += o.mailbox_bytes;
         self.ranks_dead = self.ranks_dead.max(o.ranks_dead);
         self.degraded_k = self.degraded_k.max(o.degraded_k);
         if self.ladder_hits.len() < o.ladder_hits.len() {
@@ -275,7 +285,14 @@ mod tests {
     fn out(outcome: DhtOutcome) -> OpOut {
         let crc_retries =
             if outcome == DhtOutcome::ReadCorrupt { 3 } else { 0 };
-        OpOut { outcome, probes: 2, crc_retries, lock_retries: 1 }
+        OpOut {
+            outcome,
+            probes: 2,
+            crc_retries,
+            lock_retries: 1,
+            mailbox_ops: 1,
+            mailbox_bytes: 64,
+        }
     }
 
     #[test]
@@ -296,6 +313,8 @@ mod tests {
         assert_eq!(s.evictions, 1);
         assert_eq!(s.probes, 12);
         assert_eq!(s.lock_retries, 6);
+        assert_eq!(s.mailbox_ops, 6);
+        assert_eq!(s.mailbox_bytes, 6 * 64);
         assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
         assert!((s.mismatch_percent() - 100.0 / 3.0).abs() < 1e-9);
     }
@@ -344,6 +363,8 @@ mod tests {
             degraded_k: seed as u32 + 28,
             ladder_hits: vec![seed + 29, seed + 30, seed + 31],
             max_rel_err: seed as f64 * 1e-6,
+            mailbox_ops: seed + 32,
+            mailbox_bytes: seed + 33,
         }
     }
 
@@ -383,6 +404,8 @@ mod tests {
         assert_eq!(a.backoff_ns, 2100 + 2 * off.backoff_ns);
         assert_eq!(a.repaired, 2100 + 2 * off.repaired);
         assert_eq!(a.repair_dropped, 2100 + 2 * off.repair_dropped);
+        assert_eq!(a.mailbox_ops, 2100 + 2 * off.mailbox_ops);
+        assert_eq!(a.mailbox_bytes, 2100 + 2 * off.mailbox_bytes);
         for (i, v) in a.ladder_hits.iter().enumerate() {
             assert_eq!(*v, 2100 + 2 * off.ladder_hits[i], "ladder level {i}");
         }
@@ -462,7 +485,14 @@ mod tests {
         use crate::dht::replica::ReplOut;
         let mut s = DhtStats::default();
         let ro = |outcome: DhtOutcome, failovers: u32, diverged: bool| ReplOut {
-            out: OpOut { outcome, probes: 2, crc_retries: 0, lock_retries: 0 },
+            out: OpOut {
+                outcome,
+                probes: 2,
+                crc_retries: 0,
+                lock_retries: 0,
+                mailbox_ops: 0,
+                mailbox_bytes: 0,
+            },
             failovers,
             diverged,
             fell_back: false,
@@ -481,6 +511,8 @@ mod tests {
             probes: 3,
             crc_retries: 0,
             lock_retries: 0,
+            mailbox_ops: 0,
+            mailbox_bytes: 0,
         });
         assert_eq!(s.replica_writes, 1);
         assert_eq!(s.writes, 0);

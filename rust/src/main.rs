@@ -61,7 +61,8 @@ USAGE: mpi-dht <command> [options]
 COMMANDS:
   info         show artifact manifest + build information
   bench-kv     synthetic DHT benchmark in the DES cluster (paper §5.2)
-                 --variant coarse|fine|lockfree   --dist uniform|zipfian
+                 --variant coarse|fine|lockfree|delegated
+                 --dist uniform|zipfian|hotkey
                  --mode wtr|mixed   --ranks 128..640:128   --ops N
                  --profile pik|turing  --read-percent 95  --seed N
                  --pipeline D (in-flight ops per rank, default 1)
@@ -74,7 +75,7 @@ COMMANDS:
                  --wall: also gate wall-clock scenarios — only
                  meaningful when both points ran on one machine)
   poet-des     POET in the DES cluster (paper Fig. 7)
-                 --ranks list  --variant none|coarse|fine|lockfree
+                 --ranks list  --variant none|coarse|fine|lockfree|delegated
                  --ny N --nx N --steps N --digits D --pipeline D
                  --replicas K (k-way DHT replication, DESIGN.md §9)
                  --kill-rank R --kill-rank-at SECONDS (chaos: kill a
@@ -93,7 +94,8 @@ COMMANDS:
                  DESIGN.md §10)
   poet         threaded POET on this machine (real PJRT chemistry)
                  --ny N --nx N --steps N --workers W --engine pjrt|native
-                 --variant none|coarse|fine|lockfree|all --pipeline D
+                 --variant none|coarse|fine|lockfree|delegated|all
+                 --pipeline D
                  --replicas K (k-way DHT replication, DESIGN.md §9)
                  --resize-at-iter N --resize-factor F (online elastic
                  resize mid-run; hit rate recovers live, DESIGN.md §8)
@@ -154,7 +156,7 @@ fn cmd_bench_kv(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let variant = parse_variant(args.str_or("--variant", "lockfree"))?;
     let dist = Dist::parse(args.str_or("--dist", "uniform"))
-        .ok_or_else(|| anyhow!("--dist uniform|zipfian"))?;
+        .ok_or_else(|| anyhow!("--dist uniform|zipfian|hotkey"))?;
     let mode = match args.str_or("--mode", "wtr") {
         "wtr" => Mode::WriteThenRead,
         "mixed" => Mode::Mixed {
@@ -410,6 +412,7 @@ fn cmd_poet(args: &Args) -> Result<()> {
                 Some(Variant::Coarse),
                 Some(Variant::Fine),
                 Some(Variant::LockFree),
+                Some(Variant::Delegated),
             ],
             v => vec![None, Some(parse_variant(v)?)],
         };

@@ -71,6 +71,13 @@ pub struct NetConfig {
     /// scale linearly in nodes); false for a cheap shared-memory BTL
     /// (Turing, Open MPI 4.1).
     pub intra_uses_node_resources: bool,
+    /// Owner-CPU occupancy per delegated mailbox op (DESIGN.md §12): the
+    /// serialized probe-walk + memcpy the owning rank performs when it
+    /// drains one mailbox entry.  This is the delegated variant's
+    /// skew-dependent bottleneck — every op on a rank's shard queues on
+    /// its single owner, so a hot key turns this number into the service
+    /// time of an M/D/1-like queue.
+    pub mailbox_serve_ns: u64,
 }
 
 impl NetConfig {
@@ -93,6 +100,7 @@ impl NetConfig {
             jitter_ns: 400,
             resp_lanes: 2,
             intra_uses_node_resources: false,
+            mailbox_serve_ns: 220,
         }
     }
 
@@ -115,6 +123,7 @@ impl NetConfig {
             jitter_ns: 240,
             resp_lanes: 2,
             intra_uses_node_resources: true,
+            mailbox_serve_ns: 150,
         }
     }
 

@@ -1122,6 +1122,30 @@ mod tests {
     }
 
     #[test]
+    fn delegated_poet_same_lookups_rides_mailboxes() {
+        // Delegated must see the exact same surrogate workload as
+        // lock-free — only the transport changes (DESIGN.md §12).
+        let lf = run_poet_des(
+            tiny(8, Some(Variant::LockFree)),
+            NetConfig::pik_ndr(),
+        );
+        let del = run_poet_des(
+            tiny(8, Some(Variant::Delegated)),
+            NetConfig::pik_ndr(),
+        );
+        assert_eq!(
+            lf.hits + lf.misses,
+            del.hits + del.misses,
+            "same number of surrogate lookups"
+        );
+        assert!(del.hit_rate() > 0.5, "hit rate {}", del.hit_rate());
+        assert!(del.max_dolomite > 0.0);
+        assert!(del.dht.mailbox_ops > 0, "ops rode the mailbox");
+        assert!(del.dht.mailbox_bytes > 0);
+        assert_eq!(lf.dht.mailbox_ops, 0, "lock-free never delegates");
+    }
+
+    #[test]
     fn pipelined_poet_same_physics_faster_lookups() {
         let mut base = tiny(8, Some(Variant::LockFree));
         base.steps = 10;

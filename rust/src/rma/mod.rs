@@ -93,6 +93,18 @@ pub enum Req {
         resp_bytes: u32,
         payload: RpcPayload,
     },
+    /// Owner-compute mailbox op (the delegated DHT variant, DESIGN.md
+    /// §12): the whole get/put ships to `target`, which applies it
+    /// against its own shard memory *serially* — the backend guarantees
+    /// per-owner serialization (a DES `Resource` on sim, the per-rank
+    /// combiner ring on shm).  `req_bytes`/`resp_bytes` are the modelled
+    /// wire payload (documented upper bounds computed by the client SM).
+    Mailbox {
+        target: u32,
+        op: crate::dht::delegated::MailboxOp,
+        req_bytes: u32,
+        resp_bytes: u32,
+    },
 }
 
 /// RPC payloads for the server-based (DAOS-like) baseline.
@@ -115,6 +127,8 @@ pub enum Resp {
     Word(u64),
     /// Reply to an Rpc.
     Rpc(RpcReply),
+    /// Reply to a Mailbox op (outcome + owner-side probe count).
+    Mailbox(crate::dht::delegated::MailboxReply),
 }
 
 /// Replies produced by the RPC server hook.

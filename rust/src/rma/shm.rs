@@ -13,8 +13,13 @@
 //! CAS `0 -> EXCLUSIVE_LOCK`, readers fetch-add 1 and revoke if a writer
 //! holds the word.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::dht::delegated::{
+    degraded_reply, serve_mailbox, MailboxOp, MailboxReply, MailboxWindow,
+};
 
 use super::{
     debug_check_aligned, split_offset, OpSm, Req, Resp, RmaBackend, RpcReply,
@@ -95,6 +100,48 @@ impl ShmWindow {
     }
 }
 
+/// A window viewed as delegated-mailbox shard memory (DESIGN.md §12):
+/// the combiner's local read/write surface for `serve_mailbox`.  Safe
+/// against concurrent *control-plane* RMA by the same argument as every
+/// other window access — word-granular relaxed atomics — with the CRC
+/// word catching any torn record the combiner observes.
+struct MailboxMem<'a>(&'a ShmWindow);
+
+impl MailboxWindow for MailboxMem<'_> {
+    fn read(&mut self, offset: u64, buf: &mut [u8]) {
+        self.0.read_into(offset, buf);
+    }
+
+    fn write(&mut self, offset: u64, data: &[u8]) {
+        self.0.write_from(offset, data);
+    }
+}
+
+/// One slot a mailbox enqueuer spins on until the combiner publishes the
+/// reply for its op.
+struct ReplySlot(Mutex<Option<MailboxReply>>);
+
+/// One rank's delegated-op mailbox: an MPSC queue drained under a
+/// flat-combining service lock.  Any client with a pending op may become
+/// the combiner (`try_lock`), and a combiner drains *every* queued op —
+/// its own and its neighbours' — before releasing, so ops on one owner
+/// are served strictly serially, which is the invariant `serve_mailbox`
+/// relies on (no CRC retry loop, single-probe-walk writes).  The shm
+/// analogue of the DES backend's per-owner `Resource`.
+struct RankMailbox {
+    queue: Mutex<VecDeque<(MailboxOp, Arc<ReplySlot>)>>,
+    service: Mutex<()>,
+}
+
+impl RankMailbox {
+    fn new() -> Self {
+        Self {
+            queue: Mutex::new(VecDeque::new()),
+            service: Mutex::new(()),
+        }
+    }
+}
+
 /// The cluster: all ranks' windows (create once, share via `Arc`).
 pub struct ShmCluster {
     windows: Vec<ShmWindow>,
@@ -110,6 +157,8 @@ pub struct ShmCluster {
     /// shm stand-in for the health view's generation counter, so the
     /// front-end's repair scan (DESIGN.md §11) triggers here too.
     health_gen: AtomicU64,
+    /// Per-rank delegated-op mailboxes (DESIGN.md §12).
+    mailboxes: Vec<RankMailbox>,
 }
 
 impl ShmCluster {
@@ -122,7 +171,38 @@ impl ShmCluster {
             next_seg: Mutex::new(2),
             failed: (0..nranks).map(|_| AtomicBool::new(false)).collect(),
             health_gen: AtomicU64::new(0),
+            mailboxes: (0..nranks).map(|_| RankMailbox::new()).collect(),
         })
+    }
+
+    /// Execute one delegated op at its owner, flat-combining style: the
+    /// op is enqueued on the owner's mailbox, then the caller either
+    /// observes its reply (a neighbour combined it) or takes the service
+    /// lock itself and drains the whole queue.  Deadlock-free: a caller
+    /// whose reply is missing keeps retrying the service lock, and the
+    /// holder always drains every queued op before releasing.
+    fn mailbox_exec(&self, target: u32, op: MailboxOp) -> MailboxReply {
+        let mb = &self.mailboxes[target as usize];
+        let slot = Arc::new(ReplySlot(Mutex::new(None)));
+        mb.queue.lock().unwrap().push_back((op, Arc::clone(&slot)));
+        loop {
+            if let Some(reply) = slot.0.lock().unwrap().take() {
+                return reply;
+            }
+            if let Ok(_service) = mb.service.try_lock() {
+                while let Some((op, s)) = {
+                    let popped = mb.queue.lock().unwrap().pop_front();
+                    popped
+                } {
+                    let mut mem =
+                        MailboxMem(&self.windows[target as usize]);
+                    let reply = serve_mailbox(&op, &mut mem);
+                    *s.0.lock().unwrap() = Some(reply);
+                }
+            } else {
+                std::thread::yield_now();
+            }
+        }
     }
 
     /// Mark `rank`'s storage failed (or alive again) — the shm analogue
@@ -365,6 +445,7 @@ impl ShmRma {
             | Req::LockWin { target, .. }
             | Req::UnlockWin { target, .. } => Some(*target),
             Req::Rpc { server, .. } => Some(*server),
+            Req::Mailbox { target, .. } => Some(*target),
             Req::Compute { .. } => None,
         };
         if let Some(t) = target {
@@ -383,6 +464,11 @@ impl ShmRma {
                     | Req::UnlockWin { .. }
                     | Req::Compute { .. } => Resp::Ack,
                     Req::Rpc { .. } => Resp::Rpc(RpcReply::Ok),
+                    // dead owner: gets miss, puts drop with vacuous
+                    // success (same degraded contract as the DES backend)
+                    Req::Mailbox { op, .. } => {
+                        Resp::Mailbox(degraded_reply(&op))
+                    }
                 };
             }
         }
@@ -460,6 +546,9 @@ impl ShmRma {
                 // The server-based baseline is DES-only (DESIGN.md §2):
                 // the paper's DAOS testbed has no shared-memory analogue.
                 Resp::Rpc(RpcReply::Ok)
+            }
+            Req::Mailbox { target, op, .. } => {
+                Resp::Mailbox(self.cluster.mailbox_exec(target, op))
             }
         }
     }

@@ -61,6 +61,28 @@ enum Ev {
     Resume { ctx: u32 },
 }
 
+/// One rank's window segments viewed as delegated-mailbox shard memory:
+/// the owner's local read/write surface for
+/// [`crate::dht::delegated::serve_mailbox`] (offsets are global, segment
+/// bits included — see [`split_offset`]).
+struct SegMem<'a> {
+    segs: &'a mut Vec<Vec<u8>>,
+}
+
+impl crate::dht::delegated::MailboxWindow for SegMem<'_> {
+    fn read(&mut self, offset: u64, buf: &mut [u8]) {
+        let (s, off) = split_offset(offset);
+        let o = off as usize;
+        buf.copy_from_slice(&self.segs[s][o..o + buf.len()]);
+    }
+
+    fn write(&mut self, offset: u64, data: &[u8]) {
+        let (s, off) = split_offset(offset);
+        let o = off as usize;
+        self.segs[s][o..o + data.len()].copy_from_slice(data);
+    }
+}
+
 /// An in-flight Put's DMA window for torn-read composition.
 #[derive(Debug)]
 struct InflightPut {
@@ -579,6 +601,22 @@ impl<W: Workload> SimCluster<W> {
                     Resp::Rpc(reply)
                 }
             }
+            Req::Mailbox { target, op, .. } => {
+                if self.degraded_at(ctx, target) {
+                    self.report.faults.failed_ops += 1;
+                    Resp::Mailbox(crate::dht::delegated::degraded_reply(&op))
+                } else {
+                    // the owner's CPU serves against its local shard
+                    // memory — plain reads, no DMA torn-window
+                    // composition (only remote one-sided gets race DMA)
+                    let mut mem = SegMem {
+                        segs: &mut self.windows[target as usize],
+                    };
+                    Resp::Mailbox(crate::dht::delegated::serve_mailbox(
+                        &op, &mut mem,
+                    ))
+                }
+            }
             Req::LockWin { .. } | Req::UnlockWin { .. } | Req::Compute { .. } => {
                 unreachable!("handled before this match")
             }
@@ -903,6 +941,26 @@ impl<W: Workload> SimCluster<W> {
                     resp_bytes,
                     payload,
                 });
+                self.ctxs[ctx as usize].pending_timing = Some(timing);
+                self.queue.push(timing.exec, Ev::Exec { ctx });
+            }
+            Req::Mailbox { target, op, req_bytes, resp_bytes } => {
+                // the op travels to the owner like an eager-send payload,
+                // then serializes on the owner's CPU: the per-rank
+                // mailbox is drained one entry at a time (DESIGN.md §12)
+                let t_net = self
+                    .net
+                    .rma(self.now, rank, target, OpKind::Put, req_bytes);
+                let t_net = self.faulted(ctx, target, t_net);
+                let srv = self.servers.entry(target).or_default();
+                let t_done =
+                    srv.acquire(t_net.exec, self.net.cfg.mailbox_serve_ns);
+                let resume = t_done
+                    + self.net.cfg.wire_ns
+                    + (resp_bytes as f64 / self.net.cfg.bw_bytes_per_ns) as u64;
+                let timing = OpTiming { exec: t_done, resume, write_dur: 0 };
+                self.ctxs[ctx as usize].pending_req =
+                    Some(Req::Mailbox { target, op, req_bytes, resp_bytes });
                 self.ctxs[ctx as usize].pending_timing = Some(timing);
                 self.queue.push(timing.exec, Ev::Exec { ctx });
             }

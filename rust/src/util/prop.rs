@@ -70,6 +70,44 @@ impl G {
         let n = self.usize_in(len);
         (0..n).map(|_| self.u64_in(val.clone())).collect()
     }
+
+    /// Random key-value op schedule over `ranks` actors and `ids` key
+    /// ids: `read_pct`% reads; when `skewed`, 80 % of draws hit the
+    /// lowest eighth of the id space (hot-key contention).  Used by the
+    /// differential test oracle (`tests/differential_oracle.rs`) to
+    /// replay the same schedule against every DHT variant and backend.
+    pub fn schedule(
+        &mut self,
+        n: usize,
+        ranks: u32,
+        ids: u64,
+        read_pct: u64,
+        skewed: bool,
+    ) -> Vec<SchedOp> {
+        (0..n)
+            .map(|_| {
+                let id = if skewed && self.u64_in(0..100) < 80 {
+                    self.u64_in(0..(ids / 8).max(1))
+                } else {
+                    self.u64_in(0..ids)
+                };
+                SchedOp {
+                    rank: self.u64_in(0..ranks as u64) as u32,
+                    read: self.u64_in(0..100) < read_pct,
+                    id,
+                }
+            })
+            .collect()
+    }
+}
+
+/// One step of a generated op schedule ([`G::schedule`]): which actor
+/// issues it, whether it reads, and the key id it touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedOp {
+    pub rank: u32,
+    pub read: bool,
+    pub id: u64,
 }
 
 /// Run `iters` random cases of `prop`; panic with the failing seed if any
@@ -180,6 +218,20 @@ mod tests {
             let f = g.f64_in(-1.0..1.0);
             prop_assert!((-1.0..1.0).contains(&f));
             prop_assert_eq!(g.bytes(13).len(), 13);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn schedule_respects_bounds() {
+        prop_check("sched-bounds", 50, |g| {
+            let skewed = g.bool();
+            let s = g.schedule(40, 4, 64, 50, skewed);
+            prop_assert_eq!(s.len(), 40);
+            for op in &s {
+                prop_assert!(op.rank < 4, "rank {}", op.rank);
+                prop_assert!(op.id < 64, "id {}", op.id);
+            }
             Ok(())
         });
     }

@@ -271,6 +271,85 @@ fn checkpoint_restore_with_replicas_roundtrip() {
     assert!(r[2].stats().failover_reads > 0);
 }
 
+/// Delegated × replication × rank-kill → repair (DESIGN.md §12 ∘ §11):
+/// the delegated data plane rides mailboxes, reads whose primary died
+/// fail over to replicas, and the repair scan — control-plane raw RMA,
+/// never mailbox traffic — re-homes the lost copies.  The schedule is
+/// derived from one pinned seed, so any failure reproduces exactly.
+#[test]
+fn delegated_replicated_kill_repair_roundtrip() {
+    let mut g = mpi_dht::util::prop::G::new(0xDE1E_6A7E);
+    let mut h = Dht::create(Variant::Delegated, 4, 256 * 1024, KEY, VAL);
+    for hh in h.iter_mut() {
+        hh.set_replicas(2);
+        hh.set_repair(true);
+    }
+    let ids: Vec<u64> = (0..KEYS).map(|_| g.u64()).collect();
+    let keys: Vec<Vec<u8>> = ids.iter().map(|&i| key_for(i, KEY)).collect();
+    let vals: Vec<Vec<u8>> =
+        ids.iter().map(|&i| value_for(i.wrapping_mul(3), VAL)).collect();
+    h[0].write_batch(&keys, &vals);
+    h[0].set_rank_failed(1, true);
+
+    // phase 1 — failover: every key is still served over the mailbox
+    // data plane (dead-rank mailboxes answer degraded misses)
+    let got = h[2].read_batch(&keys);
+    let mut hits = 0u64;
+    for (v, gv) in vals.iter().zip(got.iter()) {
+        if let Some(gv) = gv {
+            assert_eq!(gv, v, "never a foreign value through failover");
+            hits += 1;
+        }
+    }
+    assert!(hits >= KEYS - 2, "only {hits}/{KEYS} served after the kill");
+    let mut s1 = mpi_dht::dht::DhtStats::default();
+    for hh in h.iter_mut() {
+        s1.merge(&hh.take_stats());
+    }
+    assert!(s1.mailbox_ops > 0, "data plane rode the mailboxes");
+    assert!(s1.failover_reads > 0, "failover engaged");
+
+    // phase 2 — repair, in isolation: live handles re-walk their shards
+    // and re-home the dead rank's copies.  No data-plane ops run here,
+    // so the mailbox counters must stay at zero — repair is raw RMA.
+    for (r, hh) in h.iter_mut().enumerate() {
+        if r != 1 {
+            hh.drain_repair();
+            assert!(!hh.repairing(), "rank {r}: pass must complete");
+        }
+    }
+    let mut s2 = mpi_dht::dht::DhtStats::default();
+    for hh in h.iter_mut() {
+        s2.merge(&hh.take_stats());
+    }
+    assert!(s2.repaired > 0, "lost copies were re-homed");
+    assert_eq!(
+        s2.mailbox_ops, 0,
+        "repair must bypass the mailbox (control plane only)"
+    );
+
+    // phase 3 — the healed placement serves every key even with the
+    // dead rank still down and failover disabled as a crutch: reads
+    // through any surviving handle hit on live copies
+    let got = h[3].read_batch(&keys);
+    for (i, (v, gv)) in vals.iter().zip(got.iter()).enumerate() {
+        assert_eq!(gv.as_ref(), Some(v), "key {i} lost after repair");
+    }
+
+    // phase 4 — revive: the rank rejoins with stale-but-valid copies;
+    // nothing reads foreign values afterwards
+    h[0].set_rank_failed(1, false);
+    for hh in h.iter_mut() {
+        hh.drain_repair();
+    }
+    let got = h[1].read_batch(&keys);
+    for (v, gv) in vals.iter().zip(got.iter()) {
+        if let Some(gv) = gv {
+            assert_eq!(gv, v, "revived copies must not serve foreign data");
+        }
+    }
+}
+
 // ------------------------------------------------------------- POET soak
 
 fn chaos_cfg(replicas: u32) -> PoetDesCfg {

@@ -45,9 +45,39 @@ fn bench_kv_rejects_bad_variant() {
     assert!(!ok);
     assert!(text.contains("unknown variant"), "{text}");
     // the error must teach the accepted spellings, not just reject
-    for name in ["coarse", "fine", "lockfree", "lock-free"] {
+    for name in ["coarse", "fine", "lockfree", "lock-free", "delegated"] {
         assert!(text.contains(name), "accepted name {name} missing: {text}");
     }
+}
+
+#[test]
+fn help_lists_delegated_variant() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    assert!(text.contains("delegated"), "help misses delegated: {text}");
+    assert!(text.contains("hotkey"), "help misses hotkey dist: {text}");
+}
+
+#[test]
+fn bench_kv_runs_delegated_hotkey() {
+    let (ok, text) = run(&[
+        "bench-kv", "--variant", "delegated", "--dist", "hotkey",
+        "--ranks", "16", "--ops", "200",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("variant=delegated"), "{text}");
+    assert!(text.contains("read Mops"), "{text}");
+}
+
+#[test]
+fn poet_des_runs_delegated() {
+    let (ok, text) = run(&[
+        "poet-des", "--ranks", "8", "--ny", "8", "--nx", "16", "--steps",
+        "5", "--variant", "delegated",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("variant=delegated"), "{text}");
+    assert!(text.contains("hit rate"), "{text}");
 }
 
 #[test]

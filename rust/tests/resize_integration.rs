@@ -62,8 +62,9 @@ fn grow_preserves_entries_all_variants() {
             "{variant:?}: only {after}/{} survived migration",
             present.len()
         );
-        // the locking variants are loss-free by construction
-        if variant != Variant::LockFree {
+        // the locking variants are loss-free by construction (the CRC
+        // variants — lock-free and delegated — tolerate rare races)
+        if !variant.has_crc() {
             assert_eq!(after, present.len(), "{variant:?} lost entries");
         }
         // migration counters landed somewhere in the cluster
@@ -80,6 +81,61 @@ fn grow_preserves_entries_all_variants() {
         );
         assert!(stats.dual_reads > 0, "{variant:?}: dual lookups counted");
     }
+}
+
+/// Delegated × resize (DESIGN.md §12): mid-epoch dual reads ride one
+/// mailbox round trip per table probed, while the migration traffic
+/// itself stays on the control plane (raw CRC-guarded RMA) and never
+/// inflates the mailbox counters.
+#[test]
+fn delegated_resize_dual_reads_ride_mailboxes() {
+    let bucket =
+        mpi_dht::dht::BucketLayout::new(Variant::Delegated, KEY, VAL).size();
+    let mut h = Dht::create(Variant::Delegated, 4, 256 * bucket, KEY, VAL);
+    for i in 0..300u64 {
+        h[(i % 4) as usize].write(&key_for(i, KEY), &value_for(i, VAL));
+    }
+    // drain the load-phase counters so the mid-epoch window is isolated
+    let mut loaded = mpi_dht::dht::DhtStats::default();
+    for hh in h.iter_mut() {
+        loaded.merge(&hh.take_stats());
+    }
+    assert_eq!(loaded.mailbox_ops, loaded.reads + loaded.writes);
+
+    let old = h[0].buckets_per_rank();
+    h[0].resize(old * 4).expect("resize");
+    assert!(h[1].migrating());
+    // mid-epoch: every present key stays readable through the dual
+    // lookup and the values are the delegated shard's own
+    let mut hits = 0u64;
+    for i in 0..300u64 {
+        if let Some(v) = h[2].read(&key_for(i, KEY)) {
+            assert_eq!(v, value_for(i, VAL), "key {i}");
+            hits += 1;
+        }
+    }
+    assert!(hits > 250, "only {hits}/300 readable mid-migration");
+    h[3].drain_migration();
+    for hh in h.iter_mut() {
+        assert!(!hh.migrating());
+    }
+    let mut mid = mpi_dht::dht::DhtStats::default();
+    for hh in h.iter_mut() {
+        mid.merge(&hh.take_stats());
+    }
+    // a dual read probes up to two tables: mailbox round trips must be
+    // >= the reads that found their key in the *new* table and <= two
+    // per read — and some reads genuinely went dual
+    assert!(mid.dual_reads > 0, "dual lookups counted");
+    assert!(mid.mailbox_ops >= mid.reads, "{} < {}", mid.mailbox_ops, mid.reads);
+    assert!(
+        mid.mailbox_ops <= 2 * mid.reads,
+        "{} > 2x{} — migration traffic leaked into the mailbox counters",
+        mid.mailbox_ops,
+        mid.reads
+    );
+    // post-migration reads still work over the mailbox
+    assert_eq!(h[0].read(&key_for(7, KEY)), Some(value_for(7, VAL)));
 }
 
 /// Writes during a migration epoch land in the new table and win over
