@@ -20,7 +20,7 @@ use mpi_dht::bench::traj::{self, Kind, Scenario, Trajectory};
 use mpi_dht::bench::{run_kv, Dist, KvCfg, Mode};
 use mpi_dht::cli::Args;
 use mpi_dht::dht::{BucketLayout, Dht, Variant};
-use mpi_dht::net::NetConfig;
+use mpi_dht::net::{LinkModel, NetConfig, Topology};
 use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
 use mpi_dht::util::hash::key_hash;
 use mpi_dht::util::rng::Rng;
@@ -90,6 +90,35 @@ fn sim_kv(name: &str, nranks: u32, ops: u64, depth: u32) -> Scenario {
         name: name.to_string(),
         kind: Kind::Sim,
         ops: nranks as u64 * ops,
+        ops_per_s: res.read_mops * 1e6,
+        p50_ns: res.read_lat_p50,
+        p99_ns: res.sim.latency.percentile(99.0),
+    };
+    report(&s);
+    s
+}
+
+/// The 4k-rank congestion-knee pair (DESIGN.md §13): lock-free uniform
+/// reads at 4096 ranks / 32 PIK nodes, once over the flat crossbar and
+/// once over an 8:1-tapered fat tree whose links are 95 % held by
+/// background jobs.  The flat number is the naive extrapolation of
+/// Fig. 4; the fat-tree number is where the fabric actually bends it.
+fn sim_knee(name: &str, ops: u64, congested: bool) -> Scenario {
+    let mut net = NetConfig::pik_ndr();
+    if congested {
+        net.topology = Topology::FatTree { pod: 8, oversub: 8 };
+        net.link_model = LinkModel::Shared;
+        net.bg_load = 0.95;
+    }
+    let mut cfg =
+        KvCfg::new(4_096, ops, Dist::Uniform, Mode::WriteThenRead);
+    cfg.win_bytes = 32 * 1024; // fixed windows: memory stays flat at 4k
+    cfg.seed = SEED;
+    let res = run_kv(Variant::LockFree, net, cfg);
+    let s = Scenario {
+        name: name.to_string(),
+        kind: Kind::Sim,
+        ops: 4_096 * ops,
         ops_per_s: res.read_mops * 1e6,
         p50_ns: res.read_lat_p50,
         p99_ns: res.sim.latency.percentile(99.0),
@@ -239,6 +268,23 @@ fn main() {
     );
     scenarios.push(d1);
     scenarios.push(d16);
+
+    // --- sim: the 4k-rank congestion knee (DESIGN.md §13) -------------
+    let knee_ops = if smoke { 12 } else { 32 };
+    let flat = sim_knee("sim_lf_read_4k_flat", knee_ops, false);
+    let sat = sim_knee("sim_lf_read_4k_ftree_sat", knee_ops, true);
+    // live relative gate: the tapered+loaded fat tree must sit well
+    // below the flat extrapolation — if it doesn't, either the fabric
+    // stopped binding or the flat model silently grew a bottleneck
+    assert!(
+        sat.ops_per_s < 0.75 * flat.ops_per_s,
+        "expected a congestion knee at 4k ranks: fat-tree {:.0} vs \
+         flat {:.0} ops/s",
+        sat.ops_per_s,
+        flat.ops_per_s
+    );
+    scenarios.push(flat);
+    scenarios.push(sat);
 
     let date = traj::today_utc();
     let t = Trajectory {

@@ -27,7 +27,7 @@ const VALUED: &[&str] = &[
     "--kill-rank-at", "--digits-ladder", "--ladder-tol", "--l1-bytes",
     "--tol", "--label", "--revive-rank-at", "--retry-budget",
     "--backoff-base-us", "--kill-at-iter", "--kill-worker",
-    "--revive-at-iter",
+    "--revive-at-iter", "--topology", "--link-model", "--bg-traffic",
 ];
 
 impl Args {
@@ -193,6 +193,17 @@ mod tests {
         assert_eq!(a.u64_or("--retry-budget", 0).unwrap(), 5);
         assert_eq!(a.f64_or("--backoff-base-us", 0.0).unwrap(), 20.0);
         assert!(a.has("--repair"));
+    }
+
+    #[test]
+    fn topology_flags_take_values() {
+        let a = parse(&[
+            "bench-kv", "--topology", "fattree:pod=8,oversub=4",
+            "--link-model", "shared", "--bg-traffic", "0.5",
+        ]);
+        assert_eq!(a.get("--topology"), Some("fattree:pod=8,oversub=4"));
+        assert_eq!(a.get("--link-model"), Some("shared"));
+        assert_eq!(a.f64_or("--bg-traffic", 0.0).unwrap(), 0.5);
     }
 
     #[test]

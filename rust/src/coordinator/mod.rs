@@ -11,7 +11,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Config;
 use crate::dht::Variant;
-use crate::net::NetConfig;
+use crate::net::{LinkModel, NetConfig, Topology};
 use crate::poet::{
     Chemistry, NativeChemistry, PjrtChemistry, PoetConfig, PoetDriver,
     PoetRunStats,
@@ -124,6 +124,18 @@ pub fn net_profile(name: &str, cfg: Option<&Config>) -> Result<NetConfig> {
             c.i64("net.win_unlock_atomics", net.win_unlock_atomics as i64) as u32;
         net.win_shared_atomics =
             c.i64("net.win_shared_atomics", net.win_shared_atomics as i64) as u32;
+        net.hop_ns = c.u64("net.hop_ns", net.hop_ns);
+        net.link_bw_bytes_per_ns =
+            c.f64("net.link_bw_bytes_per_ns", net.link_bw_bytes_per_ns);
+        net.bg_load = c.f64("net.bg_load", net.bg_load);
+        if let Some(t) = c.get("net.topology").and_then(|v| v.as_str()) {
+            net.topology = Topology::parse(t)
+                .ok_or_else(|| anyhow!("net.topology: bad spec {t:?}"))?;
+        }
+        if let Some(m) = c.get("net.link_model").and_then(|v| v.as_str()) {
+            net.link_model = LinkModel::parse(m)
+                .ok_or_else(|| anyhow!("net.link_model: bad spec {m:?}"))?;
+        }
     }
     Ok(net)
 }
@@ -160,6 +172,25 @@ mod tests {
         assert_eq!(tuned.atomic_ns, 777);
         assert_eq!(tuned.wire_ns, base.wire_ns);
         assert!(net_profile("nope", None).is_err());
+    }
+
+    #[test]
+    fn net_profile_fabric_keys() {
+        let cfg = Config::parse(
+            "[net]\ntopology = \"fattree:pod=4,oversub=2\"\n\
+             link_model = \"shared\"\nbg_load = 0.25\nhop_ns = 55\n",
+        )
+        .unwrap();
+        let net = net_profile("pik", Some(&cfg)).unwrap();
+        assert_eq!(
+            net.topology,
+            Topology::FatTree { pod: 4, oversub: 2 }
+        );
+        assert_eq!(net.link_model, LinkModel::Shared);
+        assert_eq!(net.bg_load, 0.25);
+        assert_eq!(net.hop_ns, 55);
+        let bad = Config::parse("[net]\ntopology = \"mesh\"\n").unwrap();
+        assert!(net_profile("pik", Some(&bad)).is_err());
     }
 
     #[test]

@@ -22,6 +22,7 @@ use mpi_dht::config::Config;
 use mpi_dht::coordinator::{self, EngineKind};
 use mpi_dht::daos::DaosConfig;
 use mpi_dht::dht::Variant;
+use mpi_dht::net::{LinkModel, NetConfig, Topology};
 use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
 use mpi_dht::poet::PoetConfig;
 use mpi_dht::runtime::{Engine, Manifest};
@@ -66,6 +67,13 @@ COMMANDS:
                  --mode wtr|mixed   --ranks 128..640:128   --ops N
                  --profile pik|turing  --read-percent 95  --seed N
                  --pipeline D (in-flight ops per rank, default 1)
+                 --topology flat|fattree[:pod=P,oversub=S]|
+                            dragonfly[:group=G] (fabric shape;
+                            flat = the historical crossbar model)
+                 --link-model constant|shared (shared: per-link
+                 bandwidth sharing — congestion emerges)
+                 --bg-traffic F (fraction of each fabric link's
+                 capacity held by background jobs, 0 <= F < 1)
   bench-daos   server-based baseline vs coarse DHT (paper Fig. 3)
                  --clients 12..72:12  --ops N
   bench-compare  diff two BENCH_*.json trajectory points and flag
@@ -76,6 +84,8 @@ COMMANDS:
                  meaningful when both points ran on one machine)
   poet-des     POET in the DES cluster (paper Fig. 7)
                  --ranks list  --variant none|coarse|fine|lockfree|delegated
+                 --topology/--link-model/--bg-traffic (fabric model,
+                 as in bench-kv; DESIGN.md §13)
                  --ny N --nx N --steps N --digits D --pipeline D
                  --replicas K (k-way DHT replication, DESIGN.md §9)
                  --kill-rank R --kill-rank-at SECONDS (chaos: kill a
@@ -152,6 +162,43 @@ fn parse_variant(s: &str) -> Result<Variant> {
     })
 }
 
+/// Apply `--topology/--link-model/--bg-traffic` to a resolved profile.
+fn apply_fabric_flags(net: &mut NetConfig, args: &Args) -> Result<()> {
+    if let Some(t) = args.get("--topology") {
+        net.topology = Topology::parse(t).ok_or_else(|| {
+            anyhow!(
+                "unknown topology {t:?}; accepted: flat|crossbar|\
+                 fattree[:pod=P,oversub=S]|dragonfly[:group=G]"
+            )
+        })?;
+    }
+    if let Some(m) = args.get("--link-model") {
+        net.link_model = LinkModel::parse(m)
+            .ok_or_else(|| anyhow!("--link-model constant|shared, got {m:?}"))?;
+    }
+    net.bg_load = args.f64_or("--bg-traffic", net.bg_load)?;
+    anyhow::ensure!(
+        (0.0..1.0).contains(&net.bg_load),
+        "--bg-traffic must be in [0, 1), got {}",
+        net.bg_load
+    );
+    Ok(())
+}
+
+/// `topology=... link-model=... bg=...` echo for table headers (only
+/// when the fabric deviates from the flat default).
+fn fabric_note(net: &NetConfig) -> String {
+    if net.topology == Topology::Crossbar && net.bg_load == 0.0 {
+        return String::new();
+    }
+    format!(
+        " topology={} link-model={} bg={:.2}",
+        net.topology.name(),
+        net.link_model.name(),
+        net.bg_load
+    )
+}
+
 fn cmd_bench_kv(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let variant = parse_variant(args.str_or("--variant", "lockfree"))?;
@@ -166,13 +213,14 @@ fn cmd_bench_kv(args: &Args) -> Result<()> {
     };
     let ranks = args.u32_list_or("--ranks", &[128, 256, 384, 512, 640])?;
     let ops = args.u64_or("--ops", 5_000)?;
-    let net = coordinator::net_profile(
+    let mut net = coordinator::net_profile(
         args.str_or("--profile", "pik"),
         cfg.as_ref(),
     )?;
+    apply_fabric_flags(&mut net, args)?;
     let mut t = Table::new(vec![
         "ranks", "read Mops", "write Mops", "mixed Mops", "rlat p50 µs",
-        "wlat p50 µs", "mismatches", "lock retries",
+        "wlat p50 µs", "mismatches", "lock retries", "hot link",
     ]);
     for n in ranks {
         let mut kv = KvCfg::new(n, ops, dist, mode);
@@ -191,11 +239,18 @@ fn cmd_bench_kv(args: &Args) -> Result<()> {
             us(res.write_lat_p50),
             res.mismatches.to_string(),
             res.lock_retries.to_string(),
+            match res.sim.peak_link() {
+                Some((label, util)) => {
+                    format!("{label} {:.0}%", util * 100.0)
+                }
+                None => "-".into(),
+            },
         ]);
     }
     println!(
-        "# bench-kv variant={} dist={dist:?} mode={mode:?} ops/rank={ops}",
-        variant.name()
+        "# bench-kv variant={} dist={dist:?} mode={mode:?} ops/rank={ops}{}",
+        variant.name(),
+        fabric_note(&net)
     );
     print!("{}", t.render());
     Ok(())
@@ -279,10 +334,11 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         "none" | "reference" => None,
         v => Some(parse_variant(v)?),
     };
-    let net = coordinator::net_profile(
+    let mut net = coordinator::net_profile(
         args.str_or("--profile", "pik"),
         cfg.as_ref(),
     )?;
+    apply_fabric_flags(&mut net, args)?;
     let mut t = Table::new(vec![
         "ranks", "runtime s", "hit rate", "l1 hits", "ladder hits",
         "max relerr", "mismatches", "chem cells", "failovers",
@@ -359,8 +415,9 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         ]);
     }
     println!(
-        "# poet-des variant={}",
-        variant.map(|v| v.name()).unwrap_or("reference")
+        "# poet-des variant={}{}",
+        variant.map(|v| v.name()).unwrap_or("reference"),
+        fabric_note(&net)
     );
     print!("{}", t.render());
     for line in notes {

@@ -22,6 +22,10 @@
 use crate::sim::{Resource, Time};
 use crate::util::rng::SplitMix64;
 
+pub mod topology;
+
+pub use topology::{Fabric, LinkModel, Topology};
+
 /// Calibration profile + topology for a simulated cluster.
 #[derive(Clone, Debug)]
 pub struct NetConfig {
@@ -78,6 +82,23 @@ pub struct NetConfig {
     /// its single owner, so a hot key turns this number into the service
     /// time of an M/D/1-like queue.
     pub mailbox_serve_ns: u64,
+    /// Fabric shape connecting the nodes (DESIGN.md §13).  `Crossbar`
+    /// reproduces the historical flat model bit-identically.
+    pub topology: Topology,
+    /// How messages consume link capacity along a route.  Irrelevant for
+    /// the crossbar (it has no shared links).
+    pub link_model: LinkModel,
+    /// Per-link bandwidth in bytes/ns (0 = same as `bw_bytes_per_ns`,
+    /// i.e. the fabric matches NIC line rate).
+    pub link_bw_bytes_per_ns: f64,
+    /// Per-hop switch + propagation latency, ns (0 = `wire_ns / 4`, so a
+    /// 4-link inter-pod fat-tree route costs exactly one flat `wire_ns`).
+    pub hop_ns: u64,
+    /// Deterministic background traffic: the fraction of every fabric
+    /// link's capacity consumed by other jobs' flows.  Foreground
+    /// serialization stretches by `1/(1-load)`; 0 = dedicated fabric.
+    /// Has no effect on the crossbar (dedicated per-pair capacity).
+    pub bg_load: f64,
 }
 
 impl NetConfig {
@@ -101,6 +122,11 @@ impl NetConfig {
             resp_lanes: 2,
             intra_uses_node_resources: false,
             mailbox_serve_ns: 220,
+            topology: Topology::Crossbar,
+            link_model: LinkModel::Constant,
+            link_bw_bytes_per_ns: 0.0,
+            hop_ns: 0,
+            bg_load: 0.0,
         }
     }
 
@@ -124,6 +150,11 @@ impl NetConfig {
             resp_lanes: 2,
             intra_uses_node_resources: true,
             mailbox_serve_ns: 150,
+            topology: Topology::Crossbar,
+            link_model: LinkModel::Constant,
+            link_bw_bytes_per_ns: 0.0,
+            hop_ns: 0,
+            bg_load: 0.0,
         }
     }
 
@@ -146,6 +177,10 @@ pub enum OpKind {
     Put,
     /// Remote atomic (CAS / fetch-and-op): 8-byte operands both ways.
     Atomic,
+    /// One-way eager message (RPC request / mailbox deposit): `bytes`
+    /// out, no wire-level response — the application-level reply is a
+    /// separate [`Network::reply`] message.  `resume == exec`.
+    Send,
 }
 
 /// Completion timeline of one modelled op.
@@ -180,11 +215,13 @@ impl NodeRes {
     }
 }
 
-/// The cluster network: per-node resources + the calibration profile.
+/// The cluster network: per-node resources, the fabric links, and the
+/// calibration profile.
 #[derive(Debug)]
 pub struct Network {
     pub cfg: NetConfig,
     nodes: Vec<NodeRes>,
+    fabric: Fabric,
     jitter: SplitMix64,
     pub messages: u64,
     pub bytes: u128,
@@ -201,7 +238,75 @@ impl Network {
                 atomic: Resource::new(),
             })
             .collect();
-        Self { cfg, nodes, jitter: SplitMix64::new(0x91E7), messages: 0, bytes: 0 }
+        let fabric = Fabric::new(cfg.topology, n);
+        Self {
+            cfg,
+            nodes,
+            fabric,
+            jitter: SplitMix64::new(0x91E7),
+            messages: 0,
+            bytes: 0,
+        }
+    }
+
+    /// Move one already-serialized message across the fabric.  `t` is
+    /// the instant the origin NIC finished transmitting; the return is
+    /// the arrival instant at the destination node.  `tail_ser` adds the
+    /// receive-side serialization term the flat model charges responses
+    /// (topology routes charge serialization on the links themselves).
+    ///
+    /// Associated fn (not a method) so callers can hold disjoint borrows
+    /// of `cfg` / `nodes` while routing.
+    fn transit(
+        cfg: &NetConfig,
+        fabric: &mut Fabric,
+        t: Time,
+        from_node: usize,
+        to_node: usize,
+        bytes: u32,
+        tail_ser: bool,
+    ) -> Time {
+        if matches!(cfg.topology, Topology::Crossbar) {
+            // flat model: constant wire latency, dedicated capacity
+            let tail = if tail_ser {
+                (bytes as f64 / cfg.bw_bytes_per_ns) as u64
+            } else {
+                0
+            };
+            return t + cfg.wire_ns + tail;
+        }
+        let hop = if cfg.hop_ns > 0 { cfg.hop_ns } else { cfg.wire_ns / 4 };
+        let bw = if cfg.link_bw_bytes_per_ns > 0.0 {
+            cfg.link_bw_bytes_per_ns
+        } else {
+            cfg.bw_bytes_per_ns
+        };
+        // background flows eat a fixed fraction of every link's
+        // capacity: foreground serialization stretches by 1/(1-load)
+        let load = cfg.bg_load.clamp(0.0, 0.95);
+        let ser = ((bytes as f64 / bw) / (1.0 - load)) as u64;
+        let route = fabric.route(from_node as u32, to_node as u32);
+        let mut at = t;
+        match cfg.link_model {
+            LinkModel::Constant => {
+                // uncontended cut-through: per-hop latency plus one
+                // bottleneck serialization; flows never interact
+                for &(_, hops) in route.iter() {
+                    at += hops as u64 * hop;
+                }
+                at + ser
+            }
+            LinkModel::Shared => {
+                // store-and-forward over shared links: each link keeps
+                // a busy calendar, so concurrent flows queue and
+                // congestion emerges where routes overlap
+                for &(link, hops) in route.iter() {
+                    at = fabric.links[link as usize].cal.acquire(at, ser);
+                    at += hops as u64 * hop;
+                }
+                at
+            }
+        }
     }
 
     /// Model one one-sided op of `kind` moving `bytes` of payload from
@@ -209,7 +314,17 @@ impl Network {
     pub fn rma(&mut self, now: Time, from: u32, to: u32, kind: OpKind,
                bytes: u32) -> OpTiming {
         self.messages += 1;
-        self.bytes += bytes as u128;
+        // request/response framing on the wire per op kind
+        let (out_bytes, back_bytes) = match kind {
+            OpKind::Get => (32u32, bytes),
+            OpKind::Put => (bytes, 16u32),
+            OpKind::Atomic => (16, 16),
+            OpKind::Send => (bytes, 0),
+        };
+        // account actual on-wire bytes, not just payload: a get also
+        // ships its 32-byte request, a put its 16-byte ack, an atomic
+        // 16-byte operand messages both ways
+        self.bytes += out_bytes as u128 + back_bytes as u128;
         let c = &self.cfg;
         let from_node = c.node_of(from) as usize;
         let to_node = c.node_of(to) as usize;
@@ -230,31 +345,39 @@ impl Network {
             let exec = t0 + lat;
             let write_dur =
                 if kind == OpKind::Put { (bytes as u64 / 16).max(1) } else { 0 };
-            return OpTiming { exec, resume: exec + lat / 2, write_dur };
+            let resume =
+                if kind == OpKind::Send { exec } else { exec + lat / 2 };
+            return OpTiming { exec, resume, write_dur };
         }
         // Same-node one-sided ops under UCX still run the full loopback
         // path: lower wire latency, same per-node processing resources —
         // this is what makes Fig. 4 scale ~linearly in nodes.
-        let wire = if from_node == to_node { c.intra_ns } else { c.wire_ns };
-
-        let (out_bytes, back_bytes) = match kind {
-            OpKind::Get => (32u32, bytes),
-            OpKind::Put => (bytes, 16u32),
-            OpKind::Atomic => (16, 16),
-        };
 
         // origin NIC serializes the outgoing message
         let tx_occ = c.nic_fix_ns + (out_bytes as f64 / c.bw_bytes_per_ns) as u64;
         let t_tx = self.nodes[from_node].nic_tx.acquire(t0, tx_occ);
-        // wire (or loopback) to the target
-        let t_arrive = t_tx + wire;
+        // loopback, or the fabric route, to the target
+        let t_arrive = if from_node == to_node {
+            t_tx + self.cfg.intra_ns
+        } else {
+            Self::transit(
+                &self.cfg,
+                &mut self.fabric,
+                t_tx,
+                from_node,
+                to_node,
+                out_bytes,
+                false,
+            )
+        };
+        let c = &self.cfg;
         // target-side execution: responder (DMA) or atomic unit
         let (exec, write_dur) = match kind {
             OpKind::Atomic => {
                 let occ = c.atomic_ns;
                 (self.nodes[to_node].atomic.acquire(t_arrive, occ), 0)
             }
-            OpKind::Get => {
+            OpKind::Get | OpKind::Send => {
                 let occ = (c.resp_fix_ns
                     + (bytes as f64 / c.dma_bytes_per_ns) as u64)
                     * c.resp_lanes.max(1) as u64;
@@ -270,11 +393,59 @@ impl Network {
                 (done, dur)
             }
         };
-        // response back over the wire (reads carry payload, which the
-        // responder occupancy already accounted for)
-        let resume = exec + wire
-            + (back_bytes as f64 / c.bw_bytes_per_ns) as u64;
+        // response back over the fabric (reads carry payload, which the
+        // responder occupancy already accounted for); one-way sends have
+        // no wire-level response
+        let resume = if kind == OpKind::Send {
+            exec
+        } else if from_node == to_node {
+            exec + c.intra_ns + (back_bytes as f64 / c.bw_bytes_per_ns) as u64
+        } else {
+            Self::transit(
+                &self.cfg,
+                &mut self.fabric,
+                exec,
+                to_node,
+                from_node,
+                back_bytes,
+                true,
+            )
+        };
         OpTiming { exec, resume, write_dur }
+    }
+
+    /// Model a server→client response message (RPC reply / delegated
+    /// mailbox completion): it serializes on the **server node's** NIC —
+    /// owner response bandwidth is a real resource under fan-in — then
+    /// rides the fabric, or the loopback path when both ranks share a
+    /// node.  Returns the instant the client resumes.
+    pub fn reply(&mut self, now: Time, from: u32, to: u32, bytes: u32) -> Time {
+        self.messages += 1;
+        self.bytes += bytes as u128;
+        let c = &self.cfg;
+        let from_node = c.node_of(from) as usize;
+        let to_node = c.node_of(to) as usize;
+        if from_node == to_node && !c.intra_uses_node_resources {
+            // cheap shared-memory BTL, same as the request direction
+            return now
+                + c.intra_ns
+                + (bytes as f64 / (4.0 * c.bw_bytes_per_ns)) as u64;
+        }
+        let tx_occ = c.nic_fix_ns + (bytes as f64 / c.bw_bytes_per_ns) as u64;
+        let t_tx = self.nodes[from_node].nic_tx.acquire(now, tx_occ);
+        if from_node == to_node {
+            t_tx + self.cfg.intra_ns
+        } else {
+            Self::transit(
+                &self.cfg,
+                &mut self.fabric,
+                t_tx,
+                from_node,
+                to_node,
+                bytes,
+                true,
+            )
+        }
     }
 
     /// Pure local compute on a rank; no shared resources.
@@ -302,6 +473,32 @@ impl Network {
 
     pub fn nic_tx_utilization(&self, node: usize, horizon: Time) -> f64 {
         self.nodes[node].nic_tx.utilization(horizon)
+    }
+
+    /// Number of explicit fabric links (0 for the crossbar).
+    pub fn nlinks(&self) -> usize {
+        self.fabric.links.len()
+    }
+
+    /// Utilization of fabric link `i` over `[0, horizon]`.  Only the
+    /// `Shared` link model accrues link occupancy; under `Constant` all
+    /// links stay at zero (flows never interact).
+    pub fn link_utilization(&self, i: usize, horizon: Time) -> f64 {
+        self.fabric.links[i].cal.utilization(horizon)
+    }
+
+    /// Diagnostic label of fabric link `i` (e.g. `pod3.core1.up`).
+    pub fn link_label(&self, i: usize) -> &str {
+        &self.fabric.links[i].label
+    }
+
+    /// Hottest link over `[0, horizon]`: `(label, utilization)`.
+    pub fn peak_link(&self, horizon: Time) -> Option<(&str, f64)> {
+        self.fabric
+            .links
+            .iter()
+            .map(|l| (l.label.as_str(), l.cal.utilization(horizon)))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
     }
 }
 
@@ -387,5 +584,145 @@ mod tests {
         assert_eq!(c.node_of(128), 1);
         assert_eq!(c.nodes_for(640), 5);
         assert_eq!(c.nodes_for(1), 1);
+    }
+
+    #[test]
+    fn bytes_count_wire_framing_not_just_payload() {
+        let mut n = net(256);
+        // get: 32-byte request out + 200-byte payload back
+        n.rma(0, 0, 200, OpKind::Get, 200);
+        assert_eq!(n.messages, 1);
+        assert_eq!(n.bytes, 232);
+        // put: 200-byte payload out + 16-byte ack back
+        n.rma(0, 0, 200, OpKind::Put, 200);
+        assert_eq!(n.bytes, 232 + 216);
+        // atomic: 16-byte operand messages both ways (payload arg is 8)
+        n.rma(0, 0, 200, OpKind::Atomic, 8);
+        assert_eq!(n.bytes, 232 + 216 + 32);
+        // one-way send: exactly its bytes, no response framing
+        n.rma(0, 0, 200, OpKind::Send, 100);
+        assert_eq!(n.bytes, 232 + 216 + 32 + 100);
+        // reply: one message of exactly its bytes
+        n.reply(0, 200, 0, 120);
+        assert_eq!(n.messages, 5);
+        assert_eq!(n.bytes, 232 + 216 + 32 + 100 + 120);
+    }
+
+    #[test]
+    fn send_is_one_way() {
+        let mut n = net(256);
+        let t = n.rma(0, 0, 200, OpKind::Send, 96);
+        // no wire-level response: the origin "resumes" at target exec
+        assert_eq!(t.resume, t.exec);
+        assert_eq!(t.write_dur, 0);
+    }
+
+    #[test]
+    fn reply_same_node_cheaper_than_old_flat_charge() {
+        // the pre-fix reply model charged every RPC/mailbox reply
+        // `wire_ns + bytes/bw` regardless of locality; pin that the
+        // modelled reply now beats that for same-node pairs and still
+        // costs at least as much cross-node (it adds the owner NIC).
+        // This is the arithmetic that moves ablation [5]'s del/lf ratio
+        // up on any workload containing same-node delegated ops.
+        let bytes = 120u32;
+        let c = NetConfig::pik_ndr();
+        let old_charge =
+            c.wire_ns + (bytes as f64 / c.bw_bytes_per_ns) as u64;
+        let mut n = net(256);
+        let same = n.reply(0, 1, 5, bytes); // ranks 1->5: both node 0
+        let mut n = net(256);
+        let cross = n.reply(0, 1, 200, bytes); // node 0 -> node 1
+        assert!(same < old_charge, "same={same} old={old_charge}");
+        assert!(cross >= old_charge, "cross={cross} old={old_charge}");
+        assert!(same < cross, "same={same} cross={cross}");
+
+        // cheap-BTL profile (Turing): same-node replies bypass the NIC
+        let mut n = Network::new(NetConfig::turing_roce(), 48);
+        let same = n.reply(0, 1, 5, bytes);
+        assert_eq!(n.nic_tx_utilization(0, 1_000_000), 0.0);
+        assert!(same < NetConfig::turing_roce().wire_ns);
+    }
+
+    #[test]
+    fn reply_serializes_on_server_nic() {
+        let mut n = net(256);
+        // rank 200 (node 1) answers a fan-in of 64 clients on node 0:
+        // the replies must queue on node 1's TX NIC
+        let mut last = 0;
+        for _ in 0..64 {
+            last = last.max(n.reply(0, 200, 0, 4096));
+        }
+        let occ = 18 + (4096.0 / 50.0) as u64; // nic_fix + bytes/bw
+        assert!(last >= 64 * occ, "last={last}");
+        assert!(n.nic_tx_utilization(1, last) > 0.5);
+        // and the clients' node NIC is untouched by replies
+        assert_eq!(n.nic_tx_utilization(0, last), 0.0);
+    }
+
+    #[test]
+    fn crossbar_ignores_link_model_and_bg() {
+        // the flat model has dedicated per-pair capacity: link model and
+        // background load must not change a single timing
+        let mut a = net(640);
+        let mut cfg = NetConfig::pik_ndr();
+        cfg.link_model = LinkModel::Shared;
+        cfg.bg_load = 0.9;
+        let mut b = Network::new(cfg, 640);
+        for r in 0..64 {
+            let ta = a.rma(r as u64 * 11, r, 500, OpKind::Get, 200);
+            let tb = b.rma(r as u64 * 11, r, 500, OpKind::Get, 200);
+            assert_eq!(ta.exec, tb.exec);
+            assert_eq!(ta.resume, tb.resume);
+        }
+        assert_eq!(a.nlinks(), 0);
+    }
+
+    #[test]
+    fn fat_tree_core_link_congests_under_shared_model() {
+        // 4 nodes in pods of 2; ranks on node 0 read big payloads from
+        // BOTH pod-1 nodes while background jobs hold 90 % of the
+        // fabric: the two response flows converge on pod0's single core
+        // downlink (and n0's downlink) and must queue there.
+        let mut cfg = NetConfig::pik_ndr();
+        cfg.topology = Topology::FatTree { pod: 2, oversub: 2 };
+        cfg.link_model = LinkModel::Shared;
+        cfg.bg_load = 0.9;
+        let mut n = Network::new(cfg.clone(), 512);
+        let mut last = 0;
+        for r in 0..32 {
+            last = last.max(n.rma(0, r, 300, OpKind::Get, 60_000).resume);
+            last = last.max(n.rma(0, r, 430, OpKind::Get, 60_000).resume);
+        }
+        let (label, util) = n.peak_link(last).unwrap();
+        assert!(util > 0.3, "peak {label} util={util}");
+        assert!(
+            label.contains("core") || label.contains(".down"),
+            "hot link should be core/down, got {label}"
+        );
+        // constant model: same traffic and bg, but flows never interact
+        // — no link occupancy, and a strictly earlier finish
+        cfg.link_model = LinkModel::Constant;
+        let mut m = Network::new(cfg, 512);
+        let mut last_c = 0;
+        for r in 0..32 {
+            last_c = last_c.max(m.rma(0, r, 300, OpKind::Get, 60_000).resume);
+            last_c = last_c.max(m.rma(0, r, 430, OpKind::Get, 60_000).resume);
+        }
+        assert_eq!(m.peak_link(last_c).unwrap().1, 0.0);
+        assert!(last > last_c, "shared {last} <= constant {last_c}");
+    }
+
+    #[test]
+    fn bg_traffic_stretches_fabric_serialization() {
+        let mut cfg = NetConfig::pik_ndr();
+        cfg.topology = Topology::FatTree { pod: 2, oversub: 2 };
+        cfg.link_model = LinkModel::Shared;
+        let mut quiet = Network::new(cfg.clone(), 512);
+        cfg.bg_load = 0.9;
+        let mut busy = Network::new(cfg, 512);
+        let q = quiet.rma(0, 0, 300, OpKind::Get, 8_192).resume;
+        let b = busy.rma(0, 0, 300, OpKind::Get, 8_192).resume;
+        assert!(b > q, "bg load must stretch serialization: {b} vs {q}");
     }
 }

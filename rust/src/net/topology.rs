@@ -1,0 +1,446 @@
+//! Explicit link-level fabric topologies for the DES network.
+//!
+//! The flat model charges every cross-node op one `wire_ns` — fine while
+//! the fabric is far from saturation (the paper's ≤640-rank testbeds),
+//! useless for asking *where lock-free reads stop scaling once shared
+//! links saturate*.  This module gives the network real links: a fabric
+//! is a set of [`LinkCal`] occupancy calendars (one per directed link)
+//! plus a deterministic routing function.  See DESIGN.md §13 for the cost
+//! model, the calibration procedure against the flat model, and the
+//! rules for when to trust large-scale extrapolations.
+//!
+//! Supported fabrics:
+//!
+//! * **Crossbar** — no explicit links; cross-node transit costs exactly
+//!   `wire_ns`.  Bit-identical to the historical flat model, and the
+//!   default everywhere.
+//! * **Fat tree** — nodes grouped into pods under edge switches; pods
+//!   joined by a core layer with `pod / oversub` uplinks per pod
+//!   (`oversub` = the taper ratio; 2 ⇒ the common 2:1 oversubscribed
+//!   HPC fabric).  Intra-pod routes take 2 links, inter-pod routes 4.
+//! * **Dragonfly** — nodes grouped into groups with all-to-all global
+//!   wiring: exactly one global link per group pair (the dragonfly's
+//!   signature bottleneck).  Intra-group routes take 2 links, minimal
+//!   inter-group routes 3 (the global link counts 2 hops of latency —
+//!   global cables are long).
+
+use crate::sim::Time;
+
+/// Fabric shape connecting the simulated nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Full crossbar (the historical flat model): every node pair has
+    /// dedicated capacity, transit is a constant `wire_ns`.
+    Crossbar,
+    /// Two-level fat tree.  `pod` = nodes per edge switch (0 = auto,
+    /// `ceil(sqrt(nodes))`); `oversub` = core taper ratio (uplinks per
+    /// pod = `max(1, pod / oversub)`).
+    FatTree { pod: u32, oversub: u32 },
+    /// One-dimensional dragonfly.  `group` = nodes per group (0 = auto,
+    /// `ceil(sqrt(nodes))`); one global link per group pair.
+    Dragonfly { group: u32 },
+}
+
+impl Topology {
+    /// Parse a CLI spec: `flat` | `crossbar` | `fattree[:pod=P,oversub=S]`
+    /// | `dragonfly[:group=G]`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let (name, params) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (s, None),
+        };
+        let mut get = |key: &str| -> Option<u32> {
+            params?
+                .split(',')
+                .filter_map(|kv| kv.split_once('='))
+                .find(|(k, _)| *k == key)
+                .and_then(|(_, v)| v.parse().ok())
+        };
+        match name {
+            "flat" | "crossbar" => Some(Topology::Crossbar),
+            "fattree" | "fat-tree" => Some(Topology::FatTree {
+                pod: get("pod").unwrap_or(0),
+                oversub: get("oversub").unwrap_or(2).max(1),
+            }),
+            "dragonfly" => {
+                Some(Topology::Dragonfly { group: get("group").unwrap_or(0) })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Crossbar => "crossbar",
+            Topology::FatTree { .. } => "fattree",
+            Topology::Dragonfly { .. } => "dragonfly",
+        }
+    }
+}
+
+/// How messages consume link capacity along a route.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkModel {
+    /// Uncontended cut-through: per-hop latency plus one bottleneck
+    /// serialization, no shared state.  Concurrent flows never interact.
+    Constant,
+    /// Store-and-forward over shared links: every link keeps a busy
+    /// calendar ([`LinkCal`]), so concurrent flows queue and congestion
+    /// emerges where routes overlap.
+    Shared,
+}
+
+impl LinkModel {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "constant" | "const" => Some(LinkModel::Constant),
+            "shared" => Some(LinkModel::Shared),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkModel::Constant => "constant",
+            LinkModel::Shared => "shared",
+        }
+    }
+}
+
+/// Busy-interval calendar for one fabric link.
+///
+/// [`crate::sim::Resource`] assumes acquires arrive in non-decreasing
+/// time order — true for per-node NICs and responders, whose acquire
+/// instants derive from monotone per-node event streams.  A fabric link
+/// is different: it receives request-path acquires (issue-side instants)
+/// interleaved with response-path acquires (server exec instants, far
+/// later once responders queue), so call order and arrival order
+/// diverge wildly.  FIFO-by-call-order would let one late response
+/// block requests that physically cleared the wire long before it —
+/// inflating an *idle* fabric into a bottleneck.  The calendar instead
+/// grants each flow the earliest idle gap at or after its arrival:
+/// identical to FIFO when arrivals come in order, still physical when
+/// they do not.
+#[derive(Debug, Default)]
+pub struct LinkCal {
+    /// Sorted, disjoint busy intervals `(start, end)`, coalesced when
+    /// they touch — a saturated link collapses to a handful of spans.
+    busy: Vec<(Time, Time)>,
+    busy_ns: u128,
+    ops: u64,
+}
+
+impl LinkCal {
+    /// Occupy the link for `occ` ns in the earliest idle gap starting
+    /// at or after `now`; returns the completion instant.
+    pub fn acquire(&mut self, now: Time, occ: Time) -> Time {
+        self.ops += 1;
+        if occ == 0 {
+            return now;
+        }
+        self.busy_ns += occ as u128;
+        // first busy interval ending after `now`
+        let mut i = self.busy.partition_point(|&(_, e)| e <= now);
+        let mut start = now;
+        while let Some(&(s, e)) = self.busy.get(i) {
+            if start + occ <= s {
+                break; // the gap before interval `i` fits
+            }
+            start = start.max(e);
+            i += 1;
+        }
+        let end = start + occ;
+        // insert, coalescing with touching neighbours
+        let merge_prev = i > 0 && self.busy[i - 1].1 == start;
+        let merge_next =
+            matches!(self.busy.get(i), Some(&(s, _)) if s == end);
+        match (merge_prev, merge_next) {
+            (true, true) => {
+                self.busy[i - 1].1 = self.busy[i].1;
+                self.busy.remove(i);
+            }
+            (true, false) => self.busy[i - 1].1 = end,
+            (false, true) => self.busy[i].0 = start,
+            (false, false) => self.busy.insert(i, (start, end)),
+        }
+        end
+    }
+
+    /// Fraction of `[0, horizon]` the link spent transmitting.
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        if horizon == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / horizon as f64
+        }
+    }
+
+    /// Messages that crossed this link.
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+}
+
+/// One directed link: its occupancy calendar plus a diagnostic label.
+#[derive(Debug)]
+pub struct Link {
+    pub cal: LinkCal,
+    pub label: String,
+}
+
+/// A route: up to 4 traversed links, each with its latency in hops.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Route {
+    steps: [(u32, u32); 4],
+    len: usize,
+}
+
+impl Route {
+    fn push(&mut self, link: u32, hops: u32) {
+        self.steps[self.len] = (link, hops);
+        self.len += 1;
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(u32, u32)> {
+        self.steps[..self.len].iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Resolved topology: concrete pod/group sizes for a node count.
+#[derive(Debug)]
+enum Resolved {
+    Crossbar,
+    FatTree { pod: u32, core_up: u32, nnodes: u32 },
+    Dragonfly { group: u32, groups: u32, nnodes: u32 },
+}
+
+/// The instantiated fabric: links + deterministic routing.
+#[derive(Debug)]
+pub struct Fabric {
+    pub links: Vec<Link>,
+    kind: Resolved,
+}
+
+/// Deterministic static routing hash: flows between the same node pair
+/// always ride the same core uplink (as real ECMP static hashing does),
+/// so per-pair ordering is stable and runs are reproducible.
+fn flow_hash(a: u32, b: u32) -> u32 {
+    (a.wrapping_mul(0x9E37_79B1)) ^ (b.wrapping_mul(0x85EB_CA77))
+}
+
+/// Auto pod/group size: `ceil(sqrt(n))`, at least 2 once there are
+/// multiple nodes (a 1-node "pod of 1" would make every route inter-pod).
+fn auto_size(nnodes: u32) -> u32 {
+    let mut s = (nnodes as f64).sqrt().ceil() as u32;
+    if nnodes > 1 {
+        s = s.max(2);
+    }
+    s.max(1)
+}
+
+impl Fabric {
+    pub fn new(topology: Topology, nnodes: u32) -> Self {
+        let mut links = Vec::new();
+        let mut node_updown = |links: &mut Vec<Link>| {
+            for n in 0..nnodes {
+                links.push(Link {
+                    cal: LinkCal::default(),
+                    label: format!("n{n}.up"),
+                });
+                links.push(Link {
+                    cal: LinkCal::default(),
+                    label: format!("n{n}.down"),
+                });
+            }
+        };
+        let kind = match topology {
+            Topology::Crossbar => Resolved::Crossbar,
+            Topology::FatTree { pod, oversub } => {
+                let pod = if pod == 0 { auto_size(nnodes) } else { pod.max(1) };
+                let core_up = (pod / oversub.max(1)).max(1);
+                node_updown(&mut links);
+                let pods = nnodes.div_ceil(pod).max(1);
+                for p in 0..pods {
+                    for c in 0..core_up {
+                        links.push(Link {
+                            cal: LinkCal::default(),
+                            label: format!("pod{p}.core{c}.up"),
+                        });
+                        links.push(Link {
+                            cal: LinkCal::default(),
+                            label: format!("pod{p}.core{c}.down"),
+                        });
+                    }
+                }
+                Resolved::FatTree { pod, core_up, nnodes }
+            }
+            Topology::Dragonfly { group } => {
+                let group =
+                    if group == 0 { auto_size(nnodes) } else { group.max(1) };
+                let groups = nnodes.div_ceil(group).max(1);
+                node_updown(&mut links);
+                for a in 0..groups {
+                    for b in (a + 1)..groups {
+                        links.push(Link {
+                            cal: LinkCal::default(),
+                            label: format!("g{a}-g{b}.global"),
+                        });
+                    }
+                }
+                Resolved::Dragonfly { group, groups, nnodes }
+            }
+        };
+        Self { links, kind }
+    }
+
+    /// Resolve the (deterministic, minimal) route between two distinct
+    /// nodes.  Empty for the crossbar — its transit needs no links.
+    pub fn route(&self, from: u32, to: u32) -> Route {
+        debug_assert_ne!(from, to);
+        let mut r = Route::default();
+        match self.kind {
+            Resolved::Crossbar => {}
+            Resolved::FatTree { pod, core_up, nnodes } => {
+                let (pf, pt) = (from / pod, to / pod);
+                r.push(2 * from, 1); // node -> edge
+                if pf != pt {
+                    let c = flow_hash(from, to) % core_up;
+                    let base = 2 * nnodes;
+                    r.push(base + 2 * (pf * core_up + c), 1); // edge -> core
+                    r.push(base + 2 * (pt * core_up + c) + 1, 1); // core -> edge
+                }
+                r.push(2 * to + 1, 1); // edge -> node
+            }
+            Resolved::Dragonfly { group, groups, nnodes } => {
+                let (gf, gt) = (from / group, to / group);
+                r.push(2 * from, 1); // node -> group router
+                if gf != gt {
+                    let (a, b) = (gf.min(gt), gf.max(gt));
+                    // triangular index of the (a, b) group pair
+                    let pair = a * groups - a * (a + 1) / 2 + (b - a - 1);
+                    // global cables are long: 2 hops of latency
+                    r.push(2 * nnodes + pair, 2);
+                }
+                r.push(2 * to + 1, 1); // group router -> node
+            }
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Topology::parse("flat"), Some(Topology::Crossbar));
+        assert_eq!(Topology::parse("crossbar"), Some(Topology::Crossbar));
+        assert_eq!(
+            Topology::parse("fattree"),
+            Some(Topology::FatTree { pod: 0, oversub: 2 })
+        );
+        assert_eq!(
+            Topology::parse("fattree:pod=8,oversub=4"),
+            Some(Topology::FatTree { pod: 8, oversub: 4 })
+        );
+        assert_eq!(
+            Topology::parse("dragonfly:group=4"),
+            Some(Topology::Dragonfly { group: 4 })
+        );
+        assert_eq!(Topology::parse("torus"), None);
+        assert_eq!(LinkModel::parse("shared"), Some(LinkModel::Shared));
+        assert_eq!(LinkModel::parse("constant"), Some(LinkModel::Constant));
+        assert_eq!(LinkModel::parse("x"), None);
+    }
+
+    #[test]
+    fn fat_tree_routes() {
+        // 8 nodes, pods of 4, 2 core uplinks per pod
+        let f = Fabric::new(Topology::FatTree { pod: 4, oversub: 2 }, 8);
+        assert_eq!(f.links.len(), 2 * 8 + 2 * 2 * 2);
+        // intra-pod: up(src), down(dst)
+        let r = f.route(0, 3);
+        let steps: Vec<u32> = r.iter().map(|&(l, _)| l).collect();
+        assert_eq!(steps, vec![0, 7]);
+        // inter-pod: 4 links, through the core layer
+        let r = f.route(0, 5);
+        assert_eq!(r.len(), 4);
+        let steps: Vec<u32> = r.iter().map(|&(l, _)| l).collect();
+        assert_eq!(steps[0], 0); // n0.up
+        assert!(f.links[steps[1] as usize].label.starts_with("pod0.core"));
+        assert!(f.links[steps[2] as usize].label.starts_with("pod1.core"));
+        assert_eq!(steps[3], 11); // n5.down
+        // static routing: same pair, same route
+        let again: Vec<u32> = f.route(0, 5).iter().map(|&(l, _)| l).collect();
+        assert_eq!(steps, again);
+    }
+
+    #[test]
+    fn dragonfly_routes() {
+        // 6 nodes, groups of 2 -> 3 groups, 3 global links
+        let f = Fabric::new(Topology::Dragonfly { group: 2 }, 6);
+        assert_eq!(f.links.len(), 2 * 6 + 3);
+        let r = f.route(0, 1); // same group
+        assert_eq!(r.len(), 2);
+        let r = f.route(0, 5); // group 0 -> group 2
+        assert_eq!(r.len(), 3);
+        let steps: Vec<(u32, u32)> = r.iter().cloned().collect();
+        assert_eq!(f.links[steps[1].0 as usize].label, "g0-g2.global");
+        assert_eq!(steps[1].1, 2); // long global cable: 2 hops
+    }
+
+    #[test]
+    fn link_calendar_is_fifo_for_in_order_arrivals() {
+        let mut l = LinkCal::default();
+        assert_eq!(l.acquire(0, 10), 10);
+        assert_eq!(l.acquire(5, 10), 20); // queues behind the first
+        assert_eq!(l.acquire(20, 10), 30); // back-to-back
+        assert_eq!(l.acquire(100, 10), 110); // idle gap: starts on time
+        assert_eq!(l.ops(), 4);
+        assert!((l.utilization(100) - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_calendar_late_acquire_does_not_block_earlier_arrival() {
+        // a response-path acquire far in the future must not delay a
+        // request that physically reaches the link before it
+        let mut l = LinkCal::default();
+        assert_eq!(l.acquire(10_000, 50), 10_050);
+        assert_eq!(l.acquire(0, 50), 50); // fits in the idle prefix
+        // a flow that doesn't fit before the booked span queues after it
+        assert_eq!(l.acquire(9_990, 50), 10_100);
+        // zero occupancy (sub-ns serialization) passes through untouched
+        assert_eq!(l.acquire(3, 0), 3);
+    }
+
+    #[test]
+    fn link_calendar_coalesces_touching_spans() {
+        let mut l = LinkCal::default();
+        l.acquire(0, 10);
+        l.acquire(30, 10);
+        l.acquire(10, 10); // bridges neither (ends at 20 < 30)
+        l.acquire(20, 10); // bridges [0,30) and [30,40) into one span
+        assert_eq!(l.busy.len(), 1);
+        assert_eq!(l.busy[0], (0, 40));
+        assert_eq!(l.acquire(0, 5), 45); // whole span is solid
+    }
+
+    #[test]
+    fn auto_sizing() {
+        assert_eq!(auto_size(1), 1);
+        assert_eq!(auto_size(2), 2);
+        assert_eq!(auto_size(32), 6);
+        let f = Fabric::new(Topology::FatTree { pod: 0, oversub: 2 }, 32);
+        // pod 6 -> 6 pods, 3 core uplinks each
+        assert_eq!(f.links.len(), 2 * 32 + 6 * 2 * 3);
+    }
+}

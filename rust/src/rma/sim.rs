@@ -181,6 +181,12 @@ pub struct SimReport {
     pub atomic_util: Vec<f64>,
     pub responder_util: Vec<f64>,
     pub nic_util: Vec<f64>,
+    /// Per-fabric-link utilization (empty for the crossbar; only the
+    /// `Shared` link model accrues occupancy).  Indexed like
+    /// `link_labels`.
+    pub link_util: Vec<f64>,
+    /// Diagnostic labels of the fabric links (e.g. `pod3.core1.up`).
+    pub link_labels: Vec<String>,
     /// Injected-fault counters (chaos harness, DESIGN.md §9).
     pub faults: FaultStats,
 }
@@ -190,7 +196,7 @@ impl SimReport {
     /// printed under `poet-des` tables so retransmission cost is visible
     /// without reading the struct.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "sim: {} ops in {:.3} ms, {} events, {} msgs, \
              {} lock retries | {}",
             self.ops,
@@ -199,7 +205,21 @@ impl SimReport {
             self.net_messages,
             self.lock_retries,
             self.faults.summary(),
-        )
+        );
+        if let Some((label, util)) = self.peak_link() {
+            s.push_str(&format!(" | peak link {label} {:.0}%", util * 100.0));
+        }
+        s
+    }
+
+    /// Hottest fabric link of the run: `(label, utilization)`.  `None`
+    /// for the crossbar (no explicit links).
+    pub fn peak_link(&self) -> Option<(&str, f64)> {
+        self.link_util
+            .iter()
+            .zip(&self.link_labels)
+            .map(|(&u, l)| (l.as_str(), u))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
     }
 }
 
@@ -393,6 +413,12 @@ impl<W: Workload> SimCluster<W> {
             .collect();
         self.report.nic_util = (0..self.net.nnodes())
             .map(|n| self.net.nic_tx_utilization(n, h))
+            .collect();
+        self.report.link_util = (0..self.net.nlinks())
+            .map(|l| self.net.link_utilization(l, h))
+            .collect();
+        self.report.link_labels = (0..self.net.nlinks())
+            .map(|l| self.net.link_label(l).to_string())
             .collect();
         self.report.clone()
     }
@@ -923,16 +949,18 @@ impl<W: Workload> SimCluster<W> {
                 self.queue.push(t.exec, Ev::Exec { ctx });
             }
             Req::Rpc { server, proc_ns, req_bytes, resp_bytes, payload } => {
-                // request travels to the server node, then serializes on
-                // the server process itself
-                let t_net =
-                    self.net.rma(self.now, rank, server, OpKind::Put, req_bytes);
+                // request travels to the server node as a one-way eager
+                // message, then serializes on the server process itself
+                let t_net = self
+                    .net
+                    .rma(self.now, rank, server, OpKind::Send, req_bytes);
                 let t_net = self.faulted(ctx, server, t_net);
                 let srv = self.servers.entry(server).or_default();
                 let t_done = srv.acquire(t_net.exec, proc_ns);
-                let resume = t_done
-                    + self.net.cfg.wire_ns
-                    + (resp_bytes as f64 / self.net.cfg.bw_bytes_per_ns) as u64;
+                // the reply is a first-class message: it serializes on
+                // the server node's NIC and rides the fabric — or the
+                // loopback path when client and server share a node
+                let resume = self.net.reply(t_done, server, rank, resp_bytes);
                 let timing = OpTiming { exec: t_done, resume, write_dur: 0 };
                 self.ctxs[ctx as usize].pending_req = Some(Req::Rpc {
                     server,
@@ -950,14 +978,16 @@ impl<W: Workload> SimCluster<W> {
                 // mailbox is drained one entry at a time (DESIGN.md §12)
                 let t_net = self
                     .net
-                    .rma(self.now, rank, target, OpKind::Put, req_bytes);
+                    .rma(self.now, rank, target, OpKind::Send, req_bytes);
                 let t_net = self.faulted(ctx, target, t_net);
                 let srv = self.servers.entry(target).or_default();
                 let t_done =
                     srv.acquire(t_net.exec, self.net.cfg.mailbox_serve_ns);
-                let resume = t_done
-                    + self.net.cfg.wire_ns
-                    + (resp_bytes as f64 / self.net.cfg.bw_bytes_per_ns) as u64;
+                // completion notification: a real reply message through
+                // the network model (owner NIC + fabric, or the same-node
+                // loopback path — same-node delegated ops must NOT pay
+                // the cross-node wire)
+                let resume = self.net.reply(t_done, target, rank, resp_bytes);
                 let timing = OpTiming { exec: t_done, resume, write_dur: 0 };
                 self.ctxs[ctx as usize].pending_req =
                     Some(Req::Mailbox { target, op, req_bytes, resp_bytes });
