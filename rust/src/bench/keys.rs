@@ -7,6 +7,7 @@
 //! equal keys across ranks (which is what makes zipfian *hot keys* collide
 //! on the same buckets cluster-wide).
 
+use crate::poet::key::fold_tenant;
 use crate::util::rng::SplitMix64;
 
 /// Fill `out` deterministically from `id` (domain-separated by `tag`).
@@ -22,6 +23,20 @@ pub fn fill_from_id(id: u64, tag: u64, out: &mut [u8]) {
 pub fn key_for(id: u64, key_len: usize) -> Vec<u8> {
     let mut k = vec![0u8; key_len];
     fill_from_id(id, 0x4B45_59, &mut k); // "KEY"
+    k
+}
+
+/// [`key_for`] namespaced to `tenant` via the same dt-lane fold the POET
+/// drivers use ([`fold_tenant`], DESIGN.md §14): equal ids collide
+/// within a tenant and never across tenants.  Tenant 0 is byte-identical
+/// to [`key_for`].  Requires `key_len >= 8` for a nonzero tenant (the
+/// fold needs an 8-byte lane).
+pub fn key_for_tenant(id: u64, key_len: usize, tenant: u32) -> Vec<u8> {
+    let mut k = key_for(id, key_len);
+    if tenant != 0 {
+        assert!(key_len >= 8, "tenant fold needs an 8-byte lane");
+        fold_tenant(&mut k, tenant);
+    }
     k
 }
 
@@ -51,12 +66,26 @@ impl KeyCorpus {
     /// Build the corpus for ids `0..n`, or `None` if it would exceed
     /// [`CORPUS_BYTES_CAP`].
     pub fn build(n: u64, key_len: usize) -> Option<KeyCorpus> {
+        Self::build_for_tenant(n, key_len, 0)
+    }
+
+    /// [`Self::build`] with every key folded to `tenant`
+    /// ([`key_for_tenant`]); tenant 0 is the anonymous corpus verbatim.
+    pub fn build_for_tenant(
+        n: u64,
+        key_len: usize,
+        tenant: u32,
+    ) -> Option<KeyCorpus> {
         if n.checked_mul(key_len as u64)? > CORPUS_BYTES_CAP {
             return None;
         }
+        assert!(tenant == 0 || key_len >= 8, "tenant fold needs 8 bytes");
         let mut data = vec![0u8; n as usize * key_len];
         for (id, chunk) in data.chunks_exact_mut(key_len).enumerate() {
             fill_from_id(id as u64, 0x4B45_59, chunk);
+            if tenant != 0 {
+                fold_tenant(chunk, tenant);
+            }
         }
         Some(KeyCorpus { key_len, data })
     }
@@ -106,5 +135,19 @@ mod tests {
         }
         // the cap refuses absurd corpora instead of allocating them
         assert!(KeyCorpus::build(u64::MAX / 80, 80).is_none());
+    }
+
+    #[test]
+    fn tenant_corpus_matches_folded_key_for() {
+        let anon = KeyCorpus::build(16, 80).unwrap();
+        let t0 = KeyCorpus::build_for_tenant(16, 80, 0).unwrap();
+        let t3 = KeyCorpus::build_for_tenant(16, 80, 3).unwrap();
+        for id in 0..16u64 {
+            assert_eq!(t0.key(id), anon.key(id), "tenant 0 is anonymous");
+            assert_eq!(t3.key(id), &key_for_tenant(id, 80, 3)[..]);
+            assert_ne!(t3.key(id), anon.key(id), "namespaced id {id}");
+            // same id, different tenants: distinct buckets
+            assert_eq!(&t3.key(id)[..72], &anon.key(id)[..72]);
+        }
     }
 }

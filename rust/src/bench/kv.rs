@@ -15,7 +15,10 @@
 //! collision and contention statistics are preserved.
 
 use crate::daos::{DaosConfig, DaosOut, DaosServer, DaosSm};
-use crate::dht::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
+use crate::dht::bucket::Meta;
+use crate::dht::{
+    DhtConfig, DhtOutcome, DhtSm, DhtStats, EvictPolicy, Variant,
+};
 use crate::metrics::Histogram;
 use crate::net::{NetConfig, Network};
 use crate::rma::sim::{SimCluster, SimReport};
@@ -24,7 +27,7 @@ use crate::sim::Time;
 use crate::util::rng::Rng;
 use crate::util::zipf::Zipf;
 
-use super::keys::{key_for, value_for, KeyCorpus};
+use super::keys::{key_for, key_for_tenant, value_for, KeyCorpus};
 
 /// Key-id distribution (§5.2: uniform or zipfian with skew 0.99;
 /// hotkey is the adversarial extreme for the delegation ablation).
@@ -48,6 +51,78 @@ impl Dist {
     }
 }
 
+/// Per-tenant workload profile of a multi-tenant run (DESIGN.md §14):
+/// the first three simply pin the tenant's key distribution; `Flood`
+/// and `HotRead` are the adversarial-neighbor pair the second-chance
+/// policy is judged against (a write-flooder churning the shared cache
+/// next to a reader working a small hot set).  The read/write override
+/// of `Flood`/`HotRead` applies in [`Mode::Mixed`] runs; under
+/// [`Mode::WriteThenRead`] only the distribution changes (the phase
+/// barrier needs every rank on the same phase structure).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantProfile {
+    Uniform,
+    Zipfian,
+    HotKey,
+    /// 100 % writes, uniform ids: maximal churn on the shared cache.
+    Flood,
+    /// 95 % reads over the hot-key distribution: the victim neighbor.
+    HotRead,
+}
+
+impl TenantProfile {
+    pub const ALL: [TenantProfile; 5] = [
+        TenantProfile::Uniform,
+        TenantProfile::Zipfian,
+        TenantProfile::HotKey,
+        TenantProfile::Flood,
+        TenantProfile::HotRead,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantProfile::Uniform => "uniform",
+            TenantProfile::Zipfian => "zipfian",
+            TenantProfile::HotKey => "hotkey",
+            TenantProfile::Flood => "flood",
+            TenantProfile::HotRead => "hotread",
+        }
+    }
+
+    /// The names [`Self::parse`] accepts (for CLI error messages).
+    pub const ACCEPTED: &'static str =
+        "uniform, zipfian, hotkey, flood, hotread";
+
+    pub fn parse(s: &str) -> Option<TenantProfile> {
+        match s {
+            "uniform" => Some(TenantProfile::Uniform),
+            "zipfian" | "zipf" => Some(TenantProfile::Zipfian),
+            "hotkey" | "hot-key" | "hot" => Some(TenantProfile::HotKey),
+            "flood" => Some(TenantProfile::Flood),
+            "hotread" | "hot-read" => Some(TenantProfile::HotRead),
+            _ => None,
+        }
+    }
+
+    /// The id distribution this profile draws from.
+    fn dist(&self) -> Dist {
+        match self {
+            TenantProfile::Uniform | TenantProfile::Flood => Dist::Uniform,
+            TenantProfile::Zipfian => Dist::Zipfian,
+            TenantProfile::HotKey | TenantProfile::HotRead => Dist::HotKey,
+        }
+    }
+
+    /// Mixed-mode read share override (None = the run's `read_percent`).
+    fn read_percent_override(&self) -> Option<u32> {
+        match self {
+            TenantProfile::Flood => Some(0),
+            TenantProfile::HotRead => Some(95),
+            _ => None,
+        }
+    }
+}
+
 /// Id sampler instantiated from [`Dist`].
 enum Sampler {
     Uniform,
@@ -57,7 +132,11 @@ enum Sampler {
 
 impl Sampler {
     fn new(cfg: &KvCfg) -> Sampler {
-        match cfg.dist {
+        Self::for_dist(cfg.dist, cfg)
+    }
+
+    fn for_dist(dist: Dist, cfg: &KvCfg) -> Sampler {
+        match dist {
             Dist::Uniform => Sampler::Uniform,
             Dist::Zipfian => {
                 Sampler::Zipf(Zipf::new(cfg.zipf_range_effective(), cfg.theta))
@@ -112,6 +191,18 @@ pub struct KvCfg {
     /// In-flight ops per rank (pipeline depth; 1 = the paper's blocking
     /// one-op-at-a-time client, DESIGN.md §3).
     pub pipeline: u32,
+    /// Concurrent tenant namespaces over the one table (DESIGN.md §14):
+    /// ranks are block-partitioned across `tenants`, each drawing ids
+    /// from its own sampler and keying them under its own
+    /// [`key_for_tenant`] namespace.  Clamped to `nranks`; 1 = the
+    /// anonymous single-tenant benchmark (bit-identical keys/records).
+    pub tenants: u32,
+    /// Full-candidate-set write behavior (DESIGN.md §14).  `Drop` keeps
+    /// the pre-tenant bit-identical tables.
+    pub evict: EvictPolicy,
+    /// Per-tenant profiles (`tenant_mix[t % len]`); empty = every tenant
+    /// runs the configured `dist`/`mode`.
+    pub tenant_mix: Vec<TenantProfile>,
 }
 
 impl KvCfg {
@@ -128,6 +219,9 @@ impl KvCfg {
             win_bytes: 0,
             seed: 0xBEAC_0BE,
             pipeline: 1,
+            tenants: 1,
+            evict: EvictPolicy::Drop,
+            tenant_mix: Vec::new(),
         }
     }
 
@@ -172,6 +266,31 @@ pub struct KvResult {
     pub lock_retries: u64,
     pub stats: DhtStats,
     pub sim: SimReport,
+    /// Per-tenant (read hits, read lookups) of the run (DESIGN.md §14;
+    /// one entry for single-tenant runs).
+    pub tenant_hits: Vec<(u64, u64)>,
+}
+
+impl KvResult {
+    /// Hit rate of tenant `t`'s reads.
+    pub fn tenant_hit_rate(&self, t: usize) -> f64 {
+        match self.tenant_hits.get(t) {
+            Some(&(h, l)) if l > 0 => h as f64 / l as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Jain fairness index over the tenants' read hit rates (tenants
+    /// that issued no reads — e.g. a `flood` profile — are excluded).
+    pub fn fairness(&self) -> f64 {
+        let rates: Vec<f64> = self
+            .tenant_hits
+            .iter()
+            .filter(|(_, l)| *l > 0)
+            .map(|&(h, l)| h as f64 / l as f64)
+            .collect();
+        crate::dht::stats::jain_fairness(&rates)
+    }
 }
 
 // ---------------------------------------------------------------- workload
@@ -194,28 +313,61 @@ struct RankCtx {
 struct KvWorkload {
     cfg: KvCfg,
     dht: DhtConfig,
-    sampler: Sampler,
-    /// Precomputed keys for bounded id ranges (zipfian/hotkey), so the
-    /// measured loop indexes a slice instead of allocating and deriving
-    /// a key per op (uniform ids span all of u64 and keep [`key_for`]).
-    corpus: Option<KeyCorpus>,
+    /// Per rank: the tenant namespace it operates in (all 0 for the
+    /// single-tenant benchmark).
+    tenant_of: Vec<u32>,
+    /// Per tenant: the profile override (None = the run's `dist`/mode).
+    profiles: Vec<Option<TenantProfile>>,
+    /// Per tenant: its id sampler.
+    samplers: Vec<Sampler>,
+    /// Per tenant: precomputed keys for bounded id ranges
+    /// (zipfian/hotkey), so the measured loop indexes a slice instead of
+    /// allocating and deriving a key per op (uniform ids span all of u64
+    /// and keep [`key_for_tenant`]).
+    corpora: Vec<Option<KeyCorpus>>,
+    /// Monotone write-age clock shared by every rank (single-threaded
+    /// simulation): stamps second-chance records (DESIGN.md §14).
+    age: u64,
     ranks: Vec<RankCtx>,
     stats: DhtStats,
     read_lat: Histogram,
     write_lat: Histogram,
     phase_ops: [u64; 2],
+    /// Per-tenant (read hits, read lookups).
+    tenant_hits: Vec<(u64, u64)>,
 }
 
 impl KvWorkload {
     fn new(cfg: KvCfg, dht: DhtConfig) -> Self {
-        let sampler = Sampler::new(&cfg);
-        let corpus = match cfg.dist {
-            Dist::Uniform => None,
-            // zipf/hotkey ids are drawn from [0, range)
-            Dist::Zipfian | Dist::HotKey => {
-                KeyCorpus::build(cfg.zipf_range_effective(), cfg.key_len)
-            }
-        };
+        let tenants = cfg.tenants.clamp(1, cfg.nranks) as usize;
+        let tenant_of: Vec<u32> = (0..cfg.nranks)
+            .map(|r| (r as usize * tenants / cfg.nranks as usize) as u32)
+            .collect();
+        let profiles: Vec<Option<TenantProfile>> = (0..tenants)
+            .map(|t| {
+                (!cfg.tenant_mix.is_empty())
+                    .then(|| cfg.tenant_mix[t % cfg.tenant_mix.len()])
+            })
+            .collect();
+        let samplers: Vec<Sampler> = profiles
+            .iter()
+            .map(|p| {
+                Sampler::for_dist(p.map_or(cfg.dist, |p| p.dist()), &cfg)
+            })
+            .collect();
+        let corpora: Vec<Option<KeyCorpus>> = profiles
+            .iter()
+            .enumerate()
+            .map(|(t, p)| match p.map_or(cfg.dist, |p| p.dist()) {
+                Dist::Uniform => None,
+                // zipf/hotkey ids are drawn from [0, range)
+                Dist::Zipfian | Dist::HotKey => KeyCorpus::build_for_tenant(
+                    cfg.zipf_range_effective(),
+                    cfg.key_len,
+                    t as u32,
+                ),
+            })
+            .collect();
         let ranks = (0..cfg.nranks)
             .map(|r| RankCtx {
                 // "every client starts with a different seed" (§3.3)
@@ -231,13 +383,17 @@ impl KvWorkload {
         Self {
             cfg,
             dht,
-            sampler,
-            corpus,
+            tenant_of,
+            profiles,
+            samplers,
+            corpora,
+            age: 0,
             ranks,
             stats: DhtStats::default(),
             read_lat: Histogram::new(),
             write_lat: Histogram::new(),
             phase_ops: [0, 0],
+            tenant_hits: vec![(0, 0); tenants],
         }
     }
 
@@ -245,20 +401,44 @@ impl KvWorkload {
         sampler.draw(rng)
     }
 
-    /// The key for `id`: a corpus slice when precomputed (bounded ids),
-    /// else derived on the spot.
+    /// The key for `id` in tenant `t`'s namespace: a corpus slice when
+    /// precomputed (bounded ids, already folded), else derived on the
+    /// spot.
     fn key_bytes<'a>(
         corpus: &'a Option<KeyCorpus>,
         id: u64,
         key_len: usize,
+        tenant: u32,
         scratch: &'a mut Vec<u8>,
     ) -> &'a [u8] {
         match corpus {
             Some(c) => c.key(id),
             None => {
-                *scratch = key_for(id, key_len);
+                *scratch = key_for_tenant(id, key_len, tenant);
                 scratch
             }
+        }
+    }
+
+    /// Build the write SM, stamping the record with the tenant/age word
+    /// under second-chance eviction; under `Drop` the record and the RMA
+    /// trace stay bit-identical to the pre-tenant path.
+    fn stamped_write(
+        dht: &DhtConfig,
+        age: &mut u64,
+        tenant: u32,
+        key: &[u8],
+        val: &[u8],
+    ) -> DhtSm {
+        if dht.evict == EvictPolicy::SecondChance {
+            let meta = Meta::stamp(tenant, *age as u32, true);
+            *age += 1;
+            let mut rec = Vec::new();
+            dht.layout.encode_into_with(key, val, meta, &mut rec);
+            let hash = dht.addressing.hash(key);
+            DhtSm::write_prepared(dht.variant, dht, hash, rec)
+        } else {
+            DhtSm::write(dht.variant, dht, key, val)
         }
     }
 }
@@ -270,21 +450,23 @@ impl Workload for KvWorkload {
         let cfg_ops = self.cfg.ops_per_rank;
         let variant = self.dht.variant;
         let (key_len, val_len) = (self.cfg.key_len, self.cfg.val_len);
+        let t = self.tenant_of[rank as usize] as usize;
         let r = &mut self.ranks[rank as usize];
         match self.cfg.mode {
             Mode::WriteThenRead => {
                 if r.phase == 0 {
                     if r.ops_done < cfg_ops {
                         r.ops_done += 1;
-                        let id = Self::draw_id(&self.sampler, &mut r.rng);
+                        let id = Self::draw_id(&self.samplers[t], &mut r.rng);
                         let mut scratch = Vec::new();
                         let key = Self::key_bytes(
-                            &self.corpus, id, key_len, &mut scratch,
+                            &self.corpora[t], id, key_len, t as u32,
+                            &mut scratch,
                         );
                         let val = value_for(r.vrng.next_u64(), val_len);
                         r.issued_read = false;
-                        return WorkItem::Op(DhtSm::write(
-                            variant, &self.dht, key, &val,
+                        return WorkItem::Op(Self::stamped_write(
+                            &self.dht, &mut self.age, t as u32, key, &val,
                         ));
                     }
                     if !r.at_barrier {
@@ -298,10 +480,11 @@ impl Workload for KvWorkload {
                 if r.ops_done < cfg_ops {
                     r.ops_done += 1;
                     // read back exactly the ids written in phase 0 (§5.2)
-                    let id = Self::draw_id(&self.sampler, &mut r.replay);
+                    let id = Self::draw_id(&self.samplers[t], &mut r.replay);
                     let mut scratch = Vec::new();
-                    let key =
-                        Self::key_bytes(&self.corpus, id, key_len, &mut scratch);
+                    let key = Self::key_bytes(
+                        &self.corpora[t], id, key_len, t as u32, &mut scratch,
+                    );
                     r.issued_read = true;
                     return WorkItem::Op(DhtSm::read(variant, &self.dht, key));
                 }
@@ -312,17 +495,25 @@ impl Workload for KvWorkload {
                     return WorkItem::Finished;
                 }
                 r.ops_done += 1;
-                let id = Self::draw_id(&self.sampler, &mut r.rng);
+                // per-tenant profile override of the read share
+                // (`flood` writes always, `hotread` reads 95 %)
+                let read_percent = self.profiles[t]
+                    .and_then(|p| p.read_percent_override())
+                    .unwrap_or(read_percent);
+                let id = Self::draw_id(&self.samplers[t], &mut r.rng);
                 let mut scratch = Vec::new();
-                let key =
-                    Self::key_bytes(&self.corpus, id, key_len, &mut scratch);
+                let key = Self::key_bytes(
+                    &self.corpora[t], id, key_len, t as u32, &mut scratch,
+                );
                 if r.rng.below(100) < read_percent as u64 {
                     r.issued_read = true;
                     WorkItem::Op(DhtSm::read(variant, &self.dht, key))
                 } else {
                     let val = value_for(r.vrng.next_u64(), val_len);
                     r.issued_read = false;
-                    WorkItem::Op(DhtSm::write(variant, &self.dht, key, &val))
+                    WorkItem::Op(Self::stamped_write(
+                        &self.dht, &mut self.age, t as u32, key, &val,
+                    ))
                 }
             }
         }
@@ -343,6 +534,11 @@ impl Workload for KvWorkload {
         );
         if is_read {
             self.read_lat.record(latency.max(1));
+            let th = &mut self.tenant_hits[self.tenant_of[rank as usize] as usize];
+            th.1 += 1;
+            if matches!(out.outcome, DhtOutcome::ReadHit(_)) {
+                th.0 += 1;
+            }
         } else {
             self.write_lat.record(latency.max(1));
         }
@@ -353,7 +549,7 @@ impl Workload for KvWorkload {
 
 /// Run one DHT benchmark configuration in the DES cluster.
 pub fn run_kv(variant: Variant, net_cfg: NetConfig, cfg: KvCfg) -> KvResult {
-    let dht = DhtConfig::new(
+    let mut dht = DhtConfig::new(
         variant,
         cfg.nranks,
         cfg.win_bytes_effective(
@@ -363,6 +559,7 @@ pub fn run_kv(variant: Variant, net_cfg: NetConfig, cfg: KvCfg) -> KvResult {
         cfg.key_len,
         cfg.val_len,
     );
+    dht.evict = cfg.evict;
     run_kv_custom(dht, net_cfg, cfg)
 }
 
@@ -394,6 +591,7 @@ pub fn run_kv_custom(dht: DhtConfig, net_cfg: NetConfig, cfg: KvCfg) -> KvResult
         read_lat_p95: w.read_lat.percentile(95.0),
         write_lat_p50: w.write_lat.percentile(50.0),
         write_lat_p95: w.write_lat.percentile(95.0),
+        tenant_hits: w.tenant_hits.clone(),
         ..Default::default()
     };
     match cfg.mode {
@@ -626,6 +824,87 @@ mod tests {
             assert_eq!(d16.stats.reads, 32 * 200);
             assert!(d16.stats.hit_rate() > 0.9, "{}", d16.stats.hit_rate());
         }
+    }
+
+    #[test]
+    fn multi_tenant_mixed_namespaces_bill_and_reconcile() {
+        // four tenants over one deliberately undersized table with
+        // second-chance aging: the per-tenant read ledger reconciles
+        // with the global counters and every eviction is billed to the
+        // victim tenant (DESIGN.md §14)
+        let mut cfg =
+            small_cfg(8, Dist::Zipfian, Mode::Mixed { read_percent: 80 });
+        cfg.tenants = 4;
+        cfg.evict = EvictPolicy::SecondChance;
+        cfg.win_bytes = 4 * 1024; // ~20 lock-free buckets/rank: churn
+        let res = run_kv(Variant::LockFree, NetConfig::pik_ndr(), cfg);
+        assert_eq!(res.tenant_hits.len(), 4);
+        let lookups: u64 = res.tenant_hits.iter().map(|&(_, l)| l).sum();
+        let hits: u64 = res.tenant_hits.iter().map(|&(h, _)| h).sum();
+        assert_eq!(lookups, res.stats.reads, "read ledger conserved");
+        assert_eq!(hits, res.stats.read_hits, "hit ledger conserved");
+        for t in 0..4 {
+            assert!(res.tenant_hits[t].1 > 0, "tenant {t} issued reads");
+        }
+        assert!(res.stats.evictions > 0, "undersized table must churn");
+        let suffered: u64 =
+            res.stats.tenant_evictions_suffered.iter().sum();
+        assert_eq!(
+            suffered, res.stats.evictions,
+            "every second-chance eviction names its victim tenant"
+        );
+        let f = res.fairness();
+        assert!(f > 0.0 && f <= 1.0, "jain fairness {f}");
+    }
+
+    #[test]
+    fn flood_and_hotread_profiles_shape_the_traffic() {
+        // tenant 0 write-floods (no reads), tenant 1 re-reads a hot set:
+        // the profile overrides must shape each tenant's op stream
+        let mut cfg =
+            small_cfg(8, Dist::Zipfian, Mode::Mixed { read_percent: 50 });
+        cfg.tenants = 2;
+        cfg.evict = EvictPolicy::SecondChance;
+        cfg.tenant_mix =
+            vec![TenantProfile::Flood, TenantProfile::HotRead];
+        let res = run_kv(Variant::Fine, NetConfig::pik_ndr(), cfg);
+        assert_eq!(res.tenant_hits[0].1, 0, "flood tenant never reads");
+        assert!(res.tenant_hits[1].1 > 0, "hotread tenant reads");
+        assert!(
+            res.tenant_hit_rate(1) > 0.05,
+            "hot id resident for the reader: {}",
+            res.tenant_hit_rate(1)
+        );
+        // 4 flood ranks wrote every op; 4 hotread ranks wrote ~5 %
+        assert!(res.stats.writes > res.stats.reads);
+    }
+
+    #[test]
+    fn tenant_profile_names_round_trip() {
+        for p in TenantProfile::ALL {
+            assert_eq!(TenantProfile::parse(p.name()), Some(p), "{p:?}");
+        }
+        assert_eq!(TenantProfile::parse("zipf"), Some(TenantProfile::Zipfian));
+        assert_eq!(TenantProfile::parse("hot-read"), Some(TenantProfile::HotRead));
+        assert_eq!(TenantProfile::parse("bogus"), None);
+        for name in TenantProfile::ACCEPTED.split(", ") {
+            assert!(TenantProfile::parse(name).is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn single_tenant_ledger_mirrors_global_reads() {
+        // tenants == 1 (the default): one anonymous ledger row equal to
+        // the global read counters — the bench half of the oracle anchor
+        let res = run_kv(
+            Variant::LockFree,
+            NetConfig::pik_ndr(),
+            small_cfg(8, Dist::Uniform, Mode::WriteThenRead),
+        );
+        assert_eq!(
+            res.tenant_hits,
+            vec![(res.stats.read_hits, res.stats.reads)]
+        );
     }
 
     /// Calibration probe: run with

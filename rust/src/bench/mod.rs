@@ -14,4 +14,4 @@ pub mod kv;
 pub mod table;
 pub mod traj;
 
-pub use kv::{run_daos, run_kv, Dist, KvCfg, KvResult, Mode};
+pub use kv::{run_daos, run_kv, Dist, KvCfg, KvResult, Mode, TenantProfile};

@@ -28,6 +28,7 @@ const VALUED: &[&str] = &[
     "--tol", "--label", "--revive-rank-at", "--retry-budget",
     "--backoff-base-us", "--kill-at-iter", "--kill-worker",
     "--revive-at-iter", "--topology", "--link-model", "--bg-traffic",
+    "--tenants", "--evict", "--tenant-mix", "--tenant-phase",
 ];
 
 impl Args {
@@ -204,6 +205,18 @@ mod tests {
         assert_eq!(a.get("--topology"), Some("fattree:pod=8,oversub=4"));
         assert_eq!(a.get("--link-model"), Some("shared"));
         assert_eq!(a.f64_or("--bg-traffic", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn tenant_flags_take_values() {
+        let a = parse(&[
+            "bench-kv", "--tenants", "4", "--evict", "second-chance",
+            "--tenant-mix", "flood,hotread", "--tenant-phase", "8",
+        ]);
+        assert_eq!(a.u64_or("--tenants", 1).unwrap(), 4);
+        assert_eq!(a.get("--evict"), Some("second-chance"));
+        assert_eq!(a.get("--tenant-mix"), Some("flood,hotread"));
+        assert_eq!(a.usize_or("--tenant-phase", 0).unwrap(), 8);
     }
 
     #[test]

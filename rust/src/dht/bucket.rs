@@ -20,11 +20,17 @@
 //! torn-record detection, and makes the two variants' tables
 //! interchangeable on disk and over the wire.
 //!
-//! `meta` flags: bit 0 = occupied, bit 1 = invalid (lock-free, §4.2).
+//! `meta` word (DESIGN.md §14): bit 0 = occupied, bit 1 = invalid
+//! (lock-free, §4.2), bit 2 = referenced (second-chance eviction),
+//! bits 32..40 = tenant id, bits 40..64 = age epoch.  A record written
+//! by tenant 0 under the default drop-on-full policy carries exactly
+//! `OCCUPIED` — bit-identical to every layout before the tenant/age
+//! word existed — and the CRC covers key||value only, so stamping or
+//! clearing meta bits never invalidates a record.
 
 use super::Variant;
 
-/// Meta word flags.
+/// Meta word flags plus the tenant/age lanes (DESIGN.md §14).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Meta(pub u64);
 
@@ -32,6 +38,14 @@ impl Meta {
     pub const EMPTY: Meta = Meta(0);
     pub const OCCUPIED: u64 = 1;
     pub const INVALID: u64 = 2;
+    /// Second-chance "referenced" bit: set on write, spent (cleared)
+    /// by an eviction scan that found every candidate referenced.
+    pub const REF: u64 = 4;
+
+    const TENANT_SHIFT: u32 = 32;
+    const TENANT_BITS: u64 = 0xFF;
+    const AGE_SHIFT: u32 = 40;
+    const AGE_BITS: u64 = 0xFF_FFFF;
 
     pub fn occupied(&self) -> bool {
         self.0 & Self::OCCUPIED != 0
@@ -40,6 +54,71 @@ impl Meta {
     pub fn invalid(&self) -> bool {
         self.0 & Self::INVALID != 0
     }
+
+    /// Whether the record still holds its second chance.
+    pub fn referenced(&self) -> bool {
+        self.0 & Self::REF != 0
+    }
+
+    /// Tenant id lane (8 bits; tenant 0 is the anonymous default).
+    pub fn tenant(&self) -> u32 {
+        ((self.0 >> Self::TENANT_SHIFT) & Self::TENANT_BITS) as u32
+    }
+
+    /// Age epoch lane (24 bits, wrapping; newer writes carry larger
+    /// epochs modulo the wrap, which churn makes irrelevant long
+    /// before 16M write epochs accumulate in one neighborhood).
+    pub fn age(&self) -> u32 {
+        ((self.0 >> Self::AGE_SHIFT) & Self::AGE_BITS) as u32
+    }
+
+    /// Compose an occupied meta word carrying tenant/age lanes.
+    /// `stamp(0, 0, false) == OCCUPIED` — the pre-tenant layout's
+    /// byte-identity anchor.
+    pub fn stamp(tenant: u32, age: u32, referenced: bool) -> u64 {
+        Self::OCCUPIED
+            | ((tenant as u64 & Self::TENANT_BITS) << Self::TENANT_SHIFT)
+            | ((age as u64 & Self::AGE_BITS) << Self::AGE_SHIFT)
+            | if referenced { Self::REF } else { 0 }
+    }
+
+    /// The same meta word with its second chance spent.
+    pub fn without_ref(&self) -> u64 {
+        self.0 & !Self::REF
+    }
+}
+
+/// Pick the bucket a full-candidate-set write victimizes under
+/// second-chance eviction (DESIGN.md §14), given the meta words of all
+/// probed candidates (every one `Other` for the key being written).
+///
+/// Deterministic single pass, no allocation: prefer the stalest
+/// (minimum age) candidate whose REF bit is already clear — ties go to
+/// the lowest probe index.  If every candidate is referenced, the
+/// stalest record overall is victimized and the *other* candidates'
+/// second chances are spent: the returned bitmask (bit `i` = candidate
+/// `i`) names the meta words the writer must clear REF on.
+pub fn select_victim(metas: &[Meta]) -> (usize, u8) {
+    debug_assert!(!metas.is_empty() && metas.len() <= 8);
+    let mut best: Option<usize> = None;
+    for (i, m) in metas.iter().enumerate() {
+        if !m.referenced()
+            && best.map_or(true, |b| m.age() < metas[b].age())
+        {
+            best = Some(i);
+        }
+    }
+    if let Some(i) = best {
+        return (i, 0);
+    }
+    let mut v = 0usize;
+    for (i, m) in metas.iter().enumerate().skip(1) {
+        if m.age() < metas[v].age() {
+            v = i;
+        }
+    }
+    let clear = (((1u16 << metas.len()) - 1) as u8) & !(1u8 << v);
+    (v, clear)
 }
 
 /// Byte offsets of bucket fields for one (variant, key, value) geometry.
@@ -162,15 +241,46 @@ impl BucketLayout {
     /// [`Self::fill_crc_batch`] pass.  For the other variants this IS
     /// the complete record.
     pub fn encode_into_nocrc(&self, key: &[u8], value: &[u8], buf: &mut Vec<u8>) {
+        self.encode_into_nocrc_with(key, value, Meta::OCCUPIED, buf);
+    }
+
+    /// [`Self::encode_into_nocrc`] with an explicit meta word — the
+    /// tenant/age stamping path (DESIGN.md §14).  `meta` must have
+    /// OCCUPIED set; with `meta == Meta::OCCUPIED` this is the plain
+    /// encode, byte for byte.  The CRC covers key||value only, so the
+    /// meta word never forces a checksum recompute.
+    pub fn encode_into_nocrc_with(
+        &self,
+        key: &[u8],
+        value: &[u8],
+        meta: u64,
+        buf: &mut Vec<u8>,
+    ) {
         assert_eq!(key.len(), self.key_len);
         assert_eq!(value.len(), self.val_len);
+        debug_assert!(Meta(meta).occupied());
         buf.clear();
         buf.resize(self.size() - self.meta_off(), 0);
-        buf[..8].copy_from_slice(&Meta::OCCUPIED.to_le_bytes());
+        buf[..8].copy_from_slice(&meta.to_le_bytes());
         let k0 = self.key_off() - self.meta_off();
         buf[k0..k0 + key.len()].copy_from_slice(key);
         let v0 = self.val_off() - self.meta_off();
         buf[v0..v0 + value.len()].copy_from_slice(value);
+    }
+
+    /// [`Self::encode_into`] with an explicit meta word (CRC filled
+    /// where the layout carries one).
+    pub fn encode_into_with(
+        &self,
+        key: &[u8],
+        value: &[u8],
+        meta: u64,
+        buf: &mut Vec<u8>,
+    ) {
+        self.encode_into_nocrc_with(key, value, meta, buf);
+        if self.variant.has_crc() {
+            self.fill_crc(buf);
+        }
     }
 
     /// Recompute and store the CRC word of an encoded record (lock-free).
@@ -493,6 +603,83 @@ mod tests {
         assert!(!Meta::EMPTY.occupied());
         assert!(Meta(Meta::OCCUPIED).occupied());
         assert!(Meta(Meta::OCCUPIED | Meta::INVALID).invalid());
+    }
+
+    #[test]
+    fn meta_tenant_age_ref_lanes_roundtrip() {
+        // the byte-identity anchor: tenant 0 / age 0 / unreferenced is
+        // exactly the pre-tenant OCCUPIED word
+        assert_eq!(Meta::stamp(0, 0, false), Meta::OCCUPIED);
+        let m = Meta(Meta::stamp(7, 0x12_3456, true));
+        assert!(m.occupied());
+        assert!(!m.invalid());
+        assert!(m.referenced());
+        assert_eq!(m.tenant(), 7);
+        assert_eq!(m.age(), 0x12_3456);
+        assert_eq!(Meta(m.without_ref()).tenant(), 7);
+        assert_eq!(Meta(m.without_ref()).age(), 0x12_3456);
+        assert!(!Meta(m.without_ref()).referenced());
+        // lanes saturate at their widths instead of bleeding
+        let wide = Meta(Meta::stamp(0x1FF, 0x1FF_FFFF, false));
+        assert_eq!(wide.tenant(), 0xFF);
+        assert_eq!(wide.age(), 0xFF_FFFF);
+        assert!(wide.occupied());
+    }
+
+    #[test]
+    fn stamped_meta_is_invisible_to_probe_and_crc() {
+        for v in Variant::ALL {
+            let l = BucketLayout::new(v, K, V);
+            let key = vec![0x11; K];
+            let val = vec![0x22; V];
+            let mut plain = Vec::new();
+            l.encode_into(&key, &val, &mut plain);
+            let mut stamped = Vec::new();
+            l.encode_into_with(&key, &val, Meta::stamp(3, 99, true), &mut stamped);
+            // identical except the meta word: high meta bits are
+            // invisible to classify_probe, value decode, and the CRC
+            assert_eq!(&plain[8..], &stamped[8..]);
+            assert_eq!(
+                l.classify_probe(&stamped[..l.probe_len()], &key),
+                ProbeHit::Match
+            );
+            assert_eq!(l.val_of(&stamped), &val[..]);
+            if l.has_crc() {
+                assert!(l.crc_ok(&stamped));
+            }
+            assert_eq!(l.meta_of(&stamped).tenant(), 3);
+            assert_eq!(l.meta_of(&stamped).age(), 99);
+            // and the default-meta path stays byte-identical to encode_into
+            let mut dflt = Vec::new();
+            l.encode_into_with(&key, &val, Meta::OCCUPIED, &mut dflt);
+            assert_eq!(dflt, plain);
+        }
+    }
+
+    #[test]
+    fn select_victim_prefers_stalest_unreferenced() {
+        let m = |age, r| Meta(Meta::stamp(1, age, r));
+        // one unreferenced candidate: it is the victim, nothing cleared
+        let (v, clear) = select_victim(&[m(9, true), m(4, false), m(2, true)]);
+        assert_eq!((v, clear), (1, 0));
+        // several unreferenced: the stalest wins
+        let (v, _) = select_victim(&[m(5, false), m(1, false), m(3, false)]);
+        assert_eq!(v, 1);
+        // age tie goes to the lowest probe index (determinism)
+        let (v, _) = select_victim(&[m(2, false), m(2, false)]);
+        assert_eq!(v, 0);
+    }
+
+    #[test]
+    fn select_victim_all_referenced_spends_second_chances() {
+        let m = |age| Meta(Meta::stamp(0, age, true));
+        let metas = [m(7), m(3), m(5), m(9)];
+        let (v, clear) = select_victim(&metas);
+        assert_eq!(v, 1, "stalest overall is victimized");
+        // every *other* candidate's REF bit is spent
+        assert_eq!(clear, 0b1101);
+        // single candidate: victimized, nothing left to clear
+        assert_eq!(select_victim(&[m(4)]), (0, 0));
     }
 
     #[test]

@@ -14,8 +14,8 @@
 
 use crate::rma::{Req, Resp, SmStep};
 
-use super::bucket::{BucketLayout, ProbeHit};
-use super::{DhtConfig, DhtOutcome, OpOut};
+use super::bucket::{select_victim, BucketLayout, Meta, ProbeHit};
+use super::{DhtConfig, DhtOutcome, EvictPolicy, OpOut};
 
 /// Probe plan shared by the protocol SMs of all variants: target rank,
 /// candidate indices, layout, and request builders.  `base` locates the
@@ -230,6 +230,7 @@ impl crate::rma::OpSm for ReadSm {
                 lock_retries: 0,
                 mailbox_ops: 0,
                 mailbox_bytes: 0,
+                victim_tenant: None,
             }),
         }
     }
@@ -241,6 +242,9 @@ enum WState {
     Init,
     AwaitLock,
     AwaitProbe(usize),
+    /// Second-chance only: a REF-clearing meta put outstanding
+    /// (DESIGN.md §14); more may follow before the victim put.
+    AwaitClear,
     AwaitPut,
     AwaitUnlock,
 }
@@ -251,12 +255,24 @@ enum WState {
 /// bytes embedded in the encoded record, so a write op owns exactly one
 /// buffer, which the final put consumes (`mem::take`) instead of
 /// cloning.
+///
+/// Under [`EvictPolicy::SecondChance`] the exclusive window lock makes
+/// this the simplest variant: every candidate's meta word is cached
+/// during the probe walk, and the victim selection plus any REF-bit
+/// clears happen under the same lock the probes ran under.
 pub struct WriteSm {
     plan: Plan,
     record: Vec<u8>,
     state: WState,
     probes: u32,
     pending: Option<DhtOutcome>,
+    evict: EvictPolicy,
+    /// Meta words of probed candidates (second-chance victim input).
+    metas: [Meta; 8],
+    /// Candidates whose REF bit this write still has to spend.
+    clear_mask: u8,
+    victim: usize,
+    victim_tenant: Option<u32>,
 }
 
 impl WriteSm {
@@ -293,6 +309,26 @@ impl WriteSm {
             state: WState::Init,
             probes: 0,
             pending: None,
+            evict: cfg.evict,
+            metas: [Meta::EMPTY; 8],
+            clear_mask: 0,
+            victim: 0,
+            victim_tenant: None,
+        }
+    }
+
+    /// Issue the next pending REF-bit clear, or — when none remain —
+    /// the victim record put (second-chance, DESIGN.md §14).
+    fn clear_or_put(&mut self) -> SmStep<OpOut> {
+        if self.clear_mask != 0 {
+            let i = self.clear_mask.trailing_zeros() as usize;
+            self.clear_mask &= self.clear_mask - 1;
+            self.state = WState::AwaitClear;
+            SmStep::Issue(self.plan.put_meta(i, self.metas[i].without_ref()))
+        } else {
+            self.state = WState::AwaitPut;
+            let record = std::mem::take(&mut self.record);
+            SmStep::Issue(self.plan.put_record(self.victim, record))
         }
     }
 }
@@ -315,18 +351,35 @@ impl crate::rma::OpSm for WriteSm {
             }
             WState::AwaitProbe(i) => {
                 let data = data_of(resp);
-                let l = &self.plan.layout;
+                let l = self.plan.layout;
+                self.metas[i] = l.meta_of(&data);
                 let outcome = match l.classify_probe(&data, l.key_of(&self.record)) {
                     ProbeHit::Empty => Some(DhtOutcome::WriteFresh),
                     ProbeHit::Match => Some(DhtOutcome::WriteUpdate),
                     // all candidates taken by other keys: overwrite the
-                    // last index (cache semantics, §3.1)
+                    // last index (cache semantics, §3.1) or run the
+                    // second-chance victim scan (DESIGN.md §14)
                     _ if i + 1 == self.plan.n() => Some(DhtOutcome::WriteEvict),
                     _ => None,
                 };
                 match outcome {
+                    Some(DhtOutcome::WriteEvict)
+                        if self.evict == EvictPolicy::SecondChance =>
+                    {
+                        let n = self.plan.n();
+                        let (v, clear) = select_victim(&self.metas[..n]);
+                        self.victim = v;
+                        self.victim_tenant = Some(self.metas[v].tenant());
+                        self.clear_mask = clear;
+                        self.pending = Some(DhtOutcome::WriteEvict);
+                        // the window lock is still held: clears and the
+                        // victim put run under the same exclusion the
+                        // probes did
+                        self.clear_or_put()
+                    }
                     Some(out) => {
                         self.pending = Some(out);
+                        self.victim = i;
                         self.state = WState::AwaitPut;
                         // the put consumes the record — a write puts
                         // exactly once, so no clone is needed
@@ -339,6 +392,10 @@ impl crate::rma::OpSm for WriteSm {
                         SmStep::Issue(self.plan.get_probe(i + 1))
                     }
                 }
+            }
+            WState::AwaitClear => {
+                debug_assert!(matches!(resp, Resp::Ack));
+                self.clear_or_put()
             }
             WState::AwaitPut => {
                 debug_assert!(matches!(resp, Resp::Ack));
@@ -355,6 +412,7 @@ impl crate::rma::OpSm for WriteSm {
                 lock_retries: 0,
                 mailbox_ops: 0,
                 mailbox_bytes: 0,
+                victim_tenant: self.victim_tenant.take(),
             }),
         }
     }

@@ -33,9 +33,9 @@
 
 use crate::rma::{Req, Resp, SmStep};
 
-use super::bucket::{BucketLayout, Meta, ProbeHit};
+use super::bucket::{select_victim, BucketLayout, Meta, ProbeHit};
 use super::coarse::Plan;
-use super::{DhtConfig, DhtOutcome, OpOut};
+use super::{DhtConfig, DhtOutcome, EvictPolicy, OpOut};
 
 /// Modelled fixed per-message mailbox overhead (op tag, slot count,
 /// lengths), added to both request and response payloads.
@@ -58,7 +58,9 @@ pub enum MailboxOp {
     },
     /// Store the pre-encoded `record` (CRC word filled) into the first
     /// claimable slot, with the paper's cache semantics (§3.1): fresh on
-    /// empty/invalid, update on match, evict at the last candidate.
+    /// empty/invalid, update on match; a full candidate set evicts the
+    /// last slot ([`EvictPolicy::Drop`]) or runs the owner-serial
+    /// second-chance victim scan (DESIGN.md §14).
     Put {
         /// Bucket geometry of the table the slots point into.
         layout: BucketLayout,
@@ -66,6 +68,10 @@ pub enum MailboxOp {
         slots: Vec<u64>,
         /// Complete record bytes starting at the meta word.
         record: Vec<u8>,
+        /// Full-candidate-set behavior.  Rides in the fixed mailbox
+        /// header ([`MAILBOX_HEADER_BYTES`]), so `req_bytes` is
+        /// unchanged.
+        evict: EvictPolicy,
     },
 }
 
@@ -100,6 +106,9 @@ pub struct MailboxReply {
     pub outcome: DhtOutcome,
     /// Buckets the owner probed while serving.
     pub probes: u32,
+    /// On a second-chance `WriteEvict`: the tenant stamped on the
+    /// victimized record (DESIGN.md §14).
+    pub victim_tenant: Option<u32>,
 }
 
 /// The shard memory [`serve_mailbox`] executes against — implemented by
@@ -130,6 +139,7 @@ pub fn serve_mailbox(
                         return MailboxReply {
                             outcome: DhtOutcome::ReadMiss,
                             probes: p as u32 + 1,
+                            victim_tenant: None,
                         }
                     }
                     // corrupt/foreign buckets: keep probing (the same
@@ -142,6 +152,7 @@ pub fn serve_mailbox(
                                     layout.val_of(&rec).to_vec(),
                                 ),
                                 probes: p as u32 + 1,
+                                victim_tenant: None,
                             };
                         }
                         // Serialized ops cannot race each other, so this
@@ -155,6 +166,7 @@ pub fn serve_mailbox(
                         return MailboxReply {
                             outcome: DhtOutcome::ReadCorrupt,
                             probes: p as u32 + 1,
+                            victim_tenant: None,
                         };
                     }
                 }
@@ -162,13 +174,20 @@ pub fn serve_mailbox(
             MailboxReply {
                 outcome: DhtOutcome::ReadMiss,
                 probes: slots.len() as u32,
+                victim_tenant: None,
             }
         }
-        MailboxOp::Put { layout, slots, record } => {
+        MailboxOp::Put { layout, slots, record, evict } => {
             let mut probe = vec![0u8; layout.probe_len()];
             let key = layout.key_of(record);
+            // candidate metas cached for the second-chance scan (plans
+            // derive at most 8 candidates, paper Fig. 2)
+            let mut metas = [Meta::EMPTY; 8];
             for (p, &slot) in slots.iter().enumerate() {
                 mem.read(slot, &mut probe);
+                if p < metas.len() {
+                    metas[p] = layout.meta_of(&probe);
+                }
                 let outcome = match layout.classify_probe(&probe, key) {
                     // invalid buckets may be reclaimed, like §4.2
                     ProbeHit::Empty | ProbeHit::Invalid => {
@@ -181,8 +200,38 @@ pub fn serve_mailbox(
                     ProbeHit::Other => None,
                 };
                 if let Some(outcome) = outcome {
+                    if outcome == DhtOutcome::WriteEvict
+                        && *evict == EvictPolicy::SecondChance
+                    {
+                        // owner-serial second-chance (DESIGN.md §14):
+                        // no CAS needed — per-owner serialization is
+                        // the exclusion, so the scan, the REF-bit
+                        // clears, and the victim write are atomic with
+                        // respect to every other mailbox op
+                        let n = slots.len().min(metas.len());
+                        let (v, clear) = select_victim(&metas[..n]);
+                        let mut bits = clear;
+                        while bits != 0 {
+                            let j = bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            mem.write(
+                                slots[j],
+                                &metas[j].without_ref().to_le_bytes(),
+                            );
+                        }
+                        mem.write(slots[v], record);
+                        return MailboxReply {
+                            outcome,
+                            probes: p as u32 + 1,
+                            victim_tenant: Some(metas[v].tenant()),
+                        };
+                    }
                     mem.write(slot, record);
-                    return MailboxReply { outcome, probes: p as u32 + 1 };
+                    return MailboxReply {
+                        outcome,
+                        probes: p as u32 + 1,
+                        victim_tenant: None,
+                    };
                 }
             }
             unreachable!("the last candidate always claims (cache semantics)")
@@ -201,6 +250,7 @@ pub fn degraded_reply(op: &MailboxOp) -> MailboxReply {
             MailboxOp::Put { .. } => DhtOutcome::WriteFresh,
         },
         probes: 0,
+        victim_tenant: None,
     }
 }
 
@@ -269,6 +319,7 @@ impl crate::rma::OpSm for ReadSm {
                     lock_retries: 0,
                     mailbox_ops: 1,
                     mailbox_bytes: self.mailbox_bytes,
+                    victim_tenant: None,
                 })
             }
         }
@@ -318,6 +369,7 @@ impl WriteSm {
             layout: cfg.layout,
             slots: plan_slots(&plan),
             record,
+            evict: cfg.evict,
         };
         let (req_bytes, resp_bytes) = (op.req_bytes(), op.resp_bytes());
         Self {
@@ -346,6 +398,7 @@ impl crate::rma::OpSm for WriteSm {
                     lock_retries: 0,
                     mailbox_ops: 1,
                     mailbox_bytes: self.mailbox_bytes,
+                    victim_tenant: reply.victim_tenant,
                 })
             }
         }
@@ -387,6 +440,7 @@ mod tests {
             layout: l,
             slots: slots.clone(),
             record: rec,
+            evict: EvictPolicy::Drop,
         };
         let r = serve_mailbox(&put, &mut mem);
         assert_eq!(r.outcome, DhtOutcome::WriteFresh);
@@ -420,6 +474,7 @@ mod tests {
             layout: l,
             slots: vec![0],
             record: l.encode_record(&key, &[5u8; 8]),
+            evict: EvictPolicy::Drop,
         };
         assert_eq!(
             serve_mailbox(&put, &mut mem).outcome,
@@ -437,6 +492,7 @@ mod tests {
                 layout: l,
                 slots: slots.clone(),
                 record: l.encode_record(&[i; 8], &[i; 8]),
+                evict: EvictPolicy::Drop,
             };
             assert_eq!(
                 serve_mailbox(&put, &mut mem).outcome,
@@ -447,10 +503,51 @@ mod tests {
             layout: l,
             slots: slots.clone(),
             record: l.encode_record(&[9u8; 8], &[9u8; 8]),
+            evict: EvictPolicy::Drop,
         };
         let r = serve_mailbox(&put, &mut mem);
         assert_eq!(r.outcome, DhtOutcome::WriteEvict);
         assert_eq!(r.probes, 2);
+    }
+
+    #[test]
+    fn serve_put_second_chance_victimizes_stalest_and_clears_ref() {
+        let l = BucketLayout::new(Variant::Delegated, 8, 8);
+        let mut mem = VecMem(vec![0u8; 2 * l.size()]);
+        let slots = vec![0u64, l.size() as u64];
+        // both candidates referenced: tenant 1 @ age 5, tenant 2 @ age 3
+        let mut a = l.encode_record(&[1u8; 8], &[1u8; 8]);
+        a[..8].copy_from_slice(&Meta::stamp(1, 5, true).to_le_bytes());
+        mem.write(slots[0], &a);
+        let mut b = l.encode_record(&[2u8; 8], &[2u8; 8]);
+        b[..8].copy_from_slice(&Meta::stamp(2, 3, true).to_le_bytes());
+        mem.write(slots[1], &b);
+        let put = MailboxOp::Put {
+            layout: l,
+            slots: slots.clone(),
+            record: l.encode_record(&[9u8; 8], &[9u8; 8]),
+            evict: EvictPolicy::SecondChance,
+        };
+        let r = serve_mailbox(&put, &mut mem);
+        assert_eq!(r.outcome, DhtOutcome::WriteEvict);
+        // stalest (min-age) candidate loses its slot; its tenant is
+        // reported so the front-end can bill the eviction
+        assert_eq!(r.victim_tenant, Some(2));
+        let get = MailboxOp::Get {
+            layout: l,
+            slots: slots.clone(),
+            key: vec![9u8; 8],
+        };
+        assert_eq!(
+            serve_mailbox(&get, &mut mem).outcome,
+            DhtOutcome::ReadHit(vec![9u8; 8])
+        );
+        // the survivor spent its second chance: REF cleared, lanes intact
+        let mut w = [0u8; 8];
+        mem.read(slots[0], &mut w);
+        let m = Meta(u64::from_le_bytes(w));
+        assert!(!m.referenced());
+        assert_eq!((m.tenant(), m.age()), (1, 5));
     }
 
     #[test]
@@ -462,6 +559,7 @@ mod tests {
             layout: l,
             slots: vec![0],
             record: l.encode_record(&[0; 8], &[0; 8]),
+            evict: EvictPolicy::Drop,
         };
         assert_eq!(degraded_reply(&put).outcome, DhtOutcome::WriteFresh);
     }

@@ -20,9 +20,9 @@
 
 use crate::rma::{Req, Resp, SmStep, EXCLUSIVE_LOCK};
 
-use super::bucket::ProbeHit;
+use super::bucket::{select_victim, Meta, ProbeHit};
 use super::coarse::Plan;
-use super::{DhtConfig, DhtOutcome, OpOut};
+use super::{DhtConfig, DhtOutcome, EvictPolicy, OpOut};
 
 fn word_of(resp: Resp) -> u64 {
     match resp {
@@ -167,6 +167,7 @@ impl crate::rma::OpSm for ReadSm {
                 lock_retries: self.lock_retries,
                 mailbox_ops: 0,
                 mailbox_bytes: 0,
+                victim_tenant: None,
             }),
         }
     }
@@ -182,6 +183,17 @@ enum WState {
     AwaitProbe(usize),
     /// Releasing a probed-but-unsuitable bucket, will try `i+1`.
     AwaitMoveOn(usize),
+    /// Second-chance: releasing the last candidate's lock before
+    /// re-locking the selected victim (DESIGN.md §14).
+    AwaitVictimRelease,
+    /// Second-chance: a single-shot REF-clear CAS on a non-victim
+    /// candidate's meta word outstanding (lost races are skipped —
+    /// the racing writer's full-record put wins).
+    AwaitRefCas,
+    /// Second-chance: CAS(0 -> EXCL) on the victim's lock outstanding.
+    AwaitVictimCas,
+    /// Second-chance: victim re-probe under its lock outstanding.
+    AwaitVictimProbe,
     /// Record Put outstanding.
     AwaitPut(usize),
     /// Final release outstanding; outcome decided.
@@ -192,6 +204,14 @@ enum WState {
 ///
 /// As in the coarse variant, the key lives only inside the encoded
 /// record and the final put consumes that one buffer (`mem::take`).
+///
+/// Under [`EvictPolicy::SecondChance`] the walk caches every probed
+/// candidate's meta word.  When all candidates are foreign and the
+/// selected victim is not the (still locked) last candidate, the write
+/// releases that lock, spends any REF bits with single-shot meta CASes,
+/// takes the victim's lock, and re-probes it before the put — a
+/// concurrent writer may have changed the bucket since the advisory
+/// scan, so the final classification is made under the victim's lock.
 pub struct WriteSm {
     plan: Plan,
     record: Vec<u8>,
@@ -199,6 +219,15 @@ pub struct WriteSm {
     probes: u32,
     lock_retries: u32,
     pending: Option<DhtOutcome>,
+    evict: EvictPolicy,
+    /// Meta words cached during the probe walk (advisory: each was read
+    /// under its own bucket's lock, since released).
+    metas: [Meta; 8],
+    clear_mask: u8,
+    victim: usize,
+    /// Whether the victim's lock still has to be (re)acquired.
+    relock: bool,
+    victim_tenant: Option<u32>,
 }
 
 impl WriteSm {
@@ -235,6 +264,12 @@ impl WriteSm {
             probes: 0,
             lock_retries: 0,
             pending: None,
+            evict: cfg.evict,
+            metas: [Meta::EMPTY; 8],
+            clear_mask: 0,
+            victim: 0,
+            relock: false,
+            victim_tenant: None,
         }
     }
 
@@ -246,6 +281,39 @@ impl WriteSm {
             expected: 0,
             desired: EXCLUSIVE_LOCK,
         })
+    }
+
+    fn put_victim(&mut self) -> SmStep<OpOut> {
+        self.state = WState::AwaitPut(self.victim);
+        let record = std::mem::take(&mut self.record);
+        SmStep::Issue(self.plan.put_record(self.victim, record))
+    }
+
+    /// Second-chance sequencing: spend pending REF bits one CAS at a
+    /// time, then either re-lock the victim or (lock already held) put.
+    fn clear_step(&mut self) -> SmStep<OpOut> {
+        if self.clear_mask != 0 {
+            let j = self.clear_mask.trailing_zeros() as usize;
+            self.clear_mask &= self.clear_mask - 1;
+            self.state = WState::AwaitRefCas;
+            SmStep::Issue(Req::Cas {
+                target: self.plan.target,
+                offset: self.plan.rec_off(j),
+                expected: self.metas[j].0,
+                desired: self.metas[j].without_ref(),
+            })
+        } else if self.relock {
+            self.state = WState::AwaitVictimCas;
+            SmStep::Issue(Req::Cas {
+                target: self.plan.target,
+                offset: self.plan.lock_off(self.victim),
+                expected: 0,
+                desired: EXCLUSIVE_LOCK,
+            })
+        } else {
+            self.pending = Some(DhtOutcome::WriteEvict);
+            self.put_victim()
+        }
     }
 }
 
@@ -269,7 +337,8 @@ impl crate::rma::OpSm for WriteSm {
             }
             WState::AwaitProbe(i) => {
                 let data = data_of(resp);
-                let l = &self.plan.layout;
+                let l = self.plan.layout;
+                self.metas[i] = l.meta_of(&data);
                 let outcome = match l.classify_probe(&data, l.key_of(&self.record)) {
                     ProbeHit::Empty => Some(DhtOutcome::WriteFresh),
                     ProbeHit::Match => Some(DhtOutcome::WriteUpdate),
@@ -277,6 +346,31 @@ impl crate::rma::OpSm for WriteSm {
                     _ => None,
                 };
                 match outcome {
+                    Some(DhtOutcome::WriteEvict)
+                        if self.evict == EvictPolicy::SecondChance =>
+                    {
+                        let n = self.plan.n();
+                        let (v, clear) = select_victim(&self.metas[..n]);
+                        self.victim = v;
+                        self.victim_tenant = Some(self.metas[v].tenant());
+                        self.clear_mask = clear;
+                        if v == i {
+                            // the victim is the bucket whose lock we
+                            // already hold: spend REF bits, then put
+                            self.relock = false;
+                            self.clear_step()
+                        } else {
+                            // hand back the last candidate's lock, then
+                            // clears -> victim lock -> re-probe -> put
+                            self.relock = true;
+                            self.state = WState::AwaitVictimRelease;
+                            SmStep::Issue(Req::Fao {
+                                target: self.plan.target,
+                                offset: self.plan.lock_off(i),
+                                add: -(EXCLUSIVE_LOCK as i64),
+                            })
+                        }
+                    }
                     Some(out) => {
                         self.pending = Some(out);
                         self.state = WState::AwaitPut(i);
@@ -300,6 +394,51 @@ impl crate::rma::OpSm for WriteSm {
                 self.probes += 1;
                 self.cas(i + 1)
             }
+            WState::AwaitVictimRelease | WState::AwaitRefCas => {
+                // REF-clear CAS results are deliberately ignored: a lost
+                // race means a concurrent writer refreshed that bucket,
+                // which supersedes the clear
+                self.clear_step()
+            }
+            WState::AwaitVictimCas => {
+                let prev = word_of(resp);
+                if prev == 0 {
+                    self.probes += 1;
+                    self.state = WState::AwaitVictimProbe;
+                    SmStep::Issue(self.plan.get_probe(self.victim))
+                } else {
+                    self.lock_retries += 1;
+                    self.state = WState::AwaitVictimCas;
+                    SmStep::Issue(Req::Cas {
+                        target: self.plan.target,
+                        offset: self.plan.lock_off(self.victim),
+                        expected: 0,
+                        desired: EXCLUSIVE_LOCK,
+                    })
+                }
+            }
+            WState::AwaitVictimProbe => {
+                // final classification under the victim's lock: the
+                // bucket may have changed since the advisory scan
+                let data = data_of(resp);
+                let l = self.plan.layout;
+                let out = match l.classify_probe(&data, l.key_of(&self.record)) {
+                    ProbeHit::Empty => {
+                        self.victim_tenant = None;
+                        DhtOutcome::WriteFresh
+                    }
+                    ProbeHit::Match => {
+                        self.victim_tenant = None;
+                        DhtOutcome::WriteUpdate
+                    }
+                    _ => {
+                        self.victim_tenant = Some(l.meta_of(&data).tenant());
+                        DhtOutcome::WriteEvict
+                    }
+                };
+                self.pending = Some(out);
+                self.put_victim()
+            }
             WState::AwaitPut(i) => {
                 debug_assert!(matches!(resp, Resp::Ack));
                 self.state = WState::AwaitRelease;
@@ -316,6 +455,7 @@ impl crate::rma::OpSm for WriteSm {
                 lock_retries: self.lock_retries,
                 mailbox_ops: 0,
                 mailbox_bytes: 0,
+                victim_tenant: self.victim_tenant.take(),
             }),
         }
     }

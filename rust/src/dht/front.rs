@@ -15,6 +15,9 @@
 //! DES backend).  No guard code runs on drop — handles hold no resources
 //! beyond that shared ownership.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::net::Network;
@@ -24,11 +27,12 @@ use crate::rma::sim::SimRma;
 use crate::rma::{Req, Resp, RmaBackend};
 use crate::sim::Time;
 
+use super::bucket::Meta;
 use super::l1::L1Cache;
 use super::migrate::{self, DualReadSm, MigrateSm, OneReq};
 use super::repair::RepairSm;
 use super::replica::ReplReadSm;
-use super::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
+use super::{DhtConfig, DhtOutcome, DhtSm, DhtStats, EvictPolicy, Variant};
 
 /// Default pipeline depth for the batch calls: enough to hide a few µs of
 /// network latency behind ~hundreds-of-ns per-op target occupancy without
@@ -76,6 +80,15 @@ pub struct Dht<B: RmaBackend = ShmRma> {
     /// Backend retry counters already folded into `stats` (delta base,
     /// so `take_stats` never double-counts a retry across pulls).
     retries_pulled: (u64, u64),
+    /// Cluster-shared logical write clock feeding the age lane of
+    /// stamped meta words (DESIGN.md §14).  Shared by every handle of a
+    /// cluster (including [`Self::fork`]/[`Self::tenant`] views), so
+    /// "older age = written longer ago" holds across ranks and tenants.
+    /// Only advanced under [`EvictPolicy::SecondChance`] — the default
+    /// drop policy never touches it.  The 24-bit age lane wraps at ~16M
+    /// stamped writes; second-chance only needs older-vs-newer to hold
+    /// on average, so a wrap degrades victim choice, never correctness.
+    age: Arc<AtomicU64>,
 }
 
 impl Dht<ShmRma> {
@@ -90,6 +103,7 @@ impl Dht<ShmRma> {
     ) -> Vec<Dht> {
         let cfg = DhtConfig::new(variant, nranks, win_bytes, key_len, val_len);
         let cluster = ShmCluster::new(nranks, win_bytes);
+        let age = Arc::new(AtomicU64::new(0));
         (0..nranks)
             .map(|r| Dht {
                 cfg: cfg.clone(),
@@ -106,6 +120,7 @@ impl Dht<ShmRma> {
                 repair_cursor: u64::MAX,
                 repair_quantum: DEFAULT_REPAIR_QUANTUM,
                 retries_pulled: (0, 0),
+                age: age.clone(),
             })
             .collect()
     }
@@ -150,6 +165,7 @@ impl Dht<SimRma> {
         pipeline_lanes: u32,
     ) -> Vec<Dht<SimRma>> {
         let cfg = DhtConfig::new(variant, nranks, win_bytes, key_len, val_len);
+        let age = Arc::new(AtomicU64::new(0));
         SimRma::create(net, nranks, win_bytes, pipeline_lanes.max(1))
             .into_iter()
             .map(|rma| Dht {
@@ -167,6 +183,7 @@ impl Dht<SimRma> {
                 repair_cursor: u64::MAX,
                 repair_quantum: DEFAULT_REPAIR_QUANTUM,
                 retries_pulled: (0, 0),
+                age: age.clone(),
             })
             .collect()
     }
@@ -216,10 +233,64 @@ impl<B: RmaBackend> Dht<B> {
             repair_cursor: u64::MAX,
             repair_quantum: self.repair_quantum,
             retries_pulled: self.rma.origin_retries(),
+            age: self.age.clone(),
         };
         // each thread gets its own private cache (same budget, empty)
         h.set_l1_bytes(self.l1_bytes);
         h
+    }
+
+    /// A tenant-scoped view of the same cluster (DESIGN.md §14): shares
+    /// the windows, gets fresh per-tenant [`DhtStats`] and a private L1
+    /// partition (same budget, empty), and stamps every record it writes
+    /// with `id` — so evictions it suffers are billed to it
+    /// (`tenant_evictions_suffered`) wherever the evicting write came
+    /// from.  Tenant 0 is the anonymous default view.
+    ///
+    /// The handle does NOT namespace the keys themselves; callers fold
+    /// the tenant into the key ([`crate::poet::key::fold_tenant`] /
+    /// [`crate::bench::keys::key_for_tenant`]) so the same chemistry row
+    /// from different tenants lands in different buckets.  Splitting the
+    /// two concerns keeps the fold in exactly one place per driver — a
+    /// handle that folded too would un-fold (XOR) already-folded keys.
+    pub fn tenant(&self, id: u32) -> Dht<B> {
+        let mut h = self.fork();
+        h.cfg.tenant = id;
+        if let Some(old) = h.old_cfg.as_mut() {
+            old.tenant = id;
+        }
+        h
+    }
+
+    /// Tenant id this handle writes under (0 = anonymous default).
+    pub fn tenant_id(&self) -> u32 {
+        self.cfg.tenant
+    }
+
+    /// Full-candidate-set write behavior of this handle's writes
+    /// (DESIGN.md §14).  Per-handle state like `set_pipeline`: set the
+    /// same policy on every handle of a cluster — mixed policies are
+    /// safe (drop-policy writers simply never spend second chances) but
+    /// make the fairness accounting hard to reason about.
+    pub fn set_evict(&mut self, policy: EvictPolicy) {
+        self.cfg.evict = policy;
+        if let Some(old) = self.old_cfg.as_mut() {
+            old.evict = policy;
+        }
+    }
+
+    /// Current eviction policy of this handle.
+    pub fn evict(&self) -> EvictPolicy {
+        self.cfg.evict
+    }
+
+    /// The stamped meta word for this handle's next write: tenant lane
+    /// from the handle, age lane from the cluster write clock, REF set
+    /// (a fresh record survives one eviction scan before it becomes a
+    /// candidate — the "second chance").
+    fn next_stamp(&self) -> u64 {
+        let age = self.age.fetch_add(1, Ordering::Relaxed);
+        Meta::stamp(self.cfg.tenant, age as u32, true)
     }
 
     pub fn cfg(&self) -> &DhtConfig {
@@ -864,6 +935,14 @@ impl<B: RmaBackend> Dht<B> {
         assert_eq!(key.len(), self.cfg.layout.key_len());
         assert_eq!(value.len(), self.cfg.layout.val_len());
         self.sync_epoch();
+        if self.cfg.evict == EvictPolicy::SecondChance {
+            // stamped path: tenant/age meta rides the prepared record.
+            // Kept out of the default path so drop-policy traffic stays
+            // byte-identical to the pre-tenant protocol (the oracle's
+            // anchor).
+            let meta = self.next_stamp();
+            return self.write_stamped(key, value, meta);
+        }
         if self.cfg.addressing.replicas() > 1 {
             return self
                 .write_batch(&[key], &[value])
@@ -875,6 +954,62 @@ impl<B: RmaBackend> Dht<B> {
         self.l1_sync();
         self.l1_put(key, value); // write-through
         let sm = DhtSm::write(self.cfg.variant, &self.cfg, key, value);
+        let out = self.rma.exec(sm);
+        self.stats.record(&out);
+        out.outcome
+    }
+
+    /// [`Self::write`] with an explicit stamped meta word — the
+    /// second-chance write path, and the checkpoint-restore replay that
+    /// must carry a captured tenant/age word intact (DESIGN.md §14).
+    /// With k-way replication the stamped record fans out like
+    /// [`Self::write_batch`]'s healthy path; the returned outcome is the
+    /// primary's.
+    pub fn write_stamped(
+        &mut self,
+        key: &[u8],
+        value: &[u8],
+        meta: u64,
+    ) -> DhtOutcome {
+        assert_eq!(key.len(), self.cfg.layout.key_len());
+        assert_eq!(value.len(), self.cfg.layout.val_len());
+        self.sync_epoch();
+        self.migrate_step();
+        self.repair_step();
+        self.l1_sync();
+        self.l1_put(key, value); // write-through
+        let hash = self.cfg.addressing.hash(key);
+        let mut rec = Vec::new();
+        self.cfg.layout.encode_into_with(key, value, meta, &mut rec);
+        let k = self.cfg.addressing.replicas();
+        if k > 1 {
+            let mut sms: Vec<DhtSm> = Vec::with_capacity(k as usize);
+            for r in 0..k - 1 {
+                sms.push(DhtSm::write_prepared_at(
+                    self.cfg.variant,
+                    &self.cfg,
+                    hash,
+                    rec.clone(),
+                    r,
+                ));
+            }
+            sms.push(DhtSm::write_prepared_at(
+                self.cfg.variant,
+                &self.cfg,
+                hash,
+                rec,
+                k - 1,
+            ));
+            let depth = self.pipeline;
+            let mut outs = self.rma.exec_batch(sms, depth).into_iter();
+            let first = outs.next().expect("primary outcome");
+            self.stats.record(&first);
+            for out in outs {
+                self.stats.record_replica_write(&out);
+            }
+            return first.outcome;
+        }
+        let sm = DhtSm::write_prepared(self.cfg.variant, &self.cfg, hash, rec);
         let out = self.rma.exec(sm);
         self.stats.record(&out);
         out.outcome
@@ -1042,6 +1177,7 @@ impl<B: RmaBackend> Dht<B> {
         // instead of a hash + alloc + per-record-detected CRC inside
         // every state machine.
         let layout = self.cfg.layout;
+        let stamped = self.cfg.evict == EvictPolicy::SecondChance;
         let mut hashes: Vec<u64> = Vec::with_capacity(keys.len());
         let mut records: Vec<Vec<u8>> = Vec::with_capacity(keys.len());
         for (key, val) in keys.iter().zip(values.iter()) {
@@ -1050,7 +1186,12 @@ impl<B: RmaBackend> Dht<B> {
             assert_eq!(val.len(), layout.val_len());
             hashes.push(self.cfg.addressing.hash(key));
             let mut rec = Vec::new();
-            layout.encode_into_nocrc(key, val, &mut rec);
+            // tenant/age stamping only under second-chance: the default
+            // meta word stays Meta::OCCUPIED, byte for byte (and the CRC
+            // never covers the meta word, so stamping is checksum-free)
+            let meta =
+                if stamped { self.next_stamp() } else { Meta::OCCUPIED };
+            layout.encode_into_nocrc_with(key, val, meta, &mut rec);
             records.push(rec);
         }
         layout.fill_crc_batch(&mut records);
@@ -1173,6 +1314,33 @@ impl<B: RmaBackend> Dht<B> {
         &self.stats
     }
 
+    /// Occupied live buckets per tenant across the whole cluster's
+    /// current table (index = tenant id; the occupancy-share side of the
+    /// fairness summary, DESIGN.md §14).  A diagnostic peek scan like
+    /// checkpoint capture — unmodelled direct loads, no RMA traffic —
+    /// so call it between phases, not on the hot path.  Under the drop
+    /// policy every record carries tenant 0 (the unstamped meta), so the
+    /// result degenerates to `[total_occupied]`.
+    pub fn occupancy_by_tenant(&self) -> Vec<u64> {
+        let l = self.cfg.layout;
+        let mut occ: Vec<u64> = Vec::new();
+        for rank in 0..self.cfg.addressing.nranks() {
+            for b in 0..self.cfg.addressing.buckets() {
+                let off = self.cfg.base + l.bucket_off(b) + l.meta_off() as u64;
+                let m = Meta(self.peek_word(rank, off));
+                if !m.occupied() || m.invalid() {
+                    continue;
+                }
+                let t = m.tenant() as usize;
+                if occ.len() <= t {
+                    occ.resize(t + 1, 0);
+                }
+                occ[t] += 1;
+            }
+        }
+        occ
+    }
+
     /// Record an accepted surrogate hit at ladder `level` introducing
     /// `rel_err` relative deviation — application-level accounting the
     /// handle cannot observe itself (the POET drivers decide acceptance;
@@ -1219,8 +1387,11 @@ impl<B: RmaBackend> Dht<B> {
 //
 // Format v2 additionally records the captured geometry (buckets per rank
 // and rank count), so a restore can *reject* a target too small for the
-// snapshot instead of silently evicting (see `restore_strict`).  v1
-// checkpoints still load; they simply carry no geometry.
+// snapshot instead of silently evicting (see `restore_strict`).  Format
+// v3 appends each record's meta word (tenant/age lanes, DESIGN.md §14)
+// after its value, so a multi-tenant cache restores with its eviction
+// state intact.  v1 and v2 checkpoints still load; their records restore
+// under the unstamped meta (tenant 0, age 0).
 // ---------------------------------------------------------------------------
 
 /// A portable snapshot of a DHT's contents.
@@ -1229,12 +1400,17 @@ pub struct DhtCheckpoint {
     pub variant: Variant,
     pub key_len: usize,
     pub val_len: usize,
-    /// Buckets per rank at capture time (format v2; `None` for v1).
+    /// Buckets per rank at capture time (format v2+; `None` for v1).
     pub buckets_per_rank: Option<u64>,
-    /// Rank count at capture time (format v2; `None` for v1).
+    /// Rank count at capture time (format v2+; `None` for v1).
     pub nranks: Option<u32>,
     /// All live key-value pairs (corrupt/invalid buckets are skipped).
     pub entries: Vec<(Vec<u8>, Vec<u8>)>,
+    /// Meta word of each entry, parallel to `entries` (format v3;
+    /// [`Meta::OCCUPIED`] — tenant 0, age 0 — for v1/v2 images and for
+    /// indices past the end, so hand-built checkpoints may leave it
+    /// empty).
+    pub entry_meta: Vec<u64>,
 }
 
 impl DhtCheckpoint {
@@ -1257,6 +1433,7 @@ impl DhtCheckpoint {
         };
         let l = cur.layout;
         let mut entries = Vec::new();
+        let mut entry_meta = Vec::new();
         let mut seen = std::collections::HashSet::new();
         let rec_len = (l.size() - l.meta_off()) as u32;
         for cfg in std::iter::once(&cur).chain(old.iter()) {
@@ -1277,6 +1454,7 @@ impl DhtCheckpoint {
                         continue; // new-table copy already captured
                     }
                     entries.push((key, l.val_of(&rec).to_vec()));
+                    entry_meta.push(meta.0);
                 }
             }
         }
@@ -1287,13 +1465,22 @@ impl DhtCheckpoint {
             buckets_per_rank: Some(cur.addressing.buckets()),
             nranks: Some(cur.addressing.nranks()),
             entries,
+            entry_meta,
         }
     }
 
-    /// Serialize to a simple length-prefixed binary format (v2).
+    /// The meta word entry `i` restores under ([`Meta::OCCUPIED`] when
+    /// the image carries none — v1/v2, or a hand-built checkpoint).
+    fn meta_of_entry(&self, i: usize) -> u64 {
+        self.entry_meta.get(i).copied().unwrap_or(Meta::OCCUPIED)
+    }
+
+    /// Serialize to a simple length-prefixed binary format (v3: the v2
+    /// head with a `DHTCKPT3` magic, each record `key || value || meta`
+    /// — the 8-byte little-endian tenant/age word last).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
-        out.extend_from_slice(b"DHTCKPT2");
+        out.extend_from_slice(b"DHTCKPT3");
         out.push(match self.variant {
             Variant::Coarse => 0,
             Variant::Fine => 1,
@@ -1307,23 +1494,27 @@ impl DhtCheckpoint {
         );
         out.extend_from_slice(&self.nranks.unwrap_or(0).to_le_bytes());
         out.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
-        for (k, v) in &self.entries {
+        for (i, (k, v)) in self.entries.iter().enumerate() {
             out.extend_from_slice(k);
             out.extend_from_slice(v);
+            out.extend_from_slice(&self.meta_of_entry(i).to_le_bytes());
         }
         out
     }
 
-    /// Parse the binary formats produced by [`Self::to_bytes`]: v2
-    /// (`DHTCKPT2`, geometry-carrying) and the legacy v1 (`DHTCKPT1`),
-    /// which loads with `buckets_per_rank`/`nranks` set to `None`.
+    /// Parse the binary formats produced by [`Self::to_bytes`]: v3
+    /// (`DHTCKPT3`, meta-carrying), v2 (`DHTCKPT2`, geometry only) and
+    /// the legacy v1 (`DHTCKPT1`), which additionally loads with
+    /// `buckets_per_rank`/`nranks` set to `None`.  v1/v2 records restore
+    /// under the unstamped meta (tenant 0, age 0).
     pub fn from_bytes(data: &[u8]) -> Option<DhtCheckpoint> {
         if data.len() < 8 + 1 + 4 + 4 + 8 {
             return None;
         }
-        let v2 = match &data[..8] {
-            b"DHTCKPT1" => false,
-            b"DHTCKPT2" => true,
+        let (v2, v3) = match &data[..8] {
+            b"DHTCKPT1" => (false, false),
+            b"DHTCKPT2" => (true, false),
+            b"DHTCKPT3" => (true, true),
             _ => return None,
         };
         let variant = match data[8] {
@@ -1355,7 +1546,8 @@ impl DhtCheckpoint {
             (None, None, 17usize)
         };
         let n64 = u64::from_le_bytes(data[head..head + 8].try_into().ok()?);
-        let rec = key_len + val_len;
+        // v3 records trail the 8-byte meta word after the value
+        let rec = key_len + val_len + if v3 { 8 } else { 0 };
         // checked math: an attacker-controlled n must not wrap the
         // expected length (or blow up with_capacity below)
         let expected = n64
@@ -1367,12 +1559,26 @@ impl DhtCheckpoint {
         let n = n64 as usize;
         let start = head + 8;
         let mut entries = Vec::with_capacity(n);
+        let mut entry_meta = Vec::with_capacity(n);
         for i in 0..n {
             let base = start + i * rec;
             entries.push((
                 data[base..base + key_len].to_vec(),
-                data[base + key_len..base + rec].to_vec(),
+                data[base + key_len..base + key_len + val_len].to_vec(),
             ));
+            entry_meta.push(if v3 {
+                let m = u64::from_le_bytes(
+                    data[base + rec - 8..base + rec].try_into().ok()?,
+                );
+                // only occupied, non-invalid buckets are captured; a
+                // forged meta must not smuggle control bits past restore
+                if !Meta(m).occupied() || Meta(m).invalid() {
+                    return None;
+                }
+                m
+            } else {
+                Meta::OCCUPIED
+            });
         }
         Some(DhtCheckpoint {
             variant,
@@ -1381,6 +1587,7 @@ impl DhtCheckpoint {
             buckets_per_rank,
             nranks,
             entries,
+            entry_meta,
         })
     }
 
@@ -1418,7 +1625,15 @@ impl DhtCheckpoint {
             // spread the restore work round-robin over ranks, as a
             // restart's ranks would replay their checkpoint shards
             let r = i % handles.len();
-            handles[r].write(k, v);
+            let meta = self.meta_of_entry(i);
+            if meta == Meta::OCCUPIED {
+                // unstamped record (v1/v2, or drop-policy capture): the
+                // plain write path, byte-identical to the old restore
+                handles[r].write(k, v);
+            } else {
+                // carry the captured tenant/age word intact
+                handles[r].write_stamped(k, v, meta);
+            }
         }
         for h in &mut handles {
             h.take_stats(); // restore traffic is not application traffic
@@ -1879,5 +2094,187 @@ mod tests {
             d16 * 2 < d1,
             "pipelined reads ({d16} ns) should be well under blocking ({d1} ns)"
         );
+    }
+
+    #[test]
+    fn tenant_views_namespace_and_bill_evictions() {
+        use crate::bench::keys::{key_for_tenant, value_for};
+        for variant in Variant::ALL {
+            let bucket = BucketLayout::new(variant, 8, 8).size();
+            let mut h = Dht::create(variant, 1, 12 * bucket, 8, 8);
+            h[0].set_evict(EvictPolicy::SecondChance);
+            assert_eq!(h[0].evict(), EvictPolicy::SecondChance);
+            let mut t1 = h[0].tenant(1);
+            assert_eq!(t1.tenant_id(), 1);
+            assert_eq!(h[0].tenant_id(), 0, "the parent view is untouched");
+            // fill far past capacity: the only victims available are
+            // tenant 1's own records, so every eviction bills tenant 1
+            for i in 0..60u64 {
+                t1.write(&key_for_tenant(i, 8, 1), &value_for(i, 8));
+            }
+            let s1 = t1.stats().clone();
+            assert!(s1.evictions > 0, "{variant:?}: table must overflow");
+            assert_eq!(
+                s1.tenant_evictions_suffered.iter().sum::<u64>(),
+                s1.evictions,
+                "{variant:?}: every second-chance eviction names a victim"
+            );
+            assert_eq!(
+                s1.tenant_evictions_suffered.get(1),
+                Some(&s1.evictions),
+                "{variant:?}: self-inflicted churn bills tenant 1"
+            );
+            // a second tenant shares the table: its evictions may hit
+            // either tenant, but the billing total stays conserved
+            let mut t2 = h[0].tenant(2);
+            for i in 0..30u64 {
+                t2.write(&key_for_tenant(i, 8, 2), &value_for(i, 8));
+            }
+            let mut all = s1;
+            all.merge(t2.stats());
+            assert_eq!(
+                all.tenant_evictions_suffered.iter().sum::<u64>(),
+                all.evictions,
+                "{variant:?}: merged billing stays conserved"
+            );
+            // namespacing: id 40 exists only under tenant 1's fold, so
+            // tenant 2's lookup of the same id must miss, never alias
+            assert_eq!(
+                t2.read(&key_for_tenant(40, 8, 2)),
+                None,
+                "{variant:?}: tenant 2 must not see tenant 1's record"
+            );
+        }
+    }
+
+    #[test]
+    fn occupancy_by_tenant_tracks_shares() {
+        use crate::bench::keys::{key_for_tenant, value_for};
+        let bucket = BucketLayout::new(Variant::LockFree, 8, 8).size();
+        let mut h = Dht::create(Variant::LockFree, 1, 256 * bucket, 8, 8);
+        h[0].set_evict(EvictPolicy::SecondChance);
+        let mut t1 = h[0].tenant(1);
+        let mut t2 = h[0].tenant(2);
+        for i in 0..10u64 {
+            t1.write(&key_for_tenant(i, 8, 1), &value_for(i, 8));
+        }
+        for i in 0..5u64 {
+            t2.write(&key_for_tenant(i, 8, 2), &value_for(i, 8));
+        }
+        assert_eq!(t1.stats().evictions + t2.stats().evictions, 0);
+        let occ = h[0].occupancy_by_tenant();
+        assert_eq!(occ.first().copied(), Some(0), "no anonymous records");
+        assert_eq!(occ.get(1), Some(&10));
+        assert_eq!(occ.get(2), Some(&5));
+        // the fairness score over the two live shares
+        let shares: Vec<f64> = occ[1..].iter().map(|&c| c as f64).collect();
+        let j = crate::dht::stats::jain_fairness(&shares);
+        assert!(j > 0.8 && j <= 1.0, "jain {j}");
+    }
+
+    #[test]
+    fn checkpoint_v3_preserves_tenant_and_age_words() {
+        use crate::bench::keys::{key_for_tenant, value_for};
+        let bucket = BucketLayout::new(Variant::Fine, 8, 8).size();
+        let mut h = Dht::create(Variant::Fine, 1, 256 * bucket, 8, 8);
+        h[0].set_evict(EvictPolicy::SecondChance);
+        let mut t1 = h[0].tenant(1);
+        let mut t2 = h[0].tenant(2);
+        for i in 0..6u64 {
+            t1.write(&key_for_tenant(i, 8, 1), &value_for(i, 8));
+        }
+        for i in 0..4u64 {
+            t2.write(&key_for_tenant(i, 8, 2), &value_for(i, 8));
+        }
+        let ckpt = DhtCheckpoint::capture(std::slice::from_ref(&h[0]));
+        assert_eq!(ckpt.entries.len(), 10);
+        assert_eq!(ckpt.entry_meta.len(), 10);
+        let by_tenant = |metas: &[u64], t: u32| {
+            metas.iter().filter(|&&m| Meta(m).tenant() == t).count()
+        };
+        assert_eq!(by_tenant(&ckpt.entry_meta, 1), 6);
+        assert_eq!(by_tenant(&ckpt.entry_meta, 2), 4);
+        // ages came off one shared clock: all distinct
+        let ages: std::collections::HashSet<u32> =
+            ckpt.entry_meta.iter().map(|&m| Meta(m).age()).collect();
+        assert_eq!(ages.len(), 10, "shared age clock stamps uniquely");
+        // serialization round-trips the meta words bit for bit
+        let parsed =
+            DhtCheckpoint::from_bytes(&ckpt.to_bytes()).expect("v3 parse");
+        assert_eq!(parsed.entry_meta, ckpt.entry_meta);
+        // restore carries the stamps into the new cluster intact
+        let restored = parsed.restore(Variant::Fine, 2, 256 * bucket);
+        let occ = restored[0].occupancy_by_tenant();
+        assert_eq!(occ.get(1), Some(&6));
+        assert_eq!(occ.get(2), Some(&4));
+        let re = DhtCheckpoint::capture(&restored);
+        let mut before = ckpt.entry_meta.clone();
+        let mut after = re.entry_meta.clone();
+        before.sort_unstable();
+        after.sort_unstable();
+        assert_eq!(after, before, "tenant/age words survive restore");
+    }
+
+    #[test]
+    fn migration_carries_tenant_stamps() {
+        use crate::bench::keys::{key_for_tenant, value_for};
+        let bucket = BucketLayout::new(Variant::Coarse, 8, 8).size();
+        let mut h = Dht::create(Variant::Coarse, 2, 64 * bucket, 8, 8);
+        for hh in h.iter_mut() {
+            hh.set_evict(EvictPolicy::SecondChance);
+        }
+        let mut t1 = h[0].tenant(1);
+        for i in 0..8u64 {
+            t1.write(&key_for_tenant(i, 8, 1), &value_for(i, 8));
+        }
+        let old = h[0].buckets_per_rank();
+        h[0].resize(old * 2).expect("resize");
+        h[1].drain_migration();
+        assert!(!h[0].migrating());
+        let ckpt = DhtCheckpoint::capture(std::slice::from_ref(&h[0]));
+        assert_eq!(ckpt.entries.len(), 8, "coarse migration is loss-free");
+        assert!(
+            ckpt.entry_meta.iter().all(|&m| Meta(m).tenant() == 1),
+            "migrated records keep their tenant stamp"
+        );
+        for i in 0..8u64 {
+            assert_eq!(
+                t1.read(&key_for_tenant(i, 8, 1)),
+                Some(value_for(i, 8))
+            );
+        }
+    }
+
+    #[test]
+    fn repair_preserves_tenant_stamps() {
+        use crate::bench::keys::{key_for_tenant, value_for};
+        let mut h = Dht::create(Variant::LockFree, 3, 64 * 1024, 16, 16);
+        for hh in h.iter_mut() {
+            hh.set_evict(EvictPolicy::SecondChance);
+            hh.set_replicas(2);
+            hh.set_repair(true);
+        }
+        let mut t1 = h[0].tenant(1);
+        for i in 0..12u64 {
+            t1.write(&key_for_tenant(i, 16, 1), &value_for(i, 16));
+        }
+        h[1].set_rank_failed(0, true);
+        h[1].drain_repair();
+        h[2].drain_repair();
+        assert!(!h[1].repairing() && !h[2].repairing());
+        // repair re-homed copies with the tenant/age word intact: no
+        // record anywhere degraded to the anonymous tenant
+        let occ = h[1].occupancy_by_tenant();
+        assert_eq!(occ.first().copied(), Some(0), "repair never unstamps");
+        assert!(occ.get(1).copied().unwrap_or(0) >= 24, "k live copies");
+        // the surviving ranks alone serve every key
+        for i in 0..12u64 {
+            assert_eq!(
+                h[2].read(&key_for_tenant(i, 16, 1)),
+                Some(value_for(i, 16)),
+                "key {i} after repair"
+            );
+        }
+        h[1].set_rank_failed(0, false);
     }
 }

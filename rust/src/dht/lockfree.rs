@@ -16,11 +16,18 @@
 //! safe), while reads during the epoch fall back from the new table to
 //! the old one and keep completing throughout.
 
-use crate::rma::{Resp, SmStep};
+use crate::rma::{Req, Resp, SmStep};
 
-use super::bucket::{Meta, ProbeHit};
+use super::bucket::{select_victim, Meta, ProbeHit};
 use super::coarse::Plan;
-use super::{DhtConfig, DhtOutcome, OpOut};
+use super::{DhtConfig, DhtOutcome, EvictPolicy, OpOut};
+
+fn word_of(resp: Resp) -> u64 {
+    match resp {
+        Resp::Word(w) => w,
+        other => panic!("protocol error: expected Word, got {other:?}"),
+    }
+}
 
 fn data_of(resp: Resp) -> Vec<u8> {
     match resp {
@@ -81,6 +88,7 @@ impl ReadSm {
             lock_retries: 0,
             mailbox_ops: 0,
             mailbox_bytes: 0,
+            victim_tenant: None,
         })
     }
 }
@@ -142,6 +150,13 @@ impl crate::rma::OpSm for ReadSm {
 enum WState {
     Init,
     AwaitProbe(usize),
+    /// Second-chance: CAS claiming the victim's meta word
+    /// (observed -> observed|INVALID) outstanding; a lost race falls
+    /// back to the plain last-candidate overwrite (DESIGN.md §14).
+    AwaitClaim,
+    /// Second-chance: a single-shot REF-clear CAS outstanding (lost
+    /// races are skipped — the racing writer's put wins).
+    AwaitRefCas,
     AwaitPut,
 }
 
@@ -151,6 +166,12 @@ enum WState {
 /// encoded record via [`BucketLayout::key_of`], and the record itself is
 /// moved into the final Put (a write puts exactly once).
 ///
+/// Under [`EvictPolicy::SecondChance`] a full candidate set is resolved
+/// without locks: the writer CASes the chosen victim's meta word to
+/// `observed|INVALID` — claiming it so concurrent readers skip the
+/// bucket while the full-record put is in flight — and falls back to
+/// the paper's last-candidate overwrite if the CAS loses a race.
+///
 /// [`BucketLayout::key_of`]: super::bucket::BucketLayout::key_of
 pub struct WriteSm {
     plan: Plan,
@@ -158,6 +179,12 @@ pub struct WriteSm {
     state: WState,
     probes: u32,
     pending: Option<DhtOutcome>,
+    evict: EvictPolicy,
+    /// Meta words observed during the probe walk.
+    metas: [Meta; 8],
+    clear_mask: u8,
+    victim: usize,
+    victim_tenant: Option<u32>,
 }
 
 impl WriteSm {
@@ -187,6 +214,31 @@ impl WriteSm {
             state: WState::Init,
             probes: 0,
             pending: None,
+            evict: cfg.evict,
+            metas: [Meta::EMPTY; 8],
+            clear_mask: 0,
+            victim: 0,
+            victim_tenant: None,
+        }
+    }
+
+    /// Spend pending REF bits one single-shot CAS at a time, then put
+    /// the record into the claimed victim.
+    fn clear_or_put(&mut self) -> SmStep<OpOut> {
+        if self.clear_mask != 0 {
+            let j = self.clear_mask.trailing_zeros() as usize;
+            self.clear_mask &= self.clear_mask - 1;
+            self.state = WState::AwaitRefCas;
+            SmStep::Issue(Req::Cas {
+                target: self.plan.target,
+                offset: self.plan.rec_off(j),
+                expected: self.metas[j].0,
+                desired: self.metas[j].without_ref(),
+            })
+        } else {
+            self.state = WState::AwaitPut;
+            let record = std::mem::take(&mut self.record);
+            SmStep::Issue(self.plan.put_record(self.victim, record))
         }
     }
 }
@@ -202,7 +254,8 @@ impl crate::rma::OpSm for WriteSm {
             }
             WState::AwaitProbe(i) => {
                 let data = data_of(resp);
-                let l = &self.plan.layout;
+                let l = self.plan.layout;
+                self.metas[i] = l.meta_of(&data);
                 let outcome = match l.classify_probe(&data, l.key_of(&self.record)) {
                     ProbeHit::Empty => Some(DhtOutcome::WriteFresh),
                     // invalid buckets may be overwritten (§4.2)
@@ -212,8 +265,28 @@ impl crate::rma::OpSm for WriteSm {
                     ProbeHit::Other => None,
                 };
                 match outcome {
+                    Some(DhtOutcome::WriteEvict)
+                        if self.evict == EvictPolicy::SecondChance =>
+                    {
+                        let n = self.plan.n();
+                        let (v, clear) = select_victim(&self.metas[..n]);
+                        self.victim = v;
+                        self.victim_tenant = Some(self.metas[v].tenant());
+                        self.clear_mask = clear;
+                        self.pending = Some(DhtOutcome::WriteEvict);
+                        // claim the victim before touching anything else:
+                        // if the claim loses, the clears were never spent
+                        self.state = WState::AwaitClaim;
+                        SmStep::Issue(Req::Cas {
+                            target: self.plan.target,
+                            offset: self.plan.rec_off(v),
+                            expected: self.metas[v].0,
+                            desired: self.metas[v].0 | Meta::INVALID,
+                        })
+                    }
                     Some(out) => {
                         self.pending = Some(out);
+                        self.victim = i;
                         self.state = WState::AwaitPut;
                         // a write puts exactly once: move, don't clone
                         let record = std::mem::take(&mut self.record);
@@ -226,6 +299,31 @@ impl crate::rma::OpSm for WriteSm {
                     }
                 }
             }
+            WState::AwaitClaim => {
+                let prev = word_of(resp);
+                if prev == self.metas[self.victim].0 {
+                    // victim claimed (readers now skip it as INVALID
+                    // until our full-record put lands)
+                    self.clear_or_put()
+                } else {
+                    // lost the race: a concurrent writer refreshed the
+                    // victim — fall back to the paper's last-candidate
+                    // overwrite, whose occupant we observed at probe time
+                    let last = self.plan.n() - 1;
+                    self.victim = last;
+                    self.victim_tenant = Some(self.metas[last].tenant());
+                    self.clear_mask = 0;
+                    self.state = WState::AwaitPut;
+                    let record = std::mem::take(&mut self.record);
+                    SmStep::Issue(self.plan.put_record(last, record))
+                }
+            }
+            WState::AwaitRefCas => {
+                // lost REF-clear races are skipped: the racing writer's
+                // full-record put supersedes the clear
+                let _ = word_of(resp);
+                self.clear_or_put()
+            }
             WState::AwaitPut => {
                 debug_assert!(matches!(resp, Resp::Ack));
                 SmStep::Done(OpOut {
@@ -235,6 +333,7 @@ impl crate::rma::OpSm for WriteSm {
                     lock_retries: 0,
                     mailbox_ops: 0,
                     mailbox_bytes: 0,
+                    victim_tenant: self.victim_tenant.take(),
                 })
             }
         }

@@ -332,6 +332,7 @@ impl OpSm for DualReadSm {
                         lock_retries: out.lock_retries + self.lock_retries,
                         mailbox_ops: out.mailbox_ops + self.mailbox_ops,
                         mailbox_bytes: out.mailbox_bytes + self.mailbox_bytes,
+                        victim_tenant: out.victim_tenant,
                     };
                     return SmStep::Done(DualOut {
                         out: merged,

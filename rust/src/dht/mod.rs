@@ -105,6 +105,47 @@ impl Variant {
     }
 }
 
+/// What a write does when every candidate bucket is taken by a foreign
+/// key (DESIGN.md §14).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// The paper's §3.1 cache semantics: overwrite the *last* candidate
+    /// unconditionally.  The pre-tenant default — bit-identical tables.
+    Drop,
+    /// Epoch-stamped second-chance aging: victimize the stalest
+    /// non-referenced candidate (spending REF bits when every candidate
+    /// still holds its second chance) so a full table becomes a
+    /// steady-state cache under churn instead of clinging to its first
+    /// working set.
+    SecondChance,
+}
+
+impl EvictPolicy {
+    pub const ALL: [EvictPolicy; 2] =
+        [EvictPolicy::Drop, EvictPolicy::SecondChance];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictPolicy::Drop => "drop",
+            EvictPolicy::SecondChance => "second-chance",
+        }
+    }
+
+    /// The names [`Self::parse`] accepts (for CLI error messages).
+    pub const ACCEPTED: &'static str =
+        "drop, second-chance, secondchance, 2c";
+
+    pub fn parse(s: &str) -> Option<EvictPolicy> {
+        match s {
+            "drop" => Some(EvictPolicy::Drop),
+            "second-chance" | "secondchance" | "2c" => {
+                Some(EvictPolicy::SecondChance)
+            }
+            _ => None,
+        }
+    }
+}
+
 /// Result of one DHT operation.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum DhtOutcome {
@@ -138,6 +179,11 @@ pub struct OpOut {
     pub mailbox_ops: u32,
     /// Request + response payload bytes of those mailbox round trips.
     pub mailbox_bytes: u64,
+    /// On a `WriteEvict` under second-chance eviction: the tenant id
+    /// stamped on the record this write victimized (the "evictions
+    /// suffered" accounting channel, DESIGN.md §14).  `None` under the
+    /// drop policy and for every non-evicting outcome.
+    pub victim_tenant: Option<u32>,
 }
 
 /// A DHT operation state machine — one of the six protocol SMs.
@@ -314,6 +360,12 @@ pub struct DhtConfig {
     /// (0 = the table sized at `DHT_create`; elastic resizes point this
     /// at freshly allocated segments, [`crate::rma::SEG_SHIFT`]).
     pub base: u64,
+    /// Tenant id this handle writes under (DESIGN.md §14; 0 = the
+    /// anonymous single-tenant default, whose stamped meta word is
+    /// bit-identical to the pre-tenant layout).
+    pub tenant: u32,
+    /// Full-candidate-set write behavior (DESIGN.md §14).
+    pub evict: EvictPolicy,
 }
 
 impl DhtConfig {
@@ -335,6 +387,8 @@ impl DhtConfig {
             layout,
             crc_retries: 3,
             base: 0,
+            tenant: 0,
+            evict: EvictPolicy::Drop,
         }
     }
 

@@ -163,6 +163,7 @@ impl ReplReadSm {
                 lock_retries: self.lock_retries,
                 mailbox_ops: self.mailbox_ops,
                 mailbox_bytes: self.mailbox_bytes,
+                victim_tenant: None,
             },
             failovers: self.failovers,
             diverged,

@@ -88,6 +88,12 @@ pub struct DhtStats {
     /// match, `[l]` = hit at `digits - l` significant digits accepted by
     /// the relative-tolerance test; DESIGN.md §10).  Grows on demand.
     pub ladder_hits: Vec<u64>,
+    /// Evictions *suffered* per victim tenant (`[t]` = records tenant `t`
+    /// lost to second-chance eviction, whoever wrote over them).  The
+    /// plain `evictions` counter is the inflicted side: evictions this
+    /// handle's writes caused.  Grows on demand; element-wise merge
+    /// (DESIGN.md §14).
+    pub tenant_evictions_suffered: Vec<u64>,
     /// Max per-species relative deviation over all *accepted
     /// coarse-level* (level >= 1) hits — the accuracy channel the
     /// approximate lookup path is judged by.  Merged with `max`.
@@ -133,6 +139,13 @@ impl DhtStats {
             DhtOutcome::WriteEvict => {
                 self.writes += 1;
                 self.evictions += 1;
+                if let Some(t) = out.victim_tenant {
+                    let t = t as usize;
+                    if self.tenant_evictions_suffered.len() <= t {
+                        self.tenant_evictions_suffered.resize(t + 1, 0);
+                    }
+                    self.tenant_evictions_suffered[t] += 1;
+                }
             }
         }
     }
@@ -221,43 +234,90 @@ impl DhtStats {
     }
 
     pub fn merge(&mut self, o: &DhtStats) {
-        self.invalidations += o.invalidations;
-        self.reads += o.reads;
-        self.writes += o.writes;
-        self.read_hits += o.read_hits;
-        self.read_misses += o.read_misses;
-        self.mismatches += o.mismatches;
-        self.crc_retries += o.crc_retries;
-        self.writes_fresh += o.writes_fresh;
-        self.writes_update += o.writes_update;
-        self.evictions += o.evictions;
-        self.probes += o.probes;
-        self.lock_retries += o.lock_retries;
-        self.resizes += o.resizes;
-        self.migrated += o.migrated;
-        self.migrate_skipped += o.migrate_skipped;
-        self.migrate_dropped += o.migrate_dropped;
-        self.dual_reads += o.dual_reads;
-        self.replica_writes += o.replica_writes;
-        self.failover_reads += o.failover_reads;
-        self.replica_divergence += o.replica_divergence;
-        self.l1_hits += o.l1_hits;
-        self.nonfinite_skips += o.nonfinite_skips;
-        self.retries += o.retries;
-        self.backoff_ns += o.backoff_ns;
-        self.repaired += o.repaired;
-        self.repair_dropped += o.repair_dropped;
-        self.mailbox_ops += o.mailbox_ops;
-        self.mailbox_bytes += o.mailbox_bytes;
-        self.ranks_dead = self.ranks_dead.max(o.ranks_dead);
-        self.degraded_k = self.degraded_k.max(o.degraded_k);
-        if self.ladder_hits.len() < o.ladder_hits.len() {
-            self.ladder_hits.resize(o.ladder_hits.len(), 0);
+        // Exhaustive destructure: a new DhtStats field that nobody
+        // decided how to merge is a compile error on this pattern, not a
+        // silently-dropped counter.
+        let DhtStats {
+            reads,
+            writes,
+            read_hits,
+            read_misses,
+            mismatches,
+            invalidations,
+            crc_retries,
+            writes_fresh,
+            writes_update,
+            evictions,
+            probes,
+            lock_retries,
+            resizes,
+            migrated,
+            migrate_skipped,
+            migrate_dropped,
+            dual_reads,
+            replica_writes,
+            failover_reads,
+            replica_divergence,
+            l1_hits,
+            nonfinite_skips,
+            retries,
+            backoff_ns,
+            repaired,
+            repair_dropped,
+            ranks_dead,
+            degraded_k,
+            mailbox_ops,
+            mailbox_bytes,
+            ladder_hits,
+            tenant_evictions_suffered,
+            max_rel_err,
+        } = o;
+        self.reads += reads;
+        self.writes += writes;
+        self.read_hits += read_hits;
+        self.read_misses += read_misses;
+        self.mismatches += mismatches;
+        self.invalidations += invalidations;
+        self.crc_retries += crc_retries;
+        self.writes_fresh += writes_fresh;
+        self.writes_update += writes_update;
+        self.evictions += evictions;
+        self.probes += probes;
+        self.lock_retries += lock_retries;
+        self.resizes += resizes;
+        self.migrated += migrated;
+        self.migrate_skipped += migrate_skipped;
+        self.migrate_dropped += migrate_dropped;
+        self.dual_reads += dual_reads;
+        self.replica_writes += replica_writes;
+        self.failover_reads += failover_reads;
+        self.replica_divergence += replica_divergence;
+        self.l1_hits += l1_hits;
+        self.nonfinite_skips += nonfinite_skips;
+        self.retries += retries;
+        self.backoff_ns += backoff_ns;
+        self.repaired += repaired;
+        self.repair_dropped += repair_dropped;
+        self.mailbox_ops += mailbox_ops;
+        self.mailbox_bytes += mailbox_bytes;
+        self.ranks_dead = self.ranks_dead.max(*ranks_dead);
+        self.degraded_k = self.degraded_k.max(*degraded_k);
+        if self.ladder_hits.len() < ladder_hits.len() {
+            self.ladder_hits.resize(ladder_hits.len(), 0);
         }
-        for (a, b) in self.ladder_hits.iter_mut().zip(o.ladder_hits.iter()) {
+        for (a, b) in self.ladder_hits.iter_mut().zip(ladder_hits.iter()) {
             *a += b;
         }
-        self.max_rel_err = self.max_rel_err.max(o.max_rel_err);
+        let suffered = tenant_evictions_suffered;
+        if self.tenant_evictions_suffered.len() < suffered.len() {
+            self.tenant_evictions_suffered.resize(suffered.len(), 0);
+        }
+        for (a, b) in
+            self.tenant_evictions_suffered.iter_mut().zip(suffered.iter())
+        {
+            *a += b;
+        }
+        self.max_rel_err = self.max_rel_err.max(*max_rel_err);
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -278,6 +338,20 @@ impl DhtStats {
     }
 }
 
+/// Jain's fairness index over per-tenant shares (hit rates, occupancy,
+/// ...): `(Σx)² / (n · Σx²)`.  1.0 = perfectly even, `1/n` = one tenant
+/// holds everything.  Empty or all-zero input reads as perfectly fair —
+/// nothing has been allocated unevenly yet (DESIGN.md §14).
+pub fn jain_fairness(shares: &[f64]) -> f64 {
+    let sum: f64 = shares.iter().sum();
+    let sq: f64 = shares.iter().map(|x| x * x).sum();
+    if shares.is_empty() || sq == 0.0 {
+        1.0
+    } else {
+        sum * sum / (shares.len() as f64 * sq)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +366,7 @@ mod tests {
             lock_retries: 1,
             mailbox_ops: 1,
             mailbox_bytes: 64,
+            victim_tenant: None,
         }
     }
 
@@ -365,6 +440,7 @@ mod tests {
             max_rel_err: seed as f64 * 1e-6,
             mailbox_ops: seed + 32,
             mailbox_bytes: seed + 33,
+            tenant_evictions_suffered: vec![seed + 34, seed + 35],
         }
     }
 
@@ -408,6 +484,13 @@ mod tests {
         assert_eq!(a.mailbox_bytes, 2100 + 2 * off.mailbox_bytes);
         for (i, v) in a.ladder_hits.iter().enumerate() {
             assert_eq!(*v, 2100 + 2 * off.ladder_hits[i], "ladder level {i}");
+        }
+        for (i, v) in a.tenant_evictions_suffered.iter().enumerate() {
+            assert_eq!(
+                *v,
+                2100 + 2 * off.tenant_evictions_suffered[i],
+                "tenant {i}"
+            );
         }
         // max-channels (gauges): merge takes the larger of the two
         assert_eq!(a.ranks_dead, 2000 + off.ranks_dead);
@@ -492,6 +575,7 @@ mod tests {
                 lock_retries: 0,
                 mailbox_ops: 0,
                 mailbox_bytes: 0,
+                victim_tenant: None,
             },
             failovers,
             diverged,
@@ -513,6 +597,7 @@ mod tests {
             lock_retries: 0,
             mailbox_ops: 0,
             mailbox_bytes: 0,
+            victim_tenant: None,
         });
         assert_eq!(s.replica_writes, 1);
         assert_eq!(s.writes, 0);
@@ -556,5 +641,38 @@ mod tests {
         let s = DhtStats::default();
         assert_eq!(s.hit_rate(), 0.0);
         assert_eq!(s.mismatch_percent(), 0.0);
+    }
+
+    #[test]
+    fn evictions_are_billed_to_the_victim_tenant() {
+        let mut s = DhtStats::default();
+        let evict = |t: Option<u32>| OpOut {
+            victim_tenant: t,
+            ..out(DhtOutcome::WriteEvict)
+        };
+        s.record(&evict(Some(2)));
+        s.record(&evict(Some(2)));
+        s.record(&evict(Some(0)));
+        // drop-policy evictions carry no victim tenant: inflicted side
+        // only, nothing billed
+        s.record(&evict(None));
+        assert_eq!(s.evictions, 4);
+        assert_eq!(s.tenant_evictions_suffered, vec![1, 0, 2]);
+        // element-wise merge grows the shorter side, like ladder_hits
+        let mut t = DhtStats::default();
+        t.record(&evict(Some(4)));
+        s.merge(&t);
+        assert_eq!(s.tenant_evictions_suffered, vec![1, 0, 2, 0, 1]);
+    }
+
+    #[test]
+    fn jain_fairness_bounds() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0);
+        assert_eq!(jain_fairness(&[0.5, 0.5, 0.5]), 1.0);
+        // one tenant holds everything: index collapses to 1/n
+        assert!((jain_fairness(&[1.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        let mid = jain_fairness(&[3.0, 1.0]);
+        assert!(mid > 0.5 && mid < 1.0);
     }
 }

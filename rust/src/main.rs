@@ -16,12 +16,12 @@ use anyhow::{anyhow, Result};
 
 use mpi_dht::bench::table::{mops, us, Table};
 use mpi_dht::bench::traj::{self, Trajectory};
-use mpi_dht::bench::{run_daos, run_kv, Dist, KvCfg, Mode};
+use mpi_dht::bench::{run_daos, run_kv, Dist, KvCfg, Mode, TenantProfile};
 use mpi_dht::cli::Args;
 use mpi_dht::config::Config;
 use mpi_dht::coordinator::{self, EngineKind};
 use mpi_dht::daos::DaosConfig;
-use mpi_dht::dht::Variant;
+use mpi_dht::dht::{EvictPolicy, Variant};
 use mpi_dht::net::{LinkModel, NetConfig, Topology};
 use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
 use mpi_dht::poet::PoetConfig;
@@ -74,6 +74,11 @@ COMMANDS:
                  bandwidth sharing — congestion emerges)
                  --bg-traffic F (fraction of each fabric link's
                  capacity held by background jobs, 0 <= F < 1)
+                 --tenants N --evict drop|second-chance
+                 --tenant-mix p1,p2,... (per-tenant traffic profiles,
+                 cycled: uniform|zipfian|hotkey|flood|hotread —
+                 namespaced tenants over one bounded cache,
+                 DESIGN.md §14)
   bench-daos   server-based baseline vs coarse DHT (paper Fig. 3)
                  --clients 12..72:12  --ops N
   bench-compare  diff two BENCH_*.json trajectory points and flag
@@ -102,6 +107,9 @@ COMMANDS:
                  probed on a fine miss, accepted within relative
                  tolerance T; B bytes of rank-local L1 cache —
                  DESIGN.md §10)
+                 --tenants N --evict drop|second-chance
+                 --tenant-phase S (tenant t starts S*t steps late —
+                 phase-shifted models sharing one cache, DESIGN.md §14)
   poet         threaded POET on this machine (real PJRT chemistry)
                  --ny N --nx N --steps N --workers W --engine pjrt|native
                  --variant none|coarse|fine|lockfree|delegated|all
@@ -115,6 +123,8 @@ COMMANDS:
                  §11)
                  --digits-ladder L --ladder-tol T --l1-bytes B
                  (approximate surrogate lookup, DESIGN.md §10)
+                 --tenants N --evict drop|second-chance (workers
+                 sharded across tenant namespaces, DESIGN.md §14)
 
 Common: --config file.toml  --set key=value (repeatable)
 "#;
@@ -160,6 +170,64 @@ fn parse_variant(s: &str) -> Result<Variant> {
     Variant::parse(s).ok_or_else(|| {
         anyhow!("unknown variant {s:?}; accepted: {}", Variant::ACCEPTED)
     })
+}
+
+fn parse_evict(s: &str) -> Result<EvictPolicy> {
+    EvictPolicy::parse(s).ok_or_else(|| {
+        anyhow!(
+            "unknown eviction policy {s:?}; accepted: {}",
+            EvictPolicy::ACCEPTED
+        )
+    })
+}
+
+/// `--tenant-mix flood,hotread` — one profile per tenant, cycled when
+/// there are more tenants than entries.
+fn parse_tenant_mix(spec: &str) -> Result<Vec<TenantProfile>> {
+    spec.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            TenantProfile::parse(t).ok_or_else(|| {
+                anyhow!(
+                    "unknown tenant profile {t:?} in --tenant-mix; \
+                     accepted: {}",
+                    TenantProfile::ACCEPTED
+                )
+            })
+        })
+        .collect()
+}
+
+/// Shared `--tenants/--evict` parsing for every subcommand that runs
+/// the namespaced cache.
+fn tenant_flags(args: &Args) -> Result<(u32, EvictPolicy)> {
+    let tenants = args.u64_or("--tenants", 1)? as u32;
+    anyhow::ensure!(tenants >= 1, "--tenants must be >= 1");
+    let evict = match args.get("--evict") {
+        Some(s) => parse_evict(s)?,
+        None => EvictPolicy::Drop,
+    };
+    Ok((tenants, evict))
+}
+
+/// Per-tenant hit-rate summary line for multi-tenant runs.  Each pair
+/// is `(hits, lookups)` — POET callers map their (hits, misses)
+/// ledgers before calling.
+fn tenant_note(
+    label: &str,
+    per_tenant: &[(u64, u64)],
+    rate: impl Fn(usize) -> f64,
+    fairness: f64,
+) -> String {
+    let per: Vec<String> = per_tenant
+        .iter()
+        .enumerate()
+        .map(|(t, &(h, l))| format!("t{t} {:.3} ({h}/{l})", rate(t)))
+        .collect();
+    format!(
+        "# {label}: tenants — {}; jain fairness {fairness:.3}",
+        per.join(", ")
+    )
 }
 
 /// Apply `--topology/--link-model/--bg-traffic` to a resolved profile.
@@ -218,18 +286,35 @@ fn cmd_bench_kv(args: &Args) -> Result<()> {
         cfg.as_ref(),
     )?;
     apply_fabric_flags(&mut net, args)?;
+    let (tenants, evict) = tenant_flags(args)?;
+    let tenant_mix = match args.get("--tenant-mix") {
+        Some(spec) => parse_tenant_mix(spec)?,
+        None => Vec::new(),
+    };
     let mut t = Table::new(vec![
         "ranks", "read Mops", "write Mops", "mixed Mops", "rlat p50 µs",
         "wlat p50 µs", "mismatches", "lock retries", "hot link",
     ]);
+    let mut notes: Vec<String> = Vec::new();
     for n in ranks {
         let mut kv = KvCfg::new(n, ops, dist, mode);
         kv.seed = args.u64_or("--seed", kv.seed)?;
         kv.pipeline = args.u64_or("--pipeline", kv.pipeline as u64)? as u32;
+        kv.tenants = tenants;
+        kv.evict = evict;
+        kv.tenant_mix = tenant_mix.clone();
         if let Some(z) = args.get("--zipf-range") {
             kv.zipf_range = z.parse()?;
         }
         let res = run_kv(variant, net.clone(), kv);
+        if tenants > 1 {
+            notes.push(tenant_note(
+                &format!("ranks={n}"),
+                &res.tenant_hits,
+                |t| res.tenant_hit_rate(t),
+                res.fairness(),
+            ));
+        }
         t.row(vec![
             n.to_string(),
             mops(res.read_mops),
@@ -248,11 +333,19 @@ fn cmd_bench_kv(args: &Args) -> Result<()> {
         ]);
     }
     println!(
-        "# bench-kv variant={} dist={dist:?} mode={mode:?} ops/rank={ops}{}",
+        "# bench-kv variant={} dist={dist:?} mode={mode:?} ops/rank={ops}{}{}",
         variant.name(),
+        if tenants > 1 {
+            format!(" tenants={tenants} evict={}", evict.name())
+        } else {
+            String::new()
+        },
         fabric_note(&net)
     );
     print!("{}", t.render());
+    for line in notes {
+        println!("{line}");
+    }
     Ok(())
 }
 
@@ -357,6 +450,11 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         c.l1_bytes = args.usize_or("--l1-bytes", c.l1_bytes)?;
         c.pipeline = args.u64_or("--pipeline", c.pipeline as u64)? as u32;
         c.replicas = args.u64_or("--replicas", c.replicas as u64)? as u32;
+        let (tenants, evict) = tenant_flags(args)?;
+        c.tenants = tenants;
+        c.evict = evict;
+        c.tenant_phase =
+            args.usize_or("--tenant-phase", c.tenant_phase)?;
         c.win_bytes = args.usize_or("--win-bytes", c.win_bytes)?;
         c.repair = args.has("--repair");
         c.retry_budget =
@@ -384,6 +482,19 @@ fn cmd_poet_des(args: &Args) -> Result<()> {
         let chaos = c.kill_rank_at.is_some();
         let res = run_poet_des(c, net.clone());
         notes.push(format!("# ranks={n}: {}", res.sim.summary()));
+        if tenants > 1 {
+            let per: Vec<(u64, u64)> = res
+                .tenant_hits
+                .iter()
+                .map(|&(h, m)| (h, h + m))
+                .collect();
+            notes.push(tenant_note(
+                &format!("ranks={n}"),
+                &per,
+                |t| res.tenant_hit_rate(t),
+                res.fairness(),
+            ));
+        }
         if chaos || res.dht.ranks_dead > 0 {
             let d = &res.dht;
             notes.push(format!(
@@ -441,6 +552,9 @@ fn cmd_poet(args: &Args) -> Result<()> {
     cfg.dt = args.f64_or("--dt", cfg.dt)?;
     cfg.pipeline = args.usize_or("--pipeline", cfg.pipeline)?;
     cfg.replicas = args.u64_or("--replicas", cfg.replicas as u64)? as u32;
+    let (tenants, evict) = tenant_flags(args)?;
+    cfg.tenants = tenants;
+    cfg.evict = evict;
     cfg.win_bytes = args.usize_or("--win-bytes", cfg.win_bytes)?;
     if args.get("--resize-at-iter").is_some() {
         cfg.resize_at_step =
@@ -503,6 +617,28 @@ fn cmd_poet(args: &Args) -> Result<()> {
         cfg.ny, cfg.nx, cfg.steps, cfg.workers
     );
     print!("{}", t.render());
+    if tenants > 1 {
+        for r in &runs {
+            if r.label == "reference" {
+                continue;
+            }
+            let per: Vec<(u64, u64)> = r
+                .stats
+                .tenant_hits
+                .iter()
+                .map(|&(h, m)| (h, h + m))
+                .collect();
+            println!(
+                "{}",
+                tenant_note(
+                    &r.label,
+                    &per,
+                    |t| r.stats.tenant_hit_rate(t),
+                    r.stats.fairness(),
+                )
+            );
+        }
+    }
     if cfg.ladder > 0 || cfg.l1_bytes > 0 {
         for r in &runs {
             if r.label == "reference" {
@@ -573,4 +709,66 @@ fn cmd_poet(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn evict_parse_accepts_names_and_aliases() {
+        assert_eq!(parse_evict("drop").unwrap(), EvictPolicy::Drop);
+        assert_eq!(
+            parse_evict("second-chance").unwrap(),
+            EvictPolicy::SecondChance
+        );
+        assert_eq!(parse_evict("2c").unwrap(), EvictPolicy::SecondChance);
+    }
+
+    #[test]
+    fn evict_parse_error_lists_accepted_names() {
+        let err = parse_evict("lru").unwrap_err().to_string();
+        assert!(err.contains("\"lru\""), "{err}");
+        assert!(err.contains(EvictPolicy::ACCEPTED), "{err}");
+    }
+
+    #[test]
+    fn tenant_mix_parse_round_trips_and_cycles_commas() {
+        let mix = parse_tenant_mix("flood,hotread,uniform").unwrap();
+        assert_eq!(
+            mix,
+            vec![
+                TenantProfile::Flood,
+                TenantProfile::HotRead,
+                TenantProfile::Uniform
+            ]
+        );
+        // trailing/doubled commas are tolerated, like --ranks lists
+        assert_eq!(parse_tenant_mix("zipf,,hotkey,").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn tenant_mix_error_lists_accepted_names() {
+        let err = parse_tenant_mix("flood,mru").unwrap_err().to_string();
+        assert!(err.contains("\"mru\""), "{err}");
+        assert!(err.contains(TenantProfile::ACCEPTED), "{err}");
+    }
+
+    #[test]
+    fn tenant_flags_default_to_single_tenant_drop() {
+        let (tenants, evict) = tenant_flags(&args(&["bench-kv"])).unwrap();
+        assert_eq!(tenants, 1);
+        assert_eq!(evict, EvictPolicy::Drop);
+        let (tenants, evict) = tenant_flags(&args(&[
+            "bench-kv", "--tenants", "4", "--evict", "secondchance",
+        ]))
+        .unwrap();
+        assert_eq!(tenants, 4);
+        assert_eq!(evict, EvictPolicy::SecondChance);
+        assert!(tenant_flags(&args(&["x", "--tenants", "0"])).is_err());
+    }
 }

@@ -25,11 +25,15 @@ use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 
+use crate::dht::bucket::Meta;
 use crate::dht::health::HealthView;
 use crate::dht::l1::L1Cache;
 use crate::dht::repair::{RepairOut, RepairSm};
 use crate::dht::replica::{ReplOut, ReplReadSm, ReplSm};
-use crate::dht::{DhtConfig, DhtOutcome, DhtSm, DhtStats, Variant};
+use crate::dht::stats::jain_fairness;
+use crate::dht::{
+    DhtConfig, DhtOutcome, DhtSm, DhtStats, EvictPolicy, Variant,
+};
 use crate::net::{NetConfig, Network};
 use crate::rma::fault::FaultPlan;
 use crate::rma::sim::{SimCluster, SimReport};
@@ -39,7 +43,8 @@ use crate::sim::Time;
 use super::chemistry::{integrate_cell, ChemCost, N_OUT};
 use super::grid::GridState;
 use super::key::{
-    ladder_key, pack_row, row_is_finite, unpack_value, LadderCfg,
+    fold_tenant, ladder_key, pack_row, row_is_finite, unpack_value,
+    LadderCfg,
 };
 use super::transport;
 
@@ -111,6 +116,19 @@ pub struct PoetDesCfg {
     /// lost a copy.  Prefer `pipeline >= 2` so the scan never starves
     /// the application lanes.
     pub repair: bool,
+    /// Concurrent tenant models sharing the one DHT cluster (DESIGN.md
+    /// §14): ranks are block-partitioned across `tenants` independent
+    /// POET grids, each keyed under its own [`fold_tenant`] namespace.
+    /// Clamped to `nranks`; 1 = the anonymous single-tenant run.
+    pub tenants: u32,
+    /// Full-candidate-set write behavior of the shared cache (DESIGN.md
+    /// §14).  `Drop` keeps the pre-tenant bit-identical tables.
+    pub evict: EvictPolicy,
+    /// Steps of injection phase shift between successive tenants: tenant
+    /// `t` sits out the first `t * tenant_phase` steps, so the tenants'
+    /// reaction fronts — and hence their hot key working sets — are
+    /// staggered in time on the shared cache.
+    pub tenant_phase: usize,
 }
 
 impl PoetDesCfg {
@@ -140,6 +158,9 @@ impl PoetDesCfg {
             retry_budget: 5,
             backoff_base_ns: 20_000,
             repair: false,
+            tenants: 1,
+            evict: EvictPolicy::Drop,
+            tenant_phase: 8,
         }
     }
 }
@@ -158,6 +179,12 @@ pub struct PoetDesResult {
     /// Per-step (hits, misses) — the hit-rate trajectory a mid-run rank
     /// kill is judged by (all zeros for reference runs).
     pub step_hits: Vec<(u64, u64)>,
+    /// Per-tenant (hits, misses) of the surrogate lookups (DESIGN.md
+    /// §14; a single entry for single-tenant runs).
+    pub tenant_hits: Vec<(u64, u64)>,
+    /// Per-tenant count of evictions this tenant's writes *inflicted*
+    /// (the suffering side lives in `dht.tenant_evictions_suffered`).
+    pub tenant_evictions_inflicted: Vec<u64>,
 }
 
 impl PoetDesResult {
@@ -168,6 +195,27 @@ impl PoetDesResult {
         } else {
             self.hits as f64 / t as f64
         }
+    }
+
+    /// Hit rate of tenant `t`'s surrogate lookups.
+    pub fn tenant_hit_rate(&self, t: usize) -> f64 {
+        match self.tenant_hits.get(t) {
+            Some(&(h, m)) if h + m > 0 => h as f64 / (h + m) as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Jain fairness index over the tenants' hit rates (1.0 = every
+    /// tenant gets the same service from the shared cache).  Tenants
+    /// that issued no lookups are excluded.
+    pub fn fairness(&self) -> f64 {
+        let rates: Vec<f64> = self
+            .tenant_hits
+            .iter()
+            .filter(|(h, m)| h + m > 0)
+            .map(|&(h, m)| h as f64 / (h + m) as f64)
+            .collect();
+        jain_fairness(&rates)
     }
 
     /// Mean hit rate over the step range `[lo, hi)` (clamped).
@@ -312,7 +360,15 @@ struct PoetWorkload {
     /// Rank-local L1 read-through caches (DESIGN.md §10; `None` per
     /// rank when disabled or on reference runs).
     l1: Vec<Option<L1Cache>>,
-    grid: GridState,
+    /// One grid per tenant (DESIGN.md §14; a single grid pre-tenants).
+    grids: Vec<GridState>,
+    /// Per rank: the tenant whose grid this rank computes.
+    tenant_of: Vec<u32>,
+    /// Per rank: first step its tenant's model is active (phase shift).
+    start_step: Vec<usize>,
+    /// Monotone write-age clock shared by every rank (simulated cluster,
+    /// one thread): stamps second-chance records (DESIGN.md §14).
+    age: u64,
     scratch: Vec<f64>,
     inflow: Vec<f64>,
     ranges: Vec<(usize, usize)>,
@@ -320,8 +376,8 @@ struct PoetWorkload {
     lane_job: Vec<LaneJob>,
     /// Per-lane idle-poll backoff (reset whenever the lane gets work).
     poll_ns: Vec<u64>,
-    /// Last step whose transport has been applied to the grid.
-    transport_applied: i64,
+    /// Per tenant: last step whose transport has been applied.
+    transport_applied: Vec<i64>,
     /// Shared handle on the DES cluster's failure detector (installed by
     /// `run_poet_des` after the cluster is built; `None` in bare
     /// construction, e.g. the grid-equivalence test).
@@ -336,29 +392,53 @@ struct PoetWorkload {
     misses: u64,
     /// Per-step (hits, misses) trajectory.
     step_hits: Vec<(u64, u64)>,
+    /// Per-tenant (hits, misses) of the surrogate lookups.
+    tenant_hits: Vec<(u64, u64)>,
+    /// Per-tenant evictions this tenant's writes inflicted.
+    tenant_evict_inflicted: Vec<u64>,
     chem_cells: u64,
 }
 
 impl PoetWorkload {
     fn new(cfg: PoetDesCfg) -> Self {
         let (bg, inj, min0) = super::chemistry::default_waters();
-        let grid = GridState::new(cfg.ny, cfg.nx, &bg, &min0);
         let mut inflow = Vec::with_capacity(bg.len() * 2);
         for s in 0..bg.len() {
             inflow.push(inj[s]);
             inflow.push(bg[s]);
         }
-        let cells = grid.cells();
         let n = cfg.nranks as usize;
+        let tenants = cfg.tenants.clamp(1, cfg.nranks) as usize;
+        let grids: Vec<GridState> = (0..tenants)
+            .map(|_| GridState::new(cfg.ny, cfg.nx, &bg, &min0))
+            .collect();
+        let cells = grids[0].cells();
         let lanes = cfg.pipeline.max(1);
+        // block-partition the ranks across tenants, then each tenant's
+        // ranks across its own grid's cells
+        let tenant_of: Vec<u32> =
+            (0..n).map(|r| (r * tenants / n) as u32).collect();
+        let start_step: Vec<usize> = tenant_of
+            .iter()
+            .map(|&t| t as usize * cfg.tenant_phase)
+            .collect();
         let ranges = (0..n)
-            .map(|r| (r * cells / n, (r + 1) * cells / n))
+            .map(|r| {
+                let t = tenant_of[r];
+                let peers: Vec<usize> =
+                    (0..n).filter(|&p| tenant_of[p] == t).collect();
+                let j = peers.iter().position(|&p| p == r).unwrap();
+                let nt = peers.len();
+                (j * cells / nt, (j + 1) * cells / nt)
+            })
             .collect();
         let dht = cfg
             .variant
             .map(|v| {
-                DhtConfig::poet(v, cfg.nranks, cfg.win_bytes)
-                    .with_replicas(cfg.replicas)
+                let mut d = DhtConfig::poet(v, cfg.nranks, cfg.win_bytes)
+                    .with_replicas(cfg.replicas);
+                d.evict = cfg.evict;
+                d
             });
         let l1 = (0..n)
             .map(|_| {
@@ -381,14 +461,17 @@ impl PoetWorkload {
             lanes,
             dht,
             l1,
-            grid,
+            grids,
+            tenant_of,
+            start_step,
+            age: 0,
             scratch: Vec::new(),
             inflow,
             ranges,
             cur: (0..n).map(|_| RankCur::new()).collect(),
             lane_job: (0..n * lanes as usize).map(|_| LaneJob::Idle).collect(),
             poll_ns: vec![LANE_POLL_NS; n * lanes as usize],
-            transport_applied: -1,
+            transport_applied: vec![-1; tenants],
             health: None,
             repair_gen: vec![0; n],
             repair_cursor: vec![u64::MAX; n],
@@ -396,6 +479,8 @@ impl PoetWorkload {
             hits: 0,
             misses: 0,
             step_hits: vec![(0, 0); cfg.steps],
+            tenant_hits: vec![(0, 0); tenants],
+            tenant_evict_inflicted: vec![0; tenants],
             chem_cells: 0,
             cfg,
         }
@@ -448,12 +533,12 @@ impl PoetWorkload {
         (rank * self.lanes + lane) as usize
     }
 
-    fn apply_transport(&mut self, step: usize) {
-        if self.transport_applied >= step as i64 {
+    fn apply_transport(&mut self, tenant: usize, step: usize) {
+        if self.transport_applied[tenant] >= step as i64 {
             return;
         }
         transport::advect_step(
-            &mut self.grid.solutes,
+            &mut self.grids[tenant].solutes,
             &mut self.scratch,
             self.cfg.ny,
             self.cfg.nx,
@@ -461,7 +546,44 @@ impl PoetWorkload {
             self.cfg.cf,
             self.cfg.inj_rows,
         );
-        self.transport_applied = step as i64;
+        self.transport_applied[tenant] = step as i64;
+    }
+
+    /// The key namespaced to rank `r`'s tenant (DESIGN.md §14): the
+    /// tenant id is folded into the dt lane, so equal states collide
+    /// within a tenant and never across tenants.  Tenant 0 keys are
+    /// byte-identical to the single-tenant run — the oracle anchor.
+    fn tenant_key(&self, r: usize, mut key: Vec<u8>) -> Vec<u8> {
+        let t = self.tenant_of[r];
+        if t != 0 {
+            fold_tenant(&mut key, t);
+        }
+        key
+    }
+
+    /// Build the write SM for rank `r`, stamping the record with its
+    /// tenant/age word under second-chance eviction (the raw-SM analogue
+    /// of the front-end's `next_stamp`; under `Drop` the record and the
+    /// RMA trace stay bit-identical to the pre-tenant path).
+    fn write_sm(
+        &mut self,
+        r: usize,
+        dcfg: &DhtConfig,
+        key: &[u8],
+        val: &[u8],
+        offset: u32,
+    ) -> DhtSm {
+        if dcfg.evict == EvictPolicy::SecondChance {
+            let meta =
+                Meta::stamp(self.tenant_of[r], self.age as u32, true);
+            self.age += 1;
+            let mut rec = Vec::new();
+            dcfg.layout.encode_into_with(key, val, meta, &mut rec);
+            let hash = dcfg.addressing.hash(key);
+            DhtSm::write_prepared_at(dcfg.variant, dcfg, hash, rec, offset)
+        } else {
+            DhtSm::write_at(dcfg.variant, dcfg, key, val, offset)
+        }
     }
 
     /// Idle poll with per-lane exponential backoff.
@@ -519,10 +641,8 @@ impl PoetWorkload {
             if j == 0 && !queue_primary {
                 continue; // the caller issues the primary on its own lane
             }
-            self.cur[r].write_q.push_back((
-                DhtSm::write_at(dcfg.variant, dcfg, key, val, o),
-                j > 0,
-            ));
+            let sm = self.write_sm(r, dcfg, key, val, o);
+            self.cur[r].write_q.push_back((sm, j > 0));
         }
     }
 
@@ -563,12 +683,15 @@ impl PoetWorkload {
     /// non-finite bypass) so `step_hits` can never drift between them.
     fn note_outcome(&mut self, r: usize, hit: bool) {
         let step = self.cur[r].step.min(self.step_hits.len() - 1);
+        let t = self.tenant_of[r] as usize;
         if hit {
             self.hits += 1;
             self.step_hits[step].0 += 1;
+            self.tenant_hits[t].0 += 1;
         } else {
             self.misses += 1;
             self.step_hits[step].1 += 1;
+            self.tenant_hits[t].1 += 1;
         }
     }
 
@@ -614,7 +737,8 @@ impl PoetWorkload {
                 if let Some(c) = self.l1[r].as_mut() {
                     c.put(&pend.fine_key, &v);
                 }
-                self.grid.apply(cell, &unpack_value(&v));
+                let t = self.tenant_of[r] as usize;
+                self.grids[t].apply(cell, &unpack_value(&v));
                 let dcfg = self.dht.clone().expect("dht in ladder");
                 self.queue_store(r, &dcfg, &pend.fine_key, &v, true);
             }
@@ -625,13 +749,15 @@ impl PoetWorkload {
         }
     }
 
-    /// Run chemistry for `cell` now: integrate, apply to the grid, and
-    /// return the output record plus its simulated PHREEQC cost.
-    fn simulate_cell(&mut self, cell: usize) -> ([f64; N_OUT], u64) {
-        let row = self.grid.row(cell, self.cfg.dt);
+    /// Run chemistry for rank `r`'s `cell` now: integrate, apply to the
+    /// rank's tenant grid, and return the output record plus its
+    /// simulated PHREEQC cost.
+    fn simulate_cell(&mut self, r: usize, cell: usize) -> ([f64; N_OUT], u64) {
+        let t = self.tenant_of[r] as usize;
+        let row = self.grids[t].row(cell, self.cfg.dt);
         let rec = integrate_cell(&row);
         let cost = self.cfg.cost.cost_ns(&row, &rec);
-        self.grid.apply(cell, &rec);
+        self.grids[t].apply(cell, &rec);
         self.chem_cells += 1;
         (rec, cost)
     }
@@ -678,13 +804,7 @@ impl Workload for PoetWorkload {
                     // on this lane below, at its first live successor
                     self.queue_store(r, &dcfg, &key, &val, false);
                     let primary = self.store_offsets(&dcfg, &key)[0];
-                    let sm = DhtSm::write_at(
-                        dcfg.variant,
-                        &dcfg,
-                        &key,
-                        &val,
-                        primary,
-                    );
+                    let sm = self.write_sm(r, &dcfg, &key, &val, primary);
                     self.lane_job[ctx] = LaneJob::Write { replica: false };
                     self.cur[r].writes_inflight += 1;
                     self.poll_ns[ctx] = LANE_POLL_NS;
@@ -715,13 +835,21 @@ impl Workload for PoetWorkload {
             }
         }
 
+        // tenant phase shift (DESIGN.md §14): before its start step the
+        // rank's model idles — it still joins every step barrier so the
+        // cluster stays in lockstep, but moves no solutes and issues no
+        // lookups
+        let active = self.cur[r].step >= self.start_step[r];
+
         // per-step serial overhead (transport + collective sync) first
         if !self.cur[r].overhead_done {
             if self.cur[r].overhead_inflight {
                 return self.poll(ctx);
             }
             let step = self.cur[r].step;
-            self.apply_transport(step);
+            if active {
+                self.apply_transport(self.tenant_of[r] as usize, step);
+            }
             self.cur[r].overhead_inflight = true;
             self.lane_job[ctx] = LaneJob::Overhead;
             self.poll_ns[ctx] = LANE_POLL_NS;
@@ -803,16 +931,18 @@ impl Workload for PoetWorkload {
                     && key.is_some()
                     && self.lcfg.levels > 0
                 {
-                    let row = self.grid.row(cell, self.cfg.dt);
+                    let row =
+                        self.grids[self.tenant_of[r] as usize]
+                            .row(cell, self.cfg.dt);
                     self.lcfg
                         .probes(&row)
                         .into_iter()
-                        .map(|(_, k, _)| k)
+                        .map(|(_, k, _)| self.tenant_key(r, k))
                         .collect()
                 } else {
                     Vec::new()
                 };
-                let (rec, cost) = self.simulate_cell(cell);
+                let (rec, cost) = self.simulate_cell(r, cell);
                 // no store for non-finite states (key = None): they
                 // bypass the DHT entirely (DESIGN.md §10)
                 self.lane_job[ctx] = LaneJob::Compute {
@@ -828,9 +958,11 @@ impl Workload for PoetWorkload {
         }
 
         // issue the next cell (looping over cells the rank answers
-        // locally: L1 hits and non-finite bypasses consume no lane)
+        // locally: L1 hits and non-finite bypasses consume no lane).
+        // Phase-shifted tenants that have not started yet issue no
+        // cells: the rank drains straight to the step barrier.
         let (lo, hi) = self.ranges[r];
-        while lo + self.cur[r].next_cell < hi {
+        while active && lo + self.cur[r].next_cell < hi {
             // reference runs simulate cells one at a time (one CPU per
             // rank); do not consume a cell while another lane computes
             if self.dht.is_none() && self.cur[r].computing {
@@ -841,11 +973,12 @@ impl Workload for PoetWorkload {
             self.poll_ns[ctx] = LANE_POLL_NS;
             if self.dht.is_none() {
                 self.cur[r].computing = true;
-                let (_rec, cost) = self.simulate_cell(cell);
+                let (_rec, cost) = self.simulate_cell(r, cell);
                 self.lane_job[ctx] = LaneJob::Compute { write: None };
                 return WorkItem::Think(cost);
             }
-            let row = self.grid.row(cell, self.cfg.dt);
+            let row =
+                self.grids[self.tenant_of[r] as usize].row(cell, self.cfg.dt);
             if !row_is_finite(&row) {
                 // no key is sound for a non-finite state: bypass the
                 // DHT entirely — simulated, never stored (DESIGN.md §10)
@@ -854,7 +987,7 @@ impl Workload for PoetWorkload {
                 self.cur[r].compute_q.push_back((cell, None));
                 continue;
             }
-            let key = ladder_key(&row, &self.lcfg, 0);
+            let key = self.tenant_key(r, ladder_key(&row, &self.lcfg, 0));
             // rank-local L1 front: a hit skips the remote round trip
             // (and its simulated network time) entirely
             if let Some(v) = self.l1[r]
@@ -865,7 +998,8 @@ impl Workload for PoetWorkload {
                 self.stats.record_l1_hit();
                 self.stats.record_ladder_hit(0, 0.0);
                 self.note_outcome(r, true);
-                self.grid.apply(cell, &unpack_value(&v));
+                self.grids[self.tenant_of[r] as usize]
+                    .apply(cell, &unpack_value(&v));
                 continue;
             }
             let dcfg = self.dht.clone().expect("dht mode");
@@ -925,15 +1059,23 @@ impl Workload for PoetWorkload {
                         if let Some(c) = self.l1[r].as_mut() {
                             c.put(&key, &v); // read-through fill
                         }
-                        self.grid.apply(cell, &unpack_value(&v));
+                        self.grids[self.tenant_of[r] as usize]
+                            .apply(cell, &unpack_value(&v));
                     }
                     DhtOutcome::ReadMiss | DhtOutcome::ReadCorrupt => {
                         // fine-level miss: try the coarser ladder levels
                         // whose rounding stays inside the acceptance
                         // tolerance before paying for chemistry
                         let probes = if self.lcfg.levels > 0 {
-                            let row = self.grid.row(cell, self.cfg.dt);
-                            self.lcfg.probes(&row)
+                            let row = self.grids[self.tenant_of[r] as usize]
+                                .row(cell, self.cfg.dt);
+                            self.lcfg
+                                .probes(&row)
+                                .into_iter()
+                                .map(|(lv, k, e)| {
+                                    (lv, self.tenant_key(r, k), e)
+                                })
+                                .collect()
                         } else {
                             Vec::new()
                         };
@@ -983,6 +1125,13 @@ impl Workload for PoetWorkload {
                     self.stats.record_replica_write(&out.out);
                 } else {
                     self.stats.record(&out.out);
+                }
+                if matches!(out.out.outcome, DhtOutcome::WriteEvict) {
+                    // fairness ledger: the *writing* tenant inflicted
+                    // this eviction (the victim's tenant is billed as
+                    // "suffered" inside DhtStats::record)
+                    self.tenant_evict_inflicted
+                        [self.tenant_of[r] as usize] += 1;
                 }
                 debug_assert!(matches!(
                     out.out.outcome,
@@ -1048,7 +1197,15 @@ pub fn run_poet_des(cfg: PoetDesCfg, net_cfg: NetConfig) -> PoetDesResult {
         hits: w.hits,
         misses: w.misses,
         dht: std::mem::take(&mut w.stats),
-        max_dolomite: w.grid.max_dolomite(),
+        max_dolomite: w
+            .grids
+            .iter()
+            .map(|g| g.max_dolomite())
+            .fold(0.0, f64::max),
+        tenant_hits: std::mem::take(&mut w.tenant_hits),
+        tenant_evictions_inflicted: std::mem::take(
+            &mut w.tenant_evict_inflicted,
+        ),
         step_hits: std::mem::take(&mut w.step_hits),
         sim,
     }
@@ -1251,14 +1408,63 @@ mod tests {
             std::sync::Arc::new(crate::poet::NativeChemistry),
         );
         drv.run_reference();
-        for (a, b) in cluster
-            .workload
-            .grid
+        for (a, b) in cluster.workload.grids[0]
             .solutes
             .iter()
             .zip(drv.grid.solutes.iter())
         {
             assert!((a - b).abs() < 1e-14, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn phase_shifted_tenants_share_one_cache() {
+        // two tenant models interleave on one cluster: ranks 0..3 run
+        // tenant 0 from step 0, ranks 4..7 run tenant 1 starting
+        // `tenant_phase` steps later, all over one bounded DHT with
+        // second-chance aging (ISSUE 10 tentpole d)
+        let mut c = tiny(8, Some(Variant::Fine));
+        c.tenants = 2;
+        c.evict = EvictPolicy::SecondChance;
+        c.tenant_phase = 3;
+        c.steps = 14;
+        let res = run_poet_des(c, NetConfig::pik_ndr());
+        assert_eq!(res.tenant_hits.len(), 2);
+        let (h0, l0) = res.tenant_hits[0];
+        let (h1, l1) = res.tenant_hits[1];
+        assert!(l0 > 0 && l1 > 0, "both tenants issued lookups");
+        assert!(h0 > 0, "tenant 0 hits its own writes");
+        assert!(h1 > 0, "tenant 1 hits its own writes");
+        // the phase shift makes tenant 1 run fewer active steps
+        assert!(l1 < l0, "tenant 1 started late: {l1} < {l0}");
+        // per-tenant ledger reconciles with the global counters
+        assert_eq!(h0 + h1, res.hits, "hit ledger conserved");
+        assert_eq!(
+            l0 + l1,
+            res.hits + res.misses,
+            "lookup ledger conserved"
+        );
+        for t in 0..2 {
+            let r = res.tenant_hit_rate(t);
+            assert!(r > 0.0 && r <= 1.0, "tenant {t} rate {r}");
+        }
+        let f = res.fairness();
+        assert!(f > 0.0 && f <= 1.0, "jain fairness {f}");
+        // physics still runs for both models
+        assert!(res.max_dolomite > 0.0);
+    }
+
+    #[test]
+    fn single_tenant_drop_matches_pre_tenant_run() {
+        // the oracle anchor: tenants=1 + Drop must behave exactly like
+        // the pre-tenant driver — the tenant ledger degenerates to one
+        // row that mirrors the global counters
+        let res = run_poet_des(
+            tiny(4, Some(Variant::Coarse)),
+            NetConfig::pik_ndr(),
+        );
+        assert_eq!(res.tenant_hits, vec![(res.hits, res.hits + res.misses)]);
+        assert_eq!(res.tenant_evictions_inflicted.len(), 1);
+        assert!((res.fairness() - 1.0).abs() < 1e-12, "one tenant is fair");
     }
 }

@@ -16,12 +16,13 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::dht::{Dht, DhtStats, Variant};
+use crate::dht::{Dht, DhtStats, EvictPolicy, Variant};
 
 use super::chemistry::{Chemistry, N_IN, N_OUT};
 use super::grid::GridState;
 use super::key::{
-    ladder_key, pack_row, row_is_finite, unpack_value, LadderCfg,
+    fold_tenant, ladder_key, pack_row, row_is_finite, unpack_value,
+    LadderCfg,
 };
 use super::transport;
 
@@ -86,6 +87,15 @@ pub struct PoetConfig {
     /// rejoins with whatever its window still holds (benign for the
     /// surrogate workload: values are pure functions of their keys).
     pub revive_at_step: Option<(usize, u32)>,
+    /// Concurrent tenant namespaces over the one shared cache (DESIGN.md
+    /// §14): workers are block-partitioned across `tenants`, each keying
+    /// its cells under its own [`fold_tenant`] namespace via a
+    /// tenant-scoped [`Dht::tenant`] view.  Clamped to the worker count;
+    /// 1 = the anonymous single-tenant run (bit-identical keys/records).
+    pub tenants: u32,
+    /// Full-candidate-set write behavior of the shared cache (DESIGN.md
+    /// §14).  `Drop` keeps the pre-tenant bit-identical tables.
+    pub evict: EvictPolicy,
 }
 
 impl PoetConfig {
@@ -112,6 +122,8 @@ impl PoetConfig {
             repair: false,
             kill_at_step: None,
             revive_at_step: None,
+            tenants: 1,
+            evict: EvictPolicy::Drop,
         }
     }
 }
@@ -129,6 +141,9 @@ pub struct PoetRunStats {
     /// Per-step (hits, misses) — the hit-rate trajectory a mid-run
     /// resize is judged by (empty for reference runs).
     pub step_hits: Vec<(u64, u64)>,
+    /// Per-tenant (hits, misses) of the surrogate lookups (DESIGN.md
+    /// §14; empty for reference runs, one entry single-tenant).
+    pub tenant_hits: Vec<(u64, u64)>,
     /// Final-state diagnostics.
     pub max_dolomite: f64,
     pub inlet_calcite: f64,
@@ -156,6 +171,27 @@ impl PoetRunStats {
         } else {
             h as f64 / (h + m) as f64
         }
+    }
+
+    /// Hit rate of tenant `t`'s surrogate lookups.
+    pub fn tenant_hit_rate(&self, t: usize) -> f64 {
+        match self.tenant_hits.get(t) {
+            Some(&(h, m)) if h + m > 0 => h as f64 / (h + m) as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Jain fairness index over the tenants' hit rates (1.0 = every
+    /// tenant gets the same service from the shared cache; DESIGN.md
+    /// §14).  Tenants that issued no lookups are excluded.
+    pub fn fairness(&self) -> f64 {
+        let rates: Vec<f64> = self
+            .tenant_hits
+            .iter()
+            .filter(|(h, m)| h + m > 0)
+            .map(|&(h, m)| h as f64 / (h + m) as f64)
+            .collect();
+        crate::dht::stats::jain_fairness(&rates)
     }
 }
 
@@ -205,6 +241,22 @@ impl PoetDriver {
             h.set_replicas(self.cfg.replicas);
             h.set_l1_bytes(self.cfg.l1_bytes);
             h.set_repair(self.cfg.repair);
+            h.set_evict(self.cfg.evict);
+        }
+        // multi-tenant sharding (DESIGN.md §14): block-partition the
+        // workers across tenants and swap each worker's handle for the
+        // tenant-scoped view (shared windows, per-tenant stamps/stats);
+        // tenants == 1 keeps the original handles untouched — the
+        // bit-identical anonymous path
+        let tenants =
+            self.cfg.tenants.clamp(1, self.cfg.workers.max(1) as u32);
+        if tenants > 1 {
+            let n = handles.len();
+            handles = handles
+                .into_iter()
+                .enumerate()
+                .map(|(w, h)| h.tenant((w * tenants as usize / n) as u32))
+                .collect();
         }
         self.run_inner(Some(handles))
     }
@@ -223,6 +275,16 @@ impl PoetDriver {
             None => (0..nworkers).map(|_| None).collect(),
         };
         let with_dht = handles.iter().any(Option::is_some);
+        // per-worker tenant ids for the per-tenant hit ledger (all 0 in
+        // single-tenant runs; the ledger stays empty on reference runs)
+        let tenant_of: Vec<usize> = handles
+            .iter()
+            .map(|h| h.as_ref().map_or(0, |x| x.tenant_id() as usize))
+            .collect();
+        if with_dht {
+            let nt = tenant_of.iter().copied().max().unwrap_or(0) + 1;
+            stats.tenant_hits = vec![(0, 0); nt];
+        }
 
         // cell ranges per worker (contiguous blocks, like POET's
         // cell-wise distribution over MPI ranks)
@@ -286,12 +348,17 @@ impl PoetDriver {
 
             let mut step_h = 0u64;
             let mut step_m = 0u64;
-            for out in results {
+            for (w, out) in results.into_iter().enumerate() {
                 step_h += out.hits;
                 step_m += out.misses;
                 stats.cache_hits += out.hits;
                 stats.cache_misses += out.misses;
                 stats.chem_cells += out.chem_cells;
+                if with_dht {
+                    let t = &mut stats.tenant_hits[tenant_of[w]];
+                    t.0 += out.hits;
+                    t.1 += out.misses;
+                }
                 for (cell, rec) in out.updates {
                     self.grid.apply(cell, &rec);
                 }
@@ -337,6 +404,18 @@ fn worker_chunk(
         levels: cfg.ladder,
         rel_tol: cfg.ladder_rel_tol,
     };
+    // this worker's tenant namespace (DESIGN.md §14): every key — fine
+    // and coarse — is folded to the handle's tenant, so equal chemistry
+    // states collide within a tenant and never across tenants.  Tenant 0
+    // (and the reference run) keys are byte-identical to the
+    // single-tenant path.
+    let tenant = dht.as_deref().map_or(0, |d| d.tenant_id());
+    let tkey = |mut k: Vec<u8>| {
+        if tenant != 0 {
+            fold_tenant(&mut k, tenant);
+        }
+        k
+    };
     let mut out = WorkerOut {
         updates: Vec::with_capacity(hi - lo),
         hits: 0,
@@ -365,7 +444,7 @@ fn worker_chunk(
             rows.push(row);
             if row_is_finite(&row) {
                 fine_cells.push(cell);
-                fine_keys.push(ladder_key(&row, &lcfg, 0));
+                fine_keys.push(tkey(ladder_key(&row, &lcfg, 0)));
             } else {
                 // no key is sound for a non-finite state: straight to
                 // chemistry, counted, never cached (DESIGN.md §10)
@@ -408,6 +487,7 @@ fn worker_chunk(
                     // stays inside the acceptance tolerance are probed
                     let pi = pend_cells.len();
                     for (level, pkey, err) in lcfg.probes(&rows[cell - lo]) {
+                        let pkey = tkey(pkey);
                         let slot = match probe_index.get(&pkey) {
                             Some(&s) => s,
                             None => {
@@ -515,6 +595,7 @@ fn worker_chunk(
                         .try_into()
                         .unwrap();
                     for (_, ck, _) in lcfg.probes(&row) {
+                        let ck = tkey(ck);
                         if stored_coarse.insert(ck.clone()) {
                             store_keys.push(ck);
                             store_vals.push(val.clone());
@@ -737,6 +818,59 @@ mod tests {
         let mut ok = small_driver(5, 1);
         let s = ok.run_with_dht(Variant::LockFree);
         assert_eq!(s.dht.nonfinite_skips, 0);
+    }
+
+    #[test]
+    fn tenant_sharded_workers_namespace_the_cache() {
+        // 4 workers block-partitioned across 2 tenant namespaces over
+        // one shared cache with second-chance aging (DESIGN.md §14):
+        // each tenant hits only its own writes, the per-tenant ledger
+        // reconciles with the global counters, and the physics is
+        // untouched by the namespacing
+        let mut d = small_driver(20, 4);
+        d.cfg.tenants = 2;
+        d.cfg.evict = EvictPolicy::SecondChance;
+        let stats = d.run_with_dht(Variant::LockFree);
+        assert_eq!(stats.tenant_hits.len(), 2);
+        for t in 0..2 {
+            let (h, m) = stats.tenant_hits[t];
+            assert!(h + m > 0, "tenant {t} issued lookups");
+            assert!(h > 0, "tenant {t} hits its own writes");
+        }
+        let (h0, m0) = stats.tenant_hits[0];
+        let (h1, m1) = stats.tenant_hits[1];
+        assert_eq!(h0 + h1, stats.cache_hits, "hit ledger conserved");
+        assert_eq!(
+            h0 + m0 + h1 + m1,
+            stats.cache_hits + stats.cache_misses,
+            "lookup ledger conserved"
+        );
+        let f = stats.fairness();
+        assert!(f > 0.0 && f <= 1.0, "jain fairness {f}");
+        assert_eq!(stats.dht.mismatches, 0);
+        // namespaced surrogate, same physics
+        let mut r = small_driver(20, 1);
+        let ref_stats = r.run_reference();
+        let d_dol = (stats.max_dolomite - ref_stats.max_dolomite).abs();
+        assert!(
+            d_dol <= 0.35 * ref_stats.max_dolomite.max(1e-12),
+            "dolomite {} vs reference {}",
+            stats.max_dolomite,
+            ref_stats.max_dolomite
+        );
+    }
+
+    #[test]
+    fn single_tenant_ledger_mirrors_global_counters() {
+        // tenants == 1 (the default) degenerates to one anonymous row —
+        // the threaded half of the oracle anchor
+        let mut d = small_driver(10, 2);
+        let stats = d.run_with_dht(Variant::Coarse);
+        assert_eq!(
+            stats.tenant_hits,
+            vec![(stats.cache_hits, stats.cache_misses)]
+        );
+        assert!((stats.fairness() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -188,6 +188,34 @@ pub fn ladder_rel_err(row: &[f64; N_IN], cfg: &LadderCfg, level: u32) -> f64 {
     err
 }
 
+/// Fold a tenant id into a packed key, in place (DESIGN.md §14).
+///
+/// Multi-tenant operation namespaces the one shared keyspace by XOR-ing
+/// a mixed image of the tenant id into the dt lane (the last 8 key
+/// bytes): identical chemistry rows submitted by different tenants land
+/// in different buckets and can never serve each other's results.  The
+/// dt lane is the right carrier because it is stored verbatim (never
+/// re-rounded by the ladder), so folding commutes with every ladder
+/// level, and the key is only ever hashed/compared — nothing decodes dt
+/// back out of it.
+///
+/// Tenant 0 is the identity (multiplicative mixing maps 0 to 0), which
+/// pins the single-tenant default byte-identical to the pre-tenant
+/// format — the differential oracle's anchor.  Folding the same tenant
+/// twice round-trips (XOR), which migration/repair rely on never having
+/// to know: they move records whole and the fold rides along.
+#[inline]
+pub fn fold_tenant(key: &mut [u8], tenant: u32) {
+    let t = tenant as u64;
+    // 0 -> 0; adjacent ids -> well-spread masks (odd multiplier is a
+    // bijection on u64, so distinct tenants get distinct masks)
+    let mask = (t | (t << 32)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let dt = key.len() - 8;
+    for (b, m) in key[dt..].iter_mut().zip(mask.to_le_bytes()) {
+        *b ^= m;
+    }
+}
+
 /// Pack a 13-double output record as the 104-byte DHT value.
 pub fn pack_row(out: &[f64]) -> Vec<u8> {
     debug_assert_eq!(out.len(), N_OUT);
@@ -391,6 +419,48 @@ mod tests {
         a[9] = 500.0;
         b[9] = 500.0001;
         assert_ne!(ladder_key(&a, &cfg, 2), ladder_key(&b, &cfg, 2));
+    }
+
+    #[test]
+    fn fold_tenant_namespaces_without_touching_species() {
+        let row = [5.1234e-4, 1e-6, 1e-3, 1e-5, 8.0, 4.0, 2.5e-4, 2e-4,
+                   0.0, 500.0];
+        let base = cell_key(&row, 4);
+        // tenant 0 is the identity: the pre-tenant key format verbatim
+        let mut k0 = base.clone();
+        fold_tenant(&mut k0, 0);
+        assert_eq!(k0, base);
+        // distinct tenants -> pairwise distinct keys for the same row
+        let mut seen = std::collections::HashSet::new();
+        for t in [0u32, 1, 2, 3, 255, 256, u32::MAX] {
+            let mut k = base.clone();
+            fold_tenant(&mut k, t);
+            assert!(seen.insert(k.clone()), "tenant {t} collided");
+            // only the dt lane carries the namespace
+            assert_eq!(&k[..72], &base[..72], "tenant {t}");
+            // XOR round-trips: un-folding restores the anonymous key
+            fold_tenant(&mut k, t);
+            assert_eq!(k, base, "tenant {t}");
+        }
+    }
+
+    #[test]
+    fn fold_tenant_commutes_with_the_ladder() {
+        // dt is carried verbatim at every ladder level, so folding the
+        // fine key and folding a coarse key namespace identically
+        let cfg = LadderCfg { digits: 3, levels: 2, rel_tol: 1.0 };
+        let row = [5.1234e-4, 1e-6, 1e-3, 1e-5, 8.0, 4.0, 2.5e-4, 2e-4,
+                   0.0, 500.0];
+        for level in 0..=2 {
+            let mut folded = ladder_key(&row, &cfg, level);
+            fold_tenant(&mut folded, 7);
+            let mut expect = ladder_key(&row, &cfg, level);
+            let dt = expect.len() - 8;
+            let mut probe = cell_key(&row, 3);
+            fold_tenant(&mut probe, 7);
+            expect[dt..].copy_from_slice(&probe[probe.len() - 8..]);
+            assert_eq!(folded, expect, "level {level}");
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! exactly from the config in the log.
 
 use mpi_dht::bench::keys::{key_for, value_for};
-use mpi_dht::dht::{Dht, DhtCheckpoint, Variant};
+use mpi_dht::dht::{Dht, DhtCheckpoint, EvictPolicy, Variant};
 use mpi_dht::net::{NetConfig, Network};
 use mpi_dht::poet::desmodel::{run_poet_des, PoetDesCfg};
 use mpi_dht::rma::sim::SimRma;
@@ -493,6 +493,66 @@ fn poet_kill_repair_revive_soak() {
     );
     assert!(res.hit_rate() > 0.4, "hit rate {}", res.hit_rate());
     // the healed cache must not corrupt the physics
+    let mut refc = PoetDesCfg::scaled(8, None);
+    refc.ny = 12;
+    refc.nx = 24;
+    refc.steps = 16;
+    refc.inj_rows = 3;
+    let refr = run_poet_des(refc, NetConfig::pik_ndr());
+    let d = (res.max_dolomite - refr.max_dolomite).abs();
+    assert!(
+        d <= 0.35 * refr.max_dolomite.max(1e-12),
+        "dolomite {} vs reference {}",
+        res.max_dolomite,
+        refr.max_dolomite
+    );
+}
+
+/// Chaos × multi-tenancy (DESIGN.md §14 ∘ §11): kill a rank and repair
+/// it back while TWO phase-shifted tenants drive the same replicated
+/// cache under second-chance eviction.  The repair scan re-homes
+/// records *with their tenant/age meta word intact*, so after the heal
+/// both tenants keep hitting their own namespaces, the per-tenant
+/// ledgers still reconcile against the global counters, and the
+/// fairness index stays meaningful.
+#[test]
+fn poet_two_tenant_kill_repair_keeps_ledgers_and_fairness() {
+    let mut base = chaos_cfg(2);
+    base.repair = true;
+    base.pipeline = 4;
+    base.win_bytes = 256 * 1024;
+    base.tenants = 2;
+    base.evict = EvictPolicy::SecondChance;
+    base.tenant_phase = 2; // tenant 1 joins at step 2, active for ~all
+    let fault_free = run_poet_des(base.clone(), NetConfig::pik_ndr());
+    assert!(fault_free.hit_rate() > 0.4, "{}", fault_free.hit_rate());
+    let mut chaos = base.clone();
+    chaos.kill_rank_at =
+        Some((3, (fault_free.runtime_s * 0.3 * 1e9) as u64));
+    chaos.revive_rank_at =
+        Some((3, (fault_free.runtime_s * 0.6 * 1e9) as u64));
+    let res = run_poet_des(chaos, NetConfig::pik_ndr());
+    // the self-healing cycle ran end to end under multi-tenant load
+    assert!(res.dht.repaired > 0, "repair re-homed lost copies");
+    assert_eq!(res.dht.ranks_dead, 0, "the revived rank was re-found");
+    // both tenants lived through the kill: each namespace records
+    // lookups AND hits after failover + repair
+    assert_eq!(res.tenant_hits.len(), 2);
+    for (t, &(h, m)) in res.tenant_hits.iter().enumerate() {
+        assert!(h + m > 0, "tenant {t} issued no lookups");
+        assert!(h > 0, "tenant {t} never hit after the chaos cycle");
+    }
+    // ledger conservation: the per-tenant (hits, misses) split is
+    // exactly the global count
+    let (th, tm): (u64, u64) = res
+        .tenant_hits
+        .iter()
+        .fold((0, 0), |(a, b), &(h, m)| (a + h, b + m));
+    assert_eq!(th, res.hits, "tenant hit ledgers must sum to the total");
+    assert_eq!(tm, res.misses, "and tenant misses to the global misses");
+    let f = res.fairness();
+    assert!(f > 0.0 && f <= 1.0, "fairness {f} out of range");
+    // the healed, namespaced cache must not corrupt the physics
     let mut refc = PoetDesCfg::scaled(8, None);
     refc.ny = 12;
     refc.nx = 24;

@@ -22,7 +22,9 @@
 use std::collections::{HashMap, HashSet};
 
 use mpi_dht::bench::keys::{key_for, value_for};
-use mpi_dht::dht::{BucketLayout, Dht, DhtCheckpoint, DhtOutcome, Variant};
+use mpi_dht::dht::{
+    BucketLayout, Dht, DhtCheckpoint, DhtOutcome, EvictPolicy, Meta, Variant,
+};
 use mpi_dht::net::{NetConfig, Network};
 use mpi_dht::rma::RmaBackend;
 use mpi_dht::util::prop::{prop_check, SchedOp};
@@ -206,6 +208,47 @@ fn all_variants_and_backends_agree_with_reference() {
         }
         Ok(())
     });
+}
+
+/// The tenancy refactor's oracle anchor (DESIGN.md §14): the
+/// single-tenant default — explicit `tenant(0)` views under the `drop`
+/// policy — must take the exact pre-tenant code path.  Identical trace,
+/// identical serialized table, meta words included: every record still
+/// carries the bare `Meta::OCCUPIED` word (no tenant/age stamping), so
+/// the refactor is invisible until someone opts in.
+#[test]
+fn single_tenant_drop_default_is_byte_identical_to_pre_tenant_path() {
+    let mut g = mpi_dht::util::prop::G::new(0x7E4A_0001);
+    let sched = g.schedule(140, NRANKS, 60, 50, true);
+    for variant in Variant::ALL {
+        // plain cluster: the historical anonymous fill-then-drop table
+        let mut plain =
+            Dht::create(variant, NRANKS, win_bytes(variant), KEY_LEN, VAL_LEN);
+        let base_trace = replay(&mut plain, &sched);
+        let base_cp = DhtCheckpoint::capture(&plain);
+        // tenant-0 views with the policy set explicitly to drop
+        let handles =
+            Dht::create(variant, NRANKS, win_bytes(variant), KEY_LEN, VAL_LEN);
+        let mut views: Vec<_> = handles.iter().map(|h| h.tenant(0)).collect();
+        for v in views.iter_mut() {
+            v.set_evict(EvictPolicy::Drop);
+        }
+        let t = replay(&mut views, &sched);
+        assert_eq!(t, base_trace, "{variant:?}: tenant(0)+drop trace diverged");
+        let cp = DhtCheckpoint::capture(&views);
+        assert_eq!(
+            cp.to_bytes(),
+            base_cp.to_bytes(),
+            "{variant:?}: serialized tables must match byte for byte"
+        );
+        for (i, &m) in cp.entry_meta.iter().enumerate() {
+            assert_eq!(
+                m,
+                Meta::OCCUPIED,
+                "{variant:?}: entry {i} carries a stamped meta word"
+            );
+        }
+    }
 }
 
 /// Pinned-seed reproducibility: the exact schedule CI replays must keep

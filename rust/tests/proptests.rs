@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use mpi_dht::dht::bucket::record_crc;
+use mpi_dht::dht::bucket::{record_crc, Meta};
 use mpi_dht::dht::{
     Addressing, BucketLayout, Dht, DhtCheckpoint, DhtOutcome, Variant,
 };
@@ -76,9 +76,10 @@ fn prop_replica_placement() {
     });
 }
 
-/// Fuzz `DhtCheckpoint::from_bytes`: a pristine v1/v2 buffer parses and
-/// round-trips; mutated, truncated, or extended buffers must return
-/// `None` or a sane checkpoint — never panic.
+/// Fuzz `DhtCheckpoint::from_bytes`: a pristine v1/v2/v3 buffer parses
+/// and round-trips (v3 with its tenant/age meta words intact); mutated,
+/// truncated, or extended buffers must return `None` or a sane
+/// checkpoint — never panic.
 #[test]
 fn prop_checkpoint_from_bytes_never_panics() {
     prop_check("checkpoint-fuzz", 300, |g: &mut G| {
@@ -87,30 +88,60 @@ fn prop_checkpoint_from_bytes_never_panics() {
         let n = g.usize_in(0..16);
         let entries: Vec<(Vec<u8>, Vec<u8>)> =
             (0..n).map(|_| (g.bytes(key_len), g.bytes(val_len))).collect();
-        let v2 = g.bool();
-        let bytes = if v2 {
-            DhtCheckpoint {
+        let version = g.u64_in(0..3); // 0 = v1, 1 = v2, 2 = v3
+        let metas: Vec<u64> = (0..n)
+            .map(|_| {
+                Meta::stamp(
+                    g.u64_in(0..256) as u32,
+                    g.u64_in(0..1 << 24) as u32,
+                    g.bool(),
+                )
+            })
+            .collect();
+        let bytes = match version {
+            2 => DhtCheckpoint {
                 variant: *g.pick(&Variant::ALL),
                 key_len,
                 val_len,
                 buckets_per_rank: Some(g.u64_in(1..1_000_000)),
                 nranks: Some(g.u64_in(1..1024) as u32),
                 entries: entries.clone(),
+                entry_meta: metas.clone(),
             }
-            .to_bytes()
-        } else {
-            // hand-built legacy v1: magic, variant, lens, count, entries
-            let mut b = Vec::new();
-            b.extend_from_slice(b"DHTCKPT1");
-            b.push(g.u64_in(0..3) as u8);
-            b.extend_from_slice(&(key_len as u32).to_le_bytes());
-            b.extend_from_slice(&(val_len as u32).to_le_bytes());
-            b.extend_from_slice(&(n as u64).to_le_bytes());
-            for (k, v) in &entries {
-                b.extend_from_slice(k);
-                b.extend_from_slice(v);
+            .to_bytes(),
+            1 => {
+                // hand-built v2: the v1 head plus geometry, meta-less
+                // records — what a pre-v3 build serialized
+                let mut b = Vec::new();
+                b.extend_from_slice(b"DHTCKPT2");
+                b.push(g.u64_in(0..4) as u8);
+                b.extend_from_slice(&(key_len as u32).to_le_bytes());
+                b.extend_from_slice(&(val_len as u32).to_le_bytes());
+                b.extend_from_slice(&g.u64_in(1..1_000_000).to_le_bytes());
+                b.extend_from_slice(
+                    &(g.u64_in(1..1024) as u32).to_le_bytes(),
+                );
+                b.extend_from_slice(&(n as u64).to_le_bytes());
+                for (k, v) in &entries {
+                    b.extend_from_slice(k);
+                    b.extend_from_slice(v);
+                }
+                b
             }
-            b
+            _ => {
+                // hand-built legacy v1: magic, variant, lens, count
+                let mut b = Vec::new();
+                b.extend_from_slice(b"DHTCKPT1");
+                b.push(g.u64_in(0..3) as u8);
+                b.extend_from_slice(&(key_len as u32).to_le_bytes());
+                b.extend_from_slice(&(val_len as u32).to_le_bytes());
+                b.extend_from_slice(&(n as u64).to_le_bytes());
+                for (k, v) in &entries {
+                    b.extend_from_slice(k);
+                    b.extend_from_slice(v);
+                }
+                b
+            }
         };
         // pristine buffer parses and round-trips its entries
         let cp = DhtCheckpoint::from_bytes(&bytes)
@@ -118,8 +149,18 @@ fn prop_checkpoint_from_bytes_never_panics() {
         prop_assert_eq!(cp.key_len, key_len);
         prop_assert_eq!(cp.val_len, val_len);
         prop_assert_eq!(&cp.entries, &entries);
-        prop_assert_eq!(cp.buckets_per_rank.is_some(), v2);
-        match g.u64_in(0..3) {
+        prop_assert_eq!(cp.buckets_per_rank.is_some(), version >= 1);
+        if version == 2 {
+            // the tenant/age meta words survive the round trip
+            prop_assert_eq!(&cp.entry_meta, &metas);
+        } else {
+            // meta-less images restore unstamped (tenant 0, age 0)
+            prop_assert!(
+                cp.entry_meta.iter().all(|&m| m == Meta::OCCUPIED),
+                "v1/v2 entries must restore under the unstamped meta"
+            );
+        }
+        match g.u64_in(0..4) {
             0 => {
                 // strict truncation: the exact-length check must reject
                 let cut = g.usize_in(0..bytes.len());
@@ -131,26 +172,22 @@ fn prop_checkpoint_from_bytes_never_panics() {
             }
             1 => {
                 // header byte flip: parse may fail or yield a different
-                // but sane checkpoint — it must never panic
+                // but sane checkpoint — it must never panic.  The record
+                // stride follows whatever magic the flip left behind.
                 let mut bad = bytes.clone();
                 let pos = g.usize_in(0..bad.len().min(29));
                 bad[pos] ^= 1u8 << g.u64_in(0..8);
                 if let Some(c) = DhtCheckpoint::from_bytes(&bad) {
                     prop_assert!(c.key_len > 0 && c.val_len > 0);
-                    prop_assert_eq!(
-                        c.entries.len() * (c.key_len + c.val_len)
-                            + if c.buckets_per_rank.is_some()
-                                || c.nranks.is_some()
-                            {
-                                37
-                            } else {
-                                25
-                            },
-                        bad.len()
-                    );
+                    let head =
+                        if &bad[..8] == b"DHTCKPT1" { 25 } else { 37 };
+                    let rec = c.key_len
+                        + c.val_len
+                        + if &bad[..8] == b"DHTCKPT3" { 8 } else { 0 };
+                    prop_assert_eq!(c.entries.len() * rec + head, bad.len());
                 }
             }
-            _ => {
+            2 => {
                 // trailing garbage: the exact-length check must reject
                 let mut bad = bytes.clone();
                 bad.extend(g.bytes(g.usize_in(1..16)));
@@ -158,6 +195,30 @@ fn prop_checkpoint_from_bytes_never_panics() {
                     DhtCheckpoint::from_bytes(&bad).is_none(),
                     "extended buffer must not parse"
                 );
+            }
+            _ => {
+                // forged v3 meta: clearing OCCUPIED or setting INVALID on
+                // any record must be rejected, not smuggled past restore
+                if version == 2 && n > 0 {
+                    let mut bad = bytes.clone();
+                    let i = g.usize_in(0..n);
+                    let rec = key_len + val_len + 8;
+                    let off = 37 + i * rec + rec - 8;
+                    let m = u64::from_le_bytes(
+                        bad[off..off + 8].try_into().unwrap(),
+                    );
+                    let forged = if g.bool() {
+                        m & !Meta::OCCUPIED // un-occupied
+                    } else {
+                        m | Meta::INVALID // invalidated
+                    };
+                    bad[off..off + 8]
+                        .copy_from_slice(&forged.to_le_bytes());
+                    prop_assert!(
+                        DhtCheckpoint::from_bytes(&bad).is_none(),
+                        "forged meta on record {i} must not parse"
+                    );
+                }
             }
         }
         Ok(())

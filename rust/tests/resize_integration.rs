@@ -411,11 +411,13 @@ fn checkpoint_capture_during_migration_sees_both_tables() {
     assert_eq!(ckpt.nranks, Some(2));
 }
 
-/// Checkpoint format v2 round-trips its geometry; legacy v1 bytes still
-/// load (with no geometry); `restore_strict` rejects a too-small target
-/// with a clear error and accepts an adequate one.
+/// Checkpoint format v3 round-trips its geometry; legacy v1/v2 bytes
+/// still load (v1 with no geometry, both with unstamped metas);
+/// `restore_strict` rejects a too-small target with a clear error and
+/// accepts an adequate one.
 #[test]
-fn checkpoint_v2_geometry_and_v1_compat() {
+fn checkpoint_v3_geometry_and_legacy_compat() {
+    use mpi_dht::dht::bucket::Meta;
     let mut h = Dht::create(Variant::LockFree, 2, 64 * 1024, KEY, VAL);
     for i in 0..50u64 {
         h[0].write(&key_for(i, KEY), &value_for(i, VAL));
@@ -425,11 +427,32 @@ fn checkpoint_v2_geometry_and_v1_compat() {
     assert_eq!(ckpt.buckets_per_rank, Some(per_rank));
     assert_eq!(ckpt.nranks, Some(2));
     let bytes = ckpt.to_bytes();
-    assert_eq!(&bytes[..8], b"DHTCKPT2");
-    let parsed = DhtCheckpoint::from_bytes(&bytes).expect("v2 parse");
+    assert_eq!(&bytes[..8], b"DHTCKPT3");
+    let parsed = DhtCheckpoint::from_bytes(&bytes).expect("v3 parse");
     assert_eq!(parsed.buckets_per_rank, Some(per_rank));
     assert_eq!(parsed.nranks, Some(2));
     assert_eq!(parsed.entries, ckpt.entries);
+    assert_eq!(parsed.entry_meta, ckpt.entry_meta);
+
+    // hand-built v2 payload (a pre-v3 build's serialization): geometry
+    // head, meta-less records — loads with unstamped tenant-0 metas
+    let mut v2 = Vec::new();
+    v2.extend_from_slice(b"DHTCKPT2");
+    v2.push(2); // lock-free
+    v2.extend_from_slice(&(KEY as u32).to_le_bytes());
+    v2.extend_from_slice(&(VAL as u32).to_le_bytes());
+    v2.extend_from_slice(&per_rank.to_le_bytes());
+    v2.extend_from_slice(&2u32.to_le_bytes());
+    v2.extend_from_slice(&1u64.to_le_bytes());
+    v2.extend_from_slice(&key_for(1, KEY));
+    v2.extend_from_slice(&value_for(1, VAL));
+    let mid = DhtCheckpoint::from_bytes(&v2).expect("v2 parse");
+    assert_eq!(mid.buckets_per_rank, Some(per_rank));
+    assert_eq!(mid.nranks, Some(2));
+    assert_eq!(mid.entries.len(), 1);
+    assert_eq!(mid.entry_meta, vec![Meta::OCCUPIED], "v2 loads unstamped");
+    let mut from_v2 = mid.restore(Variant::LockFree, 1, 64 * 1024);
+    assert_eq!(from_v2[0].read(&key_for(1, KEY)), Some(value_for(1, VAL)));
 
     // hand-built v1 payload: one entry, legacy magic, no geometry
     let mut v1 = Vec::new();
@@ -444,6 +467,7 @@ fn checkpoint_v2_geometry_and_v1_compat() {
     assert_eq!(legacy.buckets_per_rank, None);
     assert_eq!(legacy.nranks, None);
     assert_eq!(legacy.entries.len(), 1);
+    assert_eq!(legacy.entry_meta, vec![Meta::OCCUPIED], "v1 loads unstamped");
     // v1 checkpoints carry no geometry: strict restore cannot reject
     let restored = legacy
         .restore_strict(Variant::LockFree, 1, 64 * 1024)
